@@ -1,0 +1,18 @@
+//! Table IV + Fig 6 regeneration: FPGA resource overhead of the HW
+//! solution from the analytical area model.
+//!
+//! Usage: cargo run --release --example area_report [--layout]
+
+use vortex_warp::area::report::{component_breakdown, fig6_layout, table4};
+use vortex_warp::sim::SimConfig;
+
+fn main() {
+    let cfg = SimConfig::paper();
+    println!("{}\n", table4(&cfg));
+    println!("Component breakdown (model inputs):\n{}\n", component_breakdown(&cfg));
+    if std::env::args().any(|a| a == "--layout") {
+        println!("{}", fig6_layout(&cfg));
+    } else {
+        println!("(pass --layout for the Fig 6 layout view)");
+    }
+}

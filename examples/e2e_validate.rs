@@ -1,0 +1,102 @@
+//! END-TO-END driver: proves all three layers compose.
+//!
+//! For every benchmark of §V:
+//!   1. run the HW solution (SIMT codegen → extended cycle-level core);
+//!   2. run the SW solution (PR transformation → scalar codegen →
+//!      baseline core);
+//!   3. execute the AOT-compiled JAX/Pallas golden model
+//!      (`artifacts/<name>.hlo.txt`) on the PJRT CPU client from Rust;
+//!   4. assert all three outputs (plus the native Rust reference) are
+//!      bit-identical, and report IPC for both solutions.
+//!
+//! Usage: make artifacts && cargo run --release --example e2e_validate
+
+use vortex_warp::coordinator::dispatch::{dispatch, Solution};
+use vortex_warp::kernels;
+use vortex_warp::prt::kir::ParamDir;
+use vortex_warp::runtime::Runtime;
+use vortex_warp::sim::SimConfig;
+use vortex_warp::util::stats::geomean;
+use vortex_warp::util::table::{f3, ratio, TextTable};
+
+fn main() {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let mut rt = match Runtime::new(&artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("cannot create PJRT runtime: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT platform: {}\n", rt.platform());
+
+    let base = SimConfig::paper();
+    let mut table = TextTable::new(vec![
+        "benchmark",
+        "HW IPC",
+        "SW IPC",
+        "HW/SW",
+        "sim==golden",
+    ]);
+    let mut speedups = Vec::new();
+    let mut failures = 0;
+
+    for b in kernels::all() {
+        // --- simulator, both solutions ---
+        let hw = dispatch(Solution::Hw, &b.kernel, &base, &b.inputs)
+            .unwrap_or_else(|e| panic!("{}: HW path failed: {e}", b.name));
+        let sw = dispatch(Solution::Sw, &b.kernel, &base, &b.inputs)
+            .unwrap_or_else(|e| panic!("{}: SW path failed: {e}", b.name));
+        b.check(&hw.env).expect("HW output vs native reference");
+        b.check(&sw.env).expect("SW output vs native reference");
+
+        // --- PJRT golden model ---
+        let input_arrays: Vec<&[i32]> = b
+            .kernel
+            .params
+            .iter()
+            .filter(|p| p.dir != ParamDir::Out)
+            .map(|p| b.inputs.get(p.name))
+            .collect();
+        let golden = rt
+            .run_i32(b.name, &input_arrays)
+            .unwrap_or_else(|e| panic!("{}: PJRT golden model failed: {e}", b.name));
+
+        // Golden outputs come back in kernel output-parameter order.
+        let mut ok = true;
+        for (gi, name) in b.outputs.iter().enumerate() {
+            let sim_out = hw.env.get(name);
+            if golden.get(gi).map(Vec::as_slice) != Some(sim_out) {
+                eprintln!(
+                    "MISMATCH {}::{name}: golden {:?}... vs sim {:?}...",
+                    b.name,
+                    &golden[gi][..golden[gi].len().min(8)],
+                    &sim_out[..sim_out.len().min(8)]
+                );
+                ok = false;
+                failures += 1;
+            }
+        }
+
+        let speedup = hw.metrics.ipc() / sw.metrics.ipc();
+        speedups.push(speedup);
+        table.row(vec![
+            b.name.to_string(),
+            f3(hw.metrics.ipc()),
+            f3(sw.metrics.ipc()),
+            ratio(speedup),
+            if ok { "OK".to_string() } else { "FAIL".to_string() },
+        ]);
+    }
+
+    println!("{}", table.render());
+    println!(
+        "\ngeomean HW/SW IPC speedup: {} (paper: 2.42x)",
+        ratio(geomean(&speedups))
+    );
+    if failures > 0 {
+        eprintln!("\n{failures} golden-model mismatches");
+        std::process::exit(1);
+    }
+    println!("\nall benchmarks validated against the PJRT golden models — OK");
+}

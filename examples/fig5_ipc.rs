@@ -1,0 +1,24 @@
+//! End-to-end Fig 5 driver: runs all six benchmarks under both the HW
+//! and SW solutions on the cycle-level simulator (validating every
+//! output against the native reference) and prints the IPC table with
+//! the geomean speedup.
+//!
+//! Usage: cargo run --release --example fig5_ipc
+
+use vortex_warp::bench_harness::fig5;
+use vortex_warp::sim::SimConfig;
+
+fn main() {
+    let base = SimConfig::paper();
+    println!(
+        "Vortex warp-level features: HW vs SW IPC (Fig 5)\nconfig: {} threads/warp, {} warps, {} core(s)\n",
+        base.nt, base.nw, base.num_cores
+    );
+    match fig5::run_all(&base) {
+        Ok(rows) => println!("{}", fig5::render(&rows)),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

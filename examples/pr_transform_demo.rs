@@ -1,0 +1,59 @@
+//! Fig 3 / Fig 4 regeneration: shows the paper's running example
+//! through every stage of the SW solution —
+//!   * the original CUDA-style kernel (Fig 3a),
+//!   * the identified parallel regions after fission (Fig 4a),
+//!   * the serialized kernel after the PR transformation (Fig 4b),
+//!   * the HW-intrinsic lowering for comparison (Fig 3b).
+//!
+//! Usage: cargo run --release --example pr_transform_demo
+
+use vortex_warp::isa::text::disasm_program;
+use vortex_warp::prt::codegen::codegen_simt;
+use vortex_warp::prt::kir::Expr as E;
+use vortex_warp::prt::kir::*;
+use vortex_warp::prt::{fission, regions, transform};
+
+/// The Fig 3a kernel: tile<4> cooperative group, tile-scoped work, a
+/// tile.any vote, block sync.
+fn fig3a() -> Kernel {
+    Kernel::new("fig3a", 1, 32, 8)
+        .param("out", 32, ParamDir::Out)
+        .body(vec![
+            Stmt::TilePartition(4),
+            Stmt::Assign("groupId", E::b(BinOp::Div, E::ThreadIdx, E::c(4))),
+            Stmt::If(
+                E::b(BinOp::Eq, E::l("groupId"), E::c(0)),
+                vec![
+                    Stmt::Assign("gtid", E::TileRank),
+                    // doTileWork(tile, gtid)
+                    Stmt::Assign("x", E::b(BinOp::Rem, E::l("gtid"), E::c(2))),
+                    Stmt::TileSync,
+                    Stmt::Assign("y", E::warp(WarpFn::VoteAny, E::l("x"), 0)),
+                ],
+                vec![],
+            ),
+            Stmt::Sync,
+            Stmt::Store("out", E::ThreadIdx, E::l("y")),
+        ])
+}
+
+fn main() {
+    let k = fig3a();
+    println!("==== Fig 3a: original kernel ====\n{k}\n");
+
+    let fissioned = fission::fission_kernel(&k).expect("fission");
+    let regs = regions::identify(&fissioned).expect("identify");
+    println!("==== Fig 4a: identified parallel regions (after fission) ====");
+    println!("{}", regions::render(&regs));
+
+    let scalar = transform(&k).expect("transform");
+    println!("==== Fig 4b: kernel after PR transformation (SW solution) ====\n{scalar}\n");
+
+    let img = codegen_simt(&k, 8, 4).expect("simt codegen");
+    println!(
+        "==== Fig 3b: HW-intrinsic lowering (vx_tile / vx_vote / vx_split) ====\n\
+         ({} instructions; showing the first 48)\n",
+        img.prog.len()
+    );
+    println!("{}", disasm_program(&img.prog[..img.prog.len().min(48)]));
+}

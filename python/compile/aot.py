@@ -1,0 +1,54 @@
+"""AOT lowering: JAX/Pallas golden models -> HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids
+which the image's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser on the Rust side reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; Python never runs on the request path.
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import BENCHMARKS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_benchmark(name: str) -> str:
+    fn, lens = BENCHMARKS[name]
+    specs = [jax.ShapeDtypeStruct((n,), jnp.int32) for n in lens]
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="lower a single benchmark")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    names = [args.only] if args.only else list(BENCHMARKS)
+    for name in names:
+        text = lower_benchmark(name)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Pure-jnp correctness oracle for the Pallas warp-collective kernels.
+
+No pallas here: plain reshapes/takes/reductions. pytest asserts
+``warp_ops.* == ref.*`` across modes, deltas, segment sizes and shapes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def shfl(x, *, mode: str, delta: int, seg: int):
+    x = jnp.asarray(x, jnp.int32)
+    n = x.shape[0]
+    rows = x.reshape(n // seg, seg)
+    lane = np.arange(seg)
+    if mode == "up":
+        src = lane - delta
+        valid = lane >= delta
+    elif mode == "down":
+        src = lane + delta
+        valid = (lane + delta) <= seg - 1
+    elif mode == "bfly":
+        src = lane ^ delta
+        valid = (lane ^ delta) <= seg - 1
+    elif mode == "idx":
+        src = np.full(seg, delta)
+        valid = np.full(seg, delta <= seg - 1)
+    else:
+        raise ValueError(mode)
+    src = np.clip(src, 0, seg - 1)
+    out = jnp.where(jnp.asarray(valid), rows[:, src], rows)
+    return out.reshape(n)
+
+
+def vote(x, *, mode: str, seg: int):
+    x = jnp.asarray(x, jnp.int32)
+    n = x.shape[0]
+    rows = x.reshape(n // seg, seg)
+    p = rows != 0
+    if mode == "any":
+        r = jnp.any(p, axis=1).astype(jnp.int32)
+    elif mode == "all":
+        r = jnp.all(p, axis=1).astype(jnp.int32)
+    elif mode == "uni":
+        r = jnp.all(rows == rows[:, :1], axis=1).astype(jnp.int32)
+    elif mode == "ballot":
+        lane = jnp.arange(seg, dtype=jnp.int32)
+        r = jnp.sum(jnp.where(p, 1 << lane, 0), axis=1).astype(jnp.int32)
+    else:
+        raise ValueError(mode)
+    return jnp.repeat(r, seg)
+
+
+def seg_sum(x, *, seg: int):
+    x = jnp.asarray(x, jnp.int32)
+    n = x.shape[0]
+    return jnp.sum(x.reshape(n // seg, seg), axis=1, dtype=jnp.int32)

@@ -1,0 +1,123 @@
+"""L1 — Pallas kernels implementing the warp-collective semantics.
+
+These are the TPU-side statement of the paper's warp-level features
+(DESIGN.md §Hardware-Adaptation): a CUDA warp of ``seg`` lanes maps to a
+VMEM vector row; shuffles become lane permutes inside the kernel block,
+votes become segmented reductions, and a cooperative-group tile is a
+reshape of the lane axis. ``interpret=True`` everywhere: the CPU PJRT
+plugin executes the interpreted lowering (real-TPU lowering emits Mosaic
+custom-calls the CPU client cannot run).
+
+Semantics are definitionally identical to
+``rust/src/sim/exec/warp_ops.rs`` — the pytest suite checks them against
+``ref.py`` and the Rust e2e example cross-validates through PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SHFL_MODES = ("up", "down", "bfly", "idx")
+VOTE_MODES = ("any", "all", "uni", "ballot")
+
+
+def _shfl_kernel(x_ref, o_ref, *, mode: str, delta: int, seg: int):
+    """One grid step handles one warp row of ``seg`` lanes."""
+    row = x_ref[0, :]  # (seg,)
+    lane = jax.lax.iota(jnp.int32, seg)
+    if mode == "up":
+        src = lane - delta
+        valid = lane >= delta
+    elif mode == "down":
+        src = lane + delta
+        valid = (lane + delta) <= (seg - 1)
+    elif mode == "bfly":
+        src = lane ^ delta
+        valid = (lane ^ delta) <= (seg - 1)
+    elif mode == "idx":
+        src = jnp.full((seg,), delta, jnp.int32)
+        valid = jnp.full((seg,), delta <= seg - 1, jnp.bool_)
+    else:  # pragma: no cover
+        raise ValueError(mode)
+    src = jnp.clip(src, 0, seg - 1)
+    o_ref[0, :] = jnp.where(valid, row[src], row)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "delta", "seg"))
+def shfl(x, *, mode: str, delta: int, seg: int):
+    """Segmented shuffle of a flat i32 vector (CUDA __shfl_* semantics,
+    clamp = segment boundary)."""
+    n = x.shape[0]
+    assert n % seg == 0, (n, seg)
+    rows = x.reshape(n // seg, seg)
+    out = pl.pallas_call(
+        functools.partial(_shfl_kernel, mode=mode, delta=delta, seg=seg),
+        out_shape=jax.ShapeDtypeStruct((n // seg, seg), jnp.int32),
+        grid=(n // seg,),
+        in_specs=[pl.BlockSpec((1, seg), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, seg), lambda i: (i, 0)),
+        interpret=True,
+    )(rows)
+    return out.reshape(n)
+
+
+def _vote_kernel(x_ref, o_ref, *, mode: str, seg: int):
+    row = x_ref[...]  # (1, seg) block
+    p = row != 0
+    if mode == "any":
+        r = jnp.any(p).astype(jnp.int32)
+        o_ref[...] = jnp.full_like(row, r)
+    elif mode == "all":
+        r = jnp.all(p).astype(jnp.int32)
+        o_ref[...] = jnp.full_like(row, r)
+    elif mode == "uni":
+        r = jnp.all(row == row.reshape(-1)[0]).astype(jnp.int32)
+        o_ref[...] = jnp.full_like(row, r)
+    elif mode == "ballot":
+        lane = jax.lax.iota(jnp.int32, seg).reshape(row.shape)
+        r = jnp.sum(jnp.where(p, jnp.left_shift(1, lane), 0)).astype(jnp.int32)
+        o_ref[...] = jnp.full_like(row, r)
+    else:  # pragma: no cover
+        raise ValueError(mode)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "seg"))
+def vote(x, *, mode: str, seg: int):
+    """Segmented vote: the scalar result is broadcast to every lane of
+    the segment (matching ``vx_vote``'s per-lane destination write)."""
+    n = x.shape[0]
+    assert n % seg == 0, (n, seg)
+    rows = x.reshape(n // seg, seg)
+    out = pl.pallas_call(
+        functools.partial(_vote_kernel, mode=mode, seg=seg),
+        out_shape=jax.ShapeDtypeStruct((n // seg, seg), jnp.int32),
+        grid=(n // seg,),
+        in_specs=[pl.BlockSpec((1, seg), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, seg), lambda i: (i, 0)),
+        interpret=True,
+    )(rows)
+    return out.reshape(n)
+
+
+def _seg_sum_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.sum(x_ref[...], axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("seg",))
+def seg_sum(x, *, seg: int):
+    """Segment sums (the shuffle-down reduction chain's lane-0 result):
+    returns one i32 per segment."""
+    n = x.shape[0]
+    assert n % seg == 0, (n, seg)
+    rows = x.reshape(n // seg, seg)
+    out = pl.pallas_call(
+        _seg_sum_kernel,
+        out_shape=jax.ShapeDtypeStruct((n // seg, 1), jnp.int32),
+        grid=(n // seg,),
+        in_specs=[pl.BlockSpec((1, seg), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        interpret=True,
+    )(rows)
+    return out.reshape(n // seg)

@@ -1,0 +1,97 @@
+"""L2 — JAX golden models of the six evaluation benchmarks.
+
+Each function reproduces, in int32 (wrapping) arithmetic, the exact
+observable semantics of the corresponding KIR kernel in
+``rust/src/kernels/`` — composed from the L1 Pallas warp-collective
+kernels where the CUDA source uses warp-level features. ``aot.py``
+lowers each to HLO text; the Rust e2e driver executes them through PJRT
+and compares against both simulator paths.
+
+Geometry constants mirror the Rust side (warp = 8 lanes; block = 32
+threads).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import warp_ops
+
+WARP = 8
+BLOCK = 32
+
+
+def mse_forward(pred, target):
+    """grid=64: per-block sum of squared differences (unet.cu's
+    mse_forward: warp shuffle-down reduce + shared staging + block
+    combine — observably the per-block segmented sum)."""
+    d = (pred - target).astype(jnp.int32)
+    sq = (d * d).astype(jnp.int32)
+    # warp-level reduction via the pallas segmented sum, then the block
+    # combine of 4 warp partials.
+    warp_partials = warp_ops.seg_sum(sq, seg=WARP)
+    out = warp_ops.seg_sum(warp_partials, seg=BLOCK // WARP)
+    return (out,)
+
+
+def matmul(a, b, *, m=32, n=32, k=16):
+    """Tiled integer GEMM (no warp-level features)."""
+    c = jnp.matmul(
+        a.reshape(m, k).astype(jnp.int32),
+        b.reshape(k, n).astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return (c.reshape(m * n),)
+
+
+def shuffle(x):
+    """All four shuffle modes combined: out = up(x,1) + 3*down(x,2) +
+    5*bfly(x,4) + 7*idx(x,0)."""
+    a = warp_ops.shfl(x, mode="up", delta=1, seg=WARP)
+    b = warp_ops.shfl(x, mode="down", delta=2, seg=WARP)
+    c = warp_ops.shfl(x, mode="bfly", delta=4, seg=WARP)
+    d = warp_ops.shfl(x, mode="idx", delta=0, seg=WARP)
+    out = a + 3 * b + 5 * c + 7 * d
+    return (out.astype(jnp.int32),)
+
+
+def vote(x):
+    """All four vote modes over p = x & 1."""
+    p = (x & 1).astype(jnp.int32)
+    any_o = warp_ops.vote(p, mode="any", seg=WARP)
+    all_o = warp_ops.vote(p, mode="all", seg=WARP)
+    uni_o = warp_ops.vote(p, mode="uni", seg=WARP)
+    ballot_o = warp_ops.vote(p, mode="ballot", seg=WARP)
+    return (any_o, all_o, uni_o, ballot_o)
+
+
+def reduce(x, *, grid=2, elems_per_thread=4):
+    """Block reduction with grid-stride element assignment: element i
+    belongs to thread i % (grid*BLOCK); per-block sums."""
+    total_threads = grid * BLOCK
+    per_thread = jnp.sum(
+        x.reshape(elems_per_thread, total_threads).astype(jnp.int32), axis=0
+    ).astype(jnp.int32)
+    warp_partials = warp_ops.seg_sum(per_thread, seg=WARP)
+    out = warp_ops.seg_sum(warp_partials, seg=BLOCK // WARP)
+    return (out,)
+
+
+def reduce_tile(x, *, tile=4):
+    """Cooperative-groups tiled reduction: per-tile sums plus a
+    tile-scoped any(x > 0) vote."""
+    out = warp_ops.seg_sum(x, seg=tile)
+    p = (x > 0).astype(jnp.int32)
+    anyv = warp_ops.vote(p, mode="any", seg=tile)
+    # rank-0 lanes carry the stored result; one value per tile.
+    anypos = anyv.reshape(-1, tile)[:, 0]
+    return (out, anypos.astype(jnp.int32))
+
+
+#: name -> (fn, input lengths) — must match the Rust benchmark params.
+BENCHMARKS = {
+    "mse_forward": (mse_forward, [2048, 2048]),
+    "matmul": (matmul, [32 * 16, 16 * 32]),
+    "shuffle": (shuffle, [32]),
+    "vote": (vote, [32]),
+    "reduce": (reduce, [256]),
+    "reduce_tile": (reduce_tile, [64]),
+}

@@ -1,0 +1,7 @@
+"""Make `compile.*` importable whether pytest runs from python/ or the
+repository root."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

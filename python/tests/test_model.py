@@ -1,0 +1,101 @@
+"""L2 golden models vs independent numpy oracles on the exact inputs
+the Rust benchmarks use (same deterministic generator formulas — keep in
+sync with rust/src/kernels/*.rs)."""
+
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def rust_inputs(name):
+    """Reproduce the Rust benchmarks' deterministic input patterns."""
+    if name == "mse_forward":
+        n = 2048
+        i = np.arange(n, dtype=np.int64)
+        pred = ((i * 11 + 3) % 17 - 8).astype(np.int32)
+        target = ((i * 7 + 1) % 15 - 7).astype(np.int32)
+        return [pred, target]
+    if name == "matmul":
+        i = np.arange(32 * 16, dtype=np.int64)
+        a = ((i * 7 + 3) % 23 - 11).astype(np.int32)
+        j = np.arange(16 * 32, dtype=np.int64)
+        b = ((j * 5 + 1) % 19 - 9).astype(np.int32)
+        return [a, b]
+    if name == "shuffle":
+        i = np.arange(32, dtype=np.int64)
+        return [(i * 3 - 700).astype(np.int32)]
+    if name == "vote":
+        i = np.arange(32, dtype=np.int64)
+        x = np.where((i // 8) % 3 == 0, 0, np.where((i // 8) % 3 == 1, 1, i % 2))
+        return [x.astype(np.int32)]
+    if name == "reduce":
+        i = np.arange(256, dtype=np.int64)
+        return [((i * 13 + 5) % 101 - 50).astype(np.int32)]
+    if name == "reduce_tile":
+        i = np.arange(64, dtype=np.int64)
+        return [((i * 17 + 7) % 41 - 20).astype(np.int32)]
+    raise KeyError(name)
+
+
+def numpy_expected(name, inputs):
+    if name == "mse_forward":
+        pred, target = inputs
+        d = (pred.astype(np.int64) - target) ** 2
+        return [d.reshape(64, 32).sum(axis=1).astype(np.int32)]
+    if name == "matmul":
+        a, b = inputs
+        c = a.reshape(32, 16).astype(np.int64) @ b.reshape(16, 32)
+        return [c.reshape(-1).astype(np.int32)]
+    if name == "shuffle":
+        (x,) = inputs
+        rows = x.reshape(-1, 8)
+        lane = np.arange(8)
+        up = np.where(lane >= 1, rows[:, np.clip(lane - 1, 0, 7)], rows)
+        down = np.where(lane + 2 <= 7, rows[:, np.clip(lane + 2, 0, 7)], rows)
+        bfly = rows[:, lane ^ 4]
+        idx = rows[:, [0] * 8]
+        out = up + 3 * down + 5 * bfly + 7 * idx
+        return [out.reshape(-1).astype(np.int32)]
+    if name == "vote":
+        (x,) = inputs
+        p = (x & 1).reshape(-1, 8) != 0
+        any_o = np.repeat(p.any(axis=1).astype(np.int32), 8)
+        all_o = np.repeat(p.all(axis=1).astype(np.int32), 8)
+        rows = (x & 1).reshape(-1, 8)
+        uni_o = np.repeat((rows == rows[:, :1]).all(axis=1).astype(np.int32), 8)
+        ballot = (p << np.arange(8)).sum(axis=1)
+        ballot_o = np.repeat(ballot.astype(np.int32), 8)
+        return [any_o, all_o, uni_o, ballot_o]
+    if name == "reduce":
+        (x,) = inputs
+        per_thread = x.reshape(4, 64).sum(axis=0)
+        return [per_thread.reshape(2, 32).sum(axis=1).astype(np.int32)]
+    if name == "reduce_tile":
+        (x,) = inputs
+        tiles = x.reshape(-1, 4)
+        return [
+            tiles.sum(axis=1).astype(np.int32),
+            (tiles > 0).any(axis=1).astype(np.int32),
+        ]
+    raise KeyError(name)
+
+
+@pytest.mark.parametrize("name", list(model.BENCHMARKS))
+def test_model_matches_numpy_oracle(name):
+    fn, lens = model.BENCHMARKS[name]
+    inputs = rust_inputs(name)
+    assert [len(x) for x in inputs] == lens, "input lengths drifted from Rust"
+    got = [np.asarray(o) for o in fn(*inputs)]
+    want = numpy_expected(name, inputs)
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w, err_msg=name)
+
+
+@pytest.mark.parametrize("name", list(model.BENCHMARKS))
+def test_model_output_dtypes_are_i32(name):
+    fn, lens = model.BENCHMARKS[name]
+    inputs = rust_inputs(name)
+    for o in fn(*inputs):
+        assert np.asarray(o).dtype == np.int32, name

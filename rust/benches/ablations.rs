@@ -1,0 +1,125 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!   1. crossbar vs serialized multiplexer for merged-warp collectives
+//!      (§III "we add a cross-bar instead of a multiplexer");
+//!   2. scheduler policy (round-robin vs greedy-then-oldest);
+//!   3. warp count scaling (the latency-hiding mechanism the SW
+//!      solution loses);
+//!   4. the SW reduce-collapse optimization on mse_forward (the effect
+//!      behind the paper's "SW wins on mse_forward" observation).
+//!
+//! Run: cargo bench --bench ablations
+
+use vortex_warp::coordinator::dispatch::{dispatch, Solution};
+use vortex_warp::coordinator::run_hw;
+use vortex_warp::kernels;
+use vortex_warp::prt::interp::Env;
+use vortex_warp::prt::kir::Expr as E;
+use vortex_warp::prt::kir::*;
+use vortex_warp::sim::config::SchedPolicy;
+use vortex_warp::sim::SimConfig;
+use vortex_warp::util::table::{f3, ratio, TextTable};
+
+fn merged_collective_kernel() -> Kernel {
+    let n = 32 * 8;
+    Kernel::new("merged", 8, 32, 8)
+        .param("in", n, ParamDir::In)
+        .param("out", n, ParamDir::Out)
+        .body(vec![
+            Stmt::TilePartition(32), // fully merged: 4 warps per group
+            Stmt::Assign(
+                "gid",
+                E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx),
+            ),
+            Stmt::Assign("x", E::load("in", E::l("gid"))),
+            Stmt::Assign("r", E::warp(WarpFn::Ballot, E::l("x"), 0)),
+            Stmt::Store("out", E::l("gid"), E::l("r")),
+        ])
+}
+
+fn main() {
+    let n = 32 * 8;
+    let inputs = Env::default().with("in", (0..n).map(|i| i & 1).collect());
+
+    println!("=== ablation 1: crossbar vs serialized mux (merged collectives) ===");
+    {
+        let k = merged_collective_kernel();
+        let with = run_hw(&k, &SimConfig::paper(), &inputs).expect("crossbar");
+        let mut cfg = SimConfig::paper();
+        cfg.crossbar = false;
+        let without = run_hw(&k, &cfg, &inputs).expect("mux");
+        let mut t = TextTable::new(vec!["design", "IPC", "cycles", "crossbar hops"]);
+        t.row(vec![
+            "crossbar (paper)".into(),
+            f3(with.metrics.ipc()),
+            with.metrics.cycles.to_string(),
+            with.metrics.crossbar_hops.to_string(),
+        ]);
+        t.row(vec![
+            "serialized mux".into(),
+            f3(without.metrics.ipc()),
+            without.metrics.cycles.to_string(),
+            without.metrics.crossbar_hops.to_string(),
+        ]);
+        println!("{}\n", t.render());
+    }
+
+    println!("=== ablation 2: scheduler policy (all six benchmarks, HW path) ===");
+    {
+        let mut t = TextTable::new(vec!["benchmark", "RR IPC", "GTO IPC"]);
+        for b in kernels::all() {
+            let mut rr = SimConfig::paper();
+            rr.sched = SchedPolicy::RoundRobin;
+            let mut gto = SimConfig::paper();
+            gto.sched = SchedPolicy::Gto;
+            let a = dispatch(Solution::Hw, &b.kernel, &rr, &b.inputs).expect("rr");
+            let g = dispatch(Solution::Hw, &b.kernel, &gto, &b.inputs).expect("gto");
+            t.row(vec![b.name.to_string(), f3(a.metrics.ipc()), f3(g.metrics.ipc())]);
+        }
+        println!("{}\n", t.render());
+    }
+
+    println!("=== ablation 3: warp count scaling (vote benchmark, HW path) ===");
+    {
+        let mut t = TextTable::new(vec!["warps", "IPC", "cycles"]);
+        let b = kernels::by_name("vote").unwrap();
+        for nw in [1usize, 2, 4, 8] {
+            let mut cfg = SimConfig::paper();
+            cfg.nw = nw;
+            // block 32 needs nt*nw == 32
+            cfg.nt = 32 / nw;
+            if !cfg.nt.is_power_of_two() {
+                continue;
+            }
+            let r = dispatch(Solution::Hw, &b.kernel, &cfg, &b.inputs).expect("run");
+            t.row(vec![nw.to_string(), f3(r.metrics.ipc()), r.metrics.cycles.to_string()]);
+        }
+        println!("{}\n", t.render());
+    }
+
+    println!("=== ablation 4: SW reduce-collapse on mse_forward ===");
+    {
+        let b = kernels::by_name("mse_forward").unwrap();
+        let base = SimConfig::baseline();
+        let with = dispatch(Solution::Sw, &b.kernel, &base, &b.inputs).expect("sw");
+        // Strip the annotation: the vanilla Table III transformation.
+        let mut plain = b.kernel.clone();
+        plain.reduce_hints.clear();
+        let without = dispatch(Solution::Sw, &plain, &base, &b.inputs).expect("sw-plain");
+        let hw = dispatch(Solution::Hw, &b.kernel, &SimConfig::paper(), &b.inputs).expect("hw");
+        let mut t = TextTable::new(vec!["variant", "IPC", "cycles", "instrs", "HW/SW"]);
+        for (name, r) in [
+            ("SW + collapse (paper's mse win)", &with),
+            ("SW vanilla Table III", &without),
+            ("HW solution", &hw),
+        ] {
+            t.row(vec![
+                name.to_string(),
+                f3(r.metrics.ipc()),
+                r.metrics.cycles.to_string(),
+                r.metrics.instrs.to_string(),
+                ratio(hw.metrics.ipc() / r.metrics.ipc()),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+}

@@ -1,0 +1,33 @@
+//! Fig 5 bench: regenerates the paper's IPC comparison (simulated IPC
+//! is the reported metric; wall-clock simulation time is reported as a
+//! secondary column by the in-house harness).
+//!
+//! Run: cargo bench --bench fig5_ipc
+
+use vortex_warp::bench_harness::{fig5, timing};
+use vortex_warp::coordinator::dispatch::{dispatch, Solution};
+use vortex_warp::kernels;
+use vortex_warp::sim::SimConfig;
+
+fn main() {
+    let base = SimConfig::paper();
+    println!("=== Fig 5: HW vs SW IPC over the six benchmarks ===\n");
+    let rows = fig5::run_all(&base).expect("fig5");
+    println!("{}\n", fig5::render(&rows));
+
+    println!("=== wall-clock simulation cost (in-house harness) ===");
+    println!("{}", timing::header());
+    for b in kernels::all() {
+        for sol in [Solution::Hw, Solution::Sw] {
+            let t = timing::bench(
+                &format!("{}[{}]", b.name, sol.name()),
+                1,
+                5,
+                || {
+                    dispatch(sol, &b.kernel, &base, &b.inputs).expect("run");
+                },
+            );
+            println!("{}", t.report());
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! Perf bench for the L3 hot path: raw simulator throughput (simulated
+//! instructions per wall-clock second) on representative workloads.
+//! This is the §Perf measurement target in EXPERIMENTS.md.
+//!
+//! Run: cargo bench --bench perf_hotpath
+
+use std::time::Instant;
+use vortex_warp::coordinator::dispatch::{dispatch, Solution};
+use vortex_warp::kernels;
+use vortex_warp::sim::SimConfig;
+
+fn main() {
+    let base = SimConfig::paper();
+    println!("=== simulator throughput (simulated instrs / wall second) ===\n");
+    let mut total_instr = 0u64;
+    let mut total_ns = 0u128;
+    for b in kernels::all() {
+        for sol in [Solution::Hw, Solution::Sw] {
+            // Warm once, then measure the best of 5.
+            dispatch(sol, &b.kernel, &base, &b.inputs).expect("warm");
+            let mut best_ns = u128::MAX;
+            let mut instrs = 0;
+            for _ in 0..5 {
+                let t0 = Instant::now();
+                let r = dispatch(sol, &b.kernel, &base, &b.inputs).expect("run");
+                let dt = t0.elapsed().as_nanos();
+                best_ns = best_ns.min(dt);
+                instrs = r.metrics.instrs;
+            }
+            let mips = instrs as f64 / (best_ns as f64 / 1e9) / 1e6;
+            println!(
+                "{:24} {:>10} instrs  {:>10.3} ms  {:>8.2} M instr/s",
+                format!("{}[{}]", b.name, sol.name()),
+                instrs,
+                best_ns as f64 / 1e6,
+                mips
+            );
+            total_instr += instrs;
+            total_ns += best_ns;
+        }
+    }
+    println!(
+        "\naggregate: {:.2} M simulated instr/s",
+        total_instr as f64 / (total_ns as f64 / 1e9) / 1e6
+    );
+}

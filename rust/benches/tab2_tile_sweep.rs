@@ -1,0 +1,67 @@
+//! Table II bench: the reduce_tile workload under every cooperative-
+//! group configuration (sub-warp tiles through fully merged warps),
+//! reporting IPC, cycles, and crossbar traffic per configuration.
+//!
+//! Run: cargo bench --bench tab2_tile_sweep
+
+use vortex_warp::coordinator::run_hw;
+use vortex_warp::prt::interp::Env;
+use vortex_warp::prt::kir::Expr as E;
+use vortex_warp::prt::kir::*;
+use vortex_warp::sim::scheduler::TileConfig;
+use vortex_warp::sim::SimConfig;
+use vortex_warp::util::table::{f3, TextTable};
+
+fn tiled_kernel(tile: u32) -> Kernel {
+    let n = 32 * 16;
+    Kernel::new("tile_bench", 16, 32, 8)
+        .param("in", n, ParamDir::In)
+        .param("out", n, ParamDir::Out)
+        .body(vec![
+            Stmt::TilePartition(tile),
+            Stmt::Assign(
+                "gid",
+                E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx),
+            ),
+            Stmt::Assign("x", E::load("in", E::l("gid"))),
+            Stmt::Assign("b", E::warp(WarpFn::Ballot, E::l("x"), 0)),
+            Stmt::Assign("a", E::warp(WarpFn::VoteAny, E::l("x"), 0)),
+            Stmt::Assign("u", E::warp(WarpFn::VoteUni, E::l("x"), 0)),
+            Stmt::Store(
+                "out",
+                E::l("gid"),
+                E::add(E::add(E::l("b"), E::l("a")), E::l("u")),
+            ),
+        ])
+}
+
+fn main() {
+    println!("=== Table II sweep: collectives under every tile configuration ===\n");
+    let base = SimConfig::paper();
+    let n = 32 * 16;
+    let inputs = Env::default().with("in", (0..n).map(|i| i % 3).collect());
+
+    let mut t = TextTable::new(vec![
+        "configuration",
+        "group mask",
+        "size",
+        "IPC",
+        "cycles",
+        "collectives",
+        "crossbar hops",
+    ]);
+    for tile in [4u32, 8, 16, 32] {
+        let cfg_row = TileConfig::for_size(32, tile).unwrap();
+        let r = run_hw(&tiled_kernel(tile), &base, &inputs).expect("run");
+        t.row(vec![
+            format!("{} groups - {} threads", 32 / tile, tile),
+            format!("{:08b}", cfg_row.group_mask),
+            tile.to_string(),
+            f3(r.metrics.ipc()),
+            r.metrics.cycles.to_string(),
+            r.metrics.warp_collectives.to_string(),
+            r.metrics.crossbar_hops.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,34 @@
+//! Table IV bench: area-model evaluation across core configurations
+//! (the paper's row plus NT/NW scaling, showing how the permute network
+//! and crossbar grow).
+//!
+//! Run: cargo bench --bench tab4_area
+
+use vortex_warp::area::model::AreaModel;
+use vortex_warp::area::report::table4;
+use vortex_warp::sim::SimConfig;
+use vortex_warp::util::table::TextTable;
+
+fn main() {
+    println!("{}\n", table4(&SimConfig::paper()));
+
+    println!("=== scaling sweep (model) ===");
+    let mut t = TextTable::new(vec![
+        "NT", "NW", "ext LUTs (SLR0)", "ext FFs (SLR0)", "core overhead %",
+    ]);
+    for (nt, nw) in [(4usize, 4usize), (8, 4), (8, 8), (16, 4), (16, 8), (32, 2)] {
+        let mut cfg = SimConfig::paper();
+        cfg.nt = nt;
+        cfg.nw = nw;
+        let m = AreaModel::build(&cfg);
+        t.row(vec![
+            nt.to_string(),
+            nw.to_string(),
+            m.luts[0].to_string(),
+            m.ffs[0].to_string(),
+            format!("{:.2}", m.core_overhead_pct()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("\nthe NTxNT shuffle permute dominates: LUTs grow ~quadratically in NT.");
+}

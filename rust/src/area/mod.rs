@@ -1,0 +1,14 @@
+//! Analytical FPGA area model (substitute for the paper's Vivado
+//! 2023.1 / Xilinx U50 synthesis — see DESIGN.md §2).
+//!
+//! The model prices each architectural addition of the HW solution
+//! (Fig 2's highlighted blocks) in UltraScale+ primitives (6-LUTs,
+//! flip-flops), packs them into CLBs across the two U50 Super Logic
+//! Regions, and reports the utilization delta against the baseline
+//! Vortex core — regenerating Table IV and the Fig 6 layout view.
+
+pub mod model;
+pub mod report;
+
+pub use model::{extension_components, AreaModel, Component, Slr};
+pub use report::{fig6_layout, table4};

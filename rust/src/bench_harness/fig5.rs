@@ -1,0 +1,109 @@
+//! Fig 5 regeneration: IPC of the HW and SW solutions over the six
+//! benchmarks, plus the geomean speedup (paper: 2.42× geomean, ~4× on
+//! the collective-heavy kernels, SW ≥ HW on mse_forward, SW ≈ −30% on
+//! matmul).
+
+use crate::coordinator::dispatch::{dispatch, Solution};
+use crate::kernels::{all, Benchmark};
+use crate::sim::SimConfig;
+use crate::util::stats::geomean;
+use crate::util::table::{f3, ratio, TextTable};
+
+/// One benchmark's measurements.
+#[derive(Clone, Debug)]
+pub struct Fig5Row {
+    pub name: &'static str,
+    pub hw_ipc: f64,
+    pub sw_ipc: f64,
+    pub hw_cycles: u64,
+    pub sw_cycles: u64,
+    pub hw_instrs: u64,
+    pub sw_instrs: u64,
+}
+
+impl Fig5Row {
+    /// The paper's reported metric: HW-over-SW IPC speedup.
+    pub fn speedup(&self) -> f64 {
+        self.hw_ipc / self.sw_ipc
+    }
+}
+
+/// Run one benchmark under both solutions, validating outputs against
+/// the native reference.
+pub fn measure(b: &Benchmark, base: &SimConfig) -> Result<Fig5Row, String> {
+    let hw = dispatch(Solution::Hw, &b.kernel, base, &b.inputs)
+        .map_err(|e| format!("{}: HW: {e}", b.name))?;
+    b.check(&hw.env).map_err(|e| format!("HW output invalid: {e}"))?;
+    let sw = dispatch(Solution::Sw, &b.kernel, base, &b.inputs)
+        .map_err(|e| format!("{}: SW: {e}", b.name))?;
+    b.check(&sw.env).map_err(|e| format!("SW output invalid: {e}"))?;
+    Ok(Fig5Row {
+        name: b.name,
+        hw_ipc: hw.metrics.ipc(),
+        sw_ipc: sw.metrics.ipc(),
+        hw_cycles: hw.metrics.cycles,
+        sw_cycles: sw.metrics.cycles,
+        hw_instrs: hw.metrics.instrs,
+        sw_instrs: sw.metrics.instrs,
+    })
+}
+
+/// Measure all six benchmarks.
+pub fn run_all(base: &SimConfig) -> Result<Vec<Fig5Row>, String> {
+    all().iter().map(|b| measure(b, base)).collect()
+}
+
+/// Geomean HW/SW IPC speedup over a row set.
+pub fn geomean_speedup(rows: &[Fig5Row]) -> f64 {
+    geomean(&rows.iter().map(Fig5Row::speedup).collect::<Vec<_>>())
+}
+
+/// Render the Fig 5 table.
+pub fn render(rows: &[Fig5Row]) -> String {
+    let mut t = TextTable::new(vec![
+        "benchmark",
+        "HW IPC",
+        "SW IPC",
+        "HW/SW speedup",
+        "HW cycles",
+        "SW cycles",
+        "HW instrs",
+        "SW instrs",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.name.to_string(),
+            f3(r.hw_ipc),
+            f3(r.sw_ipc),
+            ratio(r.speedup()),
+            r.hw_cycles.to_string(),
+            r.sw_cycles.to_string(),
+            r.hw_instrs.to_string(),
+            r.sw_instrs.to_string(),
+        ]);
+    }
+    format!(
+        "{}\n\ngeomean HW/SW IPC speedup: {} (paper: 2.42x)",
+        t.render(),
+        ratio(geomean_speedup(rows))
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_math() {
+        let r = Fig5Row {
+            name: "x",
+            hw_ipc: 0.9,
+            sw_ipc: 0.3,
+            hw_cycles: 1,
+            sw_cycles: 3,
+            hw_instrs: 1,
+            sw_instrs: 1,
+        };
+        assert!((r.speedup() - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,7 @@
+//! Table/figure regeneration harness + in-house timing utilities
+//! (criterion is not vendored in this offline environment — see
+//! DESIGN.md §2).
+
+pub mod fig5;
+pub mod tables;
+pub mod timing;

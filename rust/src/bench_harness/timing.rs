@@ -1,0 +1,86 @@
+//! Minimal wall-clock benchmarking harness (criterion replacement for
+//! this offline environment): warmup + N timed iterations, reporting
+//! min/median/mean.
+
+use std::time::Instant;
+
+/// Result of a timed run.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub min_ns: u128,
+    pub median_ns: u128,
+    pub mean_ns: u128,
+}
+
+impl Timing {
+    pub fn report(&self) -> String {
+        format!(
+            "{:32} {:>12} {:>12} {:>12}   ({} iters)",
+            self.name,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: u128) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3} s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3} us", ns as f64 / 1e3)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+/// Run `f` with warmup then `iters` timed iterations.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos());
+    }
+    samples.sort_unstable();
+    let min_ns = samples[0];
+    let median_ns = samples[samples.len() / 2];
+    let mean_ns = samples.iter().sum::<u128>() / samples.len() as u128;
+    Timing { name: name.to_string(), iters: samples.len(), min_ns, median_ns, mean_ns }
+}
+
+/// Header line matching [`Timing::report`] columns.
+pub fn header() -> String {
+    format!(
+        "{:32} {:>12} {:>12} {:>12}",
+        "benchmark", "min", "median", "mean"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let t = bench("noop", 1, 5, || {});
+        assert_eq!(t.iters, 5);
+        assert!(t.min_ns <= t.median_ns);
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert_eq!(fmt_ns(500), "500 ns");
+        assert_eq!(fmt_ns(1_500), "1.500 us");
+        assert_eq!(fmt_ns(2_000_000), "2.000 ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.000 s");
+    }
+}

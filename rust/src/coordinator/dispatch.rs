@@ -1,0 +1,69 @@
+//! Solution dispatch: pick the HW or SW path per launch, the way a user
+//! of the extended Vortex stack would ("users can select between
+//! hardware and software implementations based on application
+//! requirements and area constraints" — §VI).
+
+use super::{run_hw, run_sw, LaunchError, LaunchResult};
+use crate::prt::interp::Env;
+use crate::prt::kir::Kernel;
+use crate::sim::SimConfig;
+
+/// Which implementation of warp-level features to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Solution {
+    /// Table I ISA extensions on the modified core.
+    Hw,
+    /// PR transformation on the baseline core.
+    Sw,
+}
+
+impl Solution {
+    pub fn name(self) -> &'static str {
+        match self {
+            Solution::Hw => "HW",
+            Solution::Sw => "SW",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Solution> {
+        match s.to_ascii_lowercase().as_str() {
+            "hw" | "hardware" => Some(Solution::Hw),
+            "sw" | "software" => Some(Solution::Sw),
+            _ => None,
+        }
+    }
+}
+
+/// Run a kernel under the chosen solution with the matching hardware
+/// configuration derived from `base` (HW forces the extension on, SW
+/// runs on the baseline).
+pub fn dispatch(
+    sol: Solution,
+    k: &Kernel,
+    base: &SimConfig,
+    inputs: &Env,
+) -> Result<LaunchResult, LaunchError> {
+    match sol {
+        Solution::Hw => {
+            let cfg = SimConfig { warp_hw: true, ..base.clone() };
+            run_hw(k, &cfg, inputs)
+        }
+        Solution::Sw => {
+            let cfg = SimConfig { warp_hw: false, ..base.clone() };
+            run_sw(k, &cfg, inputs)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Solution::parse("hw"), Some(Solution::Hw));
+        assert_eq!(Solution::parse("Software"), Some(Solution::Sw));
+        assert_eq!(Solution::parse("x"), None);
+        assert_eq!(Solution::Hw.name(), "HW");
+    }
+}

@@ -1,0 +1,193 @@
+//! L3 coordinator: the kernel launcher that ties the stack together.
+//!
+//! A launch mirrors the Vortex runtime flow: allocate parameter arrays
+//! in device global memory, write their base addresses into the
+//! kernel-argument mailbox, load the program, run the core(s) to
+//! completion, and read results back. [`launch`] does exactly that for
+//! a [`LaunchImage`]; [`run_hw`] / [`run_sw`] are the two solution
+//! paths of the paper (HW: SIMT codegen on the extended core; SW: PR
+//! transformation + scalar codegen on the baseline core).
+
+pub mod dispatch;
+
+use crate::prt::codegen::{codegen_scalar, codegen_simt, LaunchImage};
+use crate::prt::interp::Env;
+use crate::prt::kir::{Kernel, ParamDir};
+use crate::prt::transform;
+use crate::sim::{map, Gpu, Metrics, SimConfig, SimError};
+
+/// Launch failure.
+#[derive(Debug)]
+pub enum LaunchError {
+    Codegen(String),
+    Sim(SimError),
+    BadInput(String),
+}
+
+impl std::fmt::Display for LaunchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LaunchError::Codegen(e) => write!(f, "codegen: {e}"),
+            LaunchError::Sim(e) => write!(f, "simulation: {e}"),
+            LaunchError::BadInput(e) => write!(f, "bad input: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for LaunchError {}
+
+impl From<SimError> for LaunchError {
+    fn from(e: SimError) -> Self {
+        LaunchError::Sim(e)
+    }
+}
+
+/// Default cycle budget per launch.
+pub const MAX_CYCLES: u64 = 200_000_000;
+
+/// Outcome of a launch: output arrays + per-core metrics.
+#[derive(Debug)]
+pub struct LaunchResult {
+    pub env: Env,
+    pub metrics: Metrics,
+}
+
+/// Run a compiled kernel image on a GPU with the given inputs.
+pub fn launch(
+    cfg: &SimConfig,
+    img: &LaunchImage,
+    inputs: &Env,
+) -> Result<LaunchResult, LaunchError> {
+    let mut gpu = Gpu::new(cfg);
+
+    // Write parameter arrays + the argument mailbox.
+    for (i, &(name, base, len)) in img.params.iter().enumerate() {
+        gpu.mem
+            .write_u32(map::KARG_BASE + 4 * i as u32, base)
+            .map_err(SimError::from)?;
+        let data = inputs.arrays.get(name);
+        for j in 0..len {
+            let v = data.and_then(|d| d.get(j)).copied().unwrap_or(0);
+            gpu.mem
+                .write_u32(base + 4 * j as u32, v as u32)
+                .map_err(SimError::from)?;
+        }
+    }
+
+    gpu.load_program(&img.prog);
+    gpu.run(MAX_CYCLES)?;
+
+    // Read back all arrays.
+    let mut env = inputs.clone();
+    for &(name, base, len) in &img.params {
+        let mut out = Vec::with_capacity(len);
+        for j in 0..len {
+            out.push(gpu.mem.read_u32(base + 4 * j as u32).map_err(SimError::from)? as i32);
+        }
+        env.arrays.insert(name, out);
+    }
+
+    // Aggregate metrics over cores (paper config has one core).
+    let mut metrics = gpu.cores[0].metrics.clone();
+    for c in &gpu.cores[1..] {
+        metrics.cycles = metrics.cycles.max(c.metrics.cycles);
+        metrics.instrs += c.metrics.instrs;
+    }
+    Ok(LaunchResult { env, metrics })
+}
+
+/// The HW solution: SIMT codegen, extended hardware.
+pub fn run_hw(k: &Kernel, cfg: &SimConfig, inputs: &Env) -> Result<LaunchResult, LaunchError> {
+    if !cfg.warp_hw {
+        return Err(LaunchError::BadInput(
+            "run_hw needs a SimConfig with warp_hw enabled".into(),
+        ));
+    }
+    validate_inputs(k, inputs)?;
+    let img =
+        codegen_simt(k, cfg.nt as u32, cfg.nw as u32).map_err(LaunchError::Codegen)?;
+    launch(cfg, &img, inputs)
+}
+
+/// The SW solution: PR transformation + scalar codegen; runs on the
+/// baseline core (works on the extended one too, using no extension
+/// instructions).
+pub fn run_sw(k: &Kernel, cfg: &SimConfig, inputs: &Env) -> Result<LaunchResult, LaunchError> {
+    validate_inputs(k, inputs)?;
+    let scalar = transform(k).map_err(LaunchError::Codegen)?;
+    let img =
+        codegen_scalar(&scalar, cfg.nt as u32, cfg.nw as u32).map_err(LaunchError::Codegen)?;
+    launch(cfg, &img, inputs)
+}
+
+fn validate_inputs(k: &Kernel, inputs: &Env) -> Result<(), LaunchError> {
+    for p in &k.params {
+        if p.dir == ParamDir::In || p.dir == ParamDir::InOut {
+            match inputs.arrays.get(p.name) {
+                None => {
+                    return Err(LaunchError::BadInput(format!(
+                        "missing input array `{}`",
+                        p.name
+                    )))
+                }
+                Some(d) if d.len() != p.len => {
+                    return Err(LaunchError::BadInput(format!(
+                        "input `{}` has {} elements, expected {}",
+                        p.name,
+                        d.len(),
+                        p.len
+                    )))
+                }
+                _ => {}
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prt::kir::{BinOp, Expr as E, Stmt};
+
+    fn copy_kernel() -> Kernel {
+        Kernel::new("copy", 2, 32, 8)
+            .param("src", 64, ParamDir::In)
+            .param("dst", 64, ParamDir::Out)
+            .body(vec![Stmt::Store(
+                "dst",
+                E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx),
+                E::b(
+                    BinOp::Mul,
+                    E::load("src", E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx)),
+                    E::c(2),
+                ),
+            )])
+    }
+
+    #[test]
+    fn hw_and_sw_paths_agree_on_copy() {
+        let k = copy_kernel();
+        let inputs = Env::default().with("src", (0..64).collect());
+        let hw = run_hw(&k, &SimConfig::paper(), &inputs).unwrap();
+        let sw = run_sw(&k, &SimConfig::baseline(), &inputs).unwrap();
+        let want: Vec<i32> = (0..64).map(|x| x * 2).collect();
+        assert_eq!(hw.env.get("dst"), want);
+        assert_eq!(sw.env.get("dst"), want);
+        assert!(hw.metrics.instrs > 0 && sw.metrics.instrs > 0);
+    }
+
+    #[test]
+    fn missing_input_rejected() {
+        let k = copy_kernel();
+        let err = run_hw(&k, &SimConfig::paper(), &Env::default()).unwrap_err();
+        assert!(matches!(err, LaunchError::BadInput(_)));
+    }
+
+    #[test]
+    fn hw_on_baseline_config_rejected() {
+        let k = copy_kernel();
+        let inputs = Env::default().with("src", vec![0; 64]);
+        assert!(run_hw(&k, &SimConfig::baseline(), &inputs).is_err());
+    }
+}

@@ -1,0 +1,88 @@
+//! Vortex CSR address map (the subset device kernels use to discover
+//! their position in the thread hierarchy, mirroring `VX_CSR_*` in the
+//! Vortex runtime).
+
+/// Per-lane thread id within the warp.
+pub const CSR_THREAD_ID: u16 = 0xCC0;
+/// Warp id within the core.
+pub const CSR_WARP_ID: u16 = 0xCC1;
+/// Core id within the socket.
+pub const CSR_CORE_ID: u16 = 0xCC2;
+/// Active thread mask of the warp.
+pub const CSR_THREAD_MASK: u16 = 0xCC4;
+/// Hardware threads per warp (NT).
+pub const CSR_NUM_THREADS: u16 = 0xFC0;
+/// Hardware warps per core (NW).
+pub const CSR_NUM_WARPS: u16 = 0xFC1;
+/// Number of cores (NC).
+pub const CSR_NUM_CORES: u16 = 0xFC2;
+/// Cycle counter (low 32 bits).
+pub const CSR_CYCLE: u16 = 0xC00;
+/// Retired-instruction counter (low 32 bits).
+pub const CSR_INSTRET: u16 = 0xC02;
+/// Current cooperative-group tile size (paper extension: set by
+/// `vx_tile`, readable so kernels can compute group-local ranks).
+pub const CSR_TILE_SIZE: u16 = 0xCC8;
+/// Current cooperative-group mask (paper extension).
+pub const CSR_TILE_MASK: u16 = 0xCC9;
+
+/// Human-readable CSR name (for the disassembler and traces).
+pub fn name(csr: u16) -> &'static str {
+    match csr {
+        CSR_THREAD_ID => "tid",
+        CSR_WARP_ID => "wid",
+        CSR_CORE_ID => "cid",
+        CSR_THREAD_MASK => "tmask",
+        CSR_NUM_THREADS => "nt",
+        CSR_NUM_WARPS => "nw",
+        CSR_NUM_CORES => "nc",
+        CSR_CYCLE => "cycle",
+        CSR_INSTRET => "instret",
+        CSR_TILE_SIZE => "tilesize",
+        CSR_TILE_MASK => "tilemask",
+        _ => "csr?",
+    }
+}
+
+/// Parse a CSR name back to its address (text assembler support).
+pub fn by_name(s: &str) -> Option<u16> {
+    Some(match s {
+        "tid" => CSR_THREAD_ID,
+        "wid" => CSR_WARP_ID,
+        "cid" => CSR_CORE_ID,
+        "tmask" => CSR_THREAD_MASK,
+        "nt" => CSR_NUM_THREADS,
+        "nw" => CSR_NUM_WARPS,
+        "nc" => CSR_NUM_CORES,
+        "cycle" => CSR_CYCLE,
+        "instret" => CSR_INSTRET,
+        "tilesize" => CSR_TILE_SIZE,
+        "tilemask" => CSR_TILE_MASK,
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for csr in [
+            CSR_THREAD_ID,
+            CSR_WARP_ID,
+            CSR_CORE_ID,
+            CSR_THREAD_MASK,
+            CSR_NUM_THREADS,
+            CSR_NUM_WARPS,
+            CSR_NUM_CORES,
+            CSR_CYCLE,
+            CSR_INSTRET,
+            CSR_TILE_SIZE,
+            CSR_TILE_MASK,
+        ] {
+            assert_eq!(by_name(name(csr)), Some(csr));
+        }
+        assert_eq!(by_name("nope"), None);
+    }
+}

@@ -1,0 +1,277 @@
+//! 32-bit word → [`Instr`] decoder — the software mirror of the modified
+//! Vortex decode stage (Fig 2): the baseline RV32IM decoder plus the
+//! Table I custom-opcode paths.
+
+use super::inst::*;
+use super::{custom0_f3, opcodes};
+
+/// Decode failure: the word does not encode an instruction in our
+/// subset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodeError {
+    pub word: u32,
+    pub reason: &'static str,
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cannot decode {:#010x}: {}", self.word, self.reason)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+#[inline]
+fn rd(w: u32) -> u8 {
+    ((w >> 7) & 0x1F) as u8
+}
+#[inline]
+fn rs1(w: u32) -> u8 {
+    ((w >> 15) & 0x1F) as u8
+}
+#[inline]
+fn rs2(w: u32) -> u8 {
+    ((w >> 20) & 0x1F) as u8
+}
+#[inline]
+fn funct3(w: u32) -> u32 {
+    (w >> 12) & 0x7
+}
+#[inline]
+fn funct7(w: u32) -> u32 {
+    w >> 25
+}
+#[inline]
+fn imm_i(w: u32) -> i32 {
+    (w as i32) >> 20
+}
+#[inline]
+fn imm_s(w: u32) -> i32 {
+    (((w as i32) >> 25) << 5) | (((w >> 7) & 0x1F) as i32)
+}
+#[inline]
+fn imm_b(w: u32) -> i32 {
+    (((w as i32) >> 31) << 12)
+        | ((((w >> 7) & 1) as i32) << 11)
+        | ((((w >> 25) & 0x3F) as i32) << 5)
+        | ((((w >> 8) & 0xF) as i32) << 1)
+}
+#[inline]
+fn imm_u(w: u32) -> i32 {
+    (w & 0xFFFF_F000) as i32
+}
+#[inline]
+fn imm_j(w: u32) -> i32 {
+    (((w as i32) >> 31) << 20)
+        | (((w >> 12) & 0xFF) as i32) << 12
+        | ((((w >> 20) & 1) as i32) << 11)
+        | ((((w >> 21) & 0x3FF) as i32) << 1)
+}
+
+fn err(word: u32, reason: &'static str) -> DecodeError {
+    DecodeError { word, reason }
+}
+
+/// Decode a 32-bit machine word.
+pub fn decode(w: u32) -> Result<Instr, DecodeError> {
+    let op = w & 0x7F;
+    match op {
+        opcodes::OP => {
+            let (f3, f7) = (funct3(w), funct7(w));
+            if f7 == 0x01 {
+                let m = match f3 {
+                    0 => MulOp::Mul,
+                    1 => MulOp::Mulh,
+                    2 => MulOp::Mulhsu,
+                    3 => MulOp::Mulhu,
+                    4 => MulOp::Div,
+                    5 => MulOp::Divu,
+                    6 => MulOp::Rem,
+                    _ => MulOp::Remu,
+                };
+                return Ok(Instr::Mul { op: m, rd: rd(w), rs1: rs1(w), rs2: rs2(w) });
+            }
+            let a = match (f3, f7) {
+                (0, 0x00) => AluOp::Add,
+                (0, 0x20) => AluOp::Sub,
+                (1, 0x00) => AluOp::Sll,
+                (2, 0x00) => AluOp::Slt,
+                (3, 0x00) => AluOp::Sltu,
+                (4, 0x00) => AluOp::Xor,
+                (5, 0x00) => AluOp::Srl,
+                (5, 0x20) => AluOp::Sra,
+                (6, 0x00) => AluOp::Or,
+                (7, 0x00) => AluOp::And,
+                _ => return Err(err(w, "bad OP funct7/funct3")),
+            };
+            Ok(Instr::Alu { op: a, rd: rd(w), rs1: rs1(w), rs2: rs2(w) })
+        }
+        opcodes::OP_IMM => {
+            let f3 = funct3(w);
+            let a = match f3 {
+                0 => AluOp::Add,
+                1 => AluOp::Sll,
+                2 => AluOp::Slt,
+                3 => AluOp::Sltu,
+                4 => AluOp::Xor,
+                5 => {
+                    if funct7(w) == 0x20 {
+                        AluOp::Sra
+                    } else if funct7(w) == 0 {
+                        AluOp::Srl
+                    } else {
+                        return Err(err(w, "bad shift funct7"));
+                    }
+                }
+                6 => AluOp::Or,
+                _ => AluOp::And,
+            };
+            let imm = if matches!(a, AluOp::Sll | AluOp::Srl | AluOp::Sra) {
+                (rs2(w)) as i32 // shamt
+            } else {
+                imm_i(w)
+            };
+            if a == AluOp::Sll && funct7(w) != 0 {
+                return Err(err(w, "bad slli funct7"));
+            }
+            Ok(Instr::AluImm { op: a, rd: rd(w), rs1: rs1(w), imm })
+        }
+        opcodes::LUI => Ok(Instr::Lui { rd: rd(w), imm: imm_u(w) }),
+        opcodes::AUIPC => Ok(Instr::Auipc { rd: rd(w), imm: imm_u(w) }),
+        opcodes::LOAD => {
+            let width = match funct3(w) {
+                0b000 => Width::Byte,
+                0b001 => Width::Half,
+                0b010 => Width::Word,
+                0b100 => Width::ByteU,
+                0b101 => Width::HalfU,
+                _ => return Err(err(w, "bad load width")),
+            };
+            Ok(Instr::Load { width, rd: rd(w), rs1: rs1(w), imm: imm_i(w) })
+        }
+        opcodes::STORE => {
+            let width = match funct3(w) {
+                0b000 => Width::Byte,
+                0b001 => Width::Half,
+                0b010 => Width::Word,
+                _ => return Err(err(w, "bad store width")),
+            };
+            Ok(Instr::Store { width, rs1: rs1(w), rs2: rs2(w), imm: imm_s(w) })
+        }
+        opcodes::BRANCH => {
+            let b = match funct3(w) {
+                0b000 => BranchOp::Beq,
+                0b001 => BranchOp::Bne,
+                0b100 => BranchOp::Blt,
+                0b101 => BranchOp::Bge,
+                0b110 => BranchOp::Bltu,
+                0b111 => BranchOp::Bgeu,
+                _ => return Err(err(w, "bad branch funct3")),
+            };
+            Ok(Instr::Branch { op: b, rs1: rs1(w), rs2: rs2(w), imm: imm_b(w) })
+        }
+        opcodes::JAL => Ok(Instr::Jal { rd: rd(w), imm: imm_j(w) }),
+        opcodes::JALR => Ok(Instr::Jalr { rd: rd(w), rs1: rs1(w), imm: imm_i(w) }),
+        opcodes::SYSTEM => {
+            if w == opcodes::SYSTEM {
+                Ok(Instr::Ecall)
+            } else if funct3(w) == 0b010 && rs1(w) == 0 {
+                Ok(Instr::CsrRead { rd: rd(w), csr: ((w >> 20) & 0xFFF) as u16 })
+            } else {
+                Err(err(w, "unsupported SYSTEM encoding"))
+            }
+        }
+        0x0F => Ok(Instr::Fence),
+        opcodes::CUSTOM0 => match funct3(w) {
+            custom0_f3::TMC => Ok(Instr::Tmc { rs1: rs1(w) }),
+            custom0_f3::WSPAWN => Ok(Instr::Wspawn { rs1: rs1(w), rs2: rs2(w) }),
+            custom0_f3::SPLIT => Ok(Instr::Split { rd: rd(w), rs1: rs1(w) }),
+            custom0_f3::JOIN => Ok(Instr::Join { rs1: rs1(w) }),
+            custom0_f3::BAR => Ok(Instr::Bar { rs1: rs1(w), rs2: rs2(w) }),
+            custom0_f3::PRED => Ok(Instr::Pred { rs1: rs1(w) }),
+            custom0_f3::VOTE => {
+                let imm = (w >> 20) as u32;
+                Ok(Instr::Vote {
+                    mode: VoteMode::from_bits(imm & 3),
+                    rd: rd(w),
+                    rs1: rs1(w),
+                    mreg: ((imm >> 2) & 0x1F) as u8,
+                })
+            }
+            _ => Err(err(w, "bad CUSTOM0 funct3")),
+        },
+        opcodes::CUSTOM1 => {
+            if funct3(w) != 0 {
+                return Err(err(w, "bad CUSTOM1 funct3"));
+            }
+            let imm = w >> 20;
+            Ok(Instr::Shfl {
+                mode: ShflMode::from_bits(imm & 3),
+                rd: rd(w),
+                rs1: rs1(w),
+                delta: ((imm >> 7) & 0x1F) as u8,
+                creg: ((imm >> 2) & 0x1F) as u8,
+            })
+        }
+        opcodes::CUSTOM2 => {
+            if funct3(w) != 0 || funct7(w) != 0 {
+                return Err(err(w, "bad CUSTOM2 funct3/funct7"));
+            }
+            Ok(Instr::Tile { rs1: rs1(w), rs2: rs2(w) })
+        }
+        _ => Err(err(w, "unknown opcode")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encode::encode;
+    use super::*;
+
+    #[test]
+    fn roundtrip_representative_instrs() {
+        let cases = [
+            Instr::Alu { op: AluOp::Sub, rd: 7, rs1: 8, rs2: 9 },
+            Instr::AluImm { op: AluOp::Sra, rd: 1, rs1: 2, imm: 13 },
+            Instr::AluImm { op: AluOp::Add, rd: 1, rs1: 2, imm: -2048 },
+            Instr::Mul { op: MulOp::Remu, rd: 3, rs1: 4, rs2: 5 },
+            Instr::Lui { rd: 10, imm: 0x1234_5000u32 as i32 },
+            Instr::Auipc { rd: 11, imm: -4096 },
+            Instr::Load { width: Width::HalfU, rd: 12, rs1: 13, imm: -1 },
+            Instr::Store { width: Width::Byte, rs1: 14, rs2: 15, imm: -2048 },
+            Instr::Branch { op: BranchOp::Bgeu, rs1: 16, rs2: 17, imm: -4096 },
+            Instr::Jal { rd: 18, imm: -1048576 },
+            Instr::Jalr { rd: 19, rs1: 20, imm: 2047 },
+            Instr::CsrRead { rd: 21, csr: 0xCC0 },
+            Instr::Ecall,
+            Instr::Fence,
+            Instr::Tmc { rs1: 22 },
+            Instr::Wspawn { rs1: 23, rs2: 24 },
+            Instr::Split { rd: 25, rs1: 26 },
+            Instr::Join { rs1: 27 },
+            Instr::Bar { rs1: 28, rs2: 29 },
+            Instr::Pred { rs1: 30 },
+            Instr::Vote { mode: VoteMode::Ballot, rd: 31, rs1: 1, mreg: 2 },
+            Instr::Shfl { mode: ShflMode::Up, rd: 3, rs1: 4, delta: 31, creg: 5 },
+            Instr::Tile { rs1: 6, rs2: 7 },
+        ];
+        for c in cases {
+            let w = encode(&c);
+            assert_eq!(decode(w), Ok(c), "roundtrip failed for {c:?} ({w:#010x})");
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode(0xFFFF_FFFF).is_err());
+        assert!(decode(0x0000_0000).is_err());
+        // CUSTOM0 funct3=7 unassigned
+        assert!(decode(0x0000_700B).is_err());
+    }
+
+    #[test]
+    fn branch_imm_sign_extension() {
+        let i = Instr::Branch { op: BranchOp::Bne, rs1: 1, rs2: 2, imm: -2 };
+        assert_eq!(decode(encode(&i)), Ok(i));
+    }
+}

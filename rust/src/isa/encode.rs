@@ -1,0 +1,219 @@
+//! Bit-exact 32-bit RISC-V encoding of [`Instr`].
+//!
+//! Standard R/I/S/B/U/J formats for the RV32IM subset; the Vortex and
+//! paper extensions use the custom-0/1/2 opcode spaces as laid out in
+//! Table I (see [`crate::isa::opcodes`] and [`crate::isa::custom0_f3`]).
+
+use super::inst::*;
+use super::{custom0_f3, opcodes};
+
+const MISC_MEM: u32 = 0x0F;
+
+#[inline]
+fn r_type(funct7: u32, rs2: u32, rs1: u32, funct3: u32, rd: u32, opcode: u32) -> u32 {
+    (funct7 << 25) | (rs2 << 20) | (rs1 << 15) | (funct3 << 12) | (rd << 7) | opcode
+}
+
+#[inline]
+fn i_type(imm: i32, rs1: u32, funct3: u32, rd: u32, opcode: u32) -> u32 {
+    (((imm as u32) & 0xFFF) << 20) | (rs1 << 15) | (funct3 << 12) | (rd << 7) | opcode
+}
+
+#[inline]
+fn s_type(imm: i32, rs2: u32, rs1: u32, funct3: u32, opcode: u32) -> u32 {
+    let imm = imm as u32;
+    (((imm >> 5) & 0x7F) << 25)
+        | (rs2 << 20)
+        | (rs1 << 15)
+        | (funct3 << 12)
+        | ((imm & 0x1F) << 7)
+        | opcode
+}
+
+#[inline]
+fn b_type(imm: i32, rs2: u32, rs1: u32, funct3: u32, opcode: u32) -> u32 {
+    let imm = imm as u32;
+    (((imm >> 12) & 1) << 31)
+        | (((imm >> 5) & 0x3F) << 25)
+        | (rs2 << 20)
+        | (rs1 << 15)
+        | (funct3 << 12)
+        | (((imm >> 1) & 0xF) << 8)
+        | (((imm >> 11) & 1) << 7)
+        | opcode
+}
+
+#[inline]
+fn u_type(imm: i32, rd: u32, opcode: u32) -> u32 {
+    ((imm as u32) & 0xFFFF_F000) | (rd << 7) | opcode
+}
+
+#[inline]
+fn j_type(imm: i32, rd: u32, opcode: u32) -> u32 {
+    let imm = imm as u32;
+    (((imm >> 20) & 1) << 31)
+        | (((imm >> 1) & 0x3FF) << 21)
+        | (((imm >> 11) & 1) << 20)
+        | (((imm >> 12) & 0xFF) << 12)
+        | (rd << 7)
+        | opcode
+}
+
+/// Encode a decoded instruction to its 32-bit machine form.
+pub fn encode(i: &Instr) -> u32 {
+    match *i {
+        Instr::Alu { op, rd, rs1, rs2 } => {
+            let funct7 = match op {
+                AluOp::Sub | AluOp::Sra => 0x20,
+                _ => 0x00,
+            };
+            r_type(funct7, rs2 as u32, rs1 as u32, op.funct3(), rd as u32, opcodes::OP)
+        }
+        Instr::AluImm { op, rd, rs1, imm } => {
+            let mut imm12 = imm & 0xFFF;
+            if matches!(op, AluOp::Sll | AluOp::Srl | AluOp::Sra) {
+                imm12 = imm & 0x1F;
+                if op == AluOp::Sra {
+                    imm12 |= 0x20 << 5; // funct7=0x20 in imm[11:5]
+                }
+            }
+            i_type(imm12, rs1 as u32, op.funct3(), rd as u32, opcodes::OP_IMM)
+        }
+        Instr::Mul { op, rd, rs1, rs2 } => {
+            r_type(0x01, rs2 as u32, rs1 as u32, op.funct3(), rd as u32, opcodes::OP)
+        }
+        Instr::Lui { rd, imm } => u_type(imm, rd as u32, opcodes::LUI),
+        Instr::Auipc { rd, imm } => u_type(imm, rd as u32, opcodes::AUIPC),
+        Instr::Load { width, rd, rs1, imm } => {
+            let f3 = match width {
+                Width::Byte => 0b000,
+                Width::Half => 0b001,
+                Width::Word => 0b010,
+                Width::ByteU => 0b100,
+                Width::HalfU => 0b101,
+            };
+            i_type(imm, rs1 as u32, f3, rd as u32, opcodes::LOAD)
+        }
+        Instr::Store { width, rs1, rs2, imm } => {
+            let f3 = match width {
+                Width::Byte | Width::ByteU => 0b000,
+                Width::Half | Width::HalfU => 0b001,
+                Width::Word => 0b010,
+            };
+            s_type(imm, rs2 as u32, rs1 as u32, f3, opcodes::STORE)
+        }
+        Instr::Branch { op, rs1, rs2, imm } => {
+            b_type(imm, rs2 as u32, rs1 as u32, op.funct3(), opcodes::BRANCH)
+        }
+        Instr::Jal { rd, imm } => j_type(imm, rd as u32, opcodes::JAL),
+        Instr::Jalr { rd, rs1, imm } => i_type(imm, rs1 as u32, 0b000, rd as u32, opcodes::JALR),
+        Instr::CsrRead { rd, csr } => {
+            i_type(csr as i32, 0, 0b010, rd as u32, opcodes::SYSTEM)
+        }
+        Instr::Ecall => opcodes::SYSTEM,
+        Instr::Fence => MISC_MEM,
+
+        Instr::Tmc { rs1 } => i_type(0, rs1 as u32, custom0_f3::TMC, 0, opcodes::CUSTOM0),
+        Instr::Wspawn { rs1, rs2 } => {
+            r_type(0, rs2 as u32, rs1 as u32, custom0_f3::WSPAWN, 0, opcodes::CUSTOM0)
+        }
+        Instr::Split { rd, rs1 } => {
+            i_type(0, rs1 as u32, custom0_f3::SPLIT, rd as u32, opcodes::CUSTOM0)
+        }
+        Instr::Join { rs1 } => i_type(0, rs1 as u32, custom0_f3::JOIN, 0, opcodes::CUSTOM0),
+        Instr::Bar { rs1, rs2 } => {
+            r_type(0, rs2 as u32, rs1 as u32, custom0_f3::BAR, 0, opcodes::CUSTOM0)
+        }
+        Instr::Pred { rs1 } => i_type(0, rs1 as u32, custom0_f3::PRED, 0, opcodes::CUSTOM0),
+
+        // Table I: vx_vote — I-type on CUSTOM0. imm[1:0] = func (mode),
+        // imm[6:2] = member-mask register address (§III).
+        Instr::Vote { mode, rd, rs1, mreg } => {
+            let imm = (mode as i32) | ((mreg as i32) << 2);
+            i_type(imm, rs1 as u32, custom0_f3::VOTE, rd as u32, opcodes::CUSTOM0)
+        }
+        // Table I: vx_shfl — I-type on CUSTOM1. imm[1:0] = func (mode),
+        // imm[6:2] = clamp register address, imm[11:7] = lane offset.
+        Instr::Shfl { mode, rd, rs1, delta, creg } => {
+            let imm = (mode as i32) | ((creg as i32) << 2) | (((delta as i32) & 0x1F) << 7);
+            i_type(imm, rs1 as u32, 0b000, rd as u32, opcodes::CUSTOM1)
+        }
+        // Table I: vx_tile — R-type on CUSTOM2. rs1 = group mask,
+        // rs2 = thread count.
+        Instr::Tile { rs1, rs2 } => {
+            r_type(0, rs2 as u32, rs1 as u32, 0b000, 0, opcodes::CUSTOM2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_opcode_assignment() {
+        // Table I: vx_vote on CUSTOM0, vx_shfl on CUSTOM1, vx_tile on
+        // CUSTOM2.
+        let v = encode(&Instr::Vote { mode: VoteMode::Ballot, rd: 1, rs1: 2, mreg: 3 });
+        assert_eq!(v & 0x7F, opcodes::CUSTOM0);
+        let s = encode(&Instr::Shfl { mode: ShflMode::Idx, rd: 1, rs1: 2, delta: 7, creg: 3 });
+        assert_eq!(s & 0x7F, opcodes::CUSTOM1);
+        let t = encode(&Instr::Tile { rs1: 4, rs2: 5 });
+        assert_eq!(t & 0x7F, opcodes::CUSTOM2);
+    }
+
+    #[test]
+    fn vote_imm_packs_mode_and_mask_reg() {
+        let v = encode(&Instr::Vote { mode: VoteMode::Uni, rd: 1, rs1: 2, mreg: 31 });
+        let imm = v >> 20;
+        assert_eq!(imm & 3, VoteMode::Uni as u32);
+        assert_eq!((imm >> 2) & 0x1F, 31);
+    }
+
+    #[test]
+    fn shfl_imm_packs_mode_clamp_and_delta() {
+        let s = encode(&Instr::Shfl { mode: ShflMode::Bfly, rd: 1, rs1: 2, delta: 21, creg: 17 });
+        let imm = s >> 20;
+        assert_eq!(imm & 3, ShflMode::Bfly as u32);
+        assert_eq!((imm >> 2) & 0x1F, 17);
+        assert_eq!((imm >> 7) & 0x1F, 21);
+    }
+
+    #[test]
+    fn standard_encodings_match_riscv_reference() {
+        // addi x1, x0, 5  => 0x00500093
+        assert_eq!(
+            encode(&Instr::AluImm { op: AluOp::Add, rd: 1, rs1: 0, imm: 5 }),
+            0x0050_0093
+        );
+        // add x3, x1, x2 => 0x002081B3
+        assert_eq!(
+            encode(&Instr::Alu { op: AluOp::Add, rd: 3, rs1: 1, rs2: 2 }),
+            0x0020_81B3
+        );
+        // lw x5, 8(x2) => 0x00812283
+        assert_eq!(
+            encode(&Instr::Load { width: Width::Word, rd: 5, rs1: 2, imm: 8 }),
+            0x0081_2283
+        );
+        // sw x5, 12(x2) => 0x00512623
+        assert_eq!(
+            encode(&Instr::Store { width: Width::Word, rs1: 2, rs2: 5, imm: 12 }),
+            0x0051_2623
+        );
+        // beq x1, x2, +16 => 0x00208863
+        assert_eq!(
+            encode(&Instr::Branch { op: BranchOp::Beq, rs1: 1, rs2: 2, imm: 16 }),
+            0x0020_8863
+        );
+        // jal x1, +2048 => imm[20|10:1|11|19:12]
+        assert_eq!(encode(&Instr::Jal { rd: 1, imm: 2048 }), 0x0010_00EF);
+        // srai x1, x1, 3 => funct7=0x20
+        assert_eq!(
+            encode(&Instr::AluImm { op: AluOp::Sra, rd: 1, rs1: 1, imm: 3 }),
+            0x4030_D093
+        );
+        // ecall => 0x00000073
+        assert_eq!(encode(&Instr::Ecall), 0x0000_0073);
+    }
+}

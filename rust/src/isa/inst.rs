@@ -1,0 +1,460 @@
+//! Decoded instruction representation.
+//!
+//! One enum variant per architectural instruction class; the simulator
+//! executes this form, and [`crate::isa::encode`]/[`crate::isa::decode`]
+//! prove it round-trips through the 32-bit RISC-V encoding.
+
+use std::fmt;
+
+/// Register index (x0..x31). x0 is hardwired to zero.
+pub type Reg = u8;
+
+/// Integer ALU operation (shared by register-register and
+/// register-immediate forms).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+}
+
+impl AluOp {
+    /// funct3 encoding in the OP/OP-IMM opcode space.
+    pub fn funct3(self) -> u32 {
+        match self {
+            AluOp::Add | AluOp::Sub => 0b000,
+            AluOp::Sll => 0b001,
+            AluOp::Slt => 0b010,
+            AluOp::Sltu => 0b011,
+            AluOp::Xor => 0b100,
+            AluOp::Srl | AluOp::Sra => 0b101,
+            AluOp::Or => 0b110,
+            AluOp::And => 0b111,
+        }
+    }
+
+    /// Evaluate the op over two 32-bit values.
+    #[inline(always)]
+    pub fn eval(self, a: u32, b: u32) -> u32 {
+        match self {
+            AluOp::Add => a.wrapping_add(b),
+            AluOp::Sub => a.wrapping_sub(b),
+            AluOp::Sll => a.wrapping_shl(b & 31),
+            AluOp::Slt => ((a as i32) < (b as i32)) as u32,
+            AluOp::Sltu => (a < b) as u32,
+            AluOp::Xor => a ^ b,
+            AluOp::Srl => a.wrapping_shr(b & 31),
+            AluOp::Sra => ((a as i32).wrapping_shr(b & 31)) as u32,
+            AluOp::Or => a | b,
+            AluOp::And => a & b,
+        }
+    }
+}
+
+/// RV32M multiply/divide operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MulOp {
+    Mul,
+    Mulh,
+    Mulhsu,
+    Mulhu,
+    Div,
+    Divu,
+    Rem,
+    Remu,
+}
+
+impl MulOp {
+    pub fn funct3(self) -> u32 {
+        match self {
+            MulOp::Mul => 0b000,
+            MulOp::Mulh => 0b001,
+            MulOp::Mulhsu => 0b010,
+            MulOp::Mulhu => 0b011,
+            MulOp::Div => 0b100,
+            MulOp::Divu => 0b101,
+            MulOp::Rem => 0b110,
+            MulOp::Remu => 0b111,
+        }
+    }
+
+    /// Evaluate per the RV32M spec (including div-by-zero / overflow
+    /// fixups).
+    #[inline(always)]
+    pub fn eval(self, a: u32, b: u32) -> u32 {
+        match self {
+            MulOp::Mul => a.wrapping_mul(b),
+            MulOp::Mulh => (((a as i32 as i64) * (b as i32 as i64)) >> 32) as u32,
+            MulOp::Mulhsu => (((a as i32 as i64) * (b as u64 as i64)) >> 32) as u32,
+            MulOp::Mulhu => (((a as u64) * (b as u64)) >> 32) as u32,
+            MulOp::Div => {
+                if b == 0 {
+                    u32::MAX
+                } else if a == 0x8000_0000 && b == u32::MAX {
+                    a
+                } else {
+                    ((a as i32) / (b as i32)) as u32
+                }
+            }
+            MulOp::Divu => {
+                if b == 0 {
+                    u32::MAX
+                } else {
+                    a / b
+                }
+            }
+            MulOp::Rem => {
+                if b == 0 {
+                    a
+                } else if a == 0x8000_0000 && b == u32::MAX {
+                    0
+                } else {
+                    ((a as i32) % (b as i32)) as u32
+                }
+            }
+            MulOp::Remu => {
+                if b == 0 {
+                    a
+                } else {
+                    a % b
+                }
+            }
+        }
+    }
+}
+
+/// Branch comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BranchOp {
+    Beq,
+    Bne,
+    Blt,
+    Bge,
+    Bltu,
+    Bgeu,
+}
+
+impl BranchOp {
+    pub fn funct3(self) -> u32 {
+        match self {
+            BranchOp::Beq => 0b000,
+            BranchOp::Bne => 0b001,
+            BranchOp::Blt => 0b100,
+            BranchOp::Bge => 0b101,
+            BranchOp::Bltu => 0b110,
+            BranchOp::Bgeu => 0b111,
+        }
+    }
+
+    #[inline(always)]
+    pub fn taken(self, a: u32, b: u32) -> bool {
+        match self {
+            BranchOp::Beq => a == b,
+            BranchOp::Bne => a != b,
+            BranchOp::Blt => (a as i32) < (b as i32),
+            BranchOp::Bge => (a as i32) >= (b as i32),
+            BranchOp::Bltu => a < b,
+            BranchOp::Bgeu => a >= b,
+        }
+    }
+}
+
+/// Memory access width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Width {
+    Byte,
+    Half,
+    Word,
+    ByteU,
+    HalfU,
+}
+
+impl Width {
+    pub fn bytes(self) -> u32 {
+        match self {
+            Width::Byte | Width::ByteU => 1,
+            Width::Half | Width::HalfU => 2,
+            Width::Word => 4,
+        }
+    }
+}
+
+/// Vote mode — Table I `func` field of `vx_vote` (All, Any, Uni, Ballot).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum VoteMode {
+    /// 1 iff every active member lane has a non-zero predicate.
+    All = 0,
+    /// 1 iff any active member lane has a non-zero predicate.
+    Any = 1,
+    /// 1 iff all active member lanes supplied the same value.
+    Uni = 2,
+    /// Bitmask of member lanes with non-zero predicates.
+    Ballot = 3,
+}
+
+impl VoteMode {
+    pub const ALL_MODES: [VoteMode; 4] =
+        [VoteMode::All, VoteMode::Any, VoteMode::Uni, VoteMode::Ballot];
+
+    pub fn from_bits(b: u32) -> VoteMode {
+        Self::ALL_MODES[(b & 3) as usize]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            VoteMode::All => "all",
+            VoteMode::Any => "any",
+            VoteMode::Uni => "uni",
+            VoteMode::Ballot => "ballot",
+        }
+    }
+}
+
+/// Shuffle mode — Table I `func` field of `vx_shfl` (Up, Down, Bfly, Idx).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShflMode {
+    /// Source lane = lane - delta (clamped at segment start).
+    Up = 0,
+    /// Source lane = lane + delta (clamped at segment end).
+    Down = 1,
+    /// Source lane = lane XOR delta (butterfly).
+    Bfly = 2,
+    /// Source lane = delta (broadcast from an absolute lane index).
+    Idx = 3,
+}
+
+impl ShflMode {
+    pub const ALL_MODES: [ShflMode; 4] =
+        [ShflMode::Up, ShflMode::Down, ShflMode::Bfly, ShflMode::Idx];
+
+    pub fn from_bits(b: u32) -> ShflMode {
+        Self::ALL_MODES[(b & 3) as usize]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ShflMode::Up => "up",
+            ShflMode::Down => "down",
+            ShflMode::Bfly => "bfly",
+            ShflMode::Idx => "idx",
+        }
+    }
+}
+
+/// A decoded instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Instr {
+    /// OP: rd = alu(rs1, rs2)
+    Alu { op: AluOp, rd: Reg, rs1: Reg, rs2: Reg },
+    /// OP-IMM: rd = alu(rs1, imm)
+    AluImm { op: AluOp, rd: Reg, rs1: Reg, imm: i32 },
+    /// RV32M
+    Mul { op: MulOp, rd: Reg, rs1: Reg, rs2: Reg },
+    /// LUI
+    Lui { rd: Reg, imm: i32 },
+    /// AUIPC
+    Auipc { rd: Reg, imm: i32 },
+    /// Load: rd = mem[rs1 + imm]
+    Load { width: Width, rd: Reg, rs1: Reg, imm: i32 },
+    /// Store: mem[rs1 + imm] = rs2
+    Store { width: Width, rs1: Reg, rs2: Reg, imm: i32 },
+    /// Conditional branch (pc-relative)
+    Branch { op: BranchOp, rs1: Reg, rs2: Reg, imm: i32 },
+    /// JAL
+    Jal { rd: Reg, imm: i32 },
+    /// JALR
+    Jalr { rd: Reg, rs1: Reg, imm: i32 },
+    /// CSRRS (read CSR; rs1 must be x0 in our subset — read-only use)
+    CsrRead { rd: Reg, csr: u16 },
+    /// ECALL — used as the per-warp halt in the device runtime.
+    Ecall,
+    /// FENCE — memory ordering (a commit-time no-op in our timing model,
+    /// but occupies a slot like Vortex's).
+    Fence,
+
+    // ----- Vortex SIMT control (custom-0, pre-existing) -----
+    /// vx_tmc rs1: set the warp's thread mask from rs1 (lane 0 value).
+    Tmc { rs1: Reg },
+    /// vx_wspawn rs1, rs2: spawn rs1 warps at PC rs2.
+    Wspawn { rs1: Reg, rs2: Reg },
+    /// vx_split rd, rs1: SIMT divergence on per-lane predicate rs1;
+    /// rd receives a stack token.
+    Split { rd: Reg, rs1: Reg },
+    /// vx_join rs1: re-converge using token rs1.
+    Join { rs1: Reg },
+    /// vx_bar rs1, rs2: barrier id rs1 across rs2 warps.
+    Bar { rs1: Reg, rs2: Reg },
+    /// vx_pred rs1: thread predication (disable lanes with zero rs1).
+    Pred { rs1: Reg },
+
+    // ----- Paper extensions (Table I) -----
+    /// vx_vote rd, rs1, func, mreg — warp vote over per-lane value rs1.
+    /// `func` selects All/Any/Uni/Ballot; `mreg` is the register that
+    /// holds the member mask (fetched as a third operand, per §III).
+    Vote { mode: VoteMode, rd: Reg, rs1: Reg, mreg: Reg },
+    /// vx_shfl rd, rs1, func, delta, creg — warp shuffle of per-lane
+    /// value rs1. `delta` is the 5-bit lane offset from the immediate;
+    /// `creg` is the register holding the clamp/segment value (per §III:
+    /// "shfl's immediate field includes the lane offset and the register
+    /// address that stores the clamp value").
+    Shfl { mode: ShflMode, rd: Reg, rs1: Reg, delta: u8, creg: Reg },
+    /// vx_tile rs1, rs2 — reconfigure the warp structure for cooperative
+    /// groups: rs1 = group mask, rs2 = thread count (Table II).
+    Tile { rs1: Reg, rs2: Reg },
+}
+
+impl Instr {
+    /// Destination register written by this instruction, if any
+    /// (x0 writes are filtered out).
+    pub fn rd(&self) -> Option<Reg> {
+        let rd = match *self {
+            Instr::Alu { rd, .. }
+            | Instr::AluImm { rd, .. }
+            | Instr::Mul { rd, .. }
+            | Instr::Lui { rd, .. }
+            | Instr::Auipc { rd, .. }
+            | Instr::Load { rd, .. }
+            | Instr::Jal { rd, .. }
+            | Instr::Jalr { rd, .. }
+            | Instr::CsrRead { rd, .. }
+            | Instr::Split { rd, .. }
+            | Instr::Vote { rd, .. }
+            | Instr::Shfl { rd, .. } => rd,
+            _ => return None,
+        };
+        if rd == 0 {
+            None
+        } else {
+            Some(rd)
+        }
+    }
+
+    /// Source registers read by this instruction (up to 3: the paper's
+    /// vote/shfl fetch a mask/clamp register in addition to rs1).
+    pub fn srcs(&self) -> [Option<Reg>; 3] {
+        let f = |r: Reg| if r == 0 { None } else { Some(r) };
+        match *self {
+            Instr::Alu { rs1, rs2, .. }
+            | Instr::Mul { rs1, rs2, .. }
+            | Instr::Branch { rs1, rs2, .. }
+            | Instr::Store { rs1, rs2, .. }
+            | Instr::Wspawn { rs1, rs2 }
+            | Instr::Bar { rs1, rs2 }
+            | Instr::Tile { rs1, rs2 } => [f(rs1), f(rs2), None],
+            Instr::AluImm { rs1, .. }
+            | Instr::Load { rs1, .. }
+            | Instr::Jalr { rs1, .. }
+            | Instr::Tmc { rs1 }
+            | Instr::Split { rs1, .. }
+            | Instr::Join { rs1 }
+            | Instr::Pred { rs1 } => [f(rs1), None, None],
+            Instr::Vote { rs1, mreg, .. } => [f(rs1), f(mreg), None],
+            Instr::Shfl { rs1, creg, .. } => [f(rs1), f(creg), None],
+            _ => [None, None, None],
+        }
+    }
+
+    /// True for instructions that can change control flow or the warp's
+    /// active thread set — these end a fetch group.
+    pub fn is_control(&self) -> bool {
+        matches!(
+            self,
+            Instr::Branch { .. }
+                | Instr::Jal { .. }
+                | Instr::Jalr { .. }
+                | Instr::Ecall
+                | Instr::Tmc { .. }
+                | Instr::Wspawn { .. }
+                | Instr::Split { .. }
+                | Instr::Join { .. }
+                | Instr::Bar { .. }
+                | Instr::Pred { .. }
+                | Instr::Tile { .. }
+        )
+    }
+
+    /// True for memory instructions (issued to the LSU).
+    pub fn is_mem(&self) -> bool {
+        matches!(self, Instr::Load { .. } | Instr::Store { .. })
+    }
+
+    /// True for the paper's warp-level-feature instructions.
+    pub fn is_warp_collective(&self) -> bool {
+        matches!(self, Instr::Vote { .. } | Instr::Shfl { .. } | Instr::Tile { .. })
+    }
+}
+
+impl fmt::Display for Instr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", crate::isa::text::disasm(self))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alu_eval_basics() {
+        assert_eq!(AluOp::Add.eval(2, 3), 5);
+        assert_eq!(AluOp::Sub.eval(2, 3), u32::MAX);
+        assert_eq!(AluOp::Slt.eval(u32::MAX, 0), 1); // -1 < 0 signed
+        assert_eq!(AluOp::Sltu.eval(u32::MAX, 0), 0);
+        assert_eq!(AluOp::Sra.eval(0x8000_0000, 31), u32::MAX);
+        assert_eq!(AluOp::Srl.eval(0x8000_0000, 31), 1);
+        assert_eq!(AluOp::Sll.eval(1, 33), 2, "shift amount masked to 5 bits");
+    }
+
+    #[test]
+    fn mul_eval_edge_cases() {
+        assert_eq!(MulOp::Div.eval(7, 0), u32::MAX, "div by zero -> -1");
+        assert_eq!(MulOp::Rem.eval(7, 0), 7, "rem by zero -> dividend");
+        assert_eq!(
+            MulOp::Div.eval(0x8000_0000, u32::MAX),
+            0x8000_0000,
+            "signed overflow"
+        );
+        assert_eq!(MulOp::Rem.eval(0x8000_0000, u32::MAX), 0);
+        assert_eq!(MulOp::Mulhu.eval(u32::MAX, u32::MAX), 0xFFFF_FFFE);
+        assert_eq!(MulOp::Mulh.eval(u32::MAX, u32::MAX), 0); // (-1)*(-1)=1
+    }
+
+    #[test]
+    fn branch_taken() {
+        assert!(BranchOp::Beq.taken(5, 5));
+        assert!(BranchOp::Blt.taken(u32::MAX, 0));
+        assert!(!BranchOp::Bltu.taken(u32::MAX, 0));
+        assert!(BranchOp::Bgeu.taken(u32::MAX, 0));
+    }
+
+    #[test]
+    fn rd_and_srcs() {
+        let i = Instr::Vote { mode: VoteMode::Any, rd: 3, rs1: 4, mreg: 5 };
+        assert_eq!(i.rd(), Some(3));
+        assert_eq!(i.srcs(), [Some(4), Some(5), None]);
+        assert!(i.is_warp_collective());
+
+        let s = Instr::Shfl { mode: ShflMode::Down, rd: 1, rs1: 2, delta: 4, creg: 6 };
+        assert_eq!(s.srcs(), [Some(2), Some(6), None]);
+
+        // x0 never appears as a tracked dependency.
+        let z = Instr::AluImm { op: AluOp::Add, rd: 0, rs1: 0, imm: 0 };
+        assert_eq!(z.rd(), None);
+        assert_eq!(z.srcs(), [None, None, None]);
+    }
+
+    #[test]
+    fn control_classification() {
+        assert!(Instr::Tile { rs1: 1, rs2: 2 }.is_control());
+        assert!(Instr::Join { rs1: 1 }.is_control());
+        assert!(!Instr::Vote { mode: VoteMode::All, rd: 1, rs1: 2, mreg: 0 }.is_control());
+        assert!(Instr::Load { width: Width::Word, rd: 1, rs1: 2, imm: 0 }.is_mem());
+    }
+}

@@ -1,0 +1,56 @@
+//! Vortex-extended RISC-V ISA: RV32IM plus the Vortex SIMT control
+//! intrinsics (`vx_tmc`, `vx_wspawn`, `vx_split`, `vx_join`, `vx_bar`,
+//! `vx_pred`) and the paper's warp-level-feature extensions
+//! (Table I: `vx_vote` on CUSTOM0, `vx_shfl` on CUSTOM1, `vx_tile` on
+//! CUSTOM2).
+//!
+//! The module provides a decoded instruction representation
+//! ([`inst::Instr`]), bit-exact 32-bit encode/decode ([`encode`],
+//! [`decode`]), the CSR address map ([`csr`]), a programmatic assembler
+//! with labels ([`asm::Asm`]), and a text assembler/disassembler
+//! ([`text`]).
+
+pub mod asm;
+pub mod csr;
+pub mod decode;
+pub mod encode;
+pub mod inst;
+pub mod text;
+
+pub use asm::Asm;
+pub use decode::{decode, DecodeError};
+pub use encode::encode;
+pub use inst::{AluOp, Instr, MulOp, ShflMode, VoteMode, Width};
+
+/// RISC-V base opcodes used by this subset.
+pub mod opcodes {
+    pub const LOAD: u32 = 0x03;
+    pub const OP_IMM: u32 = 0x13;
+    pub const AUIPC: u32 = 0x17;
+    pub const STORE: u32 = 0x23;
+    pub const OP: u32 = 0x33;
+    pub const LUI: u32 = 0x37;
+    pub const BRANCH: u32 = 0x63;
+    pub const JALR: u32 = 0x67;
+    pub const JAL: u32 = 0x6F;
+    pub const SYSTEM: u32 = 0x73;
+    /// custom-0: Vortex SIMT control + the paper's `vx_vote` (Table I).
+    pub const CUSTOM0: u32 = 0x0B;
+    /// custom-1: the paper's `vx_shfl` (Table I).
+    pub const CUSTOM1: u32 = 0x2B;
+    /// custom-2: the paper's `vx_tile` (Table I).
+    pub const CUSTOM2: u32 = 0x5B;
+}
+
+/// funct3 values on CUSTOM0 (Vortex convention, extended by the paper).
+pub mod custom0_f3 {
+    pub const TMC: u32 = 0;
+    pub const WSPAWN: u32 = 1;
+    pub const SPLIT: u32 = 2;
+    pub const JOIN: u32 = 3;
+    pub const BAR: u32 = 4;
+    pub const PRED: u32 = 5;
+    /// Paper extension: warp vote (All/Any/Uni/Ballot in the imm func
+    /// field).
+    pub const VOTE: u32 = 6;
+}

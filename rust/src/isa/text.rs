@@ -1,0 +1,495 @@
+//! Text assembler / disassembler.
+//!
+//! The disassembler renders every [`Instr`] in a canonical textual form;
+//! the assembler parses that form back (plus labels and comments), so
+//! `parse(disasm(p)) == p` holds for any program — a property test in
+//! `rust/tests/proptests.rs` enforces it.
+
+use super::asm::regs;
+use super::csr;
+use super::inst::*;
+
+/// Render one instruction. PC-relative offsets are shown as byte
+/// offsets (`+8` / `-12`).
+pub fn disasm(i: &Instr) -> String {
+    let r = regs::name;
+    match *i {
+        Instr::Alu { op, rd, rs1, rs2 } => {
+            let m = match op {
+                AluOp::Add => "add",
+                AluOp::Sub => "sub",
+                AluOp::Sll => "sll",
+                AluOp::Slt => "slt",
+                AluOp::Sltu => "sltu",
+                AluOp::Xor => "xor",
+                AluOp::Srl => "srl",
+                AluOp::Sra => "sra",
+                AluOp::Or => "or",
+                AluOp::And => "and",
+            };
+            format!("{m} {}, {}, {}", r(rd), r(rs1), r(rs2))
+        }
+        Instr::AluImm { op, rd, rs1, imm } => {
+            let m = match op {
+                AluOp::Add => "addi",
+                AluOp::Sub => "subi",
+                AluOp::Sll => "slli",
+                AluOp::Slt => "slti",
+                AluOp::Sltu => "sltiu",
+                AluOp::Xor => "xori",
+                AluOp::Srl => "srli",
+                AluOp::Sra => "srai",
+                AluOp::Or => "ori",
+                AluOp::And => "andi",
+            };
+            format!("{m} {}, {}, {imm}", r(rd), r(rs1))
+        }
+        Instr::Mul { op, rd, rs1, rs2 } => {
+            let m = match op {
+                MulOp::Mul => "mul",
+                MulOp::Mulh => "mulh",
+                MulOp::Mulhsu => "mulhsu",
+                MulOp::Mulhu => "mulhu",
+                MulOp::Div => "div",
+                MulOp::Divu => "divu",
+                MulOp::Rem => "rem",
+                MulOp::Remu => "remu",
+            };
+            format!("{m} {}, {}, {}", r(rd), r(rs1), r(rs2))
+        }
+        Instr::Lui { rd, imm } => format!("lui {}, {:#x}", r(rd), (imm as u32) >> 12),
+        Instr::Auipc { rd, imm } => format!("auipc {}, {:#x}", r(rd), (imm as u32) >> 12),
+        Instr::Load { width, rd, rs1, imm } => {
+            let m = match width {
+                Width::Byte => "lb",
+                Width::Half => "lh",
+                Width::Word => "lw",
+                Width::ByteU => "lbu",
+                Width::HalfU => "lhu",
+            };
+            format!("{m} {}, {imm}({})", r(rd), r(rs1))
+        }
+        Instr::Store { width, rs1, rs2, imm } => {
+            let m = match width {
+                Width::Byte | Width::ByteU => "sb",
+                Width::Half | Width::HalfU => "sh",
+                Width::Word => "sw",
+            };
+            format!("{m} {}, {imm}({})", r(rs2), r(rs1))
+        }
+        Instr::Branch { op, rs1, rs2, imm } => {
+            let m = match op {
+                BranchOp::Beq => "beq",
+                BranchOp::Bne => "bne",
+                BranchOp::Blt => "blt",
+                BranchOp::Bge => "bge",
+                BranchOp::Bltu => "bltu",
+                BranchOp::Bgeu => "bgeu",
+            };
+            format!("{m} {}, {}, {imm:+}", r(rs1), r(rs2))
+        }
+        Instr::Jal { rd, imm } => format!("jal {}, {imm:+}", r(rd)),
+        Instr::Jalr { rd, rs1, imm } => format!("jalr {}, {}, {imm}", r(rd), r(rs1)),
+        Instr::CsrRead { rd, csr: c } => {
+            let n = csr::name(c);
+            if n == "csr?" {
+                format!("csrr {}, {:#x}", r(rd), c)
+            } else {
+                format!("csrr {}, {}", r(rd), n)
+            }
+        }
+        Instr::Ecall => "ecall".to_string(),
+        Instr::Fence => "fence".to_string(),
+        Instr::Tmc { rs1 } => format!("vx_tmc {}", r(rs1)),
+        Instr::Wspawn { rs1, rs2 } => format!("vx_wspawn {}, {}", r(rs1), r(rs2)),
+        Instr::Split { rd, rs1 } => format!("vx_split {}, {}", r(rd), r(rs1)),
+        Instr::Join { rs1 } => format!("vx_join {}", r(rs1)),
+        Instr::Bar { rs1, rs2 } => format!("vx_bar {}, {}", r(rs1), r(rs2)),
+        Instr::Pred { rs1 } => format!("vx_pred {}", r(rs1)),
+        Instr::Vote { mode, rd, rs1, mreg } => {
+            format!("vx_vote.{} {}, {}, {}", mode.name(), r(rd), r(rs1), r(mreg))
+        }
+        Instr::Shfl { mode, rd, rs1, delta, creg } => {
+            format!("vx_shfl.{} {}, {}, {delta}, {}", mode.name(), r(rd), r(rs1), r(creg))
+        }
+        Instr::Tile { rs1, rs2 } => format!("vx_tile {}, {}", r(rs1), r(rs2)),
+    }
+}
+
+/// Render a whole program with PC prefixes.
+pub fn disasm_program(prog: &[Instr]) -> String {
+    prog.iter()
+        .enumerate()
+        .map(|(i, ins)| format!("{:6}:  {}", i * 4, disasm(ins)))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn perr<T>(line: usize, msg: impl Into<String>) -> Result<T, ParseError> {
+    Err(ParseError { line, msg: msg.into() })
+}
+
+fn reg(line: usize, tok: &str) -> Result<u8, ParseError> {
+    regs::by_name(tok).ok_or(ParseError { line, msg: format!("bad register `{tok}`") })
+}
+
+fn int(line: usize, tok: &str) -> Result<i32, ParseError> {
+    let tok = tok.trim();
+    let (neg, body) = match tok.strip_prefix('-') {
+        Some(b) => (true, b),
+        None => (false, tok.strip_prefix('+').unwrap_or(tok)),
+    };
+    let v = if let Some(h) = body.strip_prefix("0x") {
+        i64::from_str_radix(h, 16)
+    } else if let Some(b) = body.strip_prefix("0b") {
+        i64::from_str_radix(b, 2)
+    } else {
+        body.parse::<i64>()
+    };
+    match v {
+        Ok(v) => Ok(if neg { -v } else { v } as i32),
+        Err(_) => perr(line, format!("bad integer `{tok}`")),
+    }
+}
+
+/// Parse assembly text into a program. Supports `label:` definitions,
+/// `#`/`;` comments, decimal/hex/binary immediates, ABI and `x<N>`
+/// register names, and label or numeric (`+8`) branch targets.
+pub fn parse(src: &str) -> Result<Vec<Instr>, ParseError> {
+    // Pass 1: map labels to instruction indices.
+    let mut labels = std::collections::HashMap::new();
+    let mut idx = 0usize;
+    for (ln, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut rest = line;
+        while let Some(colon) = rest.find(':') {
+            let (lbl, tail) = rest.split_at(colon);
+            let lbl = lbl.trim();
+            if lbl.is_empty() || lbl.contains(char::is_whitespace) {
+                break;
+            }
+            if labels.insert(lbl.to_string(), idx).is_some() {
+                return perr(ln + 1, format!("duplicate label `{lbl}`"));
+            }
+            rest = tail[1..].trim();
+        }
+        if !rest.is_empty() {
+            idx += 1;
+        }
+    }
+
+    // Pass 2: parse instructions.
+    let mut prog = Vec::with_capacity(idx);
+    for (ln, raw) in src.lines().enumerate() {
+        let mut line = strip_comment(raw).trim();
+        while let Some(colon) = line.find(':') {
+            let (lbl, tail) = line.split_at(colon);
+            if lbl.trim().is_empty() || lbl.trim().contains(char::is_whitespace) {
+                break;
+            }
+            line = tail[1..].trim();
+        }
+        if line.is_empty() {
+            continue;
+        }
+        prog.push(parse_line(ln + 1, line, prog.len(), &labels)?);
+    }
+    Ok(prog)
+}
+
+fn strip_comment(s: &str) -> &str {
+    let cut = s.find(['#', ';']).unwrap_or(s.len());
+    &s[..cut]
+}
+
+fn target(
+    line: usize,
+    tok: &str,
+    at: usize,
+    labels: &std::collections::HashMap<String, usize>,
+) -> Result<i32, ParseError> {
+    if tok.starts_with(['+', '-']) || tok.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        int(line, tok)
+    } else if let Some(&t) = labels.get(tok) {
+        Ok(((t as i64 - at as i64) * 4) as i32)
+    } else {
+        perr(line, format!("unknown label `{tok}`"))
+    }
+}
+
+fn parse_line(
+    ln: usize,
+    line: &str,
+    at: usize,
+    labels: &std::collections::HashMap<String, usize>,
+) -> Result<Instr, ParseError> {
+    let (mn, rest) = line.split_once(char::is_whitespace).unwrap_or((line, ""));
+    let ops: Vec<&str> = rest.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    let need = |n: usize| -> Result<(), ParseError> {
+        if ops.len() == n {
+            Ok(())
+        } else {
+            perr(ln, format!("`{mn}` expects {n} operands, got {}", ops.len()))
+        }
+    };
+
+    // mem operand `imm(reg)`
+    let memop = |tok: &str| -> Result<(i32, u8), ParseError> {
+        let open = tok.find('(').ok_or(ParseError { line: ln, msg: format!("bad mem operand `{tok}`") })?;
+        let close = tok.rfind(')').ok_or(ParseError { line: ln, msg: format!("bad mem operand `{tok}`") })?;
+        let imm = if tok[..open].trim().is_empty() { 0 } else { int(ln, &tok[..open])? };
+        Ok((imm, reg(ln, tok[open + 1..close].trim())?))
+    };
+
+    let alu3 = |op: AluOp| -> Result<Instr, ParseError> {
+        need(3)?;
+        Ok(Instr::Alu { op, rd: reg(ln, ops[0])?, rs1: reg(ln, ops[1])?, rs2: reg(ln, ops[2])? })
+    };
+    let alui3 = |op: AluOp| -> Result<Instr, ParseError> {
+        need(3)?;
+        Ok(Instr::AluImm { op, rd: reg(ln, ops[0])?, rs1: reg(ln, ops[1])?, imm: int(ln, ops[2])? })
+    };
+    let mul3 = |op: MulOp| -> Result<Instr, ParseError> {
+        need(3)?;
+        Ok(Instr::Mul { op, rd: reg(ln, ops[0])?, rs1: reg(ln, ops[1])?, rs2: reg(ln, ops[2])? })
+    };
+    let load = |w: Width| -> Result<Instr, ParseError> {
+        need(2)?;
+        let (imm, rs1) = memop(ops[1])?;
+        Ok(Instr::Load { width: w, rd: reg(ln, ops[0])?, rs1, imm })
+    };
+    let store = |w: Width| -> Result<Instr, ParseError> {
+        need(2)?;
+        let (imm, rs1) = memop(ops[1])?;
+        Ok(Instr::Store { width: w, rs1, rs2: reg(ln, ops[0])?, imm })
+    };
+    let br = |op: BranchOp| -> Result<Instr, ParseError> {
+        need(3)?;
+        Ok(Instr::Branch {
+            op,
+            rs1: reg(ln, ops[0])?,
+            rs2: reg(ln, ops[1])?,
+            imm: target(ln, ops[2], at, labels)?,
+        })
+    };
+
+    // vx_vote.<mode> / vx_shfl.<mode>
+    if let Some(mode) = mn.strip_prefix("vx_vote.") {
+        need(3)?;
+        let m = VoteMode::ALL_MODES
+            .into_iter()
+            .find(|v| v.name() == mode)
+            .ok_or(ParseError { line: ln, msg: format!("bad vote mode `{mode}`") })?;
+        return Ok(Instr::Vote {
+            mode: m,
+            rd: reg(ln, ops[0])?,
+            rs1: reg(ln, ops[1])?,
+            mreg: reg(ln, ops[2])?,
+        });
+    }
+    if let Some(mode) = mn.strip_prefix("vx_shfl.") {
+        need(4)?;
+        let m = ShflMode::ALL_MODES
+            .into_iter()
+            .find(|v| v.name() == mode)
+            .ok_or(ParseError { line: ln, msg: format!("bad shfl mode `{mode}`") })?;
+        let delta = int(ln, ops[2])?;
+        if !(0..32).contains(&delta) {
+            return perr(ln, "shfl delta out of range 0..32");
+        }
+        return Ok(Instr::Shfl {
+            mode: m,
+            rd: reg(ln, ops[0])?,
+            rs1: reg(ln, ops[1])?,
+            delta: delta as u8,
+            creg: reg(ln, ops[3])?,
+        });
+    }
+
+    match mn {
+        "add" => alu3(AluOp::Add),
+        "sub" => alu3(AluOp::Sub),
+        "sll" => alu3(AluOp::Sll),
+        "slt" => alu3(AluOp::Slt),
+        "sltu" => alu3(AluOp::Sltu),
+        "xor" => alu3(AluOp::Xor),
+        "srl" => alu3(AluOp::Srl),
+        "sra" => alu3(AluOp::Sra),
+        "or" => alu3(AluOp::Or),
+        "and" => alu3(AluOp::And),
+        "addi" => alui3(AluOp::Add),
+        "subi" => alui3(AluOp::Sub),
+        "slli" => alui3(AluOp::Sll),
+        "slti" => alui3(AluOp::Slt),
+        "sltiu" => alui3(AluOp::Sltu),
+        "xori" => alui3(AluOp::Xor),
+        "srli" => alui3(AluOp::Srl),
+        "srai" => alui3(AluOp::Sra),
+        "ori" => alui3(AluOp::Or),
+        "andi" => alui3(AluOp::And),
+        "mul" => mul3(MulOp::Mul),
+        "mulh" => mul3(MulOp::Mulh),
+        "mulhsu" => mul3(MulOp::Mulhsu),
+        "mulhu" => mul3(MulOp::Mulhu),
+        "div" => mul3(MulOp::Div),
+        "divu" => mul3(MulOp::Divu),
+        "rem" => mul3(MulOp::Rem),
+        "remu" => mul3(MulOp::Remu),
+        "lui" | "auipc" => {
+            need(2)?;
+            let imm = (int(ln, ops[1])? as u32 as i64) << 12;
+            let (rd_, imm) = (reg(ln, ops[0])?, imm as i32);
+            Ok(if mn == "lui" {
+                Instr::Lui { rd: rd_, imm }
+            } else {
+                Instr::Auipc { rd: rd_, imm }
+            })
+        }
+        "lw" => load(Width::Word),
+        "lh" => load(Width::Half),
+        "lb" => load(Width::Byte),
+        "lhu" => load(Width::HalfU),
+        "lbu" => load(Width::ByteU),
+        "sw" => store(Width::Word),
+        "sh" => store(Width::Half),
+        "sb" => store(Width::Byte),
+        "beq" => br(BranchOp::Beq),
+        "bne" => br(BranchOp::Bne),
+        "blt" => br(BranchOp::Blt),
+        "bge" => br(BranchOp::Bge),
+        "bltu" => br(BranchOp::Bltu),
+        "bgeu" => br(BranchOp::Bgeu),
+        "jal" => {
+            need(2)?;
+            Ok(Instr::Jal { rd: reg(ln, ops[0])?, imm: target(ln, ops[1], at, labels)? })
+        }
+        "j" => {
+            need(1)?;
+            Ok(Instr::Jal { rd: 0, imm: target(ln, ops[0], at, labels)? })
+        }
+        "jalr" => {
+            need(3)?;
+            Ok(Instr::Jalr { rd: reg(ln, ops[0])?, rs1: reg(ln, ops[1])?, imm: int(ln, ops[2])? })
+        }
+        "csrr" => {
+            need(2)?;
+            let c = csr::by_name(ops[1])
+                .map(Ok)
+                .unwrap_or_else(|| int(ln, ops[1]).map(|v| v as u16))?;
+            Ok(Instr::CsrRead { rd: reg(ln, ops[0])?, csr: c })
+        }
+        "ecall" => {
+            need(0)?;
+            Ok(Instr::Ecall)
+        }
+        "fence" => {
+            need(0)?;
+            Ok(Instr::Fence)
+        }
+        "vx_tmc" => {
+            need(1)?;
+            Ok(Instr::Tmc { rs1: reg(ln, ops[0])? })
+        }
+        "vx_wspawn" => {
+            need(2)?;
+            Ok(Instr::Wspawn { rs1: reg(ln, ops[0])?, rs2: reg(ln, ops[1])? })
+        }
+        "vx_split" => {
+            need(2)?;
+            Ok(Instr::Split { rd: reg(ln, ops[0])?, rs1: reg(ln, ops[1])? })
+        }
+        "vx_join" => {
+            need(1)?;
+            Ok(Instr::Join { rs1: reg(ln, ops[0])? })
+        }
+        "vx_bar" => {
+            need(2)?;
+            Ok(Instr::Bar { rs1: reg(ln, ops[0])?, rs2: reg(ln, ops[1])? })
+        }
+        "vx_pred" => {
+            need(1)?;
+            Ok(Instr::Pred { rs1: reg(ln, ops[0])? })
+        }
+        "vx_tile" => {
+            need(2)?;
+            Ok(Instr::Tile { rs1: reg(ln, ops[0])?, rs2: reg(ln, ops[1])? })
+        }
+        _ => perr(ln, format!("unknown mnemonic `{mn}`")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_simple_program_with_labels() {
+        let src = r#"
+            # simple counting loop
+            addi t0, zero, 0
+            li_is_not_used:          ; label on its own line
+            loop: addi t0, t0, 1
+            blt t0, t1, loop
+            vx_vote.any a0, t0, a1
+            vx_shfl.down a2, a0, 4, a3
+            vx_tile a4, a5
+            ecall
+        "#;
+        let p = parse(src).unwrap();
+        assert_eq!(p.len(), 7);
+        assert_eq!(
+            p[2],
+            Instr::Branch { op: BranchOp::Blt, rs1: 5, rs2: 6, imm: -4 }
+        );
+        assert_eq!(p[3], Instr::Vote { mode: VoteMode::Any, rd: 10, rs1: 5, mreg: 11 });
+        assert_eq!(
+            p[4],
+            Instr::Shfl { mode: ShflMode::Down, rd: 12, rs1: 10, delta: 4, creg: 13 }
+        );
+    }
+
+    #[test]
+    fn disasm_parse_roundtrip_sample() {
+        let prog = vec![
+            Instr::AluImm { op: AluOp::Add, rd: 5, rs1: 0, imm: -7 },
+            Instr::Lui { rd: 6, imm: 0x12345 << 12 },
+            Instr::Load { width: Width::Word, rd: 7, rs1: 5, imm: -16 },
+            Instr::Store { width: Width::Word, rs1: 5, rs2: 7, imm: 16 },
+            Instr::Branch { op: BranchOp::Bgeu, rs1: 5, rs2: 6, imm: -8 },
+            Instr::Vote { mode: VoteMode::Uni, rd: 1, rs1: 2, mreg: 3 },
+            Instr::Shfl { mode: ShflMode::Bfly, rd: 1, rs1: 2, delta: 16, creg: 4 },
+            Instr::Tile { rs1: 9, rs2: 10 },
+            Instr::CsrRead { rd: 3, csr: crate::isa::csr::CSR_THREAD_ID },
+            Instr::Ecall,
+        ];
+        let text = prog.iter().map(disasm).collect::<Vec<_>>().join("\n");
+        let back = parse(&text).unwrap();
+        assert_eq!(back, prog);
+    }
+
+    #[test]
+    fn errors_report_line_numbers() {
+        let e = parse("addi t0, zero, 1\nbogus t0").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("beq t0, t1, nowhere").unwrap_err();
+        assert!(e.msg.contains("unknown label"));
+    }
+}

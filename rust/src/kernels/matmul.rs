@@ -1,0 +1,147 @@
+//! `matmul` computational benchmark (§V): shared-memory tiled integer
+//! GEMM (the standard CUDA formulation) with no warp-level collectives.
+//! The block stages A/B tiles in shared memory with `__syncthreads`
+//! between phases; the accumulator is live across those sync
+//! boundaries, so the PR transformation must spill it to the serialized
+//! arrays — the "loop serialization overhead" that costs the SW
+//! solution ~30% in the paper.
+//!
+//! Geometry: C[M,N] = A[M,K] × B[K,N]; each 32-thread block computes a
+//! 32-element slice of one C row; the K dimension is processed in two
+//! unrolled 8-wide phases (the PR transformation does not serialize
+//! loops that contain barriers, so phases are unrolled exactly like the
+//! paper's examples keep cross-thread operations at the top level).
+
+use super::Benchmark;
+use crate::prt::interp::Env;
+use crate::prt::kir::Expr as E;
+use crate::prt::kir::*;
+
+pub const M: usize = 32;
+pub const N: usize = 32;
+pub const K: usize = 16;
+pub const TILE_K: usize = 8;
+pub const GRID: u32 = ((M * N) / 32) as u32;
+pub const BLOCK: u32 = 32;
+pub const WARP: u32 = 8;
+
+fn gid() -> Expr {
+    E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx)
+}
+
+/// One K-phase: stage A-row and B-column tiles in shared memory, sync,
+/// accumulate TILE_K products.
+fn phase(p: usize) -> Vec<Stmt> {
+    let k0 = (p * TILE_K) as i32;
+    let mut stmts = vec![
+        // Threads 0..TILE_K stage this block's A-row tile:
+        // a_tile[t] = A[row*K + k0 + t]   (row is per-block uniform).
+        Stmt::If(
+            E::b(BinOp::Lt, E::ThreadIdx, E::c(TILE_K as i32)),
+            vec![Stmt::Store(
+                "a_tile",
+                E::ThreadIdx,
+                E::load(
+                    "a",
+                    E::add(
+                        E::mul(E::l("row"), E::c(K as i32)),
+                        E::add(E::c(k0), E::ThreadIdx),
+                    ),
+                ),
+            )],
+            vec![],
+        ),
+        // Every thread stages its B-column slice for this phase:
+        // b_tile[kk*BLOCK + tid] = B[(k0+kk)*N + col], kk in 0..TILE_K.
+        Stmt::For(
+            "kk",
+            E::c(0),
+            E::c(TILE_K as i32),
+            vec![Stmt::Store(
+                "b_tile",
+                E::add(E::mul(E::l("kk"), E::c(BLOCK as i32)), E::ThreadIdx),
+                E::load(
+                    "b",
+                    E::add(
+                        E::mul(E::add(E::c(k0), E::l("kk")), E::c(N as i32)),
+                        E::l("col"),
+                    ),
+                ),
+            )],
+        ),
+        Stmt::Sync,
+    ];
+    // Accumulate from shared tiles.
+    stmts.push(Stmt::For(
+        "k",
+        E::c(0),
+        E::c(TILE_K as i32),
+        vec![Stmt::Assign(
+            "acc",
+            E::add(
+                E::l("acc"),
+                E::mul(
+                    E::load("a_tile", E::l("k")),
+                    E::load(
+                        "b_tile",
+                        E::add(E::mul(E::l("k"), E::c(BLOCK as i32)), E::ThreadIdx),
+                    ),
+                ),
+            ),
+        )],
+    ));
+    stmts.push(Stmt::Sync);
+    stmts
+}
+
+pub fn kernel() -> Kernel {
+    let mut body = vec![
+        Stmt::Assign("idx", gid()),
+        Stmt::Assign("row", E::b(BinOp::Div, E::l("idx"), E::c(N as i32))),
+        Stmt::Assign("col", E::b(BinOp::Rem, E::l("idx"), E::c(N as i32))),
+        Stmt::Assign("acc", E::c(0)),
+    ];
+    for p in 0..K / TILE_K {
+        body.extend(phase(p));
+    }
+    body.push(Stmt::Store("c", E::l("idx"), E::l("acc")));
+    Kernel::new("matmul", GRID, BLOCK, WARP)
+        .param("a", M * K, ParamDir::In)
+        .param("b", K * N, ParamDir::In)
+        .param("c", M * N, ParamDir::Out)
+        .shared_arr("a_tile", TILE_K)
+        .shared_arr("b_tile", TILE_K * BLOCK as usize)
+        .body(body)
+}
+
+pub fn inputs() -> Env {
+    let a: Vec<i32> = (0..(M * K) as i32).map(|i| (i * 7 + 3) % 23 - 11).collect();
+    let b: Vec<i32> = (0..(K * N) as i32).map(|i| (i * 5 + 1) % 19 - 9).collect();
+    Env::default().with("a", a).with("b", b)
+}
+
+pub fn reference(inputs: &Env) -> Env {
+    let a = inputs.get("a");
+    let b = inputs.get("b");
+    let mut c = vec![0i32; M * N];
+    for i in 0..M {
+        for j in 0..N {
+            let mut acc = 0i32;
+            for k in 0..K {
+                acc = acc.wrapping_add(a[i * K + k].wrapping_mul(b[k * N + j]));
+            }
+            c[i * N + j] = acc;
+        }
+    }
+    Env::default().with("c", c)
+}
+
+pub fn benchmark() -> Benchmark {
+    Benchmark {
+        name: "matmul",
+        kernel: kernel(),
+        inputs: inputs(),
+        outputs: vec!["c"],
+        reference,
+    }
+}

@@ -1,0 +1,102 @@
+//! The six evaluation benchmarks (§V): two computational kernels
+//! (`mse_forward` from unet.cu, `matmul`), two functionality tests
+//! (`shuffle`, `vote` from cuda-samples) and two reduction kernels
+//! (`reduce`, `reduce_tile` from cuda-samples) — all expressed in KIR so
+//! both the HW path (SIMT codegen) and the SW path (PR transformation)
+//! consume the *same* source, exactly like the paper's CUDA sources go
+//! through two backends.
+//!
+//! Every benchmark carries a plain-Rust reference implementation used as
+//! an extra oracle on top of the KIR interpreter and the PJRT golden
+//! model.
+
+pub mod matmul;
+pub mod mse_forward;
+pub mod reduce;
+pub mod reduce_tile;
+pub mod shuffle;
+pub mod vote;
+
+use crate::prt::interp::Env;
+use crate::prt::kir::Kernel;
+
+/// A benchmark: kernel + deterministic inputs + native reference.
+pub struct Benchmark {
+    pub name: &'static str,
+    pub kernel: Kernel,
+    pub inputs: Env,
+    /// Names of output arrays to validate/compare.
+    pub outputs: Vec<&'static str>,
+    /// Plain-Rust reference: computes expected outputs from inputs.
+    pub reference: fn(&Env) -> Env,
+}
+
+impl Benchmark {
+    /// Expected outputs for this benchmark's inputs.
+    pub fn expected(&self) -> Env {
+        (self.reference)(&self.inputs)
+    }
+
+    /// Check an output environment against the native reference.
+    pub fn check(&self, got: &Env) -> Result<(), String> {
+        let want = self.expected();
+        for name in &self.outputs {
+            if want.get(name) != got.get(name) {
+                return Err(format!(
+                    "benchmark `{}`: output `{name}` mismatch\n want {:?}\n got  {:?}",
+                    self.name,
+                    &want.get(name)[..want.get(name).len().min(16)],
+                    &got.get(name)[..got.get(name).len().min(16)],
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// All six paper benchmarks (deterministic inputs, seed recorded in
+/// EXPERIMENTS.md).
+pub fn all() -> Vec<Benchmark> {
+    vec![
+        mse_forward::benchmark(),
+        matmul::benchmark(),
+        shuffle::benchmark(),
+        vote::benchmark(),
+        reduce::benchmark(),
+        reduce_tile::benchmark(),
+    ]
+}
+
+/// Look a benchmark up by name.
+pub fn by_name(name: &str) -> Option<Benchmark> {
+    all().into_iter().find(|b| b.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prt::interp;
+
+    #[test]
+    fn all_six_present() {
+        let names: Vec<_> = all().iter().map(|b| b.name).collect();
+        assert_eq!(
+            names,
+            ["mse_forward", "matmul", "shuffle", "vote", "reduce", "reduce_tile"]
+        );
+    }
+
+    #[test]
+    fn interpreter_matches_native_reference_for_every_benchmark() {
+        for b in all() {
+            let got = interp::run(&b.kernel, &b.inputs).expect(b.name);
+            b.check(&got).unwrap();
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("matmul").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,115 @@
+//! `reduce` benchmark (cuda-samples block reduction, §V): grid-stride
+//! loads, a warp-level shuffle-down reduction, shared-memory staging of
+//! per-warp partials, and a final single-thread combine. Reduction-
+//! dominated, ~4× HW speedup in the paper (no reduce-collapse
+//! annotation — the SW path emulates every shuffle via Table III
+//! arrays, matching the vanilla transformation the paper measures).
+
+use super::Benchmark;
+use crate::prt::interp::Env;
+use crate::prt::kir::Expr as E;
+use crate::prt::kir::*;
+
+pub const GRID: u32 = 2;
+pub const BLOCK: u32 = 32;
+pub const WARP: u32 = 8;
+pub const ELEMS_PER_THREAD: usize = 4;
+pub const N: usize = (GRID * BLOCK) as usize * ELEMS_PER_THREAD;
+const TOTAL_THREADS: i32 = (GRID * BLOCK) as i32;
+const NWARPS: i32 = (BLOCK / WARP) as i32;
+
+fn gid() -> Expr {
+    E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx)
+}
+
+pub fn kernel() -> Kernel {
+    Kernel::new("reduce", GRID, BLOCK, WARP)
+        .param("in", N, ParamDir::In)
+        .param("out", GRID as usize, ParamDir::Out)
+        .shared_arr("partials", NWARPS as usize)
+        .body(vec![
+            // Grid-stride accumulation.
+            Stmt::Assign("sum", E::c(0)),
+            Stmt::For(
+                "i",
+                E::c(0),
+                E::c(ELEMS_PER_THREAD as i32),
+                vec![Stmt::Assign(
+                    "sum",
+                    E::add(
+                        E::l("sum"),
+                        E::load(
+                            "in",
+                            E::add(gid(), E::mul(E::l("i"), E::c(TOTAL_THREADS))),
+                        ),
+                    ),
+                )],
+            ),
+            // Warp shuffle-down reduction (deltas 4, 2, 1 for warp=8).
+            Stmt::Assign("t", E::warp(WarpFn::ShflDown, E::l("sum"), 4)),
+            Stmt::Assign("sum", E::add(E::l("sum"), E::l("t"))),
+            Stmt::Assign("t", E::warp(WarpFn::ShflDown, E::l("sum"), 2)),
+            Stmt::Assign("sum", E::add(E::l("sum"), E::l("t"))),
+            Stmt::Assign("t", E::warp(WarpFn::ShflDown, E::l("sum"), 1)),
+            Stmt::Assign("sum", E::add(E::l("sum"), E::l("t"))),
+            // Lane 0 of each warp stages its partial.
+            Stmt::If(
+                E::b(
+                    BinOp::Eq,
+                    E::b(BinOp::Rem, E::ThreadIdx, E::c(WARP as i32)),
+                    E::c(0),
+                ),
+                vec![Stmt::Store(
+                    "partials",
+                    E::b(BinOp::Div, E::ThreadIdx, E::c(WARP as i32)),
+                    E::l("sum"),
+                )],
+                vec![],
+            ),
+            Stmt::Sync,
+            // Thread 0 combines the per-warp partials.
+            Stmt::If(
+                E::b(BinOp::Eq, E::ThreadIdx, E::c(0)),
+                vec![
+                    Stmt::Assign("blocksum", E::c(0)),
+                    Stmt::For(
+                        "w",
+                        E::c(0),
+                        E::c(NWARPS),
+                        vec![Stmt::Assign(
+                            "blocksum",
+                            E::add(E::l("blocksum"), E::load("partials", E::l("w"))),
+                        )],
+                    ),
+                    Stmt::Store("out", E::BlockIdx, E::l("blocksum")),
+                ],
+                vec![],
+            ),
+        ])
+}
+
+pub fn inputs() -> Env {
+    Env::default().with("in", (0..N as i32).map(|i| (i * 13 + 5) % 101 - 50).collect())
+}
+
+pub fn reference(inputs: &Env) -> Env {
+    let input = inputs.get("in");
+    let mut out = vec![0i32; GRID as usize];
+    for (i, &v) in input.iter().enumerate() {
+        // element i belongs to thread (i % TOTAL_THREADS), block of that
+        // thread = (i % TOTAL_THREADS) / BLOCK.
+        let t = i % TOTAL_THREADS as usize;
+        out[t / BLOCK as usize] = out[t / BLOCK as usize].wrapping_add(v);
+    }
+    Env::default().with("out", out)
+}
+
+pub fn benchmark() -> Benchmark {
+    Benchmark {
+        name: "reduce",
+        kernel: kernel(),
+        inputs: inputs(),
+        outputs: vec!["out"],
+        reference,
+    }
+}

@@ -1,0 +1,87 @@
+//! `reduce_tile` benchmark (cuda-samples cooperative-groups tiled
+//! reduction, §V): `tiled_partition<4>` splits each warp into two
+//! tiles; each tile reduces via shuffle-down and its rank-0 thread
+//! writes a partial — exercising the `vx_tile` sub-warp path plus a
+//! tile-scoped vote.
+
+use super::Benchmark;
+use crate::prt::interp::Env;
+use crate::prt::kir::Expr as E;
+use crate::prt::kir::*;
+
+pub const GRID: u32 = 2;
+pub const BLOCK: u32 = 32;
+pub const WARP: u32 = 8;
+pub const TILE: u32 = 4;
+pub const N: usize = (GRID * BLOCK) as usize;
+pub const NTILES: usize = N / TILE as usize;
+
+fn gid() -> Expr {
+    E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx)
+}
+
+pub fn kernel() -> Kernel {
+    Kernel::new("reduce_tile", GRID, BLOCK, WARP)
+        .param("in", N, ParamDir::In)
+        .param("out", NTILES, ParamDir::Out)
+        .param("anypos", NTILES, ParamDir::Out)
+        .body(vec![
+            Stmt::TilePartition(TILE),
+            Stmt::Assign("x", E::load("in", gid())),
+            // Tile-scoped shuffle-down reduction (deltas 2, 1).
+            Stmt::Assign("t", E::warp(WarpFn::ShflDown, E::l("x"), 2)),
+            Stmt::Assign("x", E::add(E::l("x"), E::l("t"))),
+            Stmt::Assign("t", E::warp(WarpFn::ShflDown, E::l("x"), 1)),
+            Stmt::Assign("x", E::add(E::l("x"), E::l("t"))),
+            // Tile-scoped vote: any positive element in the tile?
+            Stmt::Assign("p", E::b(BinOp::Gt, E::load("in", gid()), E::c(0))),
+            Stmt::Assign("any", E::warp(WarpFn::VoteAny, E::l("p"), 0)),
+            // Tile rank 0 writes the partial (global tile index).
+            Stmt::If(
+                E::b(BinOp::Eq, E::TileRank, E::c(0)),
+                vec![
+                    Stmt::Assign(
+                        "tileidx",
+                        E::add(
+                            E::mul(
+                                E::BlockIdx,
+                                E::c((BLOCK / TILE) as i32),
+                            ),
+                            E::TileGroup,
+                        ),
+                    ),
+                    Stmt::Store("out", E::l("tileidx"), E::l("x")),
+                    Stmt::Store("anypos", E::l("tileidx"), E::l("any")),
+                ],
+                vec![],
+            ),
+        ])
+}
+
+pub fn inputs() -> Env {
+    Env::default().with("in", (0..N as i32).map(|i| (i * 17 + 7) % 41 - 20).collect())
+}
+
+pub fn reference(inputs: &Env) -> Env {
+    let input = inputs.get("in");
+    let mut out = vec![0i32; NTILES];
+    let mut anypos = vec![0i32; NTILES];
+    for t in 0..NTILES {
+        let base = t * TILE as usize;
+        out[t] = input[base..base + TILE as usize]
+            .iter()
+            .fold(0i32, |a, &b| a.wrapping_add(b));
+        anypos[t] = input[base..base + TILE as usize].iter().any(|&v| v > 0) as i32;
+    }
+    Env::default().with("out", out).with("anypos", anypos)
+}
+
+pub fn benchmark() -> Benchmark {
+    Benchmark {
+        name: "reduce_tile",
+        kernel: kernel(),
+        inputs: inputs(),
+        outputs: vec!["out", "anypos"],
+        reference,
+    }
+}

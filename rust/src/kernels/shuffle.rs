@@ -1,0 +1,76 @@
+//! `shuffle` functionality benchmark (cuda-samples' shfl test, §V):
+//! all four `vx_shfl` modes combined per thread — register-exchange
+//! dominated, ~4× HW speedup in the paper.
+
+use super::Benchmark;
+use crate::prt::interp::Env;
+use crate::prt::kir::Expr as E;
+use crate::prt::kir::*;
+use crate::sim::exec::warp_ops;
+
+pub const GRID: u32 = 1;
+pub const BLOCK: u32 = 32;
+pub const WARP: u32 = 8;
+pub const N: usize = (GRID * BLOCK) as usize;
+
+fn gid() -> Expr {
+    E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx)
+}
+
+pub fn kernel() -> Kernel {
+    Kernel::new("shuffle", GRID, BLOCK, WARP)
+        .param("in", N, ParamDir::In)
+        .param("out", N, ParamDir::Out)
+        .body(vec![
+            Stmt::Assign("x", E::load("in", gid())),
+            Stmt::Assign("a", E::warp(WarpFn::ShflUp, E::l("x"), 1)),
+            Stmt::Assign("b", E::warp(WarpFn::ShflDown, E::l("x"), 2)),
+            Stmt::Assign("c", E::warp(WarpFn::ShflXor, E::l("x"), 4)),
+            Stmt::Assign("d", E::warp(WarpFn::Shfl, E::l("x"), 0)),
+            // out = a + 3b + 5c + 7d (distinguishes every mode)
+            Stmt::Store(
+                "out",
+                gid(),
+                E::add(
+                    E::add(E::l("a"), E::mul(E::l("b"), E::c(3))),
+                    E::add(E::mul(E::l("c"), E::c(5)), E::mul(E::l("d"), E::c(7))),
+                ),
+            ),
+        ])
+}
+
+pub fn inputs() -> Env {
+    Env::default().with("in", (0..N as i32).map(|i| i * 3 - 700).collect())
+}
+
+pub fn reference(inputs: &Env) -> Env {
+    use crate::isa::ShflMode;
+    let input = inputs.get("in");
+    let mut out = vec![0; N];
+    for seg in 0..N / WARP as usize {
+        let base = seg * WARP as usize;
+        let vals: Vec<u32> =
+            (0..WARP as usize).map(|l| input[base + l] as u32).collect();
+        let a = warp_ops::shfl(ShflMode::Up, &vals, 1, 0);
+        let b = warp_ops::shfl(ShflMode::Down, &vals, 2, 0);
+        let c = warp_ops::shfl(ShflMode::Bfly, &vals, 4, 0);
+        let d = warp_ops::shfl(ShflMode::Idx, &vals, 0, 0);
+        for l in 0..WARP as usize {
+            out[base + l] = (a[l] as i32)
+                .wrapping_add((b[l] as i32).wrapping_mul(3))
+                .wrapping_add((c[l] as i32).wrapping_mul(5))
+                .wrapping_add((d[l] as i32).wrapping_mul(7));
+        }
+    }
+    Env::default().with("out", out)
+}
+
+pub fn benchmark() -> Benchmark {
+    Benchmark {
+        name: "shuffle",
+        kernel: kernel(),
+        inputs: inputs(),
+        outputs: vec!["out"],
+        reference,
+    }
+}

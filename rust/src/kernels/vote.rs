@@ -1,0 +1,89 @@
+//! `vote` functionality benchmark (cuda-samples' vote test, §V):
+//! every thread evaluates a predicate from the input and the warp
+//! computes all four `vx_vote` modes back-to-back — the collective-
+//! dominated workload where the paper reports ~4× HW speedup.
+
+use super::Benchmark;
+use crate::prt::interp::Env;
+use crate::prt::kir::Expr as E;
+use crate::prt::kir::*;
+
+pub const GRID: u32 = 1;
+pub const BLOCK: u32 = 32;
+pub const WARP: u32 = 8;
+pub const N: usize = (GRID * BLOCK) as usize;
+
+fn gid() -> Expr {
+    E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx)
+}
+
+pub fn kernel() -> Kernel {
+    Kernel::new("vote", GRID, BLOCK, WARP)
+        .param("in", N, ParamDir::In)
+        .param("any_o", N, ParamDir::Out)
+        .param("all_o", N, ParamDir::Out)
+        .param("uni_o", N, ParamDir::Out)
+        .param("ballot_o", N, ParamDir::Out)
+        .body(vec![
+            Stmt::Assign("p", E::b(BinOp::And, E::load("in", gid()), E::c(1))),
+            Stmt::Assign("a", E::warp(WarpFn::VoteAny, E::l("p"), 0)),
+            Stmt::Assign("b", E::warp(WarpFn::VoteAll, E::l("p"), 0)),
+            Stmt::Assign("u", E::warp(WarpFn::VoteUni, E::l("p"), 0)),
+            Stmt::Assign("c", E::warp(WarpFn::Ballot, E::l("p"), 0)),
+            Stmt::Store("any_o", gid(), E::l("a")),
+            Stmt::Store("all_o", gid(), E::l("b")),
+            Stmt::Store("uni_o", gid(), E::l("u")),
+            Stmt::Store("ballot_o", gid(), E::l("c")),
+        ])
+}
+
+pub fn inputs() -> Env {
+    // Deterministic pattern with warps of each flavor: all-zero,
+    // all-one, mixed.
+    let data: Vec<i32> = (0..N as i32)
+        .map(|i| match (i / WARP as i32) % 3 {
+            0 => 0,
+            1 => 1,
+            _ => i % 2,
+        })
+        .collect();
+    Env::default().with("in", data)
+}
+
+pub fn reference(inputs: &Env) -> Env {
+    let input = inputs.get("in");
+    let (mut any_o, mut all_o, mut uni_o, mut ballot_o) =
+        (vec![0; N], vec![0; N], vec![0; N], vec![0; N]);
+    for seg in 0..N / WARP as usize {
+        let base = seg * WARP as usize;
+        let preds: Vec<i32> = (0..WARP as usize).map(|l| input[base + l] & 1).collect();
+        let any = preds.iter().any(|&p| p != 0) as i32;
+        let all = preds.iter().all(|&p| p != 0) as i32;
+        let uni = preds.windows(2).all(|w| w[0] == w[1]) as i32;
+        let ballot = preds
+            .iter()
+            .enumerate()
+            .fold(0, |acc, (l, &p)| acc | (((p != 0) as i32) << l));
+        for l in 0..WARP as usize {
+            any_o[base + l] = any;
+            all_o[base + l] = all;
+            uni_o[base + l] = uni;
+            ballot_o[base + l] = ballot;
+        }
+    }
+    Env::default()
+        .with("any_o", any_o)
+        .with("all_o", all_o)
+        .with("uni_o", uni_o)
+        .with("ballot_o", ballot_o)
+}
+
+pub fn benchmark() -> Benchmark {
+    Benchmark {
+        name: "vote",
+        kernel: kernel(),
+        inputs: inputs(),
+        outputs: vec!["any_o", "all_o", "uni_o", "ballot_o"],
+        reference,
+    }
+}

@@ -1,0 +1,11 @@
+//! vortex-warp: reproduction of "Hardware vs. Software Implementation of
+//! Warp-Level Features in Vortex RISC-V GPU" (CS.AR 2025).
+pub mod isa;
+pub mod sim;
+pub mod prt;
+pub mod kernels;
+pub mod area;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench_harness;
+pub mod util;

@@ -1,0 +1,152 @@
+//! `vortex-warp` CLI — the leader entrypoint.
+//!
+//! Subcommands (hand-rolled parsing; clap is not vendored offline):
+//!   tables  [--table 1|2|3|4]       regenerate the paper's tables
+//!   run     --bench <name> [--solution hw|sw] [--nt N] [--nw N]
+//!   fig5                            IPC comparison over all benchmarks
+//!   area    [--layout]              Table IV / Fig 6
+//!   validate [--artifacts DIR]      e2e: sim vs PJRT golden models
+
+use vortex_warp::area::report::{fig6_layout, table4};
+use vortex_warp::bench_harness::{fig5, tables};
+use vortex_warp::coordinator::dispatch::{dispatch, Solution};
+use vortex_warp::kernels;
+use vortex_warp::prt::kir::ParamDir;
+use vortex_warp::runtime::Runtime;
+use vortex_warp::sim::SimConfig;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: vortex-warp <command> [options]\n\
+         \n\
+         commands:\n\
+           tables [--table 1|2|3|4]     regenerate the paper's tables\n\
+           run --bench <name> [--solution hw|sw] [--nt N] [--nw N] [--trace]\n\
+           fig5                         IPC of HW vs SW over all six benchmarks\n\
+           area [--layout]              Table IV area overhead (+ Fig 6 layout)\n\
+           validate [--artifacts DIR]   end-to-end check vs PJRT golden models\n\
+           list                         list benchmarks"
+    );
+    std::process::exit(2);
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn config_from(args: &[String]) -> SimConfig {
+    let mut cfg = SimConfig::paper();
+    if let Some(nt) = flag_value(args, "--nt") {
+        cfg.nt = nt.parse().expect("--nt");
+    }
+    if let Some(nw) = flag_value(args, "--nw") {
+        cfg.nw = nw.parse().expect("--nw");
+    }
+    cfg.trace = has_flag(args, "--trace");
+    cfg.validate().expect("invalid configuration");
+    cfg
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("tables") => {
+            let which = flag_value(&args, "--table");
+            let all = which.is_none();
+            let w = which.as_deref().unwrap_or("");
+            if all || w == "1" {
+                println!("{}\n", tables::table1());
+            }
+            if all || w == "2" {
+                println!("{}\n", tables::table2(32));
+            }
+            if all || w == "3" {
+                println!("{}\n", tables::table3());
+            }
+            if all || w == "4" {
+                println!("{}\n", table4(&SimConfig::paper()));
+            }
+        }
+        Some("run") => {
+            let name = flag_value(&args, "--bench").unwrap_or_else(|| usage());
+            let sol = flag_value(&args, "--solution")
+                .map(|s| Solution::parse(&s).expect("--solution hw|sw"))
+                .unwrap_or(Solution::Hw);
+            let cfg = config_from(&args);
+            let b = kernels::by_name(&name).unwrap_or_else(|| {
+                eprintln!("unknown benchmark `{name}` (try `vortex-warp list`)");
+                std::process::exit(2);
+            });
+            let r = dispatch(sol, &b.kernel, &cfg, &b.inputs).unwrap_or_else(|e| {
+                eprintln!("launch failed: {e}");
+                std::process::exit(1);
+            });
+            b.check(&r.env).expect("output mismatch vs native reference");
+            println!("{} [{}] {}", b.name, sol.name(), r.metrics.summary());
+        }
+        Some("fig5") => {
+            let cfg = config_from(&args);
+            match fig5::run_all(&cfg) {
+                Ok(rows) => println!("{}", fig5::render(&rows)),
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        Some("area") => {
+            let cfg = config_from(&args);
+            println!("{}", table4(&cfg));
+            if has_flag(&args, "--layout") {
+                println!("\n{}", fig6_layout(&cfg));
+            }
+        }
+        Some("validate") => {
+            let dir = flag_value(&args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+            let mut rt = Runtime::new(&dir).expect("PJRT runtime");
+            let cfg = config_from(&args);
+            let mut bad = 0;
+            for b in kernels::all() {
+                let hw = dispatch(Solution::Hw, &b.kernel, &cfg, &b.inputs).expect("HW");
+                let ins: Vec<&[i32]> = b
+                    .kernel
+                    .params
+                    .iter()
+                    .filter(|p| p.dir != ParamDir::Out)
+                    .map(|p| b.inputs.get(p.name))
+                    .collect();
+                match rt.run_i32(b.name, &ins) {
+                    Ok(golden) => {
+                        let ok = b
+                            .outputs
+                            .iter()
+                            .enumerate()
+                            .all(|(i, name)| golden[i] == hw.env.get(name));
+                        println!("{:12} {}", b.name, if ok { "OK" } else { "MISMATCH" });
+                        bad += (!ok) as i32;
+                    }
+                    Err(e) => {
+                        println!("{:12} SKIP ({e})", b.name);
+                    }
+                }
+            }
+            std::process::exit(if bad > 0 { 1 } else { 0 });
+        }
+        Some("list") => {
+            for b in kernels::all() {
+                println!(
+                    "{:12} grid={} block={} params={}",
+                    b.name,
+                    b.kernel.grid_size,
+                    b.kernel.block_size,
+                    b.kernel.params.len()
+                );
+            }
+        }
+        _ => usage(),
+    }
+}

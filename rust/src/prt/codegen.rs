@@ -1,0 +1,669 @@
+//! KIR → Vortex ISA code generation, for both solutions:
+//!
+//! * [`codegen_simt`] — the **HW path**: the original SPMD kernel is
+//!   lowered so the block's software threads map 1:1 onto the core's
+//!   `NW × NT` hardware threads; warp-level features become the Table I
+//!   instructions (`vx_vote`/`vx_shfl`/`vx_tile`), divergence becomes
+//!   `vx_split`/`vx_join`, and `__syncthreads` becomes `vx_bar`. Blocks
+//!   of the grid run back to back, separated by a barrier.
+//!
+//! * [`codegen_scalar`] — the **SW path**: the PR-transformed scalar
+//!   kernel is lowered to plain RV32IM (no extension instructions). All
+//!   `NW × NT` lanes run in parallel, each serializing entire blocks
+//!   (grid-strided), with its per-block arrays (shared + PR scratch) in
+//!   a private shared-memory frame — the CuPBoP/COX "software thread
+//!   block onto hardware thread" mapping.
+//!
+//! Both generators share one expression/statement emitter; divergent
+//! `if`s are always guarded with `vx_split`/`vx_join` (required even in
+//! the SW path because different lanes process different blocks).
+
+use super::kir::*;
+use crate::isa::asm::{regs, Asm};
+use crate::isa::Instr;
+use crate::sim::map;
+use std::collections::HashMap;
+
+/// Everything the launcher needs to run a generated kernel: the
+/// program, where each parameter array lives in global memory, and how
+/// much shared memory each lane/block frame uses.
+#[derive(Clone, Debug)]
+pub struct LaunchImage {
+    pub prog: Vec<Instr>,
+    /// (name, base address, length in words) per parameter.
+    pub params: Vec<(&'static str, u32, usize)>,
+    /// Bytes of shared memory consumed (all frames).
+    pub shared_bytes: u32,
+    /// Grid/block geometry baked into the program.
+    pub grid_size: u32,
+    pub block_size: u32,
+    /// True if the program uses the Table I extension instructions.
+    pub uses_warp_hw: bool,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Simt,
+    Scalar,
+}
+
+/// Register roles.
+const R_TIDX: u8 = regs::S0; // SIMT: threadIdx; Scalar: lane id L
+const R_BLK: u8 = regs::S1; // blockIdx
+const R_FRAME: u8 = regs::S2; // Scalar: frame base; SIMT: shared base
+const PARAM_REGS: [u8; 6] = [regs::S3, regs::S4, regs::S5, regs::S6, regs::S7, regs::S8];
+const LOCAL_REGS: [u8; 8] = [
+    regs::S9,
+    regs::S10,
+    regs::S11,
+    regs::RA,
+    regs::GP,
+    regs::TP,
+    regs::A6,
+    regs::A7,
+];
+const TEMP_REGS: [u8; 13] = [
+    regs::T0,
+    regs::T1,
+    regs::T2,
+    regs::T3,
+    regs::T4,
+    regs::T5,
+    regs::T6,
+    regs::A0,
+    regs::A1,
+    regs::A2,
+    regs::A3,
+    regs::A4,
+    regs::A5,
+];
+
+struct Pool {
+    free: Vec<u8>,
+    low_water: usize,
+}
+
+impl Pool {
+    fn new(regs: &[u8]) -> Self {
+        Pool { free: regs.to_vec(), low_water: regs.len() }
+    }
+    fn alloc(&mut self) -> Result<u8, String> {
+        let r = self.free.pop().ok_or("expression too deep: temp registers exhausted")?;
+        self.low_water = self.low_water.min(self.free.len());
+        Ok(r)
+    }
+    fn release(&mut self, r: u8) {
+        self.free.push(r);
+    }
+}
+
+struct Cg {
+    mode: Mode,
+    a: Asm,
+    temps: Pool,
+    locals: HashMap<&'static str, u8>,
+    local_pool: Vec<u8>,
+    /// Param name -> (pinned reg, base addr, len).
+    params: HashMap<&'static str, (u8, u32, usize)>,
+    /// Shared/scratch array name -> byte offset within the frame.
+    frames: HashMap<&'static str, u32>,
+    frame_bytes: u32,
+    /// Compile-time tile size for accessor lowering (SIMT).
+    tile: u32,
+    nt: u32,
+    nw: u32,
+    grid: u32,
+    block: u32,
+    sync_ids: u32,
+    uses_warp_hw: bool,
+}
+
+impl Cg {
+    fn local_reg(&mut self, name: &'static str) -> Result<u8, String> {
+        if let Some(&r) = self.locals.get(name) {
+            return Ok(r);
+        }
+        let r = self
+            .local_pool
+            .pop()
+            .ok_or_else(|| format!("too many thread-local scalars (at `{name}`)"))?;
+        self.locals.insert(name, r);
+        Ok(r)
+    }
+
+    // ---------------- expressions ----------------
+
+    /// Emit code leaving the expression's value in a freshly allocated
+    /// temp (caller releases).
+    fn expr(&mut self, e: &Expr) -> Result<u8, String> {
+        let dst = self.temps.alloc()?;
+        self.expr_into(e, dst)?;
+        Ok(dst)
+    }
+
+    fn expr_into(&mut self, e: &Expr, dst: u8) -> Result<(), String> {
+        match e {
+            Expr::Const(v) => self.a.li(dst, *v),
+            Expr::Local(n) => {
+                let r = self.local_reg(n)?;
+                self.a.mv(dst, r);
+            }
+            Expr::ThreadIdx => match self.mode {
+                Mode::Simt => self.a.mv(dst, R_TIDX),
+                // Scalar kernels have block_size == 1.
+                Mode::Scalar => self.a.li(dst, 0),
+            },
+            Expr::BlockIdx => self.a.mv(dst, R_BLK),
+            Expr::BlockDim => self.a.li(dst, self.block as i32),
+            Expr::GridDim => self.a.li(dst, self.grid as i32),
+            Expr::TileRank => {
+                self.a.mv(dst, R_TIDX);
+                self.a.andi(dst, dst, (self.tile - 1) as i32);
+            }
+            Expr::TileGroup => {
+                self.a.mv(dst, R_TIDX);
+                self.a.srli(dst, dst, self.tile.trailing_zeros() as i32);
+            }
+            Expr::TileSize => self.a.li(dst, self.tile as i32),
+            Expr::Bin(op, x, y) => {
+                self.expr_into(x, dst)?;
+                let ry = self.expr(y)?;
+                self.binop(*op, dst, dst, ry);
+                self.temps.release(ry);
+            }
+            Expr::Load(arr, idx) => {
+                self.expr_into(idx, dst)?;
+                self.addr_of(arr, dst)?;
+                self.a.lw(dst, dst, 0);
+            }
+            Expr::Warp(f, v, delta) => {
+                if self.mode == Mode::Scalar {
+                    return Err(format!(
+                        "warp op {} survives in scalar kernel — PR transformation bug",
+                        f.name()
+                    ));
+                }
+                self.uses_warp_hw = true;
+                self.expr_into(v, dst)?;
+                if let Some(mode) = f.vote_mode() {
+                    self.a.vote(mode, dst, dst, regs::ZERO);
+                } else {
+                    let mode = f.shfl_mode().unwrap();
+                    self.a.shfl(mode, dst, dst, *delta, regs::ZERO);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Turn an index in `reg` into the array element's address (in
+    /// place).
+    fn addr_of(&mut self, arr: &'static str, reg: u8) -> Result<(), String> {
+        self.a.slli(reg, reg, 2);
+        if let Some(&(preg, _, _)) = self.params.get(arr) {
+            self.a.add(reg, reg, preg);
+        } else if let Some(&off) = self.frames.get(arr) {
+            self.a.add(reg, reg, R_FRAME);
+            if off != 0 {
+                self.a.addi(reg, reg, off as i32);
+            }
+        } else {
+            return Err(format!("unknown array `{arr}`"));
+        }
+        Ok(())
+    }
+
+    fn binop(&mut self, op: BinOp, rd: u8, a: u8, b: u8) {
+        use crate::isa::MulOp;
+        let asm = &mut self.a;
+        match op {
+            BinOp::Add => asm.add(rd, a, b),
+            BinOp::Sub => asm.sub(rd, a, b),
+            BinOp::Mul => asm.mul(rd, a, b),
+            BinOp::Div => asm.mulop(MulOp::Div, rd, a, b),
+            BinOp::Rem => asm.mulop(MulOp::Rem, rd, a, b),
+            BinOp::And => asm.and(rd, a, b),
+            BinOp::Or => asm.or(rd, a, b),
+            BinOp::Xor => asm.xor(rd, a, b),
+            BinOp::Shl => asm.sll(rd, a, b),
+            BinOp::Shr => asm.srl(rd, a, b),
+            BinOp::Lt => asm.slt(rd, a, b),
+            BinOp::Gt => asm.slt(rd, b, a),
+            BinOp::Ge => {
+                asm.slt(rd, a, b);
+                asm.xori(rd, rd, 1);
+            }
+            BinOp::Le => {
+                asm.slt(rd, b, a);
+                asm.xori(rd, rd, 1);
+            }
+            BinOp::Eq => {
+                asm.sub(rd, a, b);
+                asm.seqz(rd, rd);
+            }
+            BinOp::Ne => {
+                asm.sub(rd, a, b);
+                asm.snez(rd, rd);
+            }
+            BinOp::LAnd => {
+                asm.snez(rd, a);
+                let t = b;
+                // rd = (a != 0) & (b != 0): normalize b into itself is
+                // unsafe (b may be a live local read), so use rd as the
+                // only scratch: rd = (a!=0); rd = rd & (b!=0) via slt.
+                // sltu zero < b gives (b != 0) but needs a register;
+                // reuse: rd &= (b != 0) computed into rd via two steps.
+                asm.sltu(rd, regs::ZERO, a);
+                asm.sltu(t, regs::ZERO, t); // b is always a temp here
+                asm.and(rd, rd, t);
+            }
+            BinOp::LOr => {
+                asm.or(rd, a, b);
+                asm.snez(rd, rd);
+            }
+        }
+    }
+
+    // ---------------- statements ----------------
+
+    fn stmt(&mut self, s: &Stmt) -> Result<(), String> {
+        match s {
+            Stmt::Assign(n, e) => {
+                let r = self.local_reg(n)?;
+                // Evaluate into a temp first: `e` may read the old value
+                // of `n`.
+                let t = self.expr(e)?;
+                self.a.mv(r, t);
+                self.temps.release(t);
+            }
+            Stmt::Store(arr, idx, val) => {
+                let v = self.expr(val)?;
+                let addr = self.expr(idx)?;
+                self.addr_of(arr, addr)?;
+                self.a.sw(v, addr, 0);
+                self.temps.release(v);
+                self.temps.release(addr);
+            }
+            Stmt::If(c, then_s, else_s) => {
+                let cond = self.expr(c)?;
+                // Divergence-safe lowering (Fig 3b): split, uniform
+                // branch on the (now warp-uniform) active predicate.
+                let tok = self.temps.alloc()?;
+                self.a.split(tok, cond);
+                let l_else = self.a.label();
+                let l_end = self.a.label();
+                self.a.beq(cond, regs::ZERO, l_else);
+                self.temps.release(cond);
+                for s in then_s {
+                    self.stmt(s)?;
+                }
+                self.a.j(l_end);
+                self.a.bind(l_else);
+                for s in else_s {
+                    self.stmt(s)?;
+                }
+                self.a.bind(l_end);
+                self.a.join(tok);
+                self.temps.release(tok);
+            }
+            Stmt::For(v, from, to, body) => {
+                let vr = self.local_reg(v)?;
+                self.expr_into(from, vr)?;
+                // Loop bound is evaluated once (KIR semantics) and must
+                // be lane-uniform.
+                let bound = self.expr(to)?;
+                let l_top = self.a.here();
+                let l_end = self.a.label();
+                self.a.bge(vr, bound, l_end);
+                for s in body {
+                    self.stmt(s)?;
+                }
+                self.a.addi(vr, vr, 1);
+                self.a.j(l_top);
+                self.a.bind(l_end);
+                self.temps.release(bound);
+            }
+            Stmt::Sync => {
+                self.sync_ids += 1;
+                let id = self.temps.alloc()?;
+                let n = self.temps.alloc()?;
+                self.a.li(id, self.sync_ids as i32);
+                self.a.li(n, self.nw as i32);
+                self.a.bar(id, n);
+                self.temps.release(id);
+                self.temps.release(n);
+            }
+            Stmt::TilePartition(size) => {
+                self.uses_warp_hw = true;
+                self.tile = *size;
+                // Barrier first so no warp reconfigures while another
+                // still runs pre-partition code.
+                self.stmt(&Stmt::Sync)?;
+                let cfg = crate::sim::scheduler::TileConfig::for_size(
+                    self.nw * self.nt,
+                    *size,
+                )
+                .map_err(|e| format!("vx_tile: {e}"))?;
+                let m = self.temps.alloc()?;
+                let s = self.temps.alloc()?;
+                self.a.li(m, cfg.group_mask as i32);
+                self.a.li(s, *size as i32);
+                self.a.tile(m, s);
+                self.temps.release(m);
+                self.temps.release(s);
+            }
+            Stmt::TileSync => {
+                // Within a hardware warp lanes are lockstep; a merged
+                // tile needs a real barrier.
+                if self.tile > self.nt {
+                    self.stmt(&Stmt::Sync)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Allocate parameter arrays in global memory after the argument
+/// mailbox; returns (name, base, len) in declaration order.
+fn layout_params(k: &Kernel) -> Vec<(&'static str, u32, usize)> {
+    let mut base = map::KARG_BASE + 64; // mailbox: up to 16 arg words
+    let mut out = Vec::new();
+    for p in &k.params {
+        out.push((p.name, base, p.len));
+        base += (p.len as u32) * 4;
+        base = (base + 63) & !63; // line-align each array
+    }
+    out
+}
+
+fn common_prologue(cg: &mut Cg) {
+    let a = &mut cg.a;
+    // Warp 0 spawns the others, everyone falls through to `worker`.
+    let worker = a.label();
+    a.li(regs::T0, cg.nw as i32);
+    a.li(regs::T1, (map::CODE_BASE + 4 * 4) as i32); // 2+2 li instrs
+    a.wspawn(regs::T0, regs::T1);
+    a.j(worker);
+    a.bind(worker);
+    // tidx/L = wid * NT + tid
+    a.csrr(regs::T0, crate::isa::csr::CSR_WARP_ID);
+    a.csrr(regs::T1, crate::isa::csr::CSR_THREAD_ID);
+    a.slli(regs::T0, regs::T0, cg.nt.trailing_zeros() as i32);
+    a.add(R_TIDX, regs::T0, regs::T1);
+}
+
+fn load_param_bases(cg: &mut Cg, params: &[(&'static str, u32, usize)]) -> Result<(), String> {
+    if params.len() > PARAM_REGS.len() {
+        return Err(format!("too many parameter arrays ({})", params.len()));
+    }
+    for (i, &(name, base, len)) in params.iter().enumerate() {
+        let reg = PARAM_REGS[i];
+        // Bases come from the argument mailbox, like the Vortex runtime
+        // passes kernel arguments.
+        cg.a.li(reg, (map::KARG_BASE + 4 * i as u32) as i32);
+        cg.a.lw(reg, reg, 0);
+        cg.params.insert(name, (reg, base, len));
+        let _ = len;
+        let _ = base;
+    }
+    Ok(())
+}
+
+fn new_cg(mode: Mode, k: &Kernel, nt: u32, nw: u32) -> Cg {
+    Cg {
+        mode,
+        a: Asm::new(),
+        temps: Pool::new(&TEMP_REGS),
+        locals: HashMap::new(),
+        local_pool: LOCAL_REGS.to_vec(),
+        params: HashMap::new(),
+        frames: HashMap::new(),
+        frame_bytes: 0,
+        tile: nt,
+        nt,
+        nw,
+        grid: k.grid_size,
+        block: k.block_size,
+        sync_ids: 0,
+        uses_warp_hw: false,
+    }
+}
+
+/// Lay out shared/scratch arrays into the per-frame map.
+fn layout_frame(cg: &mut Cg, k: &Kernel) {
+    let mut off = 0u32;
+    for d in k.shared.iter().chain(k.scratch.iter()) {
+        cg.frames.insert(d.name, off);
+        off += (d.len as u32) * 4;
+    }
+    cg.frame_bytes = (off + 15) & !15;
+}
+
+/// HW-path code generation (see module docs).
+pub fn codegen_simt(k: &Kernel, nt: u32, nw: u32) -> Result<LaunchImage, String> {
+    if k.block_size != nt * nw {
+        return Err(format!(
+            "SIMT codegen maps the block onto the core 1:1: block_size {} != NT*NW {}",
+            k.block_size,
+            nt * nw
+        ));
+    }
+    let params = layout_params(k);
+    let mut cg = new_cg(Mode::Simt, k, nt, nw);
+    layout_frame(&mut cg, k);
+    common_prologue(&mut cg);
+    load_param_bases(&mut cg, &params)?;
+    // Shared arrays live at SHARED_BASE (one block in flight per core).
+    cg.a.li(R_FRAME, map::SHARED_BASE as i32);
+
+    // Grid loop: blocks run back to back with a barrier in between.
+    cg.a.li(R_BLK, 0);
+    let l_top = cg.a.here();
+    let l_done = cg.a.label();
+    let bound = cg.temps.alloc().unwrap();
+    cg.a.li(bound, k.grid_size as i32);
+    cg.a.bge(R_BLK, bound, l_done);
+    cg.temps.release(bound);
+    for s in &k.body {
+        cg.stmt(s)?;
+    }
+    // Inter-block barrier + tile reset.
+    cg.stmt(&Stmt::Sync)?;
+    if cg.tile != nt {
+        // restore default tile config for the next block
+        cg.tile = nt;
+        let m = cg.temps.alloc().unwrap();
+        let s = cg.temps.alloc().unwrap();
+        cg.a.li(m, 0);
+        cg.a.li(s, nt as i32);
+        cg.a.tile(m, s);
+        cg.temps.release(m);
+        cg.temps.release(s);
+    }
+    cg.a.addi(R_BLK, R_BLK, 1);
+    cg.a.j(l_top);
+    cg.a.bind(l_done);
+    cg.a.ecall();
+
+    Ok(LaunchImage {
+        prog: std::mem::take(&mut cg.a).finish(),
+        params,
+        shared_bytes: cg.frame_bytes,
+        grid_size: k.grid_size,
+        block_size: k.block_size,
+        uses_warp_hw: cg.uses_warp_hw,
+    })
+}
+
+/// SW-path code generation: the PR-transformed scalar kernel, one block
+/// per hardware lane, grid-strided (see module docs).
+pub fn codegen_scalar(k: &Kernel, nt: u32, nw: u32) -> Result<LaunchImage, String> {
+    if k.block_size != 1 {
+        return Err("codegen_scalar expects a PR-transformed kernel (block_size == 1)".into());
+    }
+    let params = layout_params(k);
+    let mut cg = new_cg(Mode::Scalar, k, nt, nw);
+    layout_frame(&mut cg, k);
+    common_prologue(&mut cg);
+    load_param_bases(&mut cg, &params)?;
+
+    // Per-lane frame: STACK_BASE + L * frame_bytes. The frames sit in
+    // cached *global* memory (Vortex thread stacks do too) — the
+    // Table III emulation arrays therefore cost loads/stores through
+    // the dcache, which is exactly the HW-vs-SW difference the paper
+    // measures ("the instructions directly access registers instead of
+    // using memory").
+    let lanes = nt * nw;
+    let total_frames = lanes * cg.frame_bytes;
+    if total_frames > map::STACK_SIZE {
+        return Err(format!(
+            "per-lane frames ({total_frames} B) exceed the stack region ({} B)",
+            map::STACK_SIZE
+        ));
+    }
+    {
+        let t = cg.temps.alloc().unwrap();
+        cg.a.li(t, cg.frame_bytes as i32);
+        cg.a.mul(R_FRAME, R_TIDX, t);
+        cg.a.li(t, map::STACK_BASE as i32);
+        cg.a.add(R_FRAME, R_FRAME, t);
+        cg.temps.release(t);
+    }
+
+    // Grid-strided block loop with a uniform trip count; the tail is
+    // masked with split/join (lanes whose block id exceeds the grid do
+    // nothing in the last iteration).
+    cg.a.mv(R_BLK, R_TIDX);
+    let iters = k.grid_size.div_ceil(lanes);
+    let cnt = cg.local_reg("__blk_iter")?;
+    cg.a.li(cnt, iters as i32);
+    let l_top = cg.a.here();
+    let l_done = cg.a.label();
+    cg.a.beq(cnt, regs::ZERO, l_done);
+
+    // pred = blockIdx < grid
+    let pred = cg.temps.alloc().unwrap();
+    let g = cg.temps.alloc().unwrap();
+    cg.a.li(g, k.grid_size as i32);
+    cg.a.slt(pred, R_BLK, g);
+    cg.temps.release(g);
+    let tok = cg.temps.alloc().unwrap();
+    cg.a.split(tok, pred);
+    let l_skip = cg.a.label();
+    cg.a.beq(pred, regs::ZERO, l_skip);
+    cg.temps.release(pred);
+    for s in &k.body {
+        // Scalar-kernel locals are single-region temporaries (anything
+        // live across regions was promoted to a scratch array by the
+        // serializer), so their registers recycle per top-level
+        // statement.
+        let snapshot: Vec<&'static str> = cg.locals.keys().copied().collect();
+        cg.stmt(s)?;
+        let fresh: Vec<&'static str> = cg
+            .locals
+            .keys()
+            .copied()
+            .filter(|n| !snapshot.contains(n))
+            .collect();
+        for n in fresh {
+            let r = cg.locals.remove(n).unwrap();
+            cg.local_pool.push(r);
+        }
+    }
+    cg.a.bind(l_skip);
+    cg.a.join(tok);
+    cg.temps.release(tok);
+
+    cg.a.addi(R_BLK, R_BLK, lanes as i32);
+    cg.a.addi(cnt, cnt, -1);
+    cg.a.j(l_top);
+    cg.a.bind(l_done);
+    cg.a.ecall();
+
+    Ok(LaunchImage {
+        prog: std::mem::take(&mut cg.a).finish(),
+        params,
+        shared_bytes: total_frames,
+        grid_size: k.grid_size,
+        block_size: k.block_size,
+        uses_warp_hw: cg.uses_warp_hw,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prt::kir::Expr as E;
+
+    #[test]
+    fn simt_rejects_mismatched_block() {
+        let k = Kernel::new("t", 1, 16, 8).body(vec![]);
+        assert!(codegen_simt(&k, 8, 4).is_err());
+    }
+
+    #[test]
+    fn scalar_rejects_untransformed() {
+        let k = Kernel::new("t", 1, 32, 8).body(vec![]);
+        assert!(codegen_scalar(&k, 8, 4).is_err());
+    }
+
+    #[test]
+    fn simt_emits_extension_instrs_only_when_used() {
+        let plain = Kernel::new("t", 1, 32, 8).param("out", 32, ParamDir::Out).body(vec![
+            Stmt::Store("out", E::ThreadIdx, E::ThreadIdx),
+        ]);
+        let img = codegen_simt(&plain, 8, 4).unwrap();
+        assert!(!img.uses_warp_hw);
+
+        let voting = Kernel::new("t", 1, 32, 8).param("out", 32, ParamDir::Out).body(vec![
+            Stmt::Assign("r", E::warp(WarpFn::VoteAny, E::c(1), 0)),
+            Stmt::Store("out", E::ThreadIdx, E::l("r")),
+        ]);
+        let img = codegen_simt(&voting, 8, 4).unwrap();
+        assert!(img.uses_warp_hw);
+        assert!(img.prog.iter().any(|i| matches!(i, Instr::Vote { .. })));
+    }
+
+    #[test]
+    fn scalar_output_is_pure_rv32im() {
+        use crate::prt::transform;
+        let k = Kernel::new("t", 4, 16, 8)
+            .param("in", 64, ParamDir::In)
+            .param("out", 64, ParamDir::Out)
+            .body(vec![
+                Stmt::Assign("p", E::b(BinOp::Gt, E::load("in", E::ThreadIdx), E::c(5))),
+                Stmt::Assign("r", E::warp(WarpFn::VoteAny, E::l("p"), 0)),
+                Stmt::Store(
+                    "out",
+                    E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx),
+                    E::l("r"),
+                ),
+            ]);
+        let scalar = transform(&k).unwrap();
+        let img = codegen_scalar(&scalar, 8, 4).unwrap();
+        assert!(!img.uses_warp_hw);
+        for i in &img.prog {
+            assert!(
+                !i.is_warp_collective(),
+                "SW path must not use extension instructions: {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn param_layout_is_aligned_and_disjoint() {
+        let k = Kernel::new("t", 1, 32, 8)
+            .param("a", 100, ParamDir::In)
+            .param("b", 7, ParamDir::In)
+            .param("c", 1, ParamDir::Out);
+        let p = layout_params(&k);
+        assert_eq!(p.len(), 3);
+        for w in p.windows(2) {
+            let (_, base0, len0) = w[0];
+            let (_, base1, _) = w[1];
+            assert!(base0 + (len0 as u32) * 4 <= base1);
+            assert_eq!(base1 % 64, 0);
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! §IV step 2: **control-structure fission**.
+//!
+//! When an `if` structure spans multiple parallel regions (its body
+//! contains synchronization, partitioning, or warp-level operations),
+//! the condition is hoisted into a temporary and the `if` is split so
+//! every region boundary sits at the top level — exactly the Fig 3a →
+//! Fig 4a step where `if (groupId == 0) { ...; tile.sync(); }` becomes
+//! two guarded regions with the sync hoisted between them.
+
+use super::kir::*;
+
+/// Fresh-name generator (names are leaked: the compiler lives for the
+/// process lifetime and produces a handful of temporaries per kernel).
+pub(crate) fn fresh(prefix: &str, n: &mut u32) -> &'static str {
+    *n += 1;
+    Box::leak(format!("{prefix}{n}").into_boxed_str())
+}
+
+/// Fission a whole kernel.
+pub fn fission_kernel(k: &Kernel) -> Result<Kernel, String> {
+    let mut counter = 0;
+    let mut out = Vec::new();
+    for s in &k.body {
+        fission_stmt(s, &mut out, &mut counter)?;
+    }
+    let mut kk = k.clone();
+    kk.body = out;
+    Ok(kk)
+}
+
+fn fission_stmt(s: &Stmt, out: &mut Vec<Stmt>, counter: &mut u32) -> Result<(), String> {
+    match s {
+        Stmt::If(cond, then_s, else_s) if s.contains_boundary() => {
+            if !else_s.is_empty() {
+                // The paper's Fig 4a also fissions if-else; we support
+                // it by fissioning each branch under complementary
+                // hoisted conditions.
+                let c = fresh("__c", counter);
+                out.push(Stmt::Assign(c, cond.clone()));
+                fission_branch(Expr::Local(c), then_s, out, counter)?;
+                fission_branch(
+                    Expr::b(BinOp::Eq, Expr::Local(c), Expr::Const(0)),
+                    else_s,
+                    out,
+                    counter,
+                )?;
+            } else {
+                let c = fresh("__c", counter);
+                out.push(Stmt::Assign(c, cond.clone()));
+                fission_branch(Expr::Local(c), then_s, out, counter)?;
+            }
+            Ok(())
+        }
+        Stmt::For(_, _, _, body) if body.iter().any(Stmt::contains_boundary) => Err(format!(
+            "PR transformation does not support region boundaries inside loops \
+             (kernel loop over `{:?}`); unroll the loop or hoist the cross-thread \
+             operation",
+            s
+        )),
+        _ => {
+            out.push(s.clone());
+            Ok(())
+        }
+    }
+}
+
+/// Split one guarded branch into boundary-aligned guarded chunks.
+fn fission_branch(
+    guard: Expr,
+    body: &[Stmt],
+    out: &mut Vec<Stmt>,
+    counter: &mut u32,
+) -> Result<(), String> {
+    // First recursively fission nested structures so boundaries inside
+    // nested ifs surface to this level.
+    let mut flat = Vec::new();
+    for s in body {
+        fission_stmt(s, &mut flat, counter)?;
+    }
+
+    let mut chunk: Vec<Stmt> = Vec::new();
+    let flush = |chunk: &mut Vec<Stmt>, out: &mut Vec<Stmt>| {
+        if !chunk.is_empty() {
+            out.push(Stmt::If(guard.clone(), std::mem::take(chunk), vec![]));
+        }
+    };
+    for s in flat {
+        match s {
+            // Synchronization/partitioning hoist to the top level
+            // unguarded (they apply to the whole block).
+            Stmt::Sync | Stmt::TileSync | Stmt::TilePartition(_) => {
+                flush(&mut chunk, out);
+                out.push(s);
+            }
+            // Warp-level operations end the region but stay guarded
+            // (Fig 4a: `y = tile.any(x)` keeps its `if`).
+            ref st if st.is_boundary() => {
+                flush(&mut chunk, out);
+                out.push(Stmt::If(guard.clone(), vec![s], vec![]));
+            }
+            _ => chunk.push(s),
+        }
+    }
+    flush(&mut chunk, out);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prt::kir::Expr as E;
+
+    fn k(body: Vec<Stmt>) -> Kernel {
+        Kernel::new("t", 1, 8, 8).param("out", 8, ParamDir::Out).body(body)
+    }
+
+    #[test]
+    fn if_without_boundary_untouched() {
+        let body = vec![Stmt::If(
+            E::l("c"),
+            vec![Stmt::Assign("x", E::c(1))],
+            vec![Stmt::Assign("x", E::c(2))],
+        )];
+        let out = fission_kernel(&k(body.clone())).unwrap();
+        assert_eq!(out.body, body);
+    }
+
+    #[test]
+    fn fig4a_shape_sync_hoisted_and_if_split() {
+        // if (g == 0) { x = work; tile.sync(); y = any(x); }
+        let body = vec![Stmt::If(
+            E::b(BinOp::Eq, E::l("g"), E::c(0)),
+            vec![
+                Stmt::Assign("x", E::c(7)),
+                Stmt::TileSync,
+                Stmt::Assign("y", E::warp(WarpFn::VoteAny, E::l("x"), 0)),
+            ],
+            vec![],
+        )];
+        let out = fission_kernel(&k(body)).unwrap();
+        // Expected: __c1 = (g==0); if(__c1){x=7}; tile.sync;
+        //           if(__c1){y=any(x)}
+        assert_eq!(out.body.len(), 4);
+        assert!(matches!(out.body[0], Stmt::Assign(n, _) if n.starts_with("__c")));
+        assert!(matches!(&out.body[1], Stmt::If(_, t, _) if t.len() == 1));
+        assert_eq!(out.body[2], Stmt::TileSync);
+        match &out.body[3] {
+            Stmt::If(_, t, e) => {
+                assert!(e.is_empty());
+                assert!(matches!(&t[0], Stmt::Assign("y", ex) if ex.has_warp()));
+            }
+            other => panic!("expected guarded warp op, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn if_else_fission_uses_complementary_guards() {
+        let body = vec![Stmt::If(
+            E::l("c"),
+            vec![Stmt::Assign("x", E::c(1)), Stmt::Sync, Stmt::Assign("x", E::c(2))],
+            vec![Stmt::Assign("x", E::c(3)), Stmt::Sync, Stmt::Assign("x", E::c(4))],
+        )];
+        let out = fission_kernel(&k(body)).unwrap();
+        // __c = c; if(__c){x=1}; sync; if(__c){x=2};
+        //          if(__c==0){x=3}; sync; if(__c==0){x=4}
+        let syncs = out.body.iter().filter(|s| matches!(s, Stmt::Sync)).count();
+        assert_eq!(syncs, 2);
+        assert_eq!(out.body.len(), 7);
+    }
+
+    #[test]
+    fn nested_if_boundaries_surface() {
+        let body = vec![Stmt::If(
+            E::l("a"),
+            vec![Stmt::If(E::l("b"), vec![Stmt::Assign("x", E::c(1)), Stmt::Sync], vec![])],
+            vec![],
+        )];
+        let out = fission_kernel(&k(body)).unwrap();
+        assert!(
+            out.body.iter().any(|s| matches!(s, Stmt::Sync)),
+            "sync surfaced to top level: {:#?}",
+            out.body
+        );
+    }
+
+    #[test]
+    fn boundary_in_loop_rejected() {
+        let body = vec![Stmt::For(
+            "i",
+            E::c(0),
+            E::c(4),
+            vec![Stmt::Sync],
+        )];
+        let err = fission_kernel(&k(body)).unwrap_err();
+        assert!(err.contains("inside loops"));
+    }
+}

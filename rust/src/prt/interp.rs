@@ -1,0 +1,470 @@
+//! Direct SPMD interpreter for KIR — the semantic oracle.
+//!
+//! Executes a kernel the way the CUDA programming model defines it:
+//! all software threads of a block in lockstep with an active mask for
+//! divergence, warp-level functions evaluated across tile segments,
+//! shared arrays per block, global arrays across the grid. Both code
+//! generators (SIMT/HW and scalar/SW) are differentially tested against
+//! this interpreter, and the Pallas golden model mirrors it.
+
+use super::kir::*;
+use std::collections::HashMap;
+
+/// Array environment: kernel inputs/outputs by parameter name.
+#[derive(Clone, Debug, Default)]
+pub struct Env {
+    pub arrays: HashMap<&'static str, Vec<i32>>,
+}
+
+impl Env {
+    pub fn with(mut self, name: &'static str, data: Vec<i32>) -> Self {
+        self.arrays.insert(name, data);
+        self
+    }
+
+    pub fn get(&self, name: &str) -> &[i32] {
+        self.arrays.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+/// Interpreter failure (semantic errors a real GPU would make UB).
+#[derive(Clone, Debug, PartialEq)]
+pub enum InterpError {
+    /// `__syncthreads()` reached with divergent threads.
+    DivergentSync,
+    OobAccess { array: &'static str, idx: i64, len: usize },
+    UnknownArray(&'static str),
+    UnboundLocal(&'static str),
+    /// Iteration limit (runaway loop).
+    Runaway,
+}
+
+impl std::fmt::Display for InterpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InterpError::DivergentSync => write!(f, "__syncthreads() in divergent control flow"),
+            InterpError::OobAccess { array, idx, len } => {
+                write!(f, "out-of-bounds: {array}[{idx}] (len {len})")
+            }
+            InterpError::UnknownArray(a) => write!(f, "unknown array `{a}`"),
+            InterpError::UnboundLocal(l) => write!(f, "unbound local `{l}`"),
+            InterpError::Runaway => write!(f, "loop iteration limit exceeded"),
+        }
+    }
+}
+
+impl std::error::Error for InterpError {}
+
+struct BlockState<'k> {
+    k: &'k Kernel,
+    block: u32,
+    /// Per-thread locals.
+    locals: HashMap<&'static str, Vec<i32>>,
+    /// Shared + scratch arrays (per block).
+    shared: HashMap<&'static str, Vec<i32>>,
+    /// Current tile size (warp_size when no partition active).
+    tile: u32,
+    steps: u64,
+}
+
+const MAX_STEPS: u64 = 50_000_000;
+
+/// Run a kernel over the environment; returns the updated environment.
+pub fn run(k: &Kernel, env: &Env) -> Result<Env, InterpError> {
+    let mut env = env.clone();
+    // Zero-init missing outputs.
+    for p in &k.params {
+        env.arrays.entry(p.name).or_insert_with(|| vec![0; p.len]);
+    }
+    for block in 0..k.grid_size {
+        let mut st = BlockState {
+            k,
+            block,
+            locals: HashMap::new(),
+            shared: k
+                .shared
+                .iter()
+                .chain(k.scratch.iter())
+                .map(|s| (s.name, vec![0i32; s.len]))
+                .collect(),
+            tile: k.warp_size,
+            steps: 0,
+        };
+        let n = k.block_size as usize;
+        let active = vec![true; n];
+        exec_block(&mut st, &k.body, &active, &mut env)?;
+    }
+    Ok(env)
+}
+
+fn exec_block(
+    st: &mut BlockState,
+    stmts: &[Stmt],
+    active: &[bool],
+    env: &mut Env,
+) -> Result<(), InterpError> {
+    for s in stmts {
+        exec_stmt(st, s, active, env)?;
+    }
+    Ok(())
+}
+
+fn exec_stmt(
+    st: &mut BlockState,
+    s: &Stmt,
+    active: &[bool],
+    env: &mut Env,
+) -> Result<(), InterpError> {
+    st.steps += 1;
+    if st.steps > MAX_STEPS {
+        return Err(InterpError::Runaway);
+    }
+    match s {
+        Stmt::Assign(name, e) => {
+            let vals = eval_all(st, e, active, env)?;
+            let slot = st
+                .locals
+                .entry(name)
+                .or_insert_with(|| vec![0; st.k.block_size as usize]);
+            for (t, &a) in active.iter().enumerate() {
+                if a {
+                    slot[t] = vals[t];
+                }
+            }
+        }
+        Stmt::Store(arr, idx, val) => {
+            let idxs = eval_all(st, idx, active, env)?;
+            let vals = eval_all(st, val, active, env)?;
+            for t in 0..active.len() {
+                if active[t] {
+                    write_array(st, env, arr, idxs[t] as i64, vals[t])?;
+                }
+            }
+        }
+        Stmt::If(c, then_s, else_s) => {
+            let cv = eval_all(st, c, active, env)?;
+            let then_a: Vec<bool> =
+                active.iter().enumerate().map(|(t, &a)| a && cv[t] != 0).collect();
+            let else_a: Vec<bool> =
+                active.iter().enumerate().map(|(t, &a)| a && cv[t] == 0).collect();
+            if then_a.iter().any(|&b| b) {
+                exec_block(st, then_s, &then_a, env)?;
+            }
+            if else_a.iter().any(|&b| b) && !else_s.is_empty() {
+                exec_block(st, else_s, &else_a, env)?;
+            }
+        }
+        Stmt::For(var, from, to, body) => {
+            let f = eval_all(st, from, active, env)?;
+            let tv = eval_all(st, to, active, env)?;
+            {
+                let slot = st
+                    .locals
+                    .entry(var)
+                    .or_insert_with(|| vec![0; st.k.block_size as usize]);
+                for (t, &a) in active.iter().enumerate() {
+                    if a {
+                        slot[t] = f[t];
+                    }
+                }
+            }
+            loop {
+                st.steps += 1;
+                if st.steps > MAX_STEPS {
+                    return Err(InterpError::Runaway);
+                }
+                let cur = st.locals.get(var).unwrap();
+                let in_range: Vec<bool> = active
+                    .iter()
+                    .enumerate()
+                    .map(|(t, &a)| a && cur[t] < tv[t])
+                    .collect();
+                if !in_range.iter().any(|&b| b) {
+                    break;
+                }
+                exec_block(st, body, &in_range, env)?;
+                let slot = st.locals.get_mut(var).unwrap();
+                for (t, &a) in in_range.iter().enumerate() {
+                    if a {
+                        slot[t] += 1;
+                    }
+                }
+            }
+        }
+        Stmt::Sync => {
+            // Must be convergent (CUDA UB otherwise).
+            if active.iter().any(|&a| !a) {
+                return Err(InterpError::DivergentSync);
+            }
+            // Lockstep interpretation: no further effect.
+        }
+        Stmt::TilePartition(n) => {
+            st.tile = *n;
+        }
+        Stmt::TileSync => {
+            // Lockstep: tiles are always internally synchronized here.
+        }
+    }
+    Ok(())
+}
+
+/// Evaluate an expression for every thread (inactive slots hold
+/// arbitrary-but-deterministic values; callers only read active ones —
+/// except warp ops, which honor the active mask explicitly).
+fn eval_all(
+    st: &mut BlockState,
+    e: &Expr,
+    active: &[bool],
+    env: &Env,
+) -> Result<Vec<i32>, InterpError> {
+    let n = st.k.block_size as usize;
+    Ok(match e {
+        Expr::Const(v) => vec![*v; n],
+        Expr::Local(name) => st
+            .locals
+            .get(name)
+            .cloned()
+            .ok_or(InterpError::UnboundLocal(name))?,
+        Expr::ThreadIdx => (0..n as i32).collect(),
+        Expr::BlockIdx => vec![st.block as i32; n],
+        Expr::BlockDim => vec![st.k.block_size as i32; n],
+        Expr::GridDim => vec![st.k.grid_size as i32; n],
+        Expr::TileRank => (0..n as i32).map(|t| t % st.tile as i32).collect(),
+        Expr::TileGroup => (0..n as i32).map(|t| t / st.tile as i32).collect(),
+        Expr::TileSize => vec![st.tile as i32; n],
+        Expr::Bin(op, a, b) => {
+            let av = eval_all(st, a, active, env)?;
+            let bv = eval_all(st, b, active, env)?;
+            av.iter().zip(&bv).map(|(&x, &y)| op.eval(x, y)).collect()
+        }
+        Expr::Load(arr, idx) => {
+            let idxs = eval_all(st, idx, active, env)?;
+            let mut out = vec![0; n];
+            for t in 0..n {
+                if active[t] {
+                    out[t] = read_array(st, env, arr, idxs[t] as i64)?;
+                }
+            }
+            out
+        }
+        Expr::Warp(f, v, delta) => {
+            let vals = eval_all(st, v, active, env)?;
+            warp_eval(*f, &vals, active, *delta, st.tile as usize)
+        }
+    })
+}
+
+/// Warp-level function across tile segments — definitionally identical
+/// to `crate::sim::exec::warp_ops`, expressed over software threads.
+pub fn warp_eval(f: WarpFn, vals: &[i32], active: &[bool], delta: u8, tile: usize) -> Vec<i32> {
+    let n = vals.len();
+    let mut out = vec![0i32; n];
+    let nseg = n.div_ceil(tile);
+    for s in 0..nseg {
+        let base = s * tile;
+        let seg = tile.min(n - base);
+        let seg_vals: Vec<u32> = (0..seg).map(|i| vals[base + i] as u32).collect();
+        let mut act = 0u32;
+        for i in 0..seg {
+            if active[base + i] {
+                act |= 1 << i;
+            }
+        }
+        if let Some(mode) = f.vote_mode() {
+            let r = crate::sim::exec::warp_ops::vote(mode, &seg_vals, act, 0) as i32;
+            for i in 0..seg {
+                out[base + i] = r;
+            }
+        } else {
+            let mode = f.shfl_mode().unwrap();
+            let r = crate::sim::exec::warp_ops::shfl(mode, &seg_vals, delta as u32, 0);
+            for i in 0..seg {
+                out[base + i] = r[i] as i32;
+            }
+        }
+    }
+    out
+}
+
+fn read_array(
+    st: &BlockState,
+    env: &Env,
+    arr: &'static str,
+    idx: i64,
+) -> Result<i32, InterpError> {
+    let a = if let Some(s) = st.shared.get(arr) {
+        s
+    } else {
+        env.arrays.get(arr).ok_or(InterpError::UnknownArray(arr))?
+    };
+    if idx < 0 || idx as usize >= a.len() {
+        return Err(InterpError::OobAccess { array: arr, idx, len: a.len() });
+    }
+    Ok(a[idx as usize])
+}
+
+fn write_array(
+    st: &mut BlockState,
+    env: &mut Env,
+    arr: &'static str,
+    idx: i64,
+    val: i32,
+) -> Result<(), InterpError> {
+    let a = if let Some(s) = st.shared.get_mut(arr) {
+        s
+    } else {
+        env.arrays.get_mut(arr).ok_or(InterpError::UnknownArray(arr))?
+    };
+    if idx < 0 || idx as usize >= a.len() {
+        return Err(InterpError::OobAccess { array: arr, idx, len: a.len() });
+    }
+    a[idx as usize] = val;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prt::kir::Expr as E;
+
+    fn simple_kernel(body: Vec<Stmt>) -> Kernel {
+        Kernel::new("t", 1, 8, 8)
+            .param("in", 8, ParamDir::In)
+            .param("out", 8, ParamDir::Out)
+            .body(body)
+    }
+
+    #[test]
+    fn elementwise_copy_plus_one() {
+        let k = simple_kernel(vec![Stmt::Store(
+            "out",
+            E::ThreadIdx,
+            E::add(E::load("in", E::ThreadIdx), E::c(1)),
+        )]);
+        let env = Env::default().with("in", (0..8).collect());
+        let out = run(&k, &env).unwrap();
+        assert_eq!(out.get("out"), (1..9).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn divergent_if_assigns_both_sides() {
+        let k = simple_kernel(vec![
+            Stmt::If(
+                E::b(BinOp::Lt, E::ThreadIdx, E::c(4)),
+                vec![Stmt::Assign("x", E::c(111))],
+                vec![Stmt::Assign("x", E::c(222))],
+            ),
+            Stmt::Store("out", E::ThreadIdx, E::l("x")),
+        ]);
+        let out = run(&k, &Env::default()).unwrap();
+        assert_eq!(out.get("out"), [111, 111, 111, 111, 222, 222, 222, 222]);
+    }
+
+    #[test]
+    fn per_thread_loop_trip_counts() {
+        // out[t] = sum(0..t)
+        let k = simple_kernel(vec![
+            Stmt::Assign("acc", E::c(0)),
+            Stmt::For(
+                "i",
+                E::c(0),
+                E::ThreadIdx,
+                vec![Stmt::Assign("acc", E::add(E::l("acc"), E::l("i")))],
+            ),
+            Stmt::Store("out", E::ThreadIdx, E::l("acc")),
+        ]);
+        let out = run(&k, &Env::default()).unwrap();
+        assert_eq!(out.get("out"), [0, 0, 1, 3, 6, 10, 15, 21]);
+    }
+
+    #[test]
+    fn warp_vote_any_over_warp() {
+        // pred = (in[t] > 5); any over the 8-thread warp.
+        let k = simple_kernel(vec![
+            Stmt::Assign("p", E::b(BinOp::Gt, E::load("in", E::ThreadIdx), E::c(5))),
+            Stmt::Assign("r", E::warp(WarpFn::VoteAny, E::l("p"), 0)),
+            Stmt::Store("out", E::ThreadIdx, E::l("r")),
+        ]);
+        let env = Env::default().with("in", vec![0, 1, 2, 3, 4, 5, 6, 0]);
+        let out = run(&k, &env).unwrap();
+        assert_eq!(out.get("out"), [1; 8]);
+        let env = Env::default().with("in", vec![0; 8]);
+        let out = run(&k, &env).unwrap();
+        assert_eq!(out.get("out"), [0; 8]);
+    }
+
+    #[test]
+    fn tile_partition_scopes_collectives() {
+        // tiles of 4: ballot within each tile.
+        let k = simple_kernel(vec![
+            Stmt::TilePartition(4),
+            Stmt::Assign("p", E::b(BinOp::Eq, E::TileRank, E::c(0))),
+            Stmt::Assign("r", E::warp(WarpFn::Ballot, E::l("p"), 0)),
+            Stmt::Store("out", E::ThreadIdx, E::l("r")),
+        ]);
+        let out = run(&k, &Env::default()).unwrap();
+        assert_eq!(out.get("out"), [1; 8], "each tile's lane 0 sets bit 0");
+    }
+
+    #[test]
+    fn shuffle_down_in_divergent_region_respects_active_mask() {
+        let k = simple_kernel(vec![
+            Stmt::Assign("x", E::mul(E::ThreadIdx, E::c(10))),
+            Stmt::Assign("y", E::warp(WarpFn::ShflDown, E::l("x"), 1)),
+            Stmt::Store("out", E::ThreadIdx, E::l("y")),
+        ]);
+        let out = run(&k, &Env::default()).unwrap();
+        assert_eq!(out.get("out"), [10, 20, 30, 40, 50, 60, 70, 70]);
+    }
+
+    #[test]
+    fn shared_array_communicates_across_threads() {
+        let k = Kernel::new("t", 1, 8, 8)
+            .param("out", 8, ParamDir::Out)
+            .shared_arr("tmp", 8)
+            .body(vec![
+                Stmt::Store("tmp", E::ThreadIdx, E::mul(E::ThreadIdx, E::c(2))),
+                Stmt::Sync,
+                Stmt::Store(
+                    "out",
+                    E::ThreadIdx,
+                    E::load("tmp", E::b(BinOp::Sub, E::c(7), E::ThreadIdx)),
+                ),
+            ]);
+        let out = run(&k, &Env::default()).unwrap();
+        assert_eq!(out.get("out"), [14, 12, 10, 8, 6, 4, 2, 0]);
+    }
+
+    #[test]
+    fn divergent_sync_is_an_error() {
+        let k = simple_kernel(vec![Stmt::If(
+            E::b(BinOp::Lt, E::ThreadIdx, E::c(4)),
+            vec![Stmt::Sync],
+            vec![],
+        )]);
+        assert_eq!(run(&k, &Env::default()).unwrap_err(), InterpError::DivergentSync);
+    }
+
+    #[test]
+    fn oob_access_is_an_error() {
+        let k = simple_kernel(vec![Stmt::Store("out", E::c(99), E::c(1))]);
+        assert!(matches!(
+            run(&k, &Env::default()).unwrap_err(),
+            InterpError::OobAccess { array: "out", .. }
+        ));
+    }
+
+    #[test]
+    fn multi_block_grid_uses_block_idx() {
+        let k = Kernel::new("t", 4, 8, 8).param("out", 32, ParamDir::Out).body(vec![
+            Stmt::Store(
+                "out",
+                E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx),
+                E::BlockIdx,
+            ),
+        ]);
+        let out = run(&k, &Env::default()).unwrap();
+        let want: Vec<i32> = (0..32).map(|i| i / 8).collect();
+        assert_eq!(out.get("out"), want);
+    }
+}

@@ -1,0 +1,525 @@
+//! KIR — the kernel IR the PR transformation operates on.
+//!
+//! KIR mirrors the CUDA subset the paper's examples use (Fig 3a/4a): a
+//! single-dimension grid/block, `i32` data, thread-local scalars,
+//! global/shared arrays, structured control flow, block sync,
+//! cooperative-group tiled partitions, and the warp-level functions of
+//! Table III. The frontend that would parse CUDA is out of scope;
+//! kernels are built with [`Kernel`] builder methods (see
+//! `crate::kernels` for the six benchmarks).
+
+use std::fmt;
+
+/// Binary operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    /// Logical (0/1) and/or — used by the vote transformation rules.
+    LAnd,
+    LOr,
+}
+
+impl BinOp {
+    /// Evaluate with C-like semantics on i32 (division by zero yields
+    /// the RISC-V fixups so all three executors agree).
+    pub fn eval(self, a: i32, b: i32) -> i32 {
+        match self {
+            BinOp::Add => a.wrapping_add(b),
+            BinOp::Sub => a.wrapping_sub(b),
+            BinOp::Mul => a.wrapping_mul(b),
+            BinOp::Div => crate::isa::MulOp::Div.eval(a as u32, b as u32) as i32,
+            BinOp::Rem => crate::isa::MulOp::Rem.eval(a as u32, b as u32) as i32,
+            BinOp::And => a & b,
+            BinOp::Or => a | b,
+            BinOp::Xor => a ^ b,
+            BinOp::Shl => a.wrapping_shl(b as u32 & 31),
+            BinOp::Shr => ((a as u32).wrapping_shr(b as u32 & 31)) as i32,
+            BinOp::Lt => (a < b) as i32,
+            BinOp::Le => (a <= b) as i32,
+            BinOp::Gt => (a > b) as i32,
+            BinOp::Ge => (a >= b) as i32,
+            BinOp::Eq => (a == b) as i32,
+            BinOp::Ne => (a != b) as i32,
+            BinOp::LAnd => ((a != 0) && (b != 0)) as i32,
+            BinOp::LOr => ((a != 0) || (b != 0)) as i32,
+        }
+    }
+}
+
+/// Warp-level functions (Table III rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WarpFn {
+    VoteAny,
+    VoteAll,
+    VoteUni,
+    Ballot,
+    /// `__shfl_sync(value, srcLane)` — delta is the absolute source
+    /// lane within the segment.
+    Shfl,
+    ShflUp,
+    ShflDown,
+    ShflXor,
+}
+
+impl WarpFn {
+    pub fn name(self) -> &'static str {
+        match self {
+            WarpFn::VoteAny => "vote_any",
+            WarpFn::VoteAll => "vote_all",
+            WarpFn::VoteUni => "vote_uni",
+            WarpFn::Ballot => "vote_ballot",
+            WarpFn::Shfl => "shuffle",
+            WarpFn::ShflUp => "shuffle_up",
+            WarpFn::ShflDown => "shuffle_down",
+            WarpFn::ShflXor => "shuffle_xor",
+        }
+    }
+
+    pub fn is_vote(self) -> bool {
+        matches!(self, WarpFn::VoteAny | WarpFn::VoteAll | WarpFn::VoteUni | WarpFn::Ballot)
+    }
+
+    /// Map to the HW-solution instruction mode.
+    pub fn vote_mode(self) -> Option<crate::isa::VoteMode> {
+        Some(match self {
+            WarpFn::VoteAll => crate::isa::VoteMode::All,
+            WarpFn::VoteAny => crate::isa::VoteMode::Any,
+            WarpFn::VoteUni => crate::isa::VoteMode::Uni,
+            WarpFn::Ballot => crate::isa::VoteMode::Ballot,
+            _ => return None,
+        })
+    }
+
+    pub fn shfl_mode(self) -> Option<crate::isa::ShflMode> {
+        Some(match self {
+            WarpFn::ShflUp => crate::isa::ShflMode::Up,
+            WarpFn::ShflDown => crate::isa::ShflMode::Down,
+            WarpFn::ShflXor => crate::isa::ShflMode::Bfly,
+            WarpFn::Shfl => crate::isa::ShflMode::Idx,
+            _ => return None,
+        })
+    }
+}
+
+/// Expressions. All values are `i32`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Const(i32),
+    /// Thread-local scalar.
+    Local(&'static str),
+    /// `threadIdx.x`
+    ThreadIdx,
+    /// `blockIdx.x`
+    BlockIdx,
+    /// `blockDim.x`
+    BlockDim,
+    /// `gridDim.x`
+    GridDim,
+    /// Cooperative-group accessor `tile.thread_rank()` (Table III:
+    /// `tid % group_size`).
+    TileRank,
+    /// `tile.meta_group_rank()` (Table III: `tid / group_size`).
+    TileGroup,
+    /// `tile.num_threads()` (Table III: `group_size`).
+    TileSize,
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+    /// `array[idx]` — parameter or shared array load.
+    Load(&'static str, Box<Expr>),
+    /// Warp-level function over a per-thread value. The scope is the
+    /// current tile (whole warp when no partition is active). `delta`
+    /// is the constant lane offset / source lane (0 for votes).
+    Warp(WarpFn, Box<Expr>, u8),
+}
+
+impl Expr {
+    pub fn b(op: BinOp, a: Expr, b: Expr) -> Expr {
+        Expr::Bin(op, Box::new(a), Box::new(b))
+    }
+    pub fn add(a: Expr, b: Expr) -> Expr {
+        Expr::b(BinOp::Add, a, b)
+    }
+    pub fn mul(a: Expr, b: Expr) -> Expr {
+        Expr::b(BinOp::Mul, a, b)
+    }
+    pub fn c(v: i32) -> Expr {
+        Expr::Const(v)
+    }
+    pub fn l(n: &'static str) -> Expr {
+        Expr::Local(n)
+    }
+    pub fn load(arr: &'static str, idx: Expr) -> Expr {
+        Expr::Load(arr, Box::new(idx))
+    }
+    pub fn warp(f: WarpFn, v: Expr, delta: u8) -> Expr {
+        Expr::Warp(f, Box::new(v), delta)
+    }
+
+    /// Does this expression contain a warp-level function?
+    pub fn has_warp(&self) -> bool {
+        match self {
+            Expr::Warp(..) => true,
+            Expr::Bin(_, a, b) => a.has_warp() || b.has_warp(),
+            Expr::Load(_, i) => i.has_warp(),
+            _ => false,
+        }
+    }
+
+    /// Does this expression reference the given local?
+    pub fn uses_local(&self, name: &str) -> bool {
+        match self {
+            Expr::Local(n) => *n == name,
+            Expr::Bin(_, a, b) => a.uses_local(name) || b.uses_local(name),
+            Expr::Load(_, i) => i.uses_local(name),
+            Expr::Warp(_, v, _) => v.uses_local(name),
+            _ => false,
+        }
+    }
+}
+
+/// Statements.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    /// `local = expr` (declares on first assignment).
+    Assign(&'static str, Expr),
+    /// `array[idx] = value`.
+    Store(&'static str, Expr, Expr),
+    /// `if (cond) { then } else { els }`.
+    If(Expr, Vec<Stmt>, Vec<Stmt>),
+    /// `for (var = from; var < to; var++) { body }`.
+    For(&'static str, Expr, Expr, Vec<Stmt>),
+    /// `__syncthreads()`.
+    Sync,
+    /// `thread_block_tile<N> tile = tiled_partition<N>(block)`.
+    TilePartition(u32),
+    /// `tile.sync()`.
+    TileSync,
+}
+
+impl Stmt {
+    /// Is this a cross-thread operation — a parallel-region boundary
+    /// (§IV step 1)?
+    pub fn is_boundary(&self) -> bool {
+        match self {
+            Stmt::Sync | Stmt::TilePartition(_) | Stmt::TileSync => true,
+            Stmt::Assign(_, e) => e.has_warp(),
+            Stmt::Store(_, i, v) => i.has_warp() || v.has_warp(),
+            _ => false,
+        }
+    }
+
+    /// Does this statement (recursively) contain a boundary?
+    pub fn contains_boundary(&self) -> bool {
+        if self.is_boundary() {
+            return true;
+        }
+        match self {
+            Stmt::If(_, t, e) => {
+                t.iter().any(Stmt::contains_boundary) || e.iter().any(Stmt::contains_boundary)
+            }
+            Stmt::For(_, _, _, b) => b.iter().any(Stmt::contains_boundary),
+            _ => false,
+        }
+    }
+}
+
+/// Array parameter direction (for launch plumbing and validation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamDir {
+    In,
+    Out,
+    InOut,
+}
+
+/// An array parameter: name + element count + direction.
+#[derive(Clone, Debug)]
+pub struct ArrayParam {
+    pub name: &'static str,
+    pub len: usize,
+    pub dir: ParamDir,
+}
+
+/// A shared-memory array declaration (per block).
+#[derive(Clone, Debug)]
+pub struct SharedDecl {
+    pub name: &'static str,
+    pub len: usize,
+}
+
+/// A KIR kernel.
+#[derive(Clone, Debug)]
+pub struct Kernel {
+    pub name: &'static str,
+    /// Software threads per block.
+    pub block_size: u32,
+    /// Blocks per grid.
+    pub grid_size: u32,
+    /// Warp width the kernel semantics assume (hardware NT).
+    pub warp_size: u32,
+    pub params: Vec<ArrayParam>,
+    pub shared: Vec<SharedDecl>,
+    pub body: Vec<Stmt>,
+    /// Scalar kernels produced by the PR transformation carry the
+    /// scratch arrays the serializer introduced (one slot per software
+    /// thread each).
+    pub scratch: Vec<SharedDecl>,
+    /// Locals annotated as shuffle-reduction accumulators whose
+    /// post-reduction value is only consumed on segment-leader lanes —
+    /// the contract that legalizes the serializer's reduction collapse
+    /// (the paper's "if a function produces identical results across
+    /// the warp, the array can be omitted" optimization, which is what
+    /// makes the SW solution *win* on `mse_forward`).
+    pub reduce_hints: Vec<&'static str>,
+}
+
+impl Kernel {
+    pub fn new(name: &'static str, grid: u32, block: u32, warp: u32) -> Self {
+        Kernel {
+            name,
+            block_size: block,
+            grid_size: grid,
+            warp_size: warp,
+            params: Vec::new(),
+            shared: Vec::new(),
+            body: Vec::new(),
+            scratch: Vec::new(),
+            reduce_hints: Vec::new(),
+        }
+    }
+
+    /// Annotate a shuffle-reduction accumulator (see `reduce_hints`).
+    pub fn reduce_hint(mut self, local: &'static str) -> Self {
+        self.reduce_hints.push(local);
+        self
+    }
+
+    pub fn param(mut self, name: &'static str, len: usize, dir: ParamDir) -> Self {
+        self.params.push(ArrayParam { name, len, dir });
+        self
+    }
+
+    pub fn shared_arr(mut self, name: &'static str, len: usize) -> Self {
+        self.shared.push(SharedDecl { name, len });
+        self
+    }
+
+    pub fn body(mut self, body: Vec<Stmt>) -> Self {
+        self.body = body;
+        self
+    }
+
+    /// Find a param by name.
+    pub fn find_param(&self, name: &str) -> Option<&ArrayParam> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    pub fn is_shared(&self, name: &str) -> bool {
+        self.shared.iter().any(|s| s.name == name) || self.scratch.iter().any(|s| s.name == name)
+    }
+
+    /// Total software threads.
+    pub fn total_threads(&self) -> u32 {
+        self.block_size * self.grid_size
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pretty printer (used by the Fig 3/4 demo example).
+// ---------------------------------------------------------------------
+
+fn ind(n: usize) -> String {
+    "  ".repeat(n)
+}
+
+pub fn expr_to_string(e: &Expr) -> String {
+    match e {
+        Expr::Const(v) => v.to_string(),
+        Expr::Local(n) => n.to_string(),
+        Expr::ThreadIdx => "threadIdx.x".into(),
+        Expr::BlockIdx => "blockIdx.x".into(),
+        Expr::BlockDim => "blockDim.x".into(),
+        Expr::GridDim => "gridDim.x".into(),
+        Expr::TileRank => "tile.thread_rank()".into(),
+        Expr::TileGroup => "tile.meta_group_rank()".into(),
+        Expr::TileSize => "tile.num_threads()".into(),
+        Expr::Bin(op, a, b) => {
+            let o = match op {
+                BinOp::Add => "+",
+                BinOp::Sub => "-",
+                BinOp::Mul => "*",
+                BinOp::Div => "/",
+                BinOp::Rem => "%",
+                BinOp::And => "&",
+                BinOp::Or => "|",
+                BinOp::Xor => "^",
+                BinOp::Shl => "<<",
+                BinOp::Shr => ">>",
+                BinOp::Lt => "<",
+                BinOp::Le => "<=",
+                BinOp::Gt => ">",
+                BinOp::Ge => ">=",
+                BinOp::Eq => "==",
+                BinOp::Ne => "!=",
+                BinOp::LAnd => "&&",
+                BinOp::LOr => "||",
+            };
+            format!("({} {} {})", expr_to_string(a), o, expr_to_string(b))
+        }
+        Expr::Load(a, i) => format!("{}[{}]", a, expr_to_string(i)),
+        Expr::Warp(f, v, d) => {
+            if f.is_vote() {
+                format!("{}({})", f.name(), expr_to_string(v))
+            } else {
+                format!("{}({}, {})", f.name(), expr_to_string(v), d)
+            }
+        }
+    }
+}
+
+pub fn stmt_to_string(s: &Stmt, depth: usize) -> String {
+    match s {
+        Stmt::Assign(n, e) => format!("{}{} = {};", ind(depth), n, expr_to_string(e)),
+        Stmt::Store(a, i, v) => format!(
+            "{}{}[{}] = {};",
+            ind(depth),
+            a,
+            expr_to_string(i),
+            expr_to_string(v)
+        ),
+        Stmt::If(c, t, e) => {
+            let mut out = format!("{}if ({}) {{\n", ind(depth), expr_to_string(c));
+            for s in t {
+                out += &stmt_to_string(s, depth + 1);
+                out.push('\n');
+            }
+            if !e.is_empty() {
+                out += &format!("{}}} else {{\n", ind(depth));
+                for s in e {
+                    out += &stmt_to_string(s, depth + 1);
+                    out.push('\n');
+                }
+            }
+            out += &format!("{}}}", ind(depth));
+            out
+        }
+        Stmt::For(v, from, to, b) => {
+            let mut out = format!(
+                "{}for (int {v} = {}; {v} < {}; {v}++) {{\n",
+                ind(depth),
+                expr_to_string(from),
+                expr_to_string(to)
+            );
+            for s in b {
+                out += &stmt_to_string(s, depth + 1);
+                out.push('\n');
+            }
+            out += &format!("{}}}", ind(depth));
+            out
+        }
+        Stmt::Sync => format!("{}__syncthreads();", ind(depth)),
+        Stmt::TilePartition(n) => format!(
+            "{}thread_block_tile<{n}> tile = tiled_partition<{n}>(block);",
+            ind(depth)
+        ),
+        Stmt::TileSync => format!("{}tile.sync();", ind(depth)),
+    }
+}
+
+impl fmt::Display for Kernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "__global__ void {}({}) // grid={} block={} warp={}",
+            self.name,
+            self.params
+                .iter()
+                .map(|p| format!("int* {}", p.name))
+                .collect::<Vec<_>>()
+                .join(", "),
+            self.grid_size,
+            self.block_size,
+            self.warp_size
+        )?;
+        writeln!(f, "{{")?;
+        for s in &self.shared {
+            writeln!(f, "  __shared__ int {}[{}];", s.name, s.len)?;
+        }
+        for s in &self.scratch {
+            writeln!(f, "  int {}[{}]; // PR-transformation scratch", s.name, s.len)?;
+        }
+        for s in &self.body {
+            writeln!(f, "{}", stmt_to_string(s, 1))?;
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_classification() {
+        assert!(Stmt::Sync.is_boundary());
+        assert!(Stmt::TilePartition(4).is_boundary());
+        assert!(Stmt::TileSync.is_boundary());
+        let w = Stmt::Assign("x", Expr::warp(WarpFn::VoteAny, Expr::l("p"), 0));
+        assert!(w.is_boundary());
+        let plain = Stmt::Assign("x", Expr::add(Expr::l("a"), Expr::c(1)));
+        assert!(!plain.is_boundary());
+        let nested = Stmt::If(Expr::l("c"), vec![Stmt::Sync], vec![]);
+        assert!(!nested.is_boundary());
+        assert!(nested.contains_boundary());
+    }
+
+    #[test]
+    fn expr_helpers_and_printing() {
+        let e = Expr::add(Expr::mul(Expr::ThreadIdx, Expr::c(4)), Expr::l("k"));
+        assert_eq!(expr_to_string(&e), "((threadIdx.x * 4) + k)");
+        assert!(!e.has_warp());
+        assert!(e.uses_local("k"));
+        assert!(!e.uses_local("j"));
+        let w = Expr::warp(WarpFn::ShflDown, Expr::l("x"), 2);
+        assert_eq!(expr_to_string(&w), "shuffle_down(x, 2)");
+        assert!(w.has_warp());
+    }
+
+    #[test]
+    fn binop_eval_matches_riscv_div_semantics() {
+        assert_eq!(BinOp::Div.eval(7, 0), -1);
+        assert_eq!(BinOp::Rem.eval(7, 0), 7);
+        assert_eq!(BinOp::Div.eval(i32::MIN, -1), i32::MIN);
+        assert_eq!(BinOp::LAnd.eval(3, 0), 0);
+        assert_eq!(BinOp::LOr.eval(0, -7), 1);
+        assert_eq!(BinOp::Shr.eval(-8, 1), 0x7FFF_FFFC, "logical shift");
+    }
+
+    #[test]
+    fn kernel_builder() {
+        let k = Kernel::new("t", 2, 32, 8)
+            .param("in", 64, ParamDir::In)
+            .param("out", 64, ParamDir::Out)
+            .shared_arr("tmp", 32)
+            .body(vec![Stmt::Sync]);
+        assert_eq!(k.total_threads(), 64);
+        assert!(k.find_param("in").is_some());
+        assert!(k.is_shared("tmp"));
+        assert!(!k.is_shared("in"));
+        let s = k.to_string();
+        assert!(s.contains("__shared__ int tmp[32]"));
+    }
+}

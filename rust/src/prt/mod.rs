@@ -1,0 +1,50 @@
+//! The paper's SW solution (§IV): the **parallel-region (PR)
+//! transformation** — supporting warp-level features on baseline Vortex
+//! hardware with no ISA extensions.
+//!
+//! Pipeline (§IV steps 1–5):
+//! 1. [`regions`] — identify parallel regions; boundaries are
+//!    cross-thread operations (synchronization, block partitioning,
+//!    warp-level operations, cooperative-group operations).
+//! 2. [`fission`] — control-structure fission when `if`/`if-else`
+//!    structures span multiple parallel regions (Fig 4a).
+//! 3. [`regions::drop_sync_only`] — remove regions containing only
+//!    synchronization/partitioning.
+//! 4. [`serialize`] — loop serialization; nested loops + Table III
+//!    rules ([`rules`]) for warp-level features, including the
+//!    uniform-result optimization and the shuffle-reduction collapse.
+//! 5. special-variable substitution (`threadIdx` → loop index), folded
+//!    into [`serialize`].
+//!
+//! Input and output are both [`kir`] kernels: the input is an SPMD
+//! kernel (executed by `block_size` software threads); the output is a
+//! *scalar* kernel (executed by one hardware thread per block — the
+//! COX/CuPBoP execution model the paper builds on, where "software
+//! thread blocks map onto hardware threads"). [`codegen::codegen_scalar`]
+//! lowers the scalar kernel to RV32IM (no custom instructions — it runs
+//! on baseline Vortex); [`codegen::codegen_simt`] lowers the *original*
+//! kernel to the HW-solution ISA (`vx_vote`/`vx_shfl`/`vx_tile` +
+//! split/join), which is what the frontend compiler would emit for the
+//! modified hardware.
+//!
+//! [`interp`] is a direct SPMD interpreter of KIR — the semantic oracle
+//! both code generators are differentially tested against.
+
+pub mod codegen;
+pub mod fission;
+pub mod interp;
+pub mod kir;
+pub mod regions;
+pub mod rules;
+pub mod serialize;
+
+pub use codegen::{codegen_scalar, codegen_simt, LaunchImage};
+pub use kir::{BinOp, Expr, Kernel, Stmt, WarpFn};
+
+/// Run the full PR transformation: SPMD kernel -> scalar kernel.
+pub fn transform(k: &Kernel) -> Result<Kernel, String> {
+    let fissioned = fission::fission_kernel(k)?;
+    let regs = regions::identify(&fissioned)?;
+    let regs = regions::drop_sync_only(regs);
+    serialize::serialize(&fissioned, regs)
+}

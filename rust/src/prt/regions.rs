@@ -1,0 +1,219 @@
+//! §IV steps 1 & 3: parallel-region identification over a fissioned
+//! kernel, and removal of sync-only regions.
+//!
+//! After fission every region boundary sits at the top level of the
+//! kernel body, so identification is a linear scan. Each region records
+//! the cooperative-group tile size in effect (set by the partitioning
+//! regions it replaces).
+
+use super::kir::*;
+
+/// What a region contains.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RegionKind {
+    /// Ordinary thread-parallel statements.
+    Compute,
+    /// A single warp-level operation `target = f(value)` with an
+    /// optional guard (the hoisted `if` condition, see
+    /// [`crate::prt::fission`]).
+    WarpOp {
+        guard: Option<Expr>,
+        target: &'static str,
+        f: WarpFn,
+        value: Expr,
+        delta: u8,
+    },
+    /// Synchronization only (dropped by step 3).
+    SyncOnly,
+    /// Partitioning only (dropped by step 3; its effect lives on in
+    /// `Region::tile`).
+    Partition(u32),
+    /// A collapsed shuffle-down reduction chain over accumulator
+    /// `target` (produced by the serializer's reduction-collapse
+    /// optimization; never emitted by `identify`).
+    SegReduce { target: &'static str, guard: Option<Expr> },
+}
+
+/// One parallel region.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Region {
+    pub kind: RegionKind,
+    pub stmts: Vec<Stmt>,
+    /// Tile size (segment width for warp-level ops) in effect.
+    pub tile: u32,
+}
+
+/// Try to view a statement as a (possibly guarded) warp-op assignment.
+fn as_warp_op(s: &Stmt) -> Option<(Option<Expr>, &'static str, WarpFn, Expr, u8)> {
+    match s {
+        Stmt::Assign(t, Expr::Warp(f, v, d)) => Some((None, t, *f, (**v).clone(), *d)),
+        Stmt::If(g, body, e) if e.is_empty() && body.len() == 1 => {
+            if let Stmt::Assign(t, Expr::Warp(f, v, d)) = &body[0] {
+                Some((Some(g.clone()), t, *f, (**v).clone(), *d))
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Step 1: identify parallel regions (kernel must be fissioned).
+pub fn identify(k: &Kernel) -> Result<Vec<Region>, String> {
+    let mut regions = Vec::new();
+    let mut cur: Vec<Stmt> = Vec::new();
+    let mut tile = k.warp_size;
+
+    let flush = |cur: &mut Vec<Stmt>, regions: &mut Vec<Region>, tile: u32| {
+        if !cur.is_empty() {
+            regions.push(Region { kind: RegionKind::Compute, stmts: std::mem::take(cur), tile });
+        }
+    };
+
+    for s in &k.body {
+        if let Some((guard, target, f, value, delta)) = as_warp_op(s) {
+            flush(&mut cur, &mut regions, tile);
+            regions.push(Region {
+                kind: RegionKind::WarpOp { guard, target, f, value, delta },
+                stmts: vec![s.clone()],
+                tile,
+            });
+            continue;
+        }
+        match s {
+            Stmt::Sync | Stmt::TileSync => {
+                flush(&mut cur, &mut regions, tile);
+                regions.push(Region { kind: RegionKind::SyncOnly, stmts: vec![s.clone()], tile });
+            }
+            Stmt::TilePartition(n) => {
+                flush(&mut cur, &mut regions, tile);
+                regions.push(Region {
+                    kind: RegionKind::Partition(*n),
+                    stmts: vec![s.clone()],
+                    tile,
+                });
+                tile = *n;
+            }
+            ref st if st.contains_boundary() => {
+                return Err(format!(
+                    "region identification expects a fissioned kernel; found nested \
+                     boundary in {st:?}"
+                ));
+            }
+            _ => cur.push(s.clone()),
+        }
+    }
+    flush(&mut cur, &mut regions, tile);
+    Ok(regions)
+}
+
+/// Step 3: drop regions containing only synchronization/partitioning.
+pub fn drop_sync_only(regions: Vec<Region>) -> Vec<Region> {
+    regions
+        .into_iter()
+        .filter(|r| !matches!(r.kind, RegionKind::SyncOnly | RegionKind::Partition(_)))
+        .collect()
+}
+
+/// Render the region decomposition (the Fig 4a "identified parallel
+/// regions" view).
+pub fn render(regions: &[Region]) -> String {
+    let mut out = String::new();
+    for (i, r) in regions.iter().enumerate() {
+        let label = match &r.kind {
+            RegionKind::Compute => "compute".to_string(),
+            RegionKind::WarpOp { f, .. } => format!("warp-op:{}", f.name()),
+            RegionKind::SyncOnly => "sync-only (removed)".to_string(),
+            RegionKind::Partition(n) => format!("partition<{n}> (removed)"),
+            RegionKind::SegReduce { target, .. } => format!("seg-reduce:{target}"),
+        };
+        out += &format!("--- PR{} [{}] tile={} ---\n", i, label, r.tile);
+        for s in &r.stmts {
+            out += &stmt_to_string(s, 1);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    use crate::prt::fission::fission_kernel;
+    use crate::prt::kir::Expr as E;
+
+    /// The Fig 3a kernel (integer-ized): tile<4>, doTileWork is a stub
+    /// computation, tile.any vote, block sync.
+    pub fn fig3a() -> Kernel {
+        Kernel::new("fig3a", 1, 32, 8)
+            .param("out", 32, ParamDir::Out)
+            .body(vec![
+                Stmt::TilePartition(4),
+                Stmt::Assign("groupId", E::b(BinOp::Div, E::ThreadIdx, E::c(4))),
+                Stmt::If(
+                    E::b(BinOp::Eq, E::l("groupId"), E::c(0)),
+                    vec![
+                        Stmt::Assign("gtid", E::TileRank),
+                        Stmt::Assign("x", E::mul(E::l("gtid"), E::c(3))),
+                        Stmt::TileSync,
+                        Stmt::Assign("y", E::warp(WarpFn::VoteAny, E::l("x"), 0)),
+                    ],
+                    vec![],
+                ),
+                Stmt::Sync,
+                Stmt::Store("out", E::ThreadIdx, E::l("y")),
+            ])
+    }
+
+    #[test]
+    fn fig3a_decomposes_into_paper_regions() {
+        let k = fission_kernel(&fig3a()).unwrap();
+        let regions = identify(&k).unwrap();
+        // partition / compute / sync / compute(work) / tilesync /
+        // warp-op / sync / compute(store) — modulo chunk grouping.
+        let kinds: Vec<&str> = regions
+            .iter()
+            .map(|r| match &r.kind {
+                RegionKind::Compute => "c",
+                RegionKind::WarpOp { .. } => "w",
+                RegionKind::SyncOnly => "s",
+                RegionKind::Partition(_) => "p",
+                RegionKind::SegReduce { .. } => "r",
+            })
+            .collect();
+        assert_eq!(kinds, ["p", "c", "s", "w", "s", "c"], "{}", render(&regions));
+        // The warp-op region carries its guard and the tile size 4.
+        let w = regions.iter().find(|r| matches!(r.kind, RegionKind::WarpOp { .. })).unwrap();
+        assert_eq!(w.tile, 4);
+        match &w.kind {
+            RegionKind::WarpOp { guard, target, f, .. } => {
+                assert!(guard.is_some());
+                assert_eq!(*target, "y");
+                assert_eq!(*f, WarpFn::VoteAny);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn drop_sync_only_removes_gray_regions() {
+        let k = fission_kernel(&fig3a()).unwrap();
+        let regions = drop_sync_only(identify(&k).unwrap());
+        assert!(regions
+            .iter()
+            .all(|r| !matches!(r.kind, RegionKind::SyncOnly | RegionKind::Partition(_))));
+        // Tile size survives on the warp-op region.
+        let w = regions.iter().find(|r| matches!(r.kind, RegionKind::WarpOp { .. })).unwrap();
+        assert_eq!(w.tile, 4);
+    }
+
+    #[test]
+    fn unfissioned_kernel_rejected() {
+        let k = Kernel::new("bad", 1, 8, 8).body(vec![Stmt::If(
+            E::l("c"),
+            vec![Stmt::Sync],
+            vec![],
+        )]);
+        assert!(identify(&k).is_err());
+    }
+}

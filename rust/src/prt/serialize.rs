@@ -1,0 +1,841 @@
+//! §IV steps 4–5: **loop serialization** with nested-loop handling of
+//! warp-level features (Table III) and special-variable substitution.
+//!
+//! Input: the fissioned kernel plus its (sync-dropped) region list.
+//! Output: a *scalar* kernel (`block_size == 1`) in which every region
+//! became a `for tid` loop (Fig 4b). Thread-local scalars that are live
+//! across regions are promoted to scratch arrays indexed by the
+//! serialized thread index ("thread-local variables are converted to
+//! arrays"); warp-level functions become the nested loops of Table III,
+//! with the uniform-result optimization for votes and the
+//! shuffle-reduction collapse for annotated accumulators.
+
+use super::fission::fresh;
+use super::kir::*;
+use super::regions::{Region, RegionKind};
+use super::rules;
+use std::collections::{HashMap, HashSet};
+
+/// Run steps 4–5 over an identified region list.
+pub fn serialize(k: &Kernel, regions: Vec<Region>) -> Result<Kernel, String> {
+    let regions = collapse_reductions(k, regions);
+    let mut counter = 0u32;
+
+    // `for` variables are loop-scoped (C scoping): they are never
+    // promoted, and may not double as ordinary locals.
+    let mut loop_vars: HashSet<&'static str> = HashSet::new();
+    for r in &regions {
+        for s in &r.stmts {
+            collect_loop_vars(s, &mut loop_vars);
+        }
+    }
+    for r in &regions {
+        for s in &r.stmts {
+            if let Some(n) = assigned_loop_var(s, &loop_vars) {
+                return Err(format!(
+                    "`{n}` is used both as a loop variable and an assigned local; \
+                     rename one of them"
+                ));
+            }
+        }
+    }
+
+    // ---- figure out which locals must be promoted to arrays ----
+    let mut seen_in: HashMap<&'static str, HashSet<usize>> = HashMap::new();
+    for (i, r) in regions.iter().enumerate() {
+        let mut names = HashSet::new();
+        for s in &r.stmts {
+            stmt_locals(s, &mut names);
+        }
+        if let RegionKind::WarpOp { guard, target, value, .. } = &r.kind {
+            names.insert(target);
+            expr_locals(value, &mut names);
+            if let Some(g) = guard {
+                expr_locals(g, &mut names);
+            }
+        }
+        if let RegionKind::SegReduce { target, guard } = &r.kind {
+            names.insert(target);
+            if let Some(g) = guard {
+                expr_locals(g, &mut names);
+            }
+        }
+        for n in names {
+            seen_in.entry(n).or_default().insert(i);
+        }
+    }
+    let mut promoted: HashMap<&'static str, &'static str> = HashMap::new();
+    for r in &regions {
+        // Warp-op operands are always arrays ("a temporary array as
+        // large as the warp is constructed").
+        match &r.kind {
+            RegionKind::WarpOp { guard, target, value, .. } => {
+                promote(&mut promoted, target);
+                let mut vs = HashSet::new();
+                expr_locals(value, &mut vs);
+                if let Some(g) = guard {
+                    expr_locals(g, &mut vs);
+                }
+                for v in vs {
+                    promote(&mut promoted, v);
+                }
+            }
+            RegionKind::SegReduce { target, guard } => {
+                promote(&mut promoted, target);
+                let mut vs = HashSet::new();
+                if let Some(g) = guard {
+                    expr_locals(g, &mut vs);
+                }
+                for v in vs {
+                    promote(&mut promoted, v);
+                }
+            }
+            _ => {}
+        }
+    }
+    for (name, where_seen) in &seen_in {
+        if where_seen.len() > 1 && !loop_vars.contains(name) {
+            promote(&mut promoted, name);
+        }
+    }
+
+    // ---- rewrite each region ----
+    let bs = k.block_size;
+    let mut body: Vec<Stmt> = Vec::new();
+    let mut extra_scratch: Vec<&'static str> = Vec::new();
+    for r in &regions {
+        match &r.kind {
+            RegionKind::Compute => {
+                let tid = fresh("__t", &mut counter);
+                let mut inner = Vec::new();
+                for s in &r.stmts {
+                    inner.push(rewrite_stmt(s, &Expr::Local(tid), r.tile, bs, &promoted));
+                }
+                body.push(Stmt::For(tid, Expr::Const(0), Expr::Const(bs as i32), inner));
+            }
+            RegionKind::WarpOp { guard, target, f, value, delta } => {
+                emit_warp_op(
+                    &mut body,
+                    &mut counter,
+                    bs,
+                    r.tile,
+                    guard.as_ref(),
+                    target,
+                    *f,
+                    value,
+                    *delta,
+                    &promoted,
+                    &mut extra_scratch,
+                )?;
+            }
+            RegionKind::SegReduce { target, guard } => {
+                emit_seg_reduce(
+                    &mut body,
+                    &mut counter,
+                    bs,
+                    r.tile,
+                    guard.as_ref(),
+                    target,
+                    &promoted,
+                );
+            }
+            RegionKind::SyncOnly | RegionKind::Partition(_) => {}
+        }
+    }
+
+    // ---- assemble the scalar kernel ----
+    let mut out = k.clone();
+    out.body = body;
+    out.block_size = 1;
+    out.scratch = promoted
+        .values()
+        .copied()
+        .chain(extra_scratch)
+        .map(|arr| SharedDecl { name: arr, len: bs as usize })
+        .collect();
+    // Deterministic order for codegen/allocation.
+    out.scratch.sort_by_key(|s| s.name);
+    Ok(out)
+}
+
+fn collect_loop_vars(s: &Stmt, out: &mut HashSet<&'static str>) {
+    match s {
+        Stmt::For(v, _, _, b) => {
+            out.insert(v);
+            for s in b {
+                collect_loop_vars(s, out);
+            }
+        }
+        Stmt::If(_, t, e) => {
+            for s in t.iter().chain(e) {
+                collect_loop_vars(s, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Find an `Assign` whose target collides with a loop variable.
+fn assigned_loop_var(s: &Stmt, loop_vars: &HashSet<&'static str>) -> Option<&'static str> {
+    match s {
+        Stmt::Assign(n, _) if loop_vars.contains(n) => Some(n),
+        Stmt::If(_, t, e) => t
+            .iter()
+            .chain(e)
+            .find_map(|s| assigned_loop_var(s, loop_vars)),
+        Stmt::For(_, _, _, b) => b.iter().find_map(|s| assigned_loop_var(s, loop_vars)),
+        _ => None,
+    }
+}
+
+fn promote(map: &mut HashMap<&'static str, &'static str>, name: &'static str) {
+    if !map.contains_key(name) {
+        let arr = Box::leak(format!("__a_{name}").into_boxed_str());
+        map.insert(name, arr);
+    }
+}
+
+/// All local names referenced by an expression.
+fn expr_locals(e: &Expr, out: &mut HashSet<&'static str>) {
+    match e {
+        Expr::Local(n) => {
+            out.insert(n);
+        }
+        Expr::Bin(_, a, b) => {
+            expr_locals(a, out);
+            expr_locals(b, out);
+        }
+        Expr::Load(_, i) => expr_locals(i, out),
+        Expr::Warp(_, v, _) => expr_locals(v, out),
+        _ => {}
+    }
+}
+
+fn stmt_locals(s: &Stmt, out: &mut HashSet<&'static str>) {
+    match s {
+        Stmt::Assign(n, e) => {
+            out.insert(n);
+            expr_locals(e, out);
+        }
+        Stmt::Store(_, i, v) => {
+            expr_locals(i, out);
+            expr_locals(v, out);
+        }
+        Stmt::If(c, t, e) => {
+            expr_locals(c, out);
+            for s in t.iter().chain(e) {
+                stmt_locals(s, out);
+            }
+        }
+        Stmt::For(v, f, t, b) => {
+            out.insert(v);
+            expr_locals(f, out);
+            expr_locals(t, out);
+            for s in b {
+                stmt_locals(s, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Rewrite an expression for the serialized form: `threadIdx` and the
+/// tile accessors become arithmetic on `tid` (step 5), promoted locals
+/// become array loads.
+fn rewrite_expr(
+    e: &Expr,
+    tid: &Expr,
+    tile: u32,
+    bs: u32,
+    promoted: &HashMap<&'static str, &'static str>,
+) -> Expr {
+    match e {
+        // The serialized kernel runs with block_size == 1; blockDim
+        // references mean the *original* block size (step 5).
+        Expr::BlockDim => Expr::Const(bs as i32),
+        Expr::Local(n) => match promoted.get(n) {
+            Some(arr) => Expr::Load(arr, Box::new(tid.clone())),
+            None => e.clone(),
+        },
+        Expr::ThreadIdx => tid.clone(),
+        Expr::TileRank => Expr::b(BinOp::Rem, tid.clone(), Expr::Const(tile as i32)),
+        Expr::TileGroup => Expr::b(BinOp::Div, tid.clone(), Expr::Const(tile as i32)),
+        Expr::TileSize => Expr::Const(tile as i32),
+        Expr::Bin(op, a, b) => Expr::b(
+            *op,
+            rewrite_expr(a, tid, tile, bs, promoted),
+            rewrite_expr(b, tid, tile, bs, promoted),
+        ),
+        Expr::Load(arr, i) => Expr::Load(arr, Box::new(rewrite_expr(i, tid, tile, bs, promoted))),
+        Expr::Warp(..) => unreachable!("warp ops are their own regions after fission"),
+        other => other.clone(),
+    }
+}
+
+fn rewrite_stmt(
+    s: &Stmt,
+    tid: &Expr,
+    tile: u32,
+    bs: u32,
+    promoted: &HashMap<&'static str, &'static str>,
+) -> Stmt {
+    match s {
+        Stmt::Assign(n, e) => {
+            let e = rewrite_expr(e, tid, tile, bs, promoted);
+            match promoted.get(n) {
+                Some(arr) => Stmt::Store(arr, tid.clone(), e),
+                None => Stmt::Assign(n, e),
+            }
+        }
+        Stmt::Store(a, i, v) => Stmt::Store(
+            a,
+            rewrite_expr(i, tid, tile, bs, promoted),
+            rewrite_expr(v, tid, tile, bs, promoted),
+        ),
+        Stmt::If(c, t, e) => Stmt::If(
+            rewrite_expr(c, tid, tile, bs, promoted),
+            t.iter().map(|s| rewrite_stmt(s, tid, tile, bs, promoted)).collect(),
+            e.iter().map(|s| rewrite_stmt(s, tid, tile, bs, promoted)).collect(),
+        ),
+        Stmt::For(v, f, t, b) => Stmt::For(
+            v,
+            rewrite_expr(f, tid, tile, bs, promoted),
+            rewrite_expr(t, tid, tile, bs, promoted),
+            b.iter().map(|s| rewrite_stmt(s, tid, tile, bs, promoted)).collect(),
+        ),
+        Stmt::Sync | Stmt::TileSync | Stmt::TilePartition(_) => {
+            unreachable!("sync/partition regions were dropped")
+        }
+    }
+}
+
+/// Emit the Table III nested loops for one warp-level operation
+/// (Fig 4b's blue region).
+#[allow(clippy::too_many_arguments)]
+fn emit_warp_op(
+    body: &mut Vec<Stmt>,
+    counter: &mut u32,
+    bs: u32,
+    tile: u32,
+    guard: Option<&Expr>,
+    target: &'static str,
+    f: WarpFn,
+    value: &Expr,
+    delta: u8,
+    promoted: &HashMap<&'static str, &'static str>,
+    extra_scratch: &mut Vec<&'static str>,
+) -> Result<(), String> {
+    let tgt_arr = promoted[target];
+    let guard_at = |tid: &Expr| -> Option<Expr> {
+        guard.map(|g| rewrite_expr(g, tid, tile, bs, promoted))
+    };
+    let maybe_guard = |g: Option<Expr>, stmts: Vec<Stmt>| -> Vec<Stmt> {
+        match g {
+            Some(g) => vec![Stmt::If(g, stmts, vec![])],
+            None => stmts,
+        }
+    };
+
+    // Ensure the operand is available as an array: if it is a promoted
+    // local, use its array directly; otherwise materialize a temporary
+    // value array first ("a temporary array as large as the warp").
+    let val_arr: &'static str = match value {
+        Expr::Local(n) if promoted.contains_key(n) => promoted[n],
+        _ => {
+            let arr = fresh("__v", counter);
+            // NOTE: the fill loop is guarded — unguarded threads keep 0.
+            let t = fresh("__t", counter);
+            let tid = Expr::Local(t);
+            let fill = Stmt::Store(arr, tid.clone(), rewrite_expr(value, &tid, tile, bs, promoted));
+            body.push(Stmt::For(
+                t,
+                Expr::Const(0),
+                Expr::Const(bs as i32),
+                maybe_guard(guard_at(&tid), vec![fill]),
+            ));
+            extra_scratch.push(arr);
+            arr
+        }
+    };
+
+    if f.is_vote() {
+        // Nested-loop serialization (Fig 4b): outer over groups, inner
+        // accumulating, then a broadcast loop. The uniform-result
+        // optimization keeps the accumulator in a scalar (`temp`).
+        let g = fresh("__g", counter);
+        let j = fresh("__j", counter);
+        let j2 = fresh("__j", counter);
+        let tmp = fresh("__tmp", counter);
+        let tid_of = |jv: &'static str| {
+            Expr::add(
+                Expr::mul(Expr::Local(g), Expr::Const(tile as i32)),
+                Expr::Local(jv),
+            )
+        };
+
+        let mut outer: Vec<Stmt> = Vec::new();
+        let mut accum: Vec<Stmt> = Vec::new();
+        match f {
+            WarpFn::VoteAny | WarpFn::VoteAll | WarpFn::Ballot => {
+                let (op, identity) = rules::vote_accum(f).unwrap();
+                outer.push(Stmt::Assign(tmp, Expr::Const(identity)));
+                let tid = tid_of(j);
+                let contrib = if f == WarpFn::Ballot {
+                    // r = r | ((value[tid] != 0) << laneoff)
+                    Expr::b(
+                        BinOp::Or,
+                        Expr::Local(tmp),
+                        Expr::b(
+                            BinOp::Shl,
+                            Expr::b(
+                                BinOp::Ne,
+                                Expr::load(val_arr, tid.clone()),
+                                Expr::Const(0),
+                            ),
+                            Expr::Local(j),
+                        ),
+                    )
+                } else {
+                    Expr::b(op, Expr::Local(tmp), Expr::load(val_arr, tid.clone()))
+                };
+                accum.push(Stmt::Assign(tmp, contrib));
+            }
+            WarpFn::VoteUni => {
+                let seen = fresh("__seen", counter);
+                let first = fresh("__first", counter);
+                outer.push(Stmt::Assign(tmp, Expr::Const(1)));
+                outer.push(Stmt::Assign(seen, Expr::Const(0)));
+                outer.push(Stmt::Assign(first, Expr::Const(0)));
+                let tid = tid_of(j);
+                accum.push(Stmt::If(
+                    Expr::b(BinOp::Eq, Expr::Local(seen), Expr::Const(0)),
+                    vec![
+                        Stmt::Assign(first, Expr::load(val_arr, tid.clone())),
+                        Stmt::Assign(seen, Expr::Const(1)),
+                    ],
+                    vec![Stmt::Assign(
+                        tmp,
+                        Expr::b(
+                            BinOp::LAnd,
+                            Expr::Local(tmp),
+                            Expr::b(
+                                BinOp::Eq,
+                                Expr::load(val_arr, tid.clone()),
+                                Expr::Local(first),
+                            ),
+                        ),
+                    )],
+                ));
+            }
+            _ => unreachable!(),
+        }
+        let tid_j = tid_of(j);
+        outer.push(Stmt::For(
+            j,
+            Expr::Const(0),
+            Expr::Const(tile as i32),
+            maybe_guard(guard_at(&tid_j), accum),
+        ));
+        let tid_j2 = tid_of(j2);
+        let bcast = Stmt::Store(tgt_arr, tid_j2.clone(), Expr::Local(tmp));
+        outer.push(Stmt::For(
+            j2,
+            Expr::Const(0),
+            Expr::Const(tile as i32),
+            maybe_guard(guard_at(&tid_j2), vec![bcast]),
+        ));
+        body.push(Stmt::For(
+            g,
+            Expr::Const(0),
+            Expr::Const((bs / tile) as i32),
+            outer,
+        ));
+    } else {
+        // Shuffle: single serialized loop, `r[tid] = value[src]`.
+        let t = fresh("__t", counter);
+        let tid = Expr::Local(t);
+        let base = Expr::mul(
+            Expr::b(BinOp::Div, tid.clone(), Expr::Const(tile as i32)),
+            Expr::Const(tile as i32),
+        );
+        let off = Expr::b(BinOp::Rem, tid.clone(), Expr::Const(tile as i32));
+        let (src_off, valid) = rules::shfl_source(f, off, delta, tile);
+        let src = Expr::add(base, src_off);
+        let inner = Stmt::If(
+            valid,
+            vec![Stmt::Store(tgt_arr, tid.clone(), Expr::load(val_arr, src))],
+            vec![Stmt::Store(
+                tgt_arr,
+                tid.clone(),
+                Expr::load(val_arr, tid.clone()),
+            )],
+        );
+        body.push(Stmt::For(
+            t,
+            Expr::Const(0),
+            Expr::Const(bs as i32),
+            maybe_guard(guard_at(&tid), vec![inner]),
+        ));
+    }
+    Ok(())
+}
+
+/// Emit the collapsed shuffle-reduction: one serial accumulation per
+/// segment, result broadcast to the segment (uniform-result form).
+fn emit_seg_reduce(
+    body: &mut Vec<Stmt>,
+    counter: &mut u32,
+    bs: u32,
+    tile: u32,
+    guard: Option<&Expr>,
+    target: &'static str,
+    promoted: &HashMap<&'static str, &'static str>,
+) {
+    let arr = promoted[target];
+    let g = fresh("__g", counter);
+    let j = fresh("__j", counter);
+    let j2 = fresh("__j", counter);
+    let tmp = fresh("__tmp", counter);
+    let tid_of = |jv: &'static str| {
+        Expr::add(
+            Expr::mul(Expr::Local(g), Expr::Const(tile as i32)),
+            Expr::Local(jv),
+        )
+    };
+    let guard_at = |tid: &Expr| guard.map(|e| rewrite_expr(e, tid, tile, bs, promoted));
+    let maybe_guard = |g: Option<Expr>, stmts: Vec<Stmt>| match g {
+        Some(g) => vec![Stmt::If(g, stmts, vec![])],
+        None => stmts,
+    };
+
+    let tid_j = tid_of(j);
+    let tid_j2 = tid_of(j2);
+    let outer = vec![
+        Stmt::Assign(tmp, Expr::Const(0)),
+        Stmt::For(
+            j,
+            Expr::Const(0),
+            Expr::Const(tile as i32),
+            maybe_guard(
+                guard_at(&tid_j),
+                vec![Stmt::Assign(
+                    tmp,
+                    Expr::add(Expr::Local(tmp), Expr::load(arr, tid_j.clone())),
+                )],
+            ),
+        ),
+        Stmt::For(
+            j2,
+            Expr::Const(0),
+            Expr::Const(tile as i32),
+            maybe_guard(
+                guard_at(&tid_j2),
+                vec![Stmt::Store(arr, tid_j2.clone(), Expr::Local(tmp))],
+            ),
+        ),
+    ];
+    body.push(Stmt::For(
+        g,
+        Expr::Const(0),
+        Expr::Const((bs / tile) as i32),
+        outer,
+    ));
+}
+
+/// Detect and collapse shuffle-down reduction chains over annotated
+/// accumulators: runs of `[t = shfl_down(x, d); x = x + t]` with
+/// halving deltas `tile/2 .. 1` become a single [`RegionKind::SegReduce`].
+fn collapse_reductions(k: &Kernel, regions: Vec<Region>) -> Vec<Region> {
+    if k.reduce_hints.is_empty() {
+        return regions;
+    }
+    let mut out: Vec<Region> = Vec::new();
+    let mut i = 0;
+    while i < regions.len() {
+        if let Some((x, guard, len, leftover)) = match_chain(k, &regions[i..]) {
+            out.push(Region {
+                kind: RegionKind::SegReduce { target: x, guard },
+                stmts: Vec::new(),
+                tile: regions[i].tile,
+            });
+            if let Some(rest) = leftover {
+                out.push(rest);
+            }
+            i += len;
+        } else {
+            out.push(regions[i].clone());
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Match a maximal `[w: t=shfl_down(x,d)] [c: x = x + t; ...rest]`
+/// chain with halving deltas ending at 1 starting at `rs[0]`. The final
+/// accumulation region may contain trailing statements — they are
+/// returned as a leftover region to re-emit after the collapse.
+/// Returns (accumulator, guard, regions consumed, leftover).
+type ChainMatch = (&'static str, Option<Expr>, usize, Option<Region>);
+
+fn match_chain(k: &Kernel, rs: &[Region]) -> Option<ChainMatch> {
+    let tile = rs.first()?.tile;
+    let mut expect = tile / 2;
+    let mut consumed = 0;
+    let mut acc: Option<&'static str> = None;
+    let mut guard0: Option<Option<Expr>> = None;
+    let mut leftover: Option<Region> = None;
+    while expect >= 1 {
+        let w = rs.get(consumed)?;
+        let RegionKind::WarpOp { guard, target, f, value, delta } = &w.kind else {
+            break;
+        };
+        if *f != WarpFn::ShflDown || *delta as u32 != expect || w.tile != tile {
+            break;
+        }
+        let Expr::Local(x) = value else { break };
+        if !k.reduce_hints.contains(x) {
+            break;
+        }
+        if let Some(a) = acc {
+            if a != *x {
+                break;
+            }
+        }
+        match &guard0 {
+            None => guard0 = Some(guard.clone()),
+            Some(g0) => {
+                if g0 != guard {
+                    break;
+                }
+            }
+        }
+        // Next region must start with `x = x + t` (possibly guarded the
+        // same way). Trailing statements are only allowed on the LAST
+        // link (expect == 1), where they become the leftover region.
+        let Some(c) = rs.get(consumed + 1) else { break };
+        let Some(rest) = accum_matches(c, x, target, guard) else { break };
+        if !rest.is_empty() && expect != 1 {
+            break;
+        }
+        if !rest.is_empty() {
+            leftover = Some(Region { kind: RegionKind::Compute, stmts: rest, tile: c.tile });
+        }
+        acc = Some(x);
+        consumed += 2;
+        expect /= 2;
+    }
+    if expect == 0 && consumed > 0 {
+        Some((acc?, guard0.flatten(), consumed, leftover))
+    } else {
+        None
+    }
+}
+
+/// If region `r` begins with the accumulation `x = x + t` (under the
+/// matching guard), return the remaining statements; else None.
+fn accum_matches(r: &Region, x: &'static str, t: &'static str, guard: &Option<Expr>) -> Option<Vec<Stmt>> {
+    if r.kind != RegionKind::Compute || r.stmts.is_empty() {
+        return None;
+    }
+    let is_acc = |s: &Stmt| -> bool {
+        matches!(
+            s,
+            Stmt::Assign(n, Expr::Bin(BinOp::Add, a, b))
+                if *n == x
+                    && matches!((&**a, &**b),
+                        (Expr::Local(l), Expr::Local(r2)) if (*l == x && *r2 == t)
+                            || (*l == t && *r2 == x))
+        )
+    };
+    let ok = match (&r.stmts[0], guard) {
+        (s, None) => is_acc(s),
+        (Stmt::If(g, body, e), Some(g0)) => {
+            g == g0 && e.is_empty() && body.len() == 1 && is_acc(&body[0])
+        }
+        _ => false,
+    };
+    if ok {
+        Some(r.stmts[1..].to_vec())
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prt::kir::Expr as E;
+    use crate::prt::{interp, transform};
+
+    fn check_equiv(k: &Kernel, env: &interp::Env) {
+        let want = interp::run(k, env).expect("oracle run");
+        let scalar = transform(k).expect("transform");
+        assert_eq!(scalar.block_size, 1);
+        let got = interp::run(&scalar, env).expect("scalar run");
+        for p in &k.params {
+            if p.dir != ParamDir::In {
+                assert_eq!(
+                    want.get(p.name),
+                    got.get(p.name),
+                    "output `{}` differs\n-- original --\n{}\n-- transformed --\n{}",
+                    p.name,
+                    k,
+                    scalar
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn elementwise_kernel_serializes() {
+        let k = Kernel::new("t", 2, 16, 8)
+            .param("in", 32, ParamDir::In)
+            .param("out", 32, ParamDir::Out)
+            .body(vec![
+                Stmt::Assign("gid", E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx)),
+                Stmt::Store("out", E::l("gid"), E::mul(E::load("in", E::l("gid")), E::c(3))),
+            ]);
+        let env = interp::Env::default().with("in", (0..32).collect());
+        check_equiv(&k, &env);
+    }
+
+    #[test]
+    fn vote_any_nested_loop() {
+        let k = Kernel::new("t", 1, 16, 8)
+            .param("in", 16, ParamDir::In)
+            .param("out", 16, ParamDir::Out)
+            .body(vec![
+                Stmt::Assign("p", E::b(BinOp::Gt, E::load("in", E::ThreadIdx), E::c(10))),
+                Stmt::Assign("r", E::warp(WarpFn::VoteAny, E::l("p"), 0)),
+                Stmt::Store("out", E::ThreadIdx, E::l("r")),
+            ]);
+        // warp 0 has a hit, warp 1 does not.
+        let mut input = vec![0; 16];
+        input[3] = 99;
+        let env = interp::Env::default().with("in", input);
+        check_equiv(&k, &env);
+    }
+
+    #[test]
+    fn all_vote_modes_and_ballot() {
+        for f in [WarpFn::VoteAny, WarpFn::VoteAll, WarpFn::VoteUni, WarpFn::Ballot] {
+            let k = Kernel::new("t", 1, 16, 8)
+                .param("in", 16, ParamDir::In)
+                .param("out", 16, ParamDir::Out)
+                .body(vec![
+                    Stmt::Assign("p", E::b(BinOp::Rem, E::load("in", E::ThreadIdx), E::c(3))),
+                    Stmt::Assign("r", E::warp(f, E::l("p"), 0)),
+                    Stmt::Store("out", E::ThreadIdx, E::l("r")),
+                ]);
+            let env = interp::Env::default().with("in", (5..21).collect());
+            check_equiv(&k, &env);
+        }
+    }
+
+    #[test]
+    fn all_shuffle_modes() {
+        for f in [WarpFn::ShflUp, WarpFn::ShflDown, WarpFn::ShflXor, WarpFn::Shfl] {
+            for delta in [1u8, 2, 3, 5] {
+                let k = Kernel::new("t", 1, 16, 8)
+                    .param("in", 16, ParamDir::In)
+                    .param("out", 16, ParamDir::Out)
+                    .body(vec![
+                        Stmt::Assign("x", E::load("in", E::ThreadIdx)),
+                        Stmt::Assign("y", E::warp(f, E::l("x"), delta)),
+                        Stmt::Store("out", E::ThreadIdx, E::l("y")),
+                    ]);
+                let env = interp::Env::default().with("in", (100..116).collect());
+                check_equiv(&k, &env);
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_vote_respects_tile_size() {
+        let k = Kernel::new("t", 1, 16, 8)
+            .param("in", 16, ParamDir::In)
+            .param("out", 16, ParamDir::Out)
+            .body(vec![
+                Stmt::TilePartition(4),
+                Stmt::Assign("p", E::b(BinOp::Gt, E::load("in", E::ThreadIdx), E::c(0))),
+                Stmt::Assign("r", E::warp(WarpFn::Ballot, E::l("p"), 0)),
+                Stmt::Store("out", E::ThreadIdx, E::l("r")),
+            ]);
+        let mut input = vec![0; 16];
+        input[1] = 1; // tile 0 -> ballot 0b0010
+        input[14] = 1; // tile 3 -> ballot 0b0100
+        let env = interp::Env::default().with("in", input);
+        check_equiv(&k, &env);
+    }
+
+    #[test]
+    fn fig3a_end_to_end_equivalence() {
+        let k = crate::prt::regions::tests::fig3a();
+        check_equiv(&k, &interp::Env::default());
+    }
+
+    #[test]
+    fn guarded_vote_only_counts_guarded_threads() {
+        let k = Kernel::new("t", 1, 16, 8)
+            .param("out", 16, ParamDir::Out)
+            .body(vec![
+                Stmt::Assign("g", E::b(BinOp::Lt, E::ThreadIdx, E::c(8))),
+                Stmt::If(
+                    E::l("g"),
+                    vec![
+                        Stmt::Assign("p", E::b(BinOp::Eq, E::ThreadIdx, E::c(3))),
+                        Stmt::Assign("r", E::warp(WarpFn::VoteAny, E::l("p"), 0)),
+                    ],
+                    vec![],
+                ),
+                Stmt::Sync,
+                Stmt::If(
+                    E::l("g"),
+                    vec![Stmt::Store("out", E::ThreadIdx, E::l("r"))],
+                    vec![],
+                ),
+            ]);
+        check_equiv(&k, &interp::Env::default());
+    }
+
+    #[test]
+    fn reduction_collapse_fires_and_is_output_equivalent() {
+        // x = in[t]; x += shfl_down chain; lane 0 stores the sum.
+        let k = Kernel::new("t", 1, 16, 8)
+            .param("in", 16, ParamDir::In)
+            .param("out", 2, ParamDir::Out)
+            .reduce_hint("x")
+            .body(vec![
+                Stmt::Assign("x", E::load("in", E::ThreadIdx)),
+                Stmt::Assign("t1", E::warp(WarpFn::ShflDown, E::l("x"), 4)),
+                Stmt::Assign("x", E::add(E::l("x"), E::l("t1"))),
+                Stmt::Assign("t2", E::warp(WarpFn::ShflDown, E::l("x"), 2)),
+                Stmt::Assign("x", E::add(E::l("x"), E::l("t2"))),
+                Stmt::Assign("t3", E::warp(WarpFn::ShflDown, E::l("x"), 1)),
+                Stmt::Assign("x", E::add(E::l("x"), E::l("t3"))),
+                Stmt::If(
+                    E::b(
+                        BinOp::Eq,
+                        E::b(BinOp::Rem, E::ThreadIdx, E::c(8)),
+                        E::c(0),
+                    ),
+                    vec![Stmt::Store(
+                        "out",
+                        E::b(BinOp::Div, E::ThreadIdx, E::c(8)),
+                        E::l("x"),
+                    )],
+                    vec![],
+                ),
+            ]);
+        // Verify collapse actually fired: the scalar body must contain
+        // no reference to the shfl temporaries.
+        let scalar = transform(&k).unwrap();
+        let txt = scalar.to_string();
+        assert!(
+            !txt.contains("__a_t1"),
+            "collapse should eliminate the shuffle temp arrays:\n{txt}"
+        );
+        let env = interp::Env::default().with("in", (1..17).collect());
+        check_equiv(&k, &env);
+    }
+}

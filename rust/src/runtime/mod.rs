@@ -1,0 +1,133 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas golden models
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and
+//! executes them on the PJRT CPU client from the Rust side.
+//!
+//! The golden models are the independent numeric oracle for the
+//! end-to-end example: for every benchmark, simulator outputs (HW and
+//! SW paths) must equal the PJRT-executed JAX/Pallas computation.
+//! Python never runs on this path — only HLO text does.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded, compiled golden model.
+pub struct GoldenModel {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client, many compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: HashMap<String, GoldenModel>,
+}
+
+/// Runtime errors.
+#[derive(Debug)]
+pub enum RtError {
+    Xla(xla::Error),
+    MissingArtifact(PathBuf),
+    Shape(String),
+}
+
+impl std::fmt::Display for RtError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RtError::Xla(e) => write!(f, "xla: {e}"),
+            RtError::MissingArtifact(p) => write!(
+                f,
+                "missing artifact {} — run `make artifacts` first",
+                p.display()
+            ),
+            RtError::Shape(s) => write!(f, "shape: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for RtError {}
+
+impl From<xla::Error> for RtError {
+    fn from(e: xla::Error) -> Self {
+        RtError::Xla(e)
+    }
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self, RtError> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<name>.hlo.txt` (cached).
+    pub fn load(&mut self, name: &str) -> Result<&GoldenModel, RtError> {
+        if !self.cache.contains_key(name) {
+            let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                return Err(RtError::MissingArtifact(path));
+            }
+            // HLO *text* is the interchange format: jax >= 0.5 emits
+            // protos with 64-bit instruction ids that xla_extension
+            // 0.5.1 rejects; the text parser reassigns ids.
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("utf8 path"),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache
+                .insert(name.to_string(), GoldenModel { name: name.to_string(), exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute a golden model on i32 input arrays; returns the tuple of
+    /// i32 outputs. (All benchmark golden models take/return i32
+    /// tensors; the jax side casts internally where it computes in
+    /// wider types.)
+    pub fn run_i32(
+        &mut self,
+        name: &str,
+        inputs: &[&[i32]],
+    ) -> Result<Vec<Vec<i32>>, RtError> {
+        self.load(name)?;
+        let model = &self.cache[name];
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|x| xla::Literal::vec1(x)).collect();
+        let result = model.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the result is always a
+        // tuple of i32 tensors.
+        let tuple = result.to_tuple()?;
+        let mut outs = Vec::new();
+        for t in tuple {
+            outs.push(t.to_vec::<i32>().map_err(RtError::Xla)?);
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_reported() {
+        let mut rt = match Runtime::new("/nonexistent-artifacts") {
+            Ok(rt) => rt,
+            Err(_) => return, // no PJRT plugin in this environment
+        };
+        match rt.run_i32("nope", &[]) {
+            Err(RtError::MissingArtifact(p)) => {
+                assert!(p.to_string_lossy().contains("nope.hlo.txt"));
+            }
+            other => panic!("expected MissingArtifact, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Simulator configuration. The paper's evaluation configuration
+//! (§V: "eight threads per warp and four warps per thread block for one
+//! core") is [`SimConfig::paper`].
+
+/// Functional-unit and memory latencies in cycles.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Latencies {
+    /// Integer ALU (and branches).
+    pub alu: u32,
+    /// RV32M multiply.
+    pub mul: u32,
+    /// RV32M divide/remainder.
+    pub div: u32,
+    /// `vx_vote`/`vx_shfl` within a single hardware warp — the paper's
+    /// modified ALU exchanges register values directly.
+    pub warp_op: u32,
+    /// Extra cycles per additional hardware warp a merged (`vx_tile`)
+    /// collective spans: the scheduler walks the register-bank crossbar
+    /// once per member warp (§III "we add a cross-bar instead of a
+    /// multiplexer").
+    pub crossbar_hop: u32,
+    /// Shared-memory scratchpad access.
+    pub smem: u32,
+    /// L1 dcache hit.
+    pub dcache_hit: u32,
+    /// L1 dcache miss (DRAM fill).
+    pub dcache_miss: u32,
+    /// Extra cycles per additional distinct cache line touched by one
+    /// warp memory instruction (uncoalesced access replay).
+    pub replay: u32,
+}
+
+impl Default for Latencies {
+    fn default() -> Self {
+        Latencies {
+            // Vortex has no operand forwarding: a dependent instruction
+            // waits for writeback through the pipeline (~3 cycles), so
+            // single-warp code stalls on every dependency and the core
+            // relies on multi-warp scheduling — the effect behind the
+            // HW-vs-SW IPC gap.
+            alu: 4,
+            mul: 4,
+            div: 8,
+            warp_op: 1,
+            crossbar_hop: 1,
+            smem: 2,
+            dcache_hit: 4,
+            dcache_miss: 50,
+            replay: 1,
+        }
+    }
+}
+
+/// L1 data-cache geometry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheConfig {
+    pub sets: usize,
+    pub ways: usize,
+    /// Line size in bytes (power of two).
+    pub line: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        // 16 KiB, 4-way, 64 B lines — Vortex's default L1D scale.
+        CacheConfig { sets: 64, ways: 4, line: 64 }
+    }
+}
+
+/// Warp scheduling policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Round-robin among ready warps (Vortex default).
+    RoundRobin,
+    /// Greedy-then-oldest: stay on the same warp until it stalls.
+    Gto,
+}
+
+/// Full simulator configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Hardware threads per warp (NT).
+    pub nt: usize,
+    /// Hardware warps per core (NW).
+    pub nw: usize,
+    /// Number of cores.
+    pub num_cores: usize,
+    /// Enable the paper's HW solution: `vx_vote`/`vx_shfl`/`vx_tile`
+    /// decode paths, the modified ALU, and the scheduler tile table.
+    /// When false (baseline Vortex) those instructions raise
+    /// [`crate::sim::SimError::IllegalInstr`].
+    pub warp_hw: bool,
+    /// Model the register-bank crossbar (§III). Only meaningful with
+    /// `warp_hw`; disabling it makes merged-warp collectives serialize
+    /// through the single-bank multiplexer (ablation knob).
+    pub crossbar: bool,
+    pub lat: Latencies,
+    pub dcache: CacheConfig,
+    pub sched: SchedPolicy,
+    /// Capture a per-instruction trace (slow; tests/debug only).
+    pub trace: bool,
+}
+
+impl SimConfig {
+    /// The paper's evaluation configuration (§V): NT=8, NW=4, 1 core,
+    /// warp-level features in hardware.
+    pub fn paper() -> Self {
+        SimConfig {
+            nt: 8,
+            nw: 4,
+            num_cores: 1,
+            warp_hw: true,
+            crossbar: true,
+            lat: Latencies::default(),
+            dcache: CacheConfig::default(),
+            sched: SchedPolicy::RoundRobin,
+            trace: false,
+        }
+    }
+
+    /// Baseline Vortex: same core, warp-level features NOT implemented
+    /// (the SW solution must be used).
+    pub fn baseline() -> Self {
+        SimConfig { warp_hw: false, ..Self::paper() }
+    }
+
+    /// Total hardware threads per core.
+    pub fn hw_threads(&self) -> usize {
+        self.nt * self.nw
+    }
+
+    /// Validate invariants (powers of two where the tile logic needs
+    /// them).
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.nt.is_power_of_two() || self.nt == 0 || self.nt > 32 {
+            return Err(format!("nt={} must be a power of two in 1..=32", self.nt));
+        }
+        if !self.nw.is_power_of_two() || self.nw == 0 || self.nw > 32 {
+            return Err(format!("nw={} must be a power of two in 1..=32", self.nw));
+        }
+        if self.num_cores == 0 {
+            return Err("num_cores must be >= 1".into());
+        }
+        if !self.dcache.line.is_power_of_two() {
+            return Err("dcache line must be a power of two".into());
+        }
+        Ok(())
+    }
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_matches_section_v() {
+        let c = SimConfig::paper();
+        assert_eq!(c.nt, 8);
+        assert_eq!(c.nw, 4);
+        assert_eq!(c.num_cores, 1);
+        assert_eq!(c.hw_threads(), 32);
+        assert!(c.warp_hw);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn baseline_disables_warp_hw_only() {
+        let b = SimConfig::baseline();
+        assert!(!b.warp_hw);
+        assert_eq!(b.nt, SimConfig::paper().nt);
+    }
+
+    #[test]
+    fn validate_rejects_non_pow2() {
+        let mut c = SimConfig::paper();
+        c.nt = 6;
+        assert!(c.validate().is_err());
+        c.nt = 8;
+        c.dcache.line = 48;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,760 @@
+//! The Vortex-style SIMT core: single-issue, in-order per warp, with a
+//! warp scheduler hiding functional-unit and memory latency across
+//! warps (Fig 2).
+//!
+//! Timing model (SimX-style): each cycle the scheduler picks one ready
+//! warp whose next instruction has no scoreboard hazard; the
+//! instruction executes *functionally* at issue, its destination is
+//! marked pending, and the writeback retires after the functional-unit
+//! latency. Control instructions charge a pipeline-refill penalty to
+//! the issuing warp. Memory instructions consult the dcache timing
+//! model (hit/miss + uncoalesced replay). The paper's collectives
+//! execute in the modified ALU; when a `vx_tile` merge spans multiple
+//! hardware warps, operand collection walks the register-bank crossbar
+//! and charges `crossbar_hop` per member warp.
+
+use super::config::SimConfig;
+use super::exec::warp_ops;
+use super::map;
+use super::mem::{DCache, MemFault, Memory};
+use super::metrics::Metrics;
+use super::regfile::RegFile;
+use super::scheduler::Scheduler;
+use super::scoreboard::Scoreboard;
+use super::warp::{full_mask, Warp, WarpState};
+use crate::isa::{csr, Instr, Width};
+
+/// Pipeline-refill penalty for control instructions (taken branches,
+/// split/join, tile reconfiguration), in cycles.
+const CTRL_PENALTY: u64 = 4;
+/// Per-warp front-end spacing: a warp re-enters fetch only after its
+/// previous instruction has moved through fetch→decode→ibuffer, so a
+/// single warp issues at most once every `FETCH_SPACING` cycles. This
+/// is the Vortex property that makes multi-warp occupancy (not
+/// forwarding) the performance mechanism — and what the SW solution
+/// loses when a serialized block occupies one lane.
+const FETCH_SPACING: u64 = 4;
+/// Extra scheduler cycles to rewrite the warp/tile configuration.
+const TILE_PENALTY: u64 = 4;
+
+/// Fatal simulation error.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SimError {
+    /// Instruction not implemented by this hardware configuration
+    /// (e.g. `vx_vote` with `warp_hw = false` — the baseline Vortex).
+    IllegalInstr { pc: u32, what: String },
+    /// PC outside the loaded program.
+    BadPc { pc: u32 },
+    Mem(MemFault),
+    /// Branch lanes disagree while multiple lanes are active; kernels
+    /// must guard divergent branches with `vx_split`/`vx_join`.
+    DivergentBranch { pc: u32 },
+    /// All warps blocked on barriers that can never be satisfied.
+    Deadlock { cycle: u64 },
+    Timeout { cycles: u64 },
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::IllegalInstr { pc, what } => {
+                write!(f, "illegal instruction at {pc:#x}: {what}")
+            }
+            SimError::BadPc { pc } => write!(f, "pc {pc:#x} outside program"),
+            SimError::Mem(m) => write!(f, "{m}"),
+            SimError::DivergentBranch { pc } => {
+                write!(f, "divergent branch at {pc:#x} (use vx_split/vx_join)")
+            }
+            SimError::Deadlock { cycle } => write!(f, "barrier deadlock at cycle {cycle}"),
+            SimError::Timeout { cycles } => write!(f, "timeout after {cycles} cycles"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+impl From<MemFault> for SimError {
+    fn from(m: MemFault) -> Self {
+        SimError::Mem(m)
+    }
+}
+
+/// An issued instruction waiting for writeback.
+struct InFlight {
+    warp: usize,
+    rd: u8,
+    vals: [u32; 32],
+    mask: u32,
+    done_at: u64,
+}
+
+/// Barrier bookkeeping: warps arrived so far per barrier id.
+#[derive(Default)]
+struct BarrierTable {
+    // (id, required, arrived-mask)
+    active: Vec<(u32, u32, u32)>,
+}
+
+/// One simulated core.
+pub struct Core {
+    pub cfg: SimConfig,
+    pub core_id: u32,
+    prog: Vec<Instr>,
+    pub warps: Vec<Warp>,
+    pub rf: RegFile,
+    sb: Scoreboard,
+    pub sched: Scheduler,
+    pub dcache: DCache,
+    inflight: Vec<InFlight>,
+    barriers: BarrierTable,
+    /// Earliest cycle each warp may issue again (pipeline penalties).
+    ready_at: Vec<u64>,
+    /// Architectural register foreign lanes contribute during a
+    /// merged-warp collective (crossbar read path); set at dispatch.
+    pending_collective_reg: u8,
+    pub metrics: Metrics,
+    /// Optional instruction trace (cfg.trace).
+    pub trace: Vec<String>,
+}
+
+impl Core {
+    pub fn new(cfg: SimConfig, core_id: u32) -> Self {
+        cfg.validate().expect("invalid SimConfig");
+        let (nw, nt) = (cfg.nw, cfg.nt);
+        Core {
+            core_id,
+            prog: Vec::new(),
+            warps: (0..nw).map(|_| Warp::new(nt)).collect(),
+            rf: RegFile::new(nw, nt),
+            sb: Scoreboard::new(nw),
+            sched: Scheduler::new(cfg.sched, nw, nt),
+            dcache: DCache::new(cfg.dcache.clone()),
+            inflight: Vec::new(),
+            barriers: BarrierTable::default(),
+            ready_at: vec![0; nw],
+            pending_collective_reg: 0,
+            metrics: Metrics::default(),
+            trace: Vec::new(),
+            cfg,
+        }
+    }
+
+    /// Load a program at [`map::CODE_BASE`] and reset warp 0 to run it
+    /// with all lanes active (the Vortex startup convention: warp 0
+    /// spawns the rest with `vx_wspawn`).
+    pub fn load_program(&mut self, prog: &[Instr]) {
+        self.prog = prog.to_vec();
+        self.reset();
+    }
+
+    /// Reset architectural + timing state (keeps the program).
+    pub fn reset(&mut self) {
+        let (nw, nt) = (self.cfg.nw, self.cfg.nt);
+        self.warps = (0..nw).map(|_| Warp::new(nt)).collect();
+        self.warps[0].pc = map::CODE_BASE;
+        self.warps[0].state = WarpState::Active;
+        self.rf = RegFile::new(nw, nt);
+        self.sb = Scoreboard::new(nw);
+        self.sched = Scheduler::new(self.cfg.sched, nw, nt);
+        self.dcache = DCache::new(self.cfg.dcache.clone());
+        self.inflight.clear();
+        self.barriers = BarrierTable::default();
+        self.ready_at = vec![0; nw];
+        self.metrics = Metrics::default();
+        self.trace.clear();
+    }
+
+    /// True while any warp is runnable/blocked or a writeback is
+    /// outstanding.
+    pub fn busy(&self) -> bool {
+        !self.inflight.is_empty()
+            || self.warps.iter().any(|w| !matches!(w.state, WarpState::Inactive))
+    }
+
+    fn fetch(&self, pc: u32) -> Result<Instr, SimError> {
+        let off = pc.wrapping_sub(map::CODE_BASE) as usize;
+        if off % 4 != 0 || off / 4 >= self.prog.len() {
+            return Err(SimError::BadPc { pc });
+        }
+        Ok(self.prog[off / 4])
+    }
+
+    /// Advance one cycle. Returns `busy()`.
+    pub fn step(&mut self, mem: &mut Memory) -> Result<bool, SimError> {
+        if !self.busy() {
+            return Ok(false);
+        }
+        self.metrics.cycles += 1;
+        let now = self.metrics.cycles;
+
+        // ---- writeback ----
+        let mut i = 0;
+        while i < self.inflight.len() {
+            if self.inflight[i].done_at <= now {
+                let f = self.inflight.swap_remove(i);
+                self.rf.write_masked(f.warp, f.rd, f.mask, &f.vals);
+                self.sb.clear(f.warp, f.rd);
+            } else {
+                i += 1;
+            }
+        }
+
+        // ---- issue ----
+        let nw = self.cfg.nw;
+        let mut issued = false;
+        let mut saw_sb_stall = false;
+        let mut saw_pipe_stall = false;
+        let mut any_active = false;
+        // Iterate warps in scheduler order without allocating (hot
+        // path: one iteration per cycle).
+        let start = self.sched.start(nw);
+        for i in 0..nw {
+            let w = (start + i) % nw;
+            if !self.warps[w].is_active() {
+                continue;
+            }
+            any_active = true;
+            if self.ready_at[w] > now {
+                saw_pipe_stall = true;
+                continue;
+            }
+            let pc = self.warps[w].pc;
+            let instr = self.fetch(pc)?;
+            if !self.sb.can_issue(w, &instr.srcs(), instr.rd()) {
+                saw_sb_stall = true;
+                continue;
+            }
+            self.execute(w, pc, instr, mem, now)?;
+            // Front-end turnaround: this warp is not fetchable again
+            // until the instruction clears fetch/decode (control
+            // instructions may have pushed it further out already).
+            self.ready_at[w] = self.ready_at[w].max(now + FETCH_SPACING);
+            self.sched.issued(w, nw);
+            issued = true;
+            break;
+        }
+
+        if !issued {
+            if saw_sb_stall {
+                self.metrics.stall_scoreboard += 1;
+            } else if saw_pipe_stall {
+                self.metrics.stall_pipeline += 1;
+            } else if any_active {
+                self.metrics.idle_cycles += 1;
+            } else if self.warps.iter().any(|w| matches!(w.state, WarpState::Barrier { .. })) {
+                self.metrics.stall_barrier += 1;
+                if self.inflight.is_empty()
+                    && !self.warps.iter().any(|w| w.is_active())
+                {
+                    return Err(SimError::Deadlock { cycle: now });
+                }
+            } else {
+                self.metrics.idle_cycles += 1;
+            }
+        }
+
+        Ok(self.busy())
+    }
+
+    /// Run until idle, with a cycle cap.
+    pub fn run(&mut self, mem: &mut Memory, max_cycles: u64) -> Result<(), SimError> {
+        while self.step(mem)? {
+            if self.metrics.cycles >= max_cycles {
+                return Err(SimError::Timeout { cycles: max_cycles });
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Execution (functional at issue + latency scheduling)
+    // ------------------------------------------------------------------
+
+    #[allow(clippy::too_many_lines)]
+    fn execute(
+        &mut self,
+        w: usize,
+        pc: u32,
+        instr: Instr,
+        mem: &mut Memory,
+        now: u64,
+    ) -> Result<(), SimError> {
+        let nt = self.cfg.nt;
+        let tmask = self.warps[w].tmask;
+        let lanes = tmask.count_ones() as u64;
+        let mut next_pc = pc.wrapping_add(4);
+        let mut retire_lat = self.cfg.lat.alu as u64;
+        let mut out = [0u32; 32];
+        let mut wb_rd: u8 = 0;
+
+        if self.cfg.trace {
+            self.trace.push(format!(
+                "[{now:6}] c{cid} w{w} pc={pc:#06x} tmask={tmask:08b} {instr}",
+                cid = self.core_id,
+            ));
+        }
+
+        let mut a = [0u32; 32];
+        let mut b = [0u32; 32];
+
+        match instr {
+            Instr::Alu { op, rd, rs1, rs2 } => {
+                self.rf.read_all(w, rs1, &mut a);
+                self.rf.read_all(w, rs2, &mut b);
+                for l in 0..nt {
+                    out[l] = op.eval(a[l], b[l]);
+                }
+                wb_rd = rd;
+                self.metrics.alu_ops += 1;
+            }
+            Instr::AluImm { op, rd, rs1, imm } => {
+                self.rf.read_all(w, rs1, &mut a);
+                for l in 0..nt {
+                    out[l] = op.eval(a[l], imm as u32);
+                }
+                wb_rd = rd;
+                self.metrics.alu_ops += 1;
+            }
+            Instr::Mul { op, rd, rs1, rs2 } => {
+                self.rf.read_all(w, rs1, &mut a);
+                self.rf.read_all(w, rs2, &mut b);
+                for l in 0..nt {
+                    out[l] = op.eval(a[l], b[l]);
+                }
+                wb_rd = rd;
+                retire_lat = if matches!(
+                    op,
+                    crate::isa::MulOp::Div
+                        | crate::isa::MulOp::Divu
+                        | crate::isa::MulOp::Rem
+                        | crate::isa::MulOp::Remu
+                ) {
+                    self.cfg.lat.div as u64
+                } else {
+                    self.cfg.lat.mul as u64
+                };
+                self.metrics.mul_ops += 1;
+            }
+            Instr::Lui { rd, imm } => {
+                out[..nt].fill(imm as u32);
+                wb_rd = rd;
+                self.metrics.alu_ops += 1;
+            }
+            Instr::Auipc { rd, imm } => {
+                out[..nt].fill(pc.wrapping_add(imm as u32));
+                wb_rd = rd;
+                self.metrics.alu_ops += 1;
+            }
+            Instr::Load { width, rd, rs1, imm } => {
+                self.rf.read_all(w, rs1, &mut a);
+                let mut addrs = [0u32; 32];
+                for l in 0..nt {
+                    addrs[l] = a[l].wrapping_add(imm as u32);
+                }
+                for l in 0..nt {
+                    if tmask & (1 << l) == 0 {
+                        continue;
+                    }
+                    out[l] = load_value(mem, addrs[l], width)?;
+                }
+                wb_rd = rd;
+                retire_lat = self.mem_latency(&addrs[..nt], tmask);
+                self.metrics.loads += 1;
+            }
+            Instr::Store { width, rs1, rs2, imm } => {
+                self.rf.read_all(w, rs1, &mut a);
+                self.rf.read_all(w, rs2, &mut b);
+                let mut addrs = [0u32; 32];
+                for l in 0..nt {
+                    addrs[l] = a[l].wrapping_add(imm as u32);
+                }
+                for l in 0..nt {
+                    if tmask & (1 << l) == 0 {
+                        continue;
+                    }
+                    store_value(mem, addrs[l], b[l], width)?;
+                }
+                retire_lat = self.mem_latency(&addrs[..nt], tmask);
+                self.metrics.stores += 1;
+            }
+            Instr::Branch { op, rs1, rs2, imm } => {
+                self.rf.read_all(w, rs1, &mut a);
+                self.rf.read_all(w, rs2, &mut b);
+                let first = self.warps[w].first_lane();
+                let taken = op.taken(a[first], b[first]);
+                // Branches must be warp-uniform over active lanes;
+                // divergence is the compiler's job (vx_split/vx_join).
+                for l in 0..nt {
+                    if tmask & (1 << l) != 0 && op.taken(a[l], b[l]) != taken {
+                        return Err(SimError::DivergentBranch { pc });
+                    }
+                }
+                if taken {
+                    next_pc = pc.wrapping_add(imm as u32);
+                    self.ready_at[w] = now + CTRL_PENALTY;
+                }
+                self.metrics.control_ops += 1;
+            }
+            Instr::Jal { rd, imm } => {
+                out[..nt].fill(pc.wrapping_add(4));
+                wb_rd = rd;
+                next_pc = pc.wrapping_add(imm as u32);
+                self.ready_at[w] = now + CTRL_PENALTY;
+                self.metrics.control_ops += 1;
+            }
+            Instr::Jalr { rd, rs1, imm } => {
+                self.rf.read_all(w, rs1, &mut a);
+                let first = self.warps[w].first_lane();
+                out[..nt].fill(pc.wrapping_add(4));
+                wb_rd = rd;
+                next_pc = a[first].wrapping_add(imm as u32) & !1;
+                self.ready_at[w] = now + CTRL_PENALTY;
+                self.metrics.control_ops += 1;
+            }
+            Instr::CsrRead { rd, csr: c } => {
+                for l in 0..nt {
+                    out[l] = self.read_csr(c, w, l, now);
+                }
+                wb_rd = rd;
+                self.metrics.alu_ops += 1;
+            }
+            Instr::Ecall => {
+                self.warps[w].state = WarpState::Inactive;
+                self.metrics.control_ops += 1;
+            }
+            Instr::Fence => {
+                // Commit-time no-op; charge ALU latency.
+                self.metrics.control_ops += 1;
+            }
+            Instr::Tmc { rs1 } => {
+                self.rf.read_all(w, rs1, &mut a);
+                let first = self.warps[w].first_lane();
+                let m = a[first] & full_mask(nt);
+                if m == 0 {
+                    self.warps[w].state = WarpState::Inactive;
+                } else {
+                    self.warps[w].tmask = m;
+                }
+                self.ready_at[w] = now + CTRL_PENALTY;
+                self.metrics.control_ops += 1;
+            }
+            Instr::Wspawn { rs1, rs2 } => {
+                self.rf.read_all(w, rs1, &mut a);
+                self.rf.read_all(w, rs2, &mut b);
+                let first = self.warps[w].first_lane();
+                let count = (a[first] as usize).min(self.cfg.nw);
+                let target = b[first];
+                for i in 1..count {
+                    self.warps[i].pc = target;
+                    self.warps[i].tmask = full_mask(nt);
+                    self.warps[i].state = WarpState::Active;
+                    self.warps[i].stack.clear();
+                }
+                self.metrics.control_ops += 1;
+            }
+            Instr::Split { rd, rs1 } => {
+                self.rf.read_all(w, rs1, &mut a);
+                let mut taken = 0u32;
+                for l in 0..nt {
+                    if a[l] != 0 {
+                        taken |= 1 << l;
+                    }
+                }
+                let warp = &mut self.warps[w];
+                warp.pc = pc; // split() records else_pc = pc + 4
+                let token = warp.split(taken);
+                out[..nt].fill(token);
+                wb_rd = rd;
+                next_pc = pc.wrapping_add(4);
+                self.ready_at[w] = now + CTRL_PENALTY;
+                self.metrics.control_ops += 1;
+            }
+            Instr::Join { .. } => {
+                let warp = &mut self.warps[w];
+                warp.pc = pc;
+                next_pc = warp.join();
+                self.ready_at[w] = now + CTRL_PENALTY;
+                self.metrics.control_ops += 1;
+            }
+            Instr::Bar { rs1, rs2 } => {
+                self.rf.read_all(w, rs1, &mut a);
+                self.rf.read_all(w, rs2, &mut b);
+                let first = self.warps[w].first_lane();
+                let id = a[first];
+                let required = b[first].max(1);
+                self.metrics.barriers_hit += 1;
+                self.metrics.control_ops += 1;
+                self.arrive_barrier(w, id, required);
+            }
+            Instr::Pred { rs1 } => {
+                self.rf.read_all(w, rs1, &mut a);
+                let mut m = 0u32;
+                for l in 0..nt {
+                    if tmask & (1 << l) != 0 && a[l] != 0 {
+                        m |= 1 << l;
+                    }
+                }
+                if m == 0 {
+                    self.warps[w].state = WarpState::Inactive;
+                } else {
+                    self.warps[w].tmask = m;
+                }
+                self.metrics.control_ops += 1;
+            }
+            Instr::Vote { mode, rd, rs1, mreg } => {
+                self.require_warp_hw(pc, "vx_vote")?;
+                self.pending_collective_reg = rs1;
+                self.rf.read_all(w, rs1, &mut a);
+                self.rf.read_all(w, mreg, &mut b);
+                let first = self.warps[w].first_lane();
+                let members = b[first];
+                retire_lat = self.collective(w, tmask, &a, members, &mut out, |vals, act, mem_m| {
+                    let r = warp_ops::vote(mode, vals, act, mem_m);
+                    vec![r; vals.len()]
+                });
+                wb_rd = rd;
+                self.metrics.warp_collectives += 1;
+            }
+            Instr::Shfl { mode, rd, rs1, delta, creg } => {
+                self.require_warp_hw(pc, "vx_shfl")?;
+                self.pending_collective_reg = rs1;
+                self.rf.read_all(w, rs1, &mut a);
+                self.rf.read_all(w, creg, &mut b);
+                let first = self.warps[w].first_lane();
+                let clamp = b[first];
+                retire_lat =
+                    self.collective(w, tmask, &a, 0, &mut out, |vals, _act, _m| {
+                        warp_ops::shfl(mode, vals, delta as u32, clamp)
+                    });
+                wb_rd = rd;
+                self.metrics.warp_collectives += 1;
+            }
+            Instr::Tile { rs1, rs2 } => {
+                self.require_warp_hw(pc, "vx_tile")?;
+                self.rf.read_all(w, rs1, &mut a);
+                self.rf.read_all(w, rs2, &mut b);
+                let first = self.warps[w].first_lane();
+                let (mask, size) = (a[first], b[first]);
+                self.sched
+                    .set_tile(mask, size)
+                    .map_err(|e| SimError::IllegalInstr { pc, what: e })?;
+                self.ready_at[w] = now + TILE_PENALTY;
+                self.metrics.warp_collectives += 1;
+                self.metrics.control_ops += 1;
+            }
+        }
+
+        // Retire bookkeeping. PC always advances (a warp parked at a
+        // barrier resumes at the instruction after the vx_bar).
+        self.metrics.instrs += 1;
+        self.metrics.thread_instrs += lanes;
+        self.warps[w].pc = next_pc;
+        if let Some(rd) = Instr::rd(&instr) {
+            debug_assert_eq!(rd, wb_rd);
+            self.sb.set_pending(w, rd);
+            self.inflight.push(InFlight {
+                warp: w,
+                rd,
+                vals: out,
+                mask: tmask,
+                done_at: now + retire_lat,
+            });
+        }
+        Ok(())
+    }
+
+    fn require_warp_hw(&self, pc: u32, what: &str) -> Result<(), SimError> {
+        if self.cfg.warp_hw {
+            Ok(())
+        } else {
+            Err(SimError::IllegalInstr {
+                pc,
+                what: format!("{what}: warp-level features not implemented in this hardware \
+                               (baseline Vortex; use the SW solution)"),
+            })
+        }
+    }
+
+    /// Execute a collective (vote/shuffle) for warp `w`, honoring the
+    /// tile table. Returns the latency.
+    ///
+    /// * `seg <= NT`: segments live inside the warp — plain modified-ALU
+    ///   path, `warp_op` latency.
+    /// * `seg > NT`: the group spans `seg/NT` merged warps; operands for
+    ///   the foreign lanes are collected across register banks through
+    ///   the crossbar (charging `crossbar_hop` per extra warp), exactly
+    ///   the structure §III adds to the execute stage.
+    fn collective(
+        &mut self,
+        w: usize,
+        tmask: u32,
+        own_vals: &[u32; 32],
+        members: u32,
+        out: &mut [u32; 32],
+        f: impl Fn(&[u32], u32, u32) -> Vec<u32>,
+    ) -> u64 {
+        let nt = self.cfg.nt;
+        let seg = (self.sched.tile.size as usize).min(self.cfg.hw_threads());
+        let mut lat = self.cfg.lat.warp_op as u64;
+        if seg <= nt {
+            // Sub-warp (or whole-warp) tiles: segment the warp lanes.
+            let nseg = nt / seg;
+            for s in 0..nseg {
+                let base = s * seg;
+                let vals: Vec<u32> = (0..seg).map(|i| own_vals[base + i]).collect();
+                let act = (tmask >> base) & warp_ops::mask_of(seg);
+                let res = f(&vals, act, members);
+                for i in 0..seg {
+                    out[base + i] = res[i];
+                }
+            }
+        } else {
+            // Merged warps: group = `span` consecutive warps aligned on
+            // `span`, this warp contributes its lanes and reads the rest
+            // through the crossbar.
+            let span = (seg / nt).max(1).min(self.cfg.nw);
+            let group_base = (w / span) * span;
+            let mut vals = vec![0u32; span * nt];
+            let mut act = 0u32;
+            for mw in 0..span {
+                let warp_idx = group_base + mw;
+                for l in 0..nt {
+                    let v = if warp_idx == w {
+                        own_vals[l]
+                    } else {
+                        // Crossbar read from the foreign bank. The
+                        // "value" register index is not re-decoded here;
+                        // foreign lanes hold the same architectural
+                        // register, so read it directly.
+                        self.rf.read_cross(warp_idx, self.pending_collective_reg, l)
+                    };
+                    vals[mw * nt + l] = v;
+                }
+                let m = if warp_idx == w { tmask } else { self.warps[warp_idx].tmask };
+                act |= (m & warp_ops::mask_of(nt)) << (mw * nt);
+            }
+            let res = f(&vals, act, members);
+            for l in 0..nt {
+                out[l] = res[(w - group_base) * nt + l];
+            }
+            let hops = (span - 1) as u64;
+            self.metrics.crossbar_hops += hops;
+            lat += if self.cfg.crossbar {
+                hops * self.cfg.lat.crossbar_hop as u64
+            } else {
+                // Ablation: without the crossbar the single-bank mux
+                // serializes one lane group per cycle.
+                hops * (nt as u64)
+            };
+        }
+        lat
+    }
+
+    /// dcache/shared-memory latency for one warp access.
+    fn mem_latency(&mut self, addrs: &[u32], tmask: u32) -> u64 {
+        if tmask == 0 {
+            return self.cfg.lat.alu as u64;
+        }
+        // Shared memory: fixed latency, banked (conflict-free model).
+        let first = tmask.trailing_zeros() as usize;
+        if Memory::is_shared(addrs[first]) {
+            self.metrics.smem_accesses += 1;
+            return self.cfg.lat.smem as u64;
+        }
+        // Global: one dcache probe per distinct line; replay per extra
+        // line; latency is the worst probe. Fixed-size scratch (NT <=
+        // 32): no allocation on the hot path.
+        let mut lines = [0u32; 32];
+        let mut n = 0usize;
+        let line_shift = self.cfg.dcache.line.trailing_zeros();
+        for (i, &a) in addrs.iter().enumerate() {
+            if tmask & (1 << i) != 0 {
+                let l = a >> line_shift;
+                if !lines[..n].contains(&l) {
+                    lines[n] = l;
+                    n += 1;
+                }
+            }
+        }
+        let mut worst = 0u64;
+        for &line in &lines[..n] {
+            let hit = self.dcache.access(line << line_shift);
+            let lat = if hit {
+                self.metrics.dcache_hits += 1;
+                self.cfg.lat.dcache_hit as u64
+            } else {
+                self.metrics.dcache_misses += 1;
+                self.cfg.lat.dcache_miss as u64
+            };
+            worst = worst.max(lat);
+        }
+        let replays = (n as u64).saturating_sub(1);
+        self.metrics.mem_replays += replays;
+        worst + replays * self.cfg.lat.replay as u64
+    }
+
+    fn read_csr(&self, c: u16, w: usize, lane: usize, now: u64) -> u32 {
+        match c {
+            csr::CSR_THREAD_ID => lane as u32,
+            csr::CSR_WARP_ID => w as u32,
+            csr::CSR_CORE_ID => self.core_id,
+            csr::CSR_THREAD_MASK => self.warps[w].tmask,
+            csr::CSR_NUM_THREADS => self.cfg.nt as u32,
+            csr::CSR_NUM_WARPS => self.cfg.nw as u32,
+            csr::CSR_NUM_CORES => self.cfg.num_cores as u32,
+            csr::CSR_CYCLE => now as u32,
+            csr::CSR_INSTRET => self.metrics.instrs as u32,
+            csr::CSR_TILE_SIZE => self.sched.tile.size,
+            csr::CSR_TILE_MASK => self.sched.tile.group_mask,
+            _ => 0,
+        }
+    }
+
+    fn arrive_barrier(&mut self, w: usize, id: u32, required: u32) {
+        let entry = self.barriers.active.iter_mut().find(|(i, _, _)| *i == id);
+        let (req, arrived) = match entry {
+            Some((_, r, m)) => {
+                *m |= 1 << w;
+                (*r, *m)
+            }
+            None => {
+                self.barriers.active.push((id, required, 1 << w));
+                (required, 1 << w)
+            }
+        };
+        if arrived.count_ones() >= req {
+            // Release everyone.
+            for i in 0..self.cfg.nw {
+                if arrived & (1 << i) != 0 && i != w {
+                    self.warps[i].state = WarpState::Active;
+                }
+            }
+            self.barriers.active.retain(|(i, _, _)| *i != id);
+        } else {
+            self.warps[w].state = WarpState::Barrier { id };
+        }
+    }
+
+    /// Architectural register value (first lane) — test/debug helper.
+    pub fn reg(&self, warp: usize, r: u8, lane: usize) -> u32 {
+        self.rf.read(warp, r, lane)
+    }
+}
+
+fn load_value(mem: &mut Memory, addr: u32, width: Width) -> Result<u32, MemFault> {
+    Ok(match width {
+        Width::Word => mem.read_u32(addr)?,
+        Width::Byte => mem.read_u8(addr)? as i8 as i32 as u32,
+        Width::ByteU => mem.read_u8(addr)? as u32,
+        Width::Half => mem.read_u16(addr)? as i16 as i32 as u32,
+        Width::HalfU => mem.read_u16(addr)? as u32,
+    })
+}
+
+fn store_value(mem: &mut Memory, addr: u32, v: u32, width: Width) -> Result<(), MemFault> {
+    match width {
+        Width::Word => mem.write_u32(addr, v),
+        Width::Byte | Width::ByteU => mem.write_u8(addr, v as u8),
+        Width::Half | Width::HalfU => mem.write_u16(addr, v as u16),
+    }
+}

@@ -1,0 +1,205 @@
+//! Functional semantics of the paper's warp-level collectives
+//! (`vx_vote`, `vx_shfl`) — the "modified ALU" of Fig 2.
+//!
+//! These pure functions are the single source of truth for collective
+//! semantics: the simulator core calls them, the PR-transformation
+//! equivalence tests check the SW solution against them, and the Pallas
+//! golden model (python/compile/kernels/warp_ops.py) implements the same
+//! definitions; the end-to-end example cross-validates all three.
+//!
+//! Lanes are organized in *segments* of `seg_size` (the cooperative-
+//! group tile size — `seg_size == NT` for plain warp-level functions).
+//! The member mask and ballot bit positions are segment-relative,
+//! matching the Fig 3b example (`vx_vote_sync(1, 0, 0xf, val)` over a
+//! tile of 4).
+
+use crate::isa::{ShflMode, VoteMode};
+
+/// Evaluate a vote over one segment.
+///
+/// * `vals` — per-lane predicate/value for the whole segment,
+///   `vals.len() == seg_size`.
+/// * `active` — segment-relative active mask (from the warp tmask).
+/// * `members` — segment-relative member mask from the mask register
+///   (0 means "all lanes", the common `FULL_MASK` idiom).
+///
+/// Returns the scalar result broadcast to every active lane.
+pub fn vote(mode: VoteMode, vals: &[u32], active: u32, members: u32) -> u32 {
+    let seg_size = vals.len();
+    let members = if members == 0 { u32::MAX } else { members };
+    let part = active & members & mask_of(seg_size);
+    match mode {
+        VoteMode::All => {
+            let ok = (0..seg_size).all(|i| part & (1 << i) == 0 || vals[i] != 0);
+            ok as u32
+        }
+        VoteMode::Any => {
+            let ok = (0..seg_size).any(|i| part & (1 << i) != 0 && vals[i] != 0);
+            ok as u32
+        }
+        VoteMode::Uni => {
+            let mut first: Option<u32> = None;
+            let mut uni = true;
+            for i in 0..seg_size {
+                if part & (1 << i) != 0 {
+                    match first {
+                        None => first = Some(vals[i]),
+                        Some(v) => uni &= v == vals[i],
+                    }
+                }
+            }
+            uni as u32
+        }
+        VoteMode::Ballot => {
+            let mut b = 0u32;
+            for i in 0..seg_size {
+                if part & (1 << i) != 0 && vals[i] != 0 {
+                    b |= 1 << i;
+                }
+            }
+            b
+        }
+    }
+}
+
+/// Compute the source lane offset for a shuffle, or `None` when the
+/// source is out of range (the destination lane then keeps its own
+/// value — CUDA `__shfl` clamp semantics).
+///
+/// * `lane_off` — destination lane offset within its segment.
+/// * `delta` — the 5-bit lane offset from the instruction immediate.
+/// * `clamp` — value of the clamp register; 0 selects the default
+///   (`seg_size - 1`), i.e. the whole segment is addressable.
+pub fn shfl_src(
+    mode: ShflMode,
+    lane_off: usize,
+    delta: u32,
+    clamp: u32,
+    seg_size: usize,
+) -> Option<usize> {
+    let c = if clamp == 0 { seg_size - 1 } else { (clamp as usize).min(seg_size - 1) };
+    match mode {
+        ShflMode::Up => {
+            let d = delta as usize;
+            if lane_off >= d {
+                Some(lane_off - d)
+            } else {
+                None
+            }
+        }
+        ShflMode::Down => {
+            let s = lane_off + delta as usize;
+            if s <= c {
+                Some(s)
+            } else {
+                None
+            }
+        }
+        ShflMode::Bfly => {
+            let s = lane_off ^ delta as usize;
+            if s <= c {
+                Some(s)
+            } else {
+                None
+            }
+        }
+        ShflMode::Idx => {
+            let s = delta as usize;
+            if s <= c {
+                Some(s)
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// Evaluate a shuffle over one segment: returns per-lane results.
+pub fn shfl(mode: ShflMode, vals: &[u32], delta: u32, clamp: u32) -> Vec<u32> {
+    let seg = vals.len();
+    (0..seg)
+        .map(|lane| match shfl_src(mode, lane, delta, clamp, seg) {
+            Some(s) => vals[s],
+            None => vals[lane],
+        })
+        .collect()
+}
+
+#[inline]
+pub fn mask_of(n: usize) -> u32 {
+    if n >= 32 {
+        u32::MAX
+    } else {
+        (1u32 << n) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vote_all_any() {
+        let v = [1, 2, 3, 4];
+        assert_eq!(vote(VoteMode::All, &v, 0xF, 0), 1);
+        assert_eq!(vote(VoteMode::Any, &v, 0xF, 0), 1);
+        let v = [1, 0, 3, 4];
+        assert_eq!(vote(VoteMode::All, &v, 0xF, 0), 0);
+        // lane 1 excluded by member mask -> all passes again
+        assert_eq!(vote(VoteMode::All, &v, 0xF, 0b1101), 1);
+        // inactive lanes don't count
+        assert_eq!(vote(VoteMode::All, &v, 0b1101, 0), 1);
+        let v = [0, 0, 0, 0];
+        assert_eq!(vote(VoteMode::Any, &v, 0xF, 0), 0);
+        assert_eq!(vote(VoteMode::All, &v, 0, 0), 1, "vacuously true");
+    }
+
+    #[test]
+    fn vote_uni_and_ballot() {
+        assert_eq!(vote(VoteMode::Uni, &[5, 5, 5, 5], 0xF, 0), 1);
+        assert_eq!(vote(VoteMode::Uni, &[5, 6, 5, 5], 0xF, 0), 0);
+        assert_eq!(vote(VoteMode::Uni, &[5, 6, 5, 5], 0b1101, 0), 1);
+        assert_eq!(vote(VoteMode::Ballot, &[1, 0, 7, 0], 0xF, 0), 0b0101);
+        assert_eq!(vote(VoteMode::Ballot, &[1, 1, 1, 1], 0b0110, 0), 0b0110);
+        assert_eq!(vote(VoteMode::Ballot, &[1, 1, 1, 1], 0xF, 0b1010), 0b1010);
+    }
+
+    #[test]
+    fn shfl_up_down_clamp() {
+        let v = [10, 11, 12, 13, 14, 15, 16, 17];
+        assert_eq!(shfl(ShflMode::Up, &v, 2, 0), [10, 11, 10, 11, 12, 13, 14, 15]);
+        assert_eq!(shfl(ShflMode::Down, &v, 2, 0), [12, 13, 14, 15, 16, 17, 16, 17]);
+        // clamp=3 restricts sources to lanes 0..=3; out-of-range lanes
+        // keep their own value.
+        assert_eq!(shfl(ShflMode::Down, &v, 2, 3), [12, 13, 12, 13, 14, 15, 16, 17]);
+    }
+
+    #[test]
+    fn shfl_bfly_is_involution() {
+        let v = [1u32, 2, 3, 4, 5, 6, 7, 8];
+        let once = shfl(ShflMode::Bfly, &v, 3, 0);
+        let twice = shfl(ShflMode::Bfly, &once, 3, 0);
+        assert_eq!(twice, v);
+    }
+
+    #[test]
+    fn shfl_idx_broadcasts() {
+        let v = [9, 8, 7, 6];
+        assert_eq!(shfl(ShflMode::Idx, &v, 2, 0), [7, 7, 7, 7]);
+        // out-of-clamp index keeps own value
+        assert_eq!(shfl(ShflMode::Idx, &v, 3, 1), v);
+    }
+
+    #[test]
+    fn butterfly_reduction_sums_segment() {
+        // The classic log2 reduction the paper's reduce benchmark uses.
+        let mut v: Vec<u32> = (1..=8).collect();
+        let mut d = 4;
+        while d >= 1 {
+            let sh = shfl(ShflMode::Bfly, &v, d, 0);
+            v = v.iter().zip(&sh).map(|(a, b)| a + b).collect();
+            d /= 2;
+        }
+        assert!(v.iter().all(|&x| x == 36));
+    }
+}

@@ -1,0 +1,231 @@
+//! Memory system: flat global memory (DRAM), a set-associative
+//! write-back L1 data cache timing model, and the per-core shared-memory
+//! scratchpad.
+//!
+//! Data always lives in the flat backing store (the cache is a *timing*
+//! model tracking tags/LRU, not a second copy), which keeps functional
+//! state single-source-of-truth — the same simplification SimX makes.
+
+use super::config::CacheConfig;
+use super::map;
+
+/// Flat backing store for global + shared memory.
+pub struct Memory {
+    global: Vec<u8>,
+    shared: Vec<u8>,
+}
+
+/// Memory access fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemFault {
+    pub addr: u32,
+    pub store: bool,
+}
+
+impl std::fmt::Display for MemFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} fault at {:#010x}",
+            if self.store { "store" } else { "load" },
+            self.addr
+        )
+    }
+}
+
+impl Default for Memory {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Memory {
+    pub fn new() -> Self {
+        Memory {
+            global: vec![0; map::GLOBAL_SIZE as usize],
+            shared: vec![0; map::SHARED_SIZE as usize],
+        }
+    }
+
+    #[inline]
+    fn slot(&mut self, addr: u32, len: u32, store: bool) -> Result<&mut [u8], MemFault> {
+        if addr >= map::GLOBAL_BASE && addr + len <= map::GLOBAL_BASE + map::GLOBAL_SIZE {
+            let o = (addr - map::GLOBAL_BASE) as usize;
+            Ok(&mut self.global[o..o + len as usize])
+        } else if addr >= map::SHARED_BASE && addr + len <= map::SHARED_BASE + map::SHARED_SIZE {
+            let o = (addr - map::SHARED_BASE) as usize;
+            Ok(&mut self.shared[o..o + len as usize])
+        } else {
+            Err(MemFault { addr, store })
+        }
+    }
+
+    pub fn read_u32(&mut self, addr: u32) -> Result<u32, MemFault> {
+        let s = self.slot(addr, 4, false)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    pub fn write_u32(&mut self, addr: u32, v: u32) -> Result<(), MemFault> {
+        let s = self.slot(addr, 4, true)?;
+        s.copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    pub fn read_u8(&mut self, addr: u32) -> Result<u8, MemFault> {
+        Ok(self.slot(addr, 1, false)?[0])
+    }
+
+    pub fn write_u8(&mut self, addr: u32, v: u8) -> Result<(), MemFault> {
+        self.slot(addr, 1, true)?[0] = v;
+        Ok(())
+    }
+
+    pub fn read_u16(&mut self, addr: u32) -> Result<u16, MemFault> {
+        let s = self.slot(addr, 2, false)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    pub fn write_u16(&mut self, addr: u32, v: u16) -> Result<(), MemFault> {
+        let s = self.slot(addr, 2, true)?;
+        s.copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    /// Bulk helpers for the launcher / validation.
+    pub fn write_words(&mut self, addr: u32, words: &[u32]) -> Result<(), MemFault> {
+        for (i, w) in words.iter().enumerate() {
+            self.write_u32(addr + (i as u32) * 4, *w)?;
+        }
+        Ok(())
+    }
+
+    pub fn read_words(&mut self, addr: u32, n: usize) -> Result<Vec<u32>, MemFault> {
+        (0..n).map(|i| self.read_u32(addr + (i as u32) * 4)).collect()
+    }
+
+    /// True if the address is in the shared-memory scratchpad.
+    #[inline]
+    pub fn is_shared(addr: u32) -> bool {
+        (map::SHARED_BASE..map::SHARED_BASE + map::SHARED_SIZE).contains(&addr)
+    }
+}
+
+/// Set-associative LRU cache *timing* model.
+pub struct DCache {
+    cfg: CacheConfig,
+    /// tags[set * ways + way] = Some(tag)
+    tags: Vec<Option<u32>>,
+    /// LRU stamps, larger = more recent.
+    stamp: Vec<u64>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl DCache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        let n = cfg.sets * cfg.ways;
+        DCache { cfg, tags: vec![None; n], stamp: vec![0; n], tick: 0, hits: 0, misses: 0 }
+    }
+
+    /// Access `addr`; returns true on hit, updating tags/LRU.
+    pub fn access(&mut self, addr: u32) -> bool {
+        self.tick += 1;
+        let line = addr as usize / self.cfg.line;
+        let set = line % self.cfg.sets;
+        let tag = (line / self.cfg.sets) as u32;
+        let base = set * self.cfg.ways;
+        for w in 0..self.cfg.ways {
+            if self.tags[base + w] == Some(tag) {
+                self.stamp[base + w] = self.tick;
+                self.hits += 1;
+                return true;
+            }
+        }
+        // Miss: fill the LRU way.
+        self.misses += 1;
+        let victim = (0..self.cfg.ways).min_by_key(|&w| self.stamp[base + w]).unwrap();
+        self.tags[base + victim] = Some(tag);
+        self.stamp[base + victim] = self.tick;
+        false
+    }
+
+    /// Distinct cache lines touched by a set of lane addresses
+    /// (coalescing degree of one warp access).
+    pub fn lines_touched(&self, addrs: &[u32], mask: u32) -> usize {
+        let mut lines: Vec<usize> = addrs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| mask & (1 << i) != 0)
+            .map(|(_, &a)| a as usize / self.cfg.line)
+            .collect();
+        lines.sort_unstable();
+        lines.dedup();
+        lines.len()
+    }
+
+    pub fn flush(&mut self) {
+        self.tags.fill(None);
+        self.stamp.fill(0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_and_shared_rw() {
+        let mut m = Memory::new();
+        m.write_u32(map::GLOBAL_BASE + 16, 0xDEAD_BEEF).unwrap();
+        assert_eq!(m.read_u32(map::GLOBAL_BASE + 16).unwrap(), 0xDEAD_BEEF);
+        m.write_u32(map::SHARED_BASE, 7).unwrap();
+        assert_eq!(m.read_u32(map::SHARED_BASE).unwrap(), 7);
+        assert!(Memory::is_shared(map::SHARED_BASE + 4));
+        assert!(!Memory::is_shared(map::GLOBAL_BASE));
+    }
+
+    #[test]
+    fn out_of_range_faults() {
+        let mut m = Memory::new();
+        assert!(m.read_u32(0x42).is_err());
+        assert!(m.write_u32(map::GLOBAL_BASE + map::GLOBAL_SIZE, 1).is_err());
+        // straddling the end faults too
+        assert!(m.read_u32(map::GLOBAL_BASE + map::GLOBAL_SIZE - 2).is_err());
+    }
+
+    #[test]
+    fn byte_and_half_access() {
+        let mut m = Memory::new();
+        m.write_u32(map::GLOBAL_BASE, 0x0403_0201).unwrap();
+        assert_eq!(m.read_u8(map::GLOBAL_BASE + 2).unwrap(), 3);
+        assert_eq!(m.read_u16(map::GLOBAL_BASE + 2).unwrap(), 0x0403);
+        m.write_u8(map::GLOBAL_BASE + 1, 0xFF).unwrap();
+        assert_eq!(m.read_u32(map::GLOBAL_BASE).unwrap(), 0x0403_FF01);
+    }
+
+    #[test]
+    fn cache_hit_after_fill_and_lru_eviction() {
+        let cfg = CacheConfig { sets: 2, ways: 2, line: 16 };
+        let mut c = DCache::new(cfg);
+        assert!(!c.access(0)); // miss, fill set 0
+        assert!(c.access(4)); // same line -> hit
+        assert!(!c.access(32)); // set 0, different tag
+        assert!(!c.access(64)); // set 0 third tag -> evicts LRU (line 0)
+        assert!(!c.access(0)); // line 0 was evicted
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 4);
+    }
+
+    #[test]
+    fn coalescing_counts_distinct_lines() {
+        let c = DCache::new(CacheConfig { sets: 4, ways: 1, line: 64 });
+        // 8 lanes, stride 4 within one line.
+        let addrs: Vec<u32> = (0..8).map(|i| 0x100 + i * 4).collect();
+        assert_eq!(c.lines_touched(&addrs, 0xFF), 1);
+        // stride 64: every lane its own line; only 4 active lanes.
+        let addrs: Vec<u32> = (0..8).map(|i| 0x100 + i * 64).collect();
+        assert_eq!(c.lines_touched(&addrs, 0x0F), 4);
+        assert_eq!(c.lines_touched(&addrs, 0x00), 0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Per-core performance counters. IPC — the paper's Fig 5 metric — is
+//! retired warp-instructions / cycles.
+
+/// Counter block, reset per kernel launch.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub cycles: u64,
+    /// Retired warp-instructions.
+    pub instrs: u64,
+    /// Retired instructions × active lanes (thread-instructions).
+    pub thread_instrs: u64,
+
+    // Instruction mix.
+    pub alu_ops: u64,
+    pub mul_ops: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub warp_collectives: u64,
+    pub control_ops: u64,
+    pub barriers_hit: u64,
+
+    // Stall cycles (no instruction issued), by primary cause.
+    pub stall_scoreboard: u64,
+    pub stall_barrier: u64,
+    pub stall_pipeline: u64,
+    pub idle_cycles: u64,
+
+    // Memory system.
+    pub dcache_hits: u64,
+    pub dcache_misses: u64,
+    pub smem_accesses: u64,
+    pub mem_replays: u64,
+
+    // Crossbar (merged-warp collectives).
+    pub crossbar_hops: u64,
+}
+
+impl Metrics {
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.instrs as f64 / self.cycles as f64
+        }
+    }
+
+    /// Thread-level IPC (lanes retired per cycle).
+    pub fn tipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.thread_instrs as f64 / self.cycles as f64
+        }
+    }
+
+    pub fn dcache_hit_rate(&self) -> f64 {
+        let t = self.dcache_hits + self.dcache_misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.dcache_hits as f64 / t as f64
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "cycles={} instrs={} ipc={:.3} tipc={:.2} loads={} stores={} collectives={} \
+             d$hit={:.1}% stalls[sb={} bar={} pipe={} idle={}]",
+            self.cycles,
+            self.instrs,
+            self.ipc(),
+            self.tipc(),
+            self.loads,
+            self.stores,
+            self.warp_collectives,
+            self.dcache_hit_rate() * 100.0,
+            self.stall_scoreboard,
+            self.stall_barrier,
+            self.stall_pipeline,
+            self.idle_cycles,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ipc_zero_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.ipc(), 0.0);
+        assert_eq!(m.dcache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn ipc_computed() {
+        let m = Metrics { cycles: 200, instrs: 150, thread_instrs: 1200, ..Default::default() };
+        assert!((m.ipc() - 0.75).abs() < 1e-12);
+        assert!((m.tipc() - 6.0).abs() < 1e-12);
+        assert!(m.summary().contains("ipc=0.750"));
+    }
+}

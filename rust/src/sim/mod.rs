@@ -1,0 +1,101 @@
+//! SimX-like cycle-level simulator of a Vortex-style RISC-V GPU core.
+//!
+//! This is the evaluation substrate of the paper: a single-issue SIMT
+//! core with a warp scheduler, IPDOM divergence stack, scoreboard,
+//! banked register file (plus the paper's operand **crossbar** for
+//! merged warps), ALU / MUL / warp-collective / LSU functional units
+//! with configurable latencies, an L1 data cache over a flat global
+//! memory, a per-core shared-memory scratchpad, and warp barriers.
+//!
+//! The paper's HW solution (Fig 2, Table I) is the
+//! [`config::SimConfig::warp_hw`] feature: when enabled the decoder
+//! accepts `vx_vote`/`vx_shfl`/`vx_tile` and the scheduler maintains the
+//! cooperative-group tile table (Table II). When disabled (baseline
+//! Vortex), those instructions trap — kernels must use the SW solution
+//! (`crate::prt`).
+
+pub mod config;
+pub mod core;
+pub mod mem;
+pub mod metrics;
+pub mod regfile;
+pub mod scheduler;
+pub mod scoreboard;
+pub mod warp;
+
+pub mod exec {
+    //! Functional-unit semantics.
+    pub mod warp_ops;
+}
+
+pub use self::core::{Core, SimError};
+pub use config::{Latencies, SimConfig};
+pub use mem::{DCache, Memory};
+pub use metrics::Metrics;
+pub use warp::Warp;
+
+/// Memory map (documented in README §Architecture).
+pub mod map {
+    /// Kernel code is loaded here; warp 0 starts at this PC.
+    pub const CODE_BASE: u32 = 0x0000_1000;
+    /// Global memory (DRAM behind the L1 dcache).
+    pub const GLOBAL_BASE: u32 = 0x1000_0000;
+    /// Default global memory size (2 MiB — reallocated and zeroed per
+    /// launch, so sized to the workloads; raise if a kernel needs
+    /// more).
+    pub const GLOBAL_SIZE: u32 = 2 << 20;
+    /// Kernel-argument mailbox: the launcher writes argument words here.
+    pub const KARG_BASE: u32 = GLOBAL_BASE;
+    /// Per-core shared-memory scratchpad (low, fixed latency).
+    pub const SHARED_BASE: u32 = 0x2000_0000;
+    /// Shared memory size per core (64 KiB).
+    pub const SHARED_SIZE: u32 = 64 << 10;
+    /// Per-lane stack/local-memory frames (PR-transformation scratch
+    /// arrays land here). Like Vortex, thread stacks live in *global*
+    /// memory behind the dcache — this is what makes the SW solution's
+    /// emulation arrays cost memory traffic instead of registers (§V).
+    pub const STACK_BASE: u32 = GLOBAL_BASE + GLOBAL_SIZE - STACK_SIZE;
+    /// Total stack region (1 MiB).
+    pub const STACK_SIZE: u32 = 1 << 20;
+}
+
+/// A GPU: one or more cores over a shared global memory.
+pub struct Gpu {
+    pub cores: Vec<Core>,
+    pub mem: Memory,
+}
+
+impl Gpu {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let mem = Memory::new();
+        let cores = (0..cfg.num_cores).map(|cid| Core::new(cfg.clone(), cid as u32)).collect();
+        Gpu { cores, mem }
+    }
+
+    /// Load a program (shared by all cores) at [`map::CODE_BASE`].
+    pub fn load_program(&mut self, prog: &[crate::isa::Instr]) {
+        for c in &mut self.cores {
+            c.load_program(prog);
+        }
+    }
+
+    /// Advance one cycle on every core. Returns true while any core is
+    /// still running.
+    pub fn step(&mut self) -> Result<bool, SimError> {
+        let mut busy = false;
+        for c in &mut self.cores {
+            busy |= c.step(&mut self.mem)?;
+        }
+        Ok(busy)
+    }
+
+    /// Run to completion (all warps halted) with a cycle cap.
+    pub fn run(&mut self, max_cycles: u64) -> Result<(), SimError> {
+        while self.step()? {
+            if self.cores[0].metrics.cycles > max_cycles {
+                return Err(SimError::Timeout { cycles: max_cycles });
+            }
+        }
+        Ok(())
+    }
+}

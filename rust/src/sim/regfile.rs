@@ -1,0 +1,122 @@
+//! Banked SIMT register file.
+//!
+//! Vortex gives each warp its own register bank; operands for warp `w`
+//! come only from bank `w`, selected through a multiplexer. The paper's
+//! cooperative-group merge (`vx_tile`) makes a *merged* warp span
+//! several banks, which is why §III replaces the multiplexer with a
+//! **crossbar** "to ensure data availability at the execution stage".
+//! The timing cost of crossing banks is charged in the core
+//! (`Latencies::crossbar_hop`); this module provides the storage and
+//! counts cross-bank reads so the ablation bench can report them.
+
+/// Register file: `nw` banks × 32 architectural registers × `nt` lanes.
+pub struct RegFile {
+    nt: usize,
+    data: Vec<u32>, // [warp][reg][lane]
+    /// Reads served from a bank other than the issuing warp's own
+    /// (possible only via the crossbar).
+    pub cross_bank_reads: u64,
+}
+
+impl RegFile {
+    pub fn new(nw: usize, nt: usize) -> Self {
+        RegFile { nt, data: vec![0; nw * 32 * nt], cross_bank_reads: 0 }
+    }
+
+    #[inline]
+    fn idx(&self, warp: usize, reg: u8, lane: usize) -> usize {
+        (warp * 32 + reg as usize) * self.nt + lane
+    }
+
+    /// Read one lane of a register.
+    #[inline]
+    pub fn read(&self, warp: usize, reg: u8, lane: usize) -> u32 {
+        if reg == 0 {
+            return 0;
+        }
+        self.data[self.idx(warp, reg, lane)]
+    }
+
+    /// Read a register across all lanes into `out[0..nt]`.
+    #[inline]
+    pub fn read_all(&self, warp: usize, reg: u8, out: &mut [u32]) {
+        if reg == 0 {
+            out[..self.nt].fill(0);
+            return;
+        }
+        let base = self.idx(warp, reg, 0);
+        out[..self.nt].copy_from_slice(&self.data[base..base + self.nt]);
+    }
+
+    /// Read lane `lane` of register `reg` in *another* warp's bank —
+    /// a crossbar access (merged-warp collectives).
+    #[inline]
+    pub fn read_cross(&mut self, warp: usize, reg: u8, lane: usize) -> u32 {
+        self.cross_bank_reads += 1;
+        self.read(warp, reg, lane)
+    }
+
+    /// Write one lane (x0 ignored).
+    #[inline]
+    pub fn write(&mut self, warp: usize, reg: u8, lane: usize, v: u32) {
+        if reg == 0 {
+            return;
+        }
+        let i = self.idx(warp, reg, lane);
+        self.data[i] = v;
+    }
+
+    /// Write lanes selected by `mask`.
+    #[inline]
+    pub fn write_masked(&mut self, warp: usize, reg: u8, mask: u32, vals: &[u32]) {
+        if reg == 0 {
+            return;
+        }
+        let base = self.idx(warp, reg, 0);
+        for lane in 0..self.nt {
+            if mask & (1 << lane) != 0 {
+                self.data[base + lane] = vals[lane];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn x0_is_hardwired_zero() {
+        let mut rf = RegFile::new(4, 8);
+        rf.write(1, 0, 3, 42);
+        assert_eq!(rf.read(1, 0, 3), 0);
+    }
+
+    #[test]
+    fn banks_are_independent() {
+        let mut rf = RegFile::new(4, 8);
+        rf.write(0, 5, 2, 7);
+        rf.write(1, 5, 2, 9);
+        assert_eq!(rf.read(0, 5, 2), 7);
+        assert_eq!(rf.read(1, 5, 2), 9);
+    }
+
+    #[test]
+    fn masked_write_touches_only_active_lanes() {
+        let mut rf = RegFile::new(1, 8);
+        let vals: Vec<u32> = (0..8).map(|i| 100 + i).collect();
+        rf.write_masked(0, 7, 0b1010_1010, &vals);
+        for lane in 0..8 {
+            let want = if lane % 2 == 1 { 100 + lane as u32 } else { 0 };
+            assert_eq!(rf.read(0, 7, lane), want);
+        }
+    }
+
+    #[test]
+    fn cross_bank_reads_counted() {
+        let mut rf = RegFile::new(2, 8);
+        rf.write(1, 3, 0, 5);
+        assert_eq!(rf.read_cross(1, 3, 0), 5);
+        assert_eq!(rf.cross_bank_reads, 1);
+    }
+}

@@ -1,0 +1,202 @@
+//! Warp scheduler: ready-warp selection policy plus the paper's
+//! cooperative-group **tile table** (§III, Table II).
+//!
+//! `vx_tile(group_mask, size)` reshapes the warp structure: the core
+//! starts in the default configuration and dynamically merges warps
+//! into larger groups (or splits them into sub-warp tiles). The tile
+//! table records the current granularity; the execute stage consults it
+//! to segment collectives and to decide when the register-bank crossbar
+//! must be traversed.
+
+use super::config::SchedPolicy;
+
+/// Current cooperative-group configuration (Table II).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileConfig {
+    /// Group-leader mask over the 8 sub-warp slots (Table II format).
+    pub group_mask: u32,
+    /// Threads per group.
+    pub size: u32,
+}
+
+impl TileConfig {
+    /// The default ("No groups") row of Table II: one group spanning
+    /// all hardware threads. (Used by the Table II printer; the live
+    /// scheduler default is [`TileConfig::warp_default`].)
+    pub fn default_for(hw_threads: u32) -> Self {
+        TileConfig { group_mask: 0b1000_0000, size: hw_threads }
+    }
+
+    /// Reset state between cooperative regions: no groups configured,
+    /// collectives are scoped to the natural hardware warp (the plain
+    /// warp-level-function semantics of §II-B).
+    pub fn warp_default(nt: u32) -> Self {
+        TileConfig { group_mask: 0, size: nt }
+    }
+
+    /// Build the Table II row for a given group size. The mask has one
+    /// bit per sub-warp slot (8 slots, granularity `hw_threads / 8`);
+    /// bit 7 is slot 0 (the table is written MSB-first).
+    pub fn for_size(hw_threads: u32, size: u32) -> Result<Self, String> {
+        if !size.is_power_of_two() || size == 0 || size > hw_threads {
+            return Err(format!("tile size {size} must be a power of two <= {hw_threads}"));
+        }
+        let gran = (hw_threads / 8).max(1);
+        if size < gran {
+            return Err(format!("tile size {size} below sub-warp granularity {gran}"));
+        }
+        let groups = hw_threads / size;
+        let stride = (size / gran).max(1);
+        let mut mask = 0u32;
+        for g in 0..groups {
+            mask |= 0b1000_0000 >> (g * stride);
+        }
+        Ok(TileConfig { group_mask: mask, size })
+    }
+
+    /// Number of groups implied by the mask.
+    pub fn num_groups(&self) -> u32 {
+        self.group_mask.count_ones()
+    }
+}
+
+/// Scheduler state: policy cursor + tile table.
+pub struct Scheduler {
+    pub policy: SchedPolicy,
+    /// Round-robin cursor (last issued warp + 1).
+    rr: usize,
+    /// Greedy cursor for GTO.
+    last: usize,
+    pub tile: TileConfig,
+    hw_threads: u32,
+    nt: u32,
+}
+
+impl Scheduler {
+    pub fn new(policy: SchedPolicy, nw: usize, nt: usize) -> Self {
+        let hw = (nw * nt) as u32;
+        Scheduler {
+            policy,
+            rr: 0,
+            last: 0,
+            tile: TileConfig::warp_default(nt as u32),
+            hw_threads: hw,
+            nt: nt as u32,
+        }
+    }
+
+    /// Iteration order of warps to try this cycle.
+    pub fn order(&self, nw: usize) -> impl Iterator<Item = usize> {
+        let start = self.start(nw);
+        (0..nw).map(move |i| (start + i) % nw)
+    }
+
+    /// First warp to try this cycle (allocation-free variant used by
+    /// the core's issue loop).
+    #[inline]
+    pub fn start(&self, _nw: usize) -> usize {
+        match self.policy {
+            SchedPolicy::RoundRobin => self.rr,
+            SchedPolicy::Gto => self.last,
+        }
+    }
+
+    /// Record that warp `w` issued this cycle.
+    pub fn issued(&mut self, w: usize, nw: usize) {
+        self.last = w;
+        self.rr = (w + 1) % nw;
+    }
+
+    /// Apply `vx_tile`. Returns an error string for invalid configs
+    /// (raised as [`crate::sim::SimError::IllegalInstr`] by the core).
+    pub fn set_tile(&mut self, group_mask: u32, size: u32) -> Result<(), String> {
+        if !size.is_power_of_two() || size == 0 || size > self.hw_threads {
+            return Err(format!(
+                "vx_tile size {size} must be a power of two <= {}",
+                self.hw_threads
+            ));
+        }
+        self.tile = TileConfig { group_mask: group_mask & 0xFF, size };
+        Ok(())
+    }
+
+    /// Reset to the default configuration (end of cooperative region).
+    pub fn reset_tile(&mut self) {
+        self.tile = TileConfig::warp_default(self.nt);
+    }
+}
+
+/// The four Table II rows for a 32-thread core (used by the table
+/// printer and tests).
+pub fn table2_rows(hw_threads: u32) -> Vec<(String, TileConfig)> {
+    let mut rows = vec![(
+        "No groups (default)".to_string(),
+        TileConfig::default_for(hw_threads),
+    )];
+    let mut size = hw_threads / 2;
+    while size >= hw_threads / 8 {
+        let cfg = TileConfig::for_size(hw_threads, size).unwrap();
+        rows.push((format!("{} groups - {} threads", hw_threads / size, size), cfg));
+        size /= 2;
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_masks_match_paper() {
+        // Table II, hardware thread size 32.
+        assert_eq!(TileConfig::default_for(32).group_mask, 0b1000_0000);
+        assert_eq!(TileConfig::for_size(32, 16).unwrap().group_mask, 0b1000_1000);
+        assert_eq!(TileConfig::for_size(32, 8).unwrap().group_mask, 0b1010_1010);
+        assert_eq!(TileConfig::for_size(32, 4).unwrap().group_mask, 0b1111_1111);
+    }
+
+    #[test]
+    fn num_groups() {
+        assert_eq!(TileConfig::for_size(32, 8).unwrap().num_groups(), 4);
+        assert_eq!(TileConfig::default_for(32).num_groups(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_sizes() {
+        assert!(TileConfig::for_size(32, 3).is_err());
+        assert!(TileConfig::for_size(32, 64).is_err());
+        assert!(TileConfig::for_size(32, 2).is_err(), "below granularity 4");
+    }
+
+    #[test]
+    fn rr_order_rotates() {
+        let mut s = Scheduler::new(SchedPolicy::RoundRobin, 4, 8);
+        assert_eq!(s.order(4).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        s.issued(1, 4);
+        assert_eq!(s.order(4).collect::<Vec<_>>(), vec![2, 3, 0, 1]);
+    }
+
+    #[test]
+    fn gto_stays_on_last_warp() {
+        let mut s = Scheduler::new(SchedPolicy::Gto, 4, 8);
+        s.issued(2, 4);
+        assert_eq!(s.order(4).next(), Some(2));
+    }
+
+    #[test]
+    fn set_tile_validates() {
+        let mut s = Scheduler::new(SchedPolicy::RoundRobin, 4, 8);
+        assert!(s.set_tile(0b1111_1111, 4).is_ok());
+        assert_eq!(s.tile.size, 4);
+        assert!(s.set_tile(0, 5).is_err());
+        s.reset_tile();
+        assert_eq!(s.tile.size, 8, "reset is warp-scoped (NT)");
+    }
+
+    #[test]
+    fn table2_rows_count() {
+        let rows = table2_rows(32);
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[3].1.size, 4);
+    }
+}

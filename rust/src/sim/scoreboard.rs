@@ -1,0 +1,78 @@
+//! Per-warp scoreboard: one pending bit per architectural register.
+//! In-order issue blocks on RAW/WAW against in-flight writers, exactly
+//! like Vortex's issue stage.
+
+/// Scoreboard over `nw` warps × 32 registers.
+pub struct Scoreboard {
+    pending: Vec<u32>, // bitmask per warp
+}
+
+impl Scoreboard {
+    pub fn new(nw: usize) -> Self {
+        Scoreboard { pending: vec![0; nw] }
+    }
+
+    /// True if `reg` has an in-flight writer.
+    #[inline]
+    pub fn busy(&self, warp: usize, reg: u8) -> bool {
+        reg != 0 && self.pending[warp] & (1 << reg) != 0
+    }
+
+    /// True if the instruction's sources and destination are all free.
+    #[inline]
+    pub fn can_issue(&self, warp: usize, srcs: &[Option<u8>; 3], rd: Option<u8>) -> bool {
+        let p = self.pending[warp];
+        let chk = |r: Option<u8>| r.map_or(false, |r| r != 0 && p & (1 << r) != 0);
+        !(chk(srcs[0]) || chk(srcs[1]) || chk(srcs[2]) || chk(rd))
+    }
+
+    /// Mark a destination pending at issue.
+    #[inline]
+    pub fn set_pending(&mut self, warp: usize, reg: u8) {
+        if reg != 0 {
+            self.pending[warp] |= 1 << reg;
+        }
+    }
+
+    /// Clear at writeback.
+    #[inline]
+    pub fn clear(&mut self, warp: usize, reg: u8) {
+        self.pending[warp] &= !(1 << reg);
+    }
+
+    /// Any register of this warp still pending?
+    #[inline]
+    pub fn warp_idle(&self, warp: usize) -> bool {
+        self.pending[warp] == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_and_waw_block_issue() {
+        let mut sb = Scoreboard::new(2);
+        sb.set_pending(0, 5);
+        assert!(sb.busy(0, 5));
+        assert!(!sb.busy(1, 5), "scoreboards are per-warp");
+        // RAW on rs1
+        assert!(!sb.can_issue(0, &[Some(5), None, None], Some(6)));
+        // WAW on rd
+        assert!(!sb.can_issue(0, &[Some(1), None, None], Some(5)));
+        // independent
+        assert!(sb.can_issue(0, &[Some(1), Some(2), None], Some(3)));
+        sb.clear(0, 5);
+        assert!(sb.can_issue(0, &[Some(5), None, None], Some(5)));
+    }
+
+    #[test]
+    fn x0_never_blocks() {
+        let mut sb = Scoreboard::new(1);
+        sb.set_pending(0, 0);
+        assert!(!sb.busy(0, 0));
+        assert!(sb.can_issue(0, &[Some(0), Some(0), Some(0)], Some(0)));
+        assert!(sb.warp_idle(0));
+    }
+}

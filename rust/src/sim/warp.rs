@@ -1,0 +1,192 @@
+//! Per-warp architectural state: PC, thread mask, the IPDOM divergence
+//! stack driven by `vx_split`/`vx_join`, and barrier/halt status.
+
+/// Reconvergence-stack entry pushed by `vx_split`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IpdomEntry {
+    /// Mask to restore at the final `vx_join`.
+    pub orig_mask: u32,
+    /// Deferred (else-path) threads, 0 if the split was non-divergent.
+    pub else_mask: u32,
+    /// PC at which the else threads resume (instruction after the
+    /// split).
+    pub else_pc: u32,
+    /// False while the then-side runs; true once the else side has been
+    /// activated.
+    pub else_taken: bool,
+}
+
+/// Warp run-state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WarpState {
+    /// Never started (waiting for `vx_wspawn`) or shut down by
+    /// `vx_tmc zero` / `ecall`.
+    Inactive,
+    /// Runnable.
+    Active,
+    /// Blocked at barrier `id` until enough warps arrive.
+    Barrier { id: u32 },
+}
+
+/// One hardware warp.
+#[derive(Clone, Debug)]
+pub struct Warp {
+    pub pc: u32,
+    /// Active-thread mask (bit i = lane i), width = NT.
+    pub tmask: u32,
+    pub state: WarpState,
+    pub stack: Vec<IpdomEntry>,
+}
+
+impl Warp {
+    pub fn new(nt: usize) -> Self {
+        Warp { pc: 0, tmask: full_mask(nt), state: WarpState::Inactive, stack: Vec::new() }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.state == WarpState::Active
+    }
+
+    /// Index of the first active lane (warp-uniform operand reads use
+    /// it, mirroring Vortex's "thread 0 of the warp" convention).
+    pub fn first_lane(&self) -> usize {
+        debug_assert!(self.tmask != 0);
+        self.tmask.trailing_zeros() as usize
+    }
+
+    /// Apply `vx_split` with the given per-lane taken mask. Always
+    /// pushes an entry (degenerate when non-divergent) and returns the
+    /// token (stack depth before push). Execution continues on the
+    /// then-mask unless it is empty, in which case the else side runs
+    /// first and the entry records nothing to defer.
+    pub fn split(&mut self, taken: u32) -> u32 {
+        let then_mask = self.tmask & taken;
+        let else_mask = self.tmask & !taken;
+        let token = self.stack.len() as u32;
+        if then_mask == 0 {
+            // Nothing takes the then side: run else immediately, no
+            // deferral.
+            self.stack.push(IpdomEntry {
+                orig_mask: self.tmask,
+                else_mask: 0,
+                else_pc: 0,
+                else_taken: true,
+            });
+            // tmask unchanged (= else_mask).
+        } else {
+            self.stack.push(IpdomEntry {
+                orig_mask: self.tmask,
+                else_mask,
+                else_pc: self.pc.wrapping_add(4),
+                else_taken: else_mask == 0,
+            });
+            self.tmask = then_mask;
+        }
+        token
+    }
+
+    /// Apply `vx_join`. Returns the next PC (either the deferred else
+    /// path or fall-through after reconvergence).
+    pub fn join(&mut self) -> u32 {
+        let top = self.stack.last_mut().expect("vx_join with empty IPDOM stack");
+        if !top.else_taken && top.else_mask != 0 {
+            top.else_taken = true;
+            self.tmask = top.else_mask;
+            top.else_mask = 0;
+            top.else_pc
+        } else {
+            let e = self.stack.pop().unwrap();
+            self.tmask = e.orig_mask;
+            self.pc.wrapping_add(4)
+        }
+    }
+}
+
+/// All-ones mask of width `nt`.
+pub fn full_mask(nt: usize) -> u32 {
+    if nt >= 32 {
+        u32::MAX
+    } else {
+        (1u32 << nt) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn active_warp(nt: usize) -> Warp {
+        let mut w = Warp::new(nt);
+        w.state = WarpState::Active;
+        w.pc = 0x1000;
+        w
+    }
+
+    #[test]
+    fn split_then_else_join_sequence() {
+        let mut w = active_warp(8);
+        // Lanes 0..4 take the then side.
+        w.split(0x0F);
+        assert_eq!(w.tmask, 0x0F);
+        // First join: switch to else side at pc+4 of the split.
+        w.pc = 0x1010;
+        let next = w.join();
+        assert_eq!(next, 0x1004);
+        assert_eq!(w.tmask, 0xF0);
+        // Second join: reconverge.
+        w.pc = 0x1010;
+        let next = w.join();
+        assert_eq!(next, 0x1014);
+        assert_eq!(w.tmask, 0xFF);
+        assert!(w.stack.is_empty());
+    }
+
+    #[test]
+    fn non_divergent_split_is_degenerate() {
+        let mut w = active_warp(8);
+        w.split(0xFF); // everyone takes it
+        assert_eq!(w.tmask, 0xFF);
+        let next = w.join();
+        assert_eq!(next, w.pc.wrapping_add(4));
+        assert_eq!(w.tmask, 0xFF);
+        assert!(w.stack.is_empty());
+    }
+
+    #[test]
+    fn empty_then_side_runs_else_directly() {
+        let mut w = active_warp(8);
+        w.split(0x00);
+        assert_eq!(w.tmask, 0xFF, "else side keeps running");
+        let next = w.join();
+        assert_eq!(next, w.pc.wrapping_add(4));
+        assert!(w.stack.is_empty());
+    }
+
+    #[test]
+    fn nested_splits() {
+        let mut w = active_warp(8);
+        w.split(0x3F); // outer: then = 0x3F, else = 0xC0
+        w.pc = 0x1004;
+        w.split(0x03); // inner: then = 0x03, else = 0x3C
+        assert_eq!(w.tmask, 0x03);
+        w.pc = 0x100C;
+        assert_eq!(w.join(), 0x1008); // inner else resumes after inner split
+        assert_eq!(w.tmask, 0x3C);
+        w.pc = 0x100C;
+        assert_eq!(w.join(), 0x1010); // inner reconverges
+        assert_eq!(w.tmask, 0x3F);
+        w.pc = 0x1014;
+        assert_eq!(w.join(), 0x1004); // outer else
+        assert_eq!(w.tmask, 0xC0);
+        w.pc = 0x1014;
+        assert_eq!(w.join(), 0x1018);
+        assert_eq!(w.tmask, 0xFF);
+    }
+
+    #[test]
+    fn full_mask_widths() {
+        assert_eq!(full_mask(8), 0xFF);
+        assert_eq!(full_mask(32), u32::MAX);
+        assert_eq!(full_mask(1), 1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Shared utilities: deterministic PRNG, in-house property testing,
+//! statistics, and plain-text table rendering (used by the table/figure
+//! regeneration harness).
+
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::XorShift;

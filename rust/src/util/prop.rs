@@ -1,0 +1,58 @@
+//! Minimal in-house property-testing driver (proptest is not vendored in
+//! this offline environment; see DESIGN.md §2).
+//!
+//! `run_prop` generates `cases` random inputs from a generator closure
+//! and checks a property, reporting the seed and case index on failure so
+//! any counterexample is exactly reproducible.
+
+use super::rng::XorShift;
+
+/// Run `cases` property checks. `gen` builds an input from the PRNG;
+/// `prop` returns `Err(reason)` on violation.
+pub fn run_prop<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut XorShift) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = XorShift::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed (seed={seed}, case={case}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Assert-eq helper that produces a `Result` for use inside properties.
+pub fn check_eq<A: PartialEq + std::fmt::Debug>(a: A, b: A, what: &str) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a:?} != {b:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        run_prop("trivial", 1, 50, |r| r.next_u32(), |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        run_prop("fails", 2, 10, |r| r.below(10), |&v| check_eq(v < 10, false, "v"));
+    }
+}

@@ -1,0 +1,90 @@
+//! End-to-end integration: simulator (both solutions) vs the PJRT
+//! golden models. Skips gracefully when `make artifacts` has not run
+//! (e.g. a bare `cargo test` in CI without the python toolchain).
+
+use vortex_warp::coordinator::dispatch::{dispatch, Solution};
+use vortex_warp::kernels;
+use vortex_warp::prt::kir::ParamDir;
+use vortex_warp::runtime::Runtime;
+use vortex_warp::sim::SimConfig;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("vote.hlo.txt").exists().then_some(dir)
+}
+
+#[test]
+fn every_benchmark_matches_pjrt_golden_model() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return;
+    };
+    let mut rt = Runtime::new(&dir).expect("PJRT runtime");
+    let base = SimConfig::paper();
+    for b in kernels::all() {
+        let hw = dispatch(Solution::Hw, &b.kernel, &base, &b.inputs)
+            .unwrap_or_else(|e| panic!("{}: HW: {e}", b.name));
+        let sw = dispatch(Solution::Sw, &b.kernel, &base, &b.inputs)
+            .unwrap_or_else(|e| panic!("{}: SW: {e}", b.name));
+        let ins: Vec<&[i32]> = b
+            .kernel
+            .params
+            .iter()
+            .filter(|p| p.dir != ParamDir::Out)
+            .map(|p| b.inputs.get(p.name))
+            .collect();
+        let golden = rt
+            .run_i32(b.name, &ins)
+            .unwrap_or_else(|e| panic!("{}: golden: {e}", b.name));
+        for (i, name) in b.outputs.iter().enumerate() {
+            assert_eq!(
+                golden[i],
+                hw.env.get(name),
+                "{}::{name}: HW sim vs PJRT golden",
+                b.name
+            );
+            assert_eq!(
+                golden[i],
+                sw.env.get(name),
+                "{}::{name}: SW sim vs PJRT golden",
+                b.name
+            );
+        }
+    }
+}
+
+#[test]
+fn fig5_shape_holds() {
+    // The headline claims, as assertions: (a) collective-heavy kernels
+    // see multi-x HW speedup; (b) SW wins mse_forward; (c) matmul's gap
+    // is modest; (d) geomean is in the paper's regime.
+    use vortex_warp::bench_harness::fig5;
+    let rows = fig5::run_all(&SimConfig::paper()).expect("fig5");
+    let get = |n: &str| rows.iter().find(|r| r.name == n).unwrap().speedup();
+    assert!(get("shuffle") > 2.0, "shuffle {:.2}", get("shuffle"));
+    assert!(get("vote") > 2.0, "vote {:.2}", get("vote"));
+    assert!(get("reduce") > 2.0, "reduce {:.2}", get("reduce"));
+    assert!(get("reduce_tile") > 2.0, "reduce_tile {:.2}", get("reduce_tile"));
+    assert!(get("mse_forward") < 1.0, "SW must win mse: {:.2}", get("mse_forward"));
+    let mm = get("matmul");
+    assert!((1.0..2.0).contains(&mm), "matmul modest HW win: {mm:.2}");
+    let g = fig5::geomean_speedup(&rows);
+    assert!((1.5..3.5).contains(&g), "geomean {g:.2} out of the paper regime");
+}
+
+#[test]
+fn nt_nw_reconfiguration_still_correct() {
+    // Vortex's selling point is reconfigurability: the benchmarks must
+    // stay correct under different NT/NW splits of the 32-thread core.
+    for (nt, nw) in [(4usize, 8usize), (16, 2), (32, 1)] {
+        let mut cfg = SimConfig::paper();
+        cfg.nt = nt;
+        cfg.nw = nw;
+        // Warp-size-sensitive kernels assume warp=8, so reconfigure
+        // only warp-free ones here.
+        let b = kernels::by_name("matmul").unwrap();
+        let r = dispatch(Solution::Hw, &b.kernel, &cfg, &b.inputs)
+            .unwrap_or_else(|e| panic!("nt={nt} nw={nw}: {e}"));
+        b.check(&r.env).unwrap_or_else(|e| panic!("nt={nt} nw={nw}: {e}"));
+    }
+}

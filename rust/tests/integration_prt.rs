@@ -1,0 +1,265 @@
+//! Differential integration tests: for each kernel, three executors
+//! must agree on every output array —
+//!   1. the SPMD interpreter (semantic oracle),
+//!   2. the HW path (SIMT codegen → extended core),
+//!   3. the SW path (PR transformation → scalar codegen → baseline
+//!      core).
+
+use vortex_warp::coordinator::{run_hw, run_sw};
+use vortex_warp::prt::interp::{self, Env};
+use vortex_warp::prt::kir::Expr as E;
+use vortex_warp::prt::kir::*;
+use vortex_warp::sim::SimConfig;
+
+fn check_all_agree(k: &Kernel, inputs: &Env) {
+    let oracle = interp::run(k, inputs).expect("interpreter");
+    let hw = run_hw(k, &SimConfig::paper(), inputs).expect("HW path");
+    let sw = run_sw(k, &SimConfig::baseline(), inputs).expect("SW path");
+    for p in &k.params {
+        if p.dir == ParamDir::In {
+            continue;
+        }
+        assert_eq!(
+            oracle.get(p.name),
+            hw.env.get(p.name),
+            "HW path diverges from oracle on `{}` for kernel `{}`",
+            p.name,
+            k.name
+        );
+        assert_eq!(
+            oracle.get(p.name),
+            sw.env.get(p.name),
+            "SW path diverges from oracle on `{}` for kernel `{}`",
+            p.name,
+            k.name
+        );
+    }
+}
+
+fn gid() -> Expr {
+    E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx)
+}
+
+#[test]
+fn saxpy_like_elementwise() {
+    let n = 96;
+    let k = Kernel::new("saxpy", 3, 32, 8)
+        .param("x", n, ParamDir::In)
+        .param("y", n, ParamDir::In)
+        .param("out", n, ParamDir::Out)
+        .body(vec![Stmt::Store(
+            "out",
+            gid(),
+            E::add(E::mul(E::c(3), E::load("x", gid())), E::load("y", gid())),
+        )]);
+    let inputs = Env::default()
+        .with("x", (0..n as i32).collect())
+        .with("y", (0..n as i32).map(|v| v * 7).collect());
+    check_all_agree(&k, &inputs);
+}
+
+#[test]
+fn divergent_if_else() {
+    let k = Kernel::new("diverge", 2, 32, 8)
+        .param("in", 64, ParamDir::In)
+        .param("out", 64, ParamDir::Out)
+        .body(vec![
+            Stmt::Assign("v", E::load("in", gid())),
+            Stmt::If(
+                E::b(BinOp::Lt, E::l("v"), E::c(50)),
+                vec![Stmt::Assign("r", E::mul(E::l("v"), E::c(2)))],
+                vec![Stmt::Assign("r", E::b(BinOp::Sub, E::l("v"), E::c(50)))],
+            ),
+            Stmt::Store("out", gid(), E::l("r")),
+        ]);
+    let inputs = Env::default().with("in", (0..64).map(|i| i * 3 % 101).collect());
+    check_all_agree(&k, &inputs);
+}
+
+#[test]
+fn all_warp_functions_one_kernel() {
+    let k = Kernel::new("warpfns", 1, 32, 8)
+        .param("in", 32, ParamDir::In)
+        .param("any_o", 32, ParamDir::Out)
+        .param("all_o", 32, ParamDir::Out)
+        .param("bal_o", 32, ParamDir::Out)
+        .param("shd_o", 32, ParamDir::Out)
+        .body(vec![
+            Stmt::Assign("p", E::b(BinOp::Rem, E::load("in", E::ThreadIdx), E::c(2))),
+            Stmt::Assign("a", E::warp(WarpFn::VoteAny, E::l("p"), 0)),
+            Stmt::Assign("b", E::warp(WarpFn::VoteAll, E::l("p"), 0)),
+            Stmt::Assign("c", E::warp(WarpFn::Ballot, E::l("p"), 0)),
+            Stmt::Assign("x", E::load("in", E::ThreadIdx)),
+            Stmt::Assign("d", E::warp(WarpFn::ShflDown, E::l("x"), 2)),
+            Stmt::Store("any_o", E::ThreadIdx, E::l("a")),
+            Stmt::Store("all_o", E::ThreadIdx, E::l("b")),
+            Stmt::Store("bal_o", E::ThreadIdx, E::l("c")),
+            Stmt::Store("shd_o", E::ThreadIdx, E::l("d")),
+        ]);
+    let inputs = Env::default().with("in", (0..32).map(|i| i * 13 % 7).collect());
+    check_all_agree(&k, &inputs);
+}
+
+#[test]
+fn tiled_partition_with_vote_and_rank() {
+    let k = Kernel::new("tiled", 1, 32, 8)
+        .param("in", 32, ParamDir::In)
+        .param("out", 32, ParamDir::Out)
+        .param("rank_o", 32, ParamDir::Out)
+        .body(vec![
+            Stmt::TilePartition(4),
+            Stmt::Assign("p", E::b(BinOp::Gt, E::load("in", E::ThreadIdx), E::c(15))),
+            Stmt::Assign("r", E::warp(WarpFn::Ballot, E::l("p"), 0)),
+            Stmt::Store("out", E::ThreadIdx, E::l("r")),
+            Stmt::Store(
+                "rank_o",
+                E::ThreadIdx,
+                E::add(E::mul(E::TileGroup, E::c(100)), E::TileRank),
+            ),
+        ]);
+    let inputs = Env::default().with("in", (0..32).collect());
+    check_all_agree(&k, &inputs);
+}
+
+#[test]
+fn shared_memory_staged_reverse() {
+    let k = Kernel::new("rev", 2, 32, 8)
+        .param("in", 64, ParamDir::In)
+        .param("out", 64, ParamDir::Out)
+        .shared_arr("buf", 32)
+        .body(vec![
+            Stmt::Store("buf", E::ThreadIdx, E::load("in", gid())),
+            Stmt::Sync,
+            Stmt::Store(
+                "out",
+                gid(),
+                E::load("buf", E::b(BinOp::Sub, E::c(31), E::ThreadIdx)),
+            ),
+        ]);
+    let inputs = Env::default().with("in", (100..164).collect());
+    check_all_agree(&k, &inputs);
+}
+
+#[test]
+fn fig3_kernel_from_paper() {
+    // The paper's running example (Fig 3a), integer-ized.
+    let k = Kernel::new("fig3", 1, 32, 8)
+        .param("out", 32, ParamDir::Out)
+        .body(vec![
+            Stmt::TilePartition(4),
+            Stmt::Assign("groupId", E::b(BinOp::Div, E::ThreadIdx, E::c(4))),
+            Stmt::If(
+                E::b(BinOp::Eq, E::l("groupId"), E::c(0)),
+                vec![
+                    Stmt::Assign("gtid", E::TileRank),
+                    Stmt::Assign("x", E::b(BinOp::Rem, E::l("gtid"), E::c(2))),
+                    Stmt::TileSync,
+                    Stmt::Assign("y", E::warp(WarpFn::VoteAny, E::l("x"), 0)),
+                ],
+                vec![],
+            ),
+            Stmt::Sync,
+            Stmt::Store("out", E::ThreadIdx, E::l("y")),
+        ]);
+    check_all_agree(&k, &Env::default());
+}
+
+#[test]
+fn per_thread_loop_accumulation() {
+    let k = Kernel::new("loops", 2, 32, 8)
+        .param("in", 64, ParamDir::In)
+        .param("out", 64, ParamDir::Out)
+        .body(vec![
+            Stmt::Assign("acc", E::c(0)),
+            Stmt::For(
+                "i",
+                E::c(0),
+                E::c(5),
+                vec![Stmt::Assign(
+                    "acc",
+                    E::add(E::l("acc"), E::mul(E::load("in", gid()), E::l("i"))),
+                )],
+            ),
+            Stmt::Store("out", gid(), E::l("acc")),
+        ]);
+    let inputs = Env::default().with("in", (0..64).map(|i| i % 9).collect());
+    check_all_agree(&k, &inputs);
+}
+
+#[test]
+fn shuffle_xor_butterfly_reduction() {
+    // Classic butterfly: after log2(8) xor-shuffles every lane holds
+    // the warp sum.
+    let k = Kernel::new("bfly", 1, 32, 8)
+        .param("in", 32, ParamDir::In)
+        .param("out", 32, ParamDir::Out)
+        .body(vec![
+            Stmt::Assign("x", E::load("in", E::ThreadIdx)),
+            Stmt::Assign("t", E::warp(WarpFn::ShflXor, E::l("x"), 4)),
+            Stmt::Assign("x", E::add(E::l("x"), E::l("t"))),
+            Stmt::Assign("t", E::warp(WarpFn::ShflXor, E::l("x"), 2)),
+            Stmt::Assign("x", E::add(E::l("x"), E::l("t"))),
+            Stmt::Assign("t", E::warp(WarpFn::ShflXor, E::l("x"), 1)),
+            Stmt::Assign("x", E::add(E::l("x"), E::l("t"))),
+            Stmt::Store("out", E::ThreadIdx, E::l("x")),
+        ]);
+    let inputs = Env::default().with("in", (1..33).collect());
+    check_all_agree(&k, &inputs);
+}
+
+#[test]
+fn grid_larger_than_lane_count() {
+    // 40 blocks > 32 lanes: exercises the SW path's grid-strided tail
+    // masking.
+    let n = 40 * 32;
+    let k = Kernel::new("bigger_grid", 40, 32, 8)
+        .param("in", n, ParamDir::In)
+        .param("out", n, ParamDir::Out)
+        .body(vec![Stmt::Store(
+            "out",
+            gid(),
+            E::add(E::load("in", gid()), E::BlockIdx),
+        )]);
+    let inputs = Env::default().with("in", (0..n as i32).collect());
+    check_all_agree(&k, &inputs);
+}
+
+#[test]
+fn uni_vote_detects_uniformity() {
+    let k = Kernel::new("uni", 1, 32, 8)
+        .param("in", 32, ParamDir::In)
+        .param("out", 32, ParamDir::Out)
+        .body(vec![
+            Stmt::Assign("v", E::load("in", E::ThreadIdx)),
+            Stmt::Assign("u", E::warp(WarpFn::VoteUni, E::l("v"), 0)),
+            Stmt::Store("out", E::ThreadIdx, E::l("u")),
+        ]);
+    // warp 0 uniform (all 5), others not.
+    let mut input = vec![5; 32];
+    input[9] = 6;
+    input[17] = 7;
+    input[31] = 8;
+    let inputs = Env::default().with("in", input);
+    check_all_agree(&k, &inputs);
+}
+
+#[test]
+fn guarded_warp_op_after_fission() {
+    let k = Kernel::new("guarded", 1, 32, 8)
+        .param("in", 32, ParamDir::In)
+        .param("out", 32, ParamDir::Out)
+        .body(vec![
+            Stmt::Assign("half", E::b(BinOp::Lt, E::ThreadIdx, E::c(16))),
+            Stmt::If(
+                E::l("half"),
+                vec![
+                    Stmt::Assign("p", E::b(BinOp::Gt, E::load("in", E::ThreadIdx), E::c(3))),
+                    Stmt::Assign("r", E::warp(WarpFn::VoteAll, E::l("p"), 0)),
+                    Stmt::Store("out", E::ThreadIdx, E::l("r")),
+                ],
+                vec![],
+            ),
+        ]);
+    let inputs = Env::default().with("in", (0..32).map(|i| i % 11).collect());
+    check_all_agree(&k, &inputs);
+}

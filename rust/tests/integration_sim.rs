@@ -1,0 +1,536 @@
+//! Integration tests: whole programs through the cycle-level core.
+
+use vortex_warp::isa::asm::regs::*;
+use vortex_warp::isa::{Asm, ShflMode, VoteMode};
+use vortex_warp::sim::{map, Gpu, SimConfig, SimError};
+
+fn run(cfg: SimConfig, build: impl FnOnce(&mut Asm)) -> Gpu {
+    let mut a = Asm::new();
+    build(&mut a);
+    let prog = a.finish();
+    let mut gpu = Gpu::new(&cfg);
+    gpu.load_program(&prog);
+    gpu.run(1_000_000).expect("simulation failed");
+    gpu
+}
+
+fn run_err(cfg: SimConfig, build: impl FnOnce(&mut Asm)) -> SimError {
+    let mut a = Asm::new();
+    build(&mut a);
+    let prog = a.finish();
+    let mut gpu = Gpu::new(&cfg);
+    gpu.load_program(&prog);
+    gpu.run(1_000_000).expect_err("expected failure")
+}
+
+#[test]
+fn counting_loop_and_store() {
+    // Sum 1..=10 into global memory.
+    let mut gpu = run(SimConfig::paper(), |a| {
+        a.li(T0, 0); // acc
+        a.li(T1, 1); // i
+        a.li(T2, 10);
+        let top = a.here();
+        a.add(T0, T0, T1);
+        a.addi(T1, T1, 1);
+        a.bge(T2, T1, top);
+        a.li(A0, (map::GLOBAL_BASE + 0x100) as i32);
+        a.sw(T0, A0, 0);
+        a.ecall();
+    });
+    assert_eq!(gpu.mem.read_u32(map::GLOBAL_BASE + 0x100).unwrap(), 55);
+    let m = &gpu.cores[0].metrics;
+    assert!(m.instrs > 30, "loop body executed 10 times");
+    assert!(m.ipc() > 0.0 && m.ipc() <= 1.0);
+}
+
+#[test]
+fn per_lane_tid_writes_distinct_addresses() {
+    // Each lane stores its tid at out[tid].
+    let mut gpu = run(SimConfig::paper(), |a| {
+        a.csrr(T0, vortex_warp::isa::csr::CSR_THREAD_ID);
+        a.li(A0, (map::GLOBAL_BASE + 0x200) as i32);
+        a.slli(T1, T0, 2);
+        a.add(A0, A0, T1);
+        a.sw(T0, A0, 0);
+        a.ecall();
+    });
+    for lane in 0..8 {
+        assert_eq!(
+            gpu.mem.read_u32(map::GLOBAL_BASE + 0x200 + lane * 4).unwrap(),
+            lane
+        );
+    }
+}
+
+#[test]
+fn wspawn_activates_other_warps() {
+    // Warp 0 spawns all 4 warps at `worker`; each warp stores its wid.
+    let mut gpu = run(SimConfig::paper(), |a| {
+        let worker = a.label();
+        a.li(T0, 4);
+        // `li` for these constants emits exactly 2 instructions each
+        // (lui+addi); worker begins at instruction index 4.
+        a.li(T1, (map::CODE_BASE + 4 * 4) as i32);
+        a.wspawn(T0, T1);
+        a.j(worker);
+        a.bind(worker);
+        a.csrr(T2, vortex_warp::isa::csr::CSR_WARP_ID);
+        a.li(A0, (map::GLOBAL_BASE + 0x300) as i32);
+        a.slli(T3, T2, 2);
+        a.add(A0, A0, T3);
+        a.sw(T2, A0, 0);
+        a.ecall();
+    });
+    for wid in 0..4 {
+        assert_eq!(
+            gpu.mem.read_u32(map::GLOBAL_BASE + 0x300 + wid * 4).unwrap(),
+            wid,
+            "warp {wid} ran"
+        );
+    }
+}
+
+#[test]
+fn split_join_divergence() {
+    // Lanes with tid < 4 store 111, others store 222; all reconverge.
+    let mut gpu = run(SimConfig::paper(), |a| {
+        a.csrr(T0, vortex_warp::isa::csr::CSR_THREAD_ID);
+        a.slti(T1, T0, 4); // pred
+        a.split(S0, T1);
+        let else_l = a.label();
+        let join_l = a.label();
+        a.beq(T1, ZERO, else_l);
+        a.li(T2, 111);
+        a.j(join_l);
+        a.bind(else_l);
+        a.li(T2, 222);
+        a.bind(join_l);
+        a.join(S0);
+        // store T2 at out[tid]
+        a.li(A0, (map::GLOBAL_BASE + 0x400) as i32);
+        a.slli(T3, T0, 2);
+        a.add(A0, A0, T3);
+        a.sw(T2, A0, 0);
+        a.ecall();
+    });
+    for lane in 0..8u32 {
+        let want = if lane < 4 { 111 } else { 222 };
+        assert_eq!(
+            gpu.mem.read_u32(map::GLOBAL_BASE + 0x400 + lane * 4).unwrap(),
+            want,
+            "lane {lane}"
+        );
+    }
+}
+
+#[test]
+fn divergent_branch_without_split_errors() {
+    let err = run_err(SimConfig::paper(), |a| {
+        a.csrr(T0, vortex_warp::isa::csr::CSR_THREAD_ID);
+        let skip = a.label();
+        a.slti(T1, T0, 4);
+        a.beq(T1, ZERO, skip); // lanes disagree -> error
+        a.addi(T2, ZERO, 1);
+        a.bind(skip);
+        a.ecall();
+    });
+    assert!(matches!(err, SimError::DivergentBranch { .. }), "{err:?}");
+}
+
+#[test]
+fn barrier_synchronizes_warps() {
+    // Warp 0 lane 0 sums per-warp slots written before the barrier.
+    let mut gpu = run(SimConfig::paper(), |a| {
+        let worker = a.label();
+        a.li(T0, 4);
+        a.li(T1, (map::CODE_BASE + 4 * 4) as i32);
+        a.wspawn(T0, T1);
+        a.j(worker);
+        a.bind(worker);
+        a.csrr(T2, vortex_warp::isa::csr::CSR_WARP_ID);
+        a.csrr(T3, vortex_warp::isa::csr::CSR_THREAD_ID);
+        // lane 0 of each warp stores wid+100 at shared[wid].
+        a.seqz(T4, T3);
+        a.split(S0, T4);
+        let done_store = a.label();
+        a.beq(T4, ZERO, done_store);
+        a.li(A0, map::SHARED_BASE as i32);
+        a.slli(T5, T2, 2);
+        a.add(A0, A0, T5);
+        a.addi(T6, T2, 100);
+        a.sw(T6, A0, 0);
+        a.bind(done_store);
+        a.join(S0);
+        // barrier: id 0, 4 warps
+        a.li(A1, 0);
+        a.li(A2, 4);
+        a.bar(A1, A2);
+        // warp 0, lane 0 sums
+        let finish = a.label();
+        a.bne(T2, ZERO, finish);
+        a.seqz(T4, T3);
+        a.split(S1, T4);
+        let skip2 = a.label();
+        a.beq(T4, ZERO, skip2);
+        a.li(A0, map::SHARED_BASE as i32);
+        a.lw(S2, A0, 0);
+        a.lw(S3, A0, 4);
+        a.add(S2, S2, S3);
+        a.lw(S3, A0, 8);
+        a.add(S2, S2, S3);
+        a.lw(S3, A0, 12);
+        a.add(S2, S2, S3);
+        a.li(A3, (map::GLOBAL_BASE + 0x500) as i32);
+        a.sw(S2, A3, 0);
+        a.bind(skip2);
+        a.join(S1);
+        a.bind(finish);
+        a.ecall();
+    });
+    // 100 + 101 + 102 + 103
+    assert_eq!(gpu.mem.read_u32(map::GLOBAL_BASE + 0x500).unwrap(), 406);
+    assert!(gpu.cores[0].metrics.barriers_hit >= 4);
+}
+
+#[test]
+fn vote_instructions_in_hw_mode() {
+    // Each lane's pred = (tid < 6). any=1, all=0, ballot=0b00111111.
+    let mut gpu = run(SimConfig::paper(), |a| {
+        a.csrr(T0, vortex_warp::isa::csr::CSR_THREAD_ID);
+        a.slti(T1, T0, 6);
+        a.vote(VoteMode::Any, S0, T1, ZERO);
+        a.vote(VoteMode::All, S1, T1, ZERO);
+        a.vote(VoteMode::Ballot, S2, T1, ZERO);
+        a.vote(VoteMode::Uni, S3, T1, ZERO);
+        a.li(A0, (map::GLOBAL_BASE + 0x600) as i32);
+        a.sw(S0, A0, 0);
+        a.sw(S1, A0, 4);
+        a.sw(S2, A0, 8);
+        a.sw(S3, A0, 12);
+        a.ecall();
+    });
+    assert_eq!(gpu.mem.read_u32(map::GLOBAL_BASE + 0x600).unwrap(), 1);
+    assert_eq!(gpu.mem.read_u32(map::GLOBAL_BASE + 0x604).unwrap(), 0);
+    assert_eq!(gpu.mem.read_u32(map::GLOBAL_BASE + 0x608).unwrap(), 0b0011_1111);
+    assert_eq!(gpu.mem.read_u32(map::GLOBAL_BASE + 0x60C).unwrap(), 0);
+    assert_eq!(gpu.cores[0].metrics.warp_collectives, 4);
+}
+
+#[test]
+fn shfl_down_shifts_lane_values() {
+    let mut gpu = run(SimConfig::paper(), |a| {
+        a.csrr(T0, vortex_warp::isa::csr::CSR_THREAD_ID);
+        a.addi(T1, T0, 10); // val = tid + 10
+        a.shfl(ShflMode::Down, T2, T1, 3, ZERO);
+        a.li(A0, (map::GLOBAL_BASE + 0x700) as i32);
+        a.slli(T3, T0, 2);
+        a.add(A0, A0, T3);
+        a.sw(T2, A0, 0);
+        a.ecall();
+    });
+    for lane in 0..8u32 {
+        let want = if lane + 3 < 8 { lane + 3 + 10 } else { lane + 10 };
+        assert_eq!(
+            gpu.mem.read_u32(map::GLOBAL_BASE + 0x700 + lane * 4).unwrap(),
+            want,
+            "lane {lane}"
+        );
+    }
+}
+
+#[test]
+fn tile_segments_collectives() {
+    // vx_tile(0b11111111, 4): ballot over segments of 4 lanes.
+    let mut gpu = run(SimConfig::paper(), |a| {
+        a.li(T4, 0b1111_1111);
+        a.li(T5, 4);
+        a.tile(T4, T5);
+        a.csrr(T0, vortex_warp::isa::csr::CSR_THREAD_ID);
+        a.slti(T1, T0, 2); // lanes 0,1 -> segment 0 lanes 0,1
+        a.vote(VoteMode::Ballot, S0, T1, ZERO);
+        a.li(A0, (map::GLOBAL_BASE + 0x800) as i32);
+        a.slli(T3, T0, 2);
+        a.add(A0, A0, T3);
+        a.sw(S0, A0, 0);
+        a.csrr(S1, vortex_warp::isa::csr::CSR_TILE_SIZE);
+        a.sw(S1, A0, 64);
+        a.ecall();
+    });
+    for lane in 0..8u32 {
+        // Segment 0 (lanes 0-3): ballot = 0b0011; segment 1: 0.
+        let want = if lane < 4 { 0b0011 } else { 0 };
+        assert_eq!(
+            gpu.mem.read_u32(map::GLOBAL_BASE + 0x800 + lane * 4).unwrap(),
+            want,
+            "lane {lane}"
+        );
+        assert_eq!(
+            gpu.mem.read_u32(map::GLOBAL_BASE + 0x800 + 64 + lane * 4).unwrap(),
+            4
+        );
+    }
+}
+
+#[test]
+fn merged_tile_collective_crosses_warps() {
+    // vx_tile(0b10001000, 16): two groups of 16 threads spanning 2
+    // warps each. All 4 warps run a ballot; lanes with tid<8 set pred=1
+    // only in warp 0 / warp 2 (even warps). Group 0 = warps 0+1, so its
+    // ballot = 0x00FF; group 1 = warps 2+3, ballot = 0x00FF too.
+    let mut gpu = run(SimConfig::paper(), |a| {
+        let worker = a.label();
+        a.li(T0, 4);
+        a.li(T1, (map::CODE_BASE + 4 * 4) as i32);
+        a.wspawn(T0, T1);
+        a.j(worker);
+        a.bind(worker);
+        // sync all warps before reconfiguring + voting
+        a.li(A1, 1);
+        a.li(A2, 4);
+        a.bar(A1, A2);
+        a.li(T4, 0b1000_1000);
+        a.li(T5, 16);
+        a.tile(T4, T5);
+        a.csrr(T2, vortex_warp::isa::csr::CSR_WARP_ID);
+        // pred = 1 iff warp id is even
+        a.andi(T3, T2, 1);
+        a.seqz(T3, T3);
+        a.bar(A1, A2); // group sync before the collective
+        a.vote(VoteMode::Ballot, S0, T3, ZERO);
+        // store per warp: out[wid] = ballot (lane 0 of each warp)
+        a.csrr(T6, vortex_warp::isa::csr::CSR_THREAD_ID);
+        a.seqz(A3, T6);
+        a.split(S1, A3);
+        let skip = a.label();
+        a.beq(A3, ZERO, skip);
+        a.li(A0, (map::GLOBAL_BASE + 0x900) as i32);
+        a.slli(A4, T2, 2);
+        a.add(A0, A0, A4);
+        a.sw(S0, A0, 0);
+        a.bind(skip);
+        a.join(S1);
+        a.ecall();
+    });
+    // group = 2 warps = 16 lanes; even warp's lanes are members 0-7 (of
+    // group 0: warps 0,1) with pred=1, odd warp lanes pred=0.
+    assert_eq!(gpu.mem.read_u32(map::GLOBAL_BASE + 0x900).unwrap(), 0x00FF);
+    assert_eq!(gpu.mem.read_u32(map::GLOBAL_BASE + 0x904).unwrap(), 0x00FF);
+    assert_eq!(gpu.mem.read_u32(map::GLOBAL_BASE + 0x908).unwrap(), 0x00FF);
+    assert_eq!(gpu.mem.read_u32(map::GLOBAL_BASE + 0x90C).unwrap(), 0x00FF);
+    assert!(gpu.cores[0].metrics.crossbar_hops > 0, "crossbar exercised");
+}
+
+#[test]
+fn baseline_hardware_rejects_warp_features() {
+    let err = run_err(SimConfig::baseline(), |a| {
+        a.vote(VoteMode::Any, T0, T1, ZERO);
+        a.ecall();
+    });
+    match err {
+        SimError::IllegalInstr { what, .. } => {
+            assert!(what.contains("SW solution"), "{what}");
+        }
+        other => panic!("expected IllegalInstr, got {other:?}"),
+    }
+}
+
+#[test]
+fn dcache_miss_then_hit() {
+    let mut cfg = SimConfig::paper();
+    cfg.nw = 1;
+    let gpu = run(cfg, |a| {
+        a.li(A0, (map::GLOBAL_BASE + 0x1000) as i32);
+        a.lw(T0, A0, 0); // miss
+        a.lw(T1, A0, 4); // same line: hit
+        a.lw(T2, A0, 8); // hit
+        a.ecall();
+    });
+    let m = &gpu.cores[0].metrics;
+    assert_eq!(m.loads, 3);
+    assert!(m.dcache_misses >= 1);
+    assert!(m.dcache_hits >= 2);
+}
+
+#[test]
+fn multi_warp_hides_memory_latency() {
+    // The same load-heavy loop with 1 warp vs 4 warps: more warps ->
+    // higher IPC. This latency-hiding effect is what the HW-vs-SW
+    // comparison rests on.
+    fn body(a: &mut Asm) {
+        a.csrr(T0, vortex_warp::isa::csr::CSR_THREAD_ID);
+        a.csrr(T4, vortex_warp::isa::csr::CSR_WARP_ID);
+        a.li(T1, 64); // iterations
+        a.li(A0, (map::GLOBAL_BASE + 0x2000) as i32);
+        // spread addresses across lines per warp/lane
+        a.slli(T5, T4, 3);
+        a.add(T5, T5, T0);
+        a.slli(T5, T5, 8);
+        a.add(A0, A0, T5);
+        let top = a.here();
+        a.lw(T2, A0, 0);
+        a.add(T3, T3, T2);
+        a.addi(A0, A0, 256);
+        a.addi(T1, T1, -1);
+        a.bne(T1, ZERO, top);
+        a.ecall();
+    }
+
+    let mut cfg1 = SimConfig::paper();
+    cfg1.nw = 1;
+    let g1 = run(cfg1, body);
+    let g4 = run(SimConfig::paper(), |a| {
+        let worker = a.label();
+        a.li(T0, 4);
+        a.li(T1, (map::CODE_BASE + 4 * 4) as i32);
+        a.wspawn(T0, T1);
+        a.j(worker);
+        a.bind(worker);
+        body(a);
+    });
+    let ipc1 = g1.cores[0].metrics.ipc();
+    let ipc4 = g4.cores[0].metrics.ipc();
+    assert!(
+        ipc4 > ipc1 * 1.8,
+        "4 warps should hide latency: ipc1={ipc1:.3} ipc4={ipc4:.3}"
+    );
+}
+
+#[test]
+fn timeout_detected() {
+    let mut a = Asm::new();
+    let top = a.here();
+    a.j(top);
+    let prog = a.finish();
+    let mut gpu = Gpu::new(&SimConfig::paper());
+    gpu.load_program(&prog);
+    assert!(matches!(gpu.run(1000), Err(SimError::Timeout { .. })));
+}
+
+// ---------------------------------------------------------------------
+// Additional coverage: generated-program round trips, predication,
+// byte/halfword memory, GTO end-to-end, tmc shutdown.
+// ---------------------------------------------------------------------
+
+#[test]
+fn generated_benchmark_programs_roundtrip_through_text_asm() {
+    // Every instruction the code generators emit must survive
+    // disasm -> parse and encode -> decode unchanged.
+    use vortex_warp::isa::{decode, encode, text};
+    use vortex_warp::prt::codegen::{codegen_scalar, codegen_simt};
+    use vortex_warp::prt::transform;
+    for b in vortex_warp::kernels::all() {
+        let simt = codegen_simt(&b.kernel, 8, 4).expect("simt");
+        let scalar = codegen_scalar(&transform(&b.kernel).unwrap(), 8, 4).expect("scalar");
+        for prog in [&simt.prog, &scalar.prog] {
+            // binary round trip
+            for i in prog {
+                assert_eq!(decode(encode(i)).as_ref(), Ok(i), "{}", b.name);
+            }
+            // text round trip (instruction-at-a-time: branch offsets are
+            // relative and parse at position 0)
+            for i in prog {
+                let line = text::disasm(i);
+                let back = text::parse(&line).unwrap_or_else(|e| {
+                    panic!("{}: cannot reparse `{line}`: {e}", b.name)
+                });
+                assert_eq!(&back[0], i, "{}: `{line}`", b.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn pred_disables_lanes_and_zero_pred_halts() {
+    let mut gpu = run(SimConfig::paper(), |a| {
+        a.csrr(T0, vortex_warp::isa::csr::CSR_THREAD_ID);
+        a.slti(T1, T0, 4);
+        a.pred(T1); // lanes 4..7 off
+        a.li(A0, (map::GLOBAL_BASE + 0x3000) as i32);
+        a.slli(T2, T0, 2);
+        a.add(A0, A0, T2);
+        a.li(T3, 7);
+        a.sw(T3, A0, 0);
+        a.ecall();
+    });
+    for lane in 0..8u32 {
+        let want = if lane < 4 { 7 } else { 0 };
+        assert_eq!(
+            gpu.mem.read_u32(map::GLOBAL_BASE + 0x3000 + lane * 4).unwrap(),
+            want
+        );
+    }
+}
+
+#[test]
+fn byte_and_half_memory_instructions() {
+    let mut gpu = run(SimConfig::paper(), |a| {
+        a.li(A0, (map::GLOBAL_BASE + 0x3100) as i32);
+        a.li(T0, -2); // 0xFFFFFFFE
+        a.sb(T0, A0, 0); // store 0xFE
+        a.lb(T1, A0, 0); // sign-extends to -2
+        a.lbu(T2, A0, 0); // zero-extends to 0xFE
+        a.sw(T1, A0, 4);
+        a.sw(T2, A0, 8);
+        a.ecall();
+    });
+    assert_eq!(gpu.mem.read_u32(map::GLOBAL_BASE + 0x3104).unwrap() as i32, -2);
+    assert_eq!(gpu.mem.read_u32(map::GLOBAL_BASE + 0x3108).unwrap(), 0xFE);
+}
+
+#[test]
+fn tmc_zero_halts_warp() {
+    let gpu = run(SimConfig::paper(), |a| {
+        a.li(T0, 0);
+        a.tmc(T0); // warp shuts down; ecall never reached
+        a.li(A0, (map::GLOBAL_BASE + 0x3200) as i32);
+        a.sw(T0, A0, 0);
+        a.ecall();
+    });
+    assert!(gpu.cores[0].metrics.instrs <= 3, "program stopped at tmc");
+}
+
+#[test]
+fn gto_policy_runs_benchmarks_correctly() {
+    use vortex_warp::coordinator::dispatch::{dispatch, Solution};
+    let mut cfg = SimConfig::paper();
+    cfg.sched = vortex_warp::sim::config::SchedPolicy::Gto;
+    for b in vortex_warp::kernels::all() {
+        let r = dispatch(Solution::Hw, &b.kernel, &cfg, &b.inputs)
+            .unwrap_or_else(|e| panic!("{}: {e}", b.name));
+        b.check(&r.env).unwrap();
+    }
+}
+
+#[test]
+fn barrier_deadlock_detected() {
+    let mut a = Asm::new();
+    // Single warp waits for 4 warps that never come.
+    a.li(T0, 0);
+    a.li(T1, 4);
+    a.bar(T0, T1);
+    a.ecall();
+    let prog = a.finish();
+    let mut gpu = Gpu::new(&SimConfig::paper());
+    gpu.load_program(&prog);
+    let err = gpu.run(100_000).expect_err("deadlock");
+    assert!(
+        matches!(err, SimError::Deadlock { .. } | SimError::Timeout { .. }),
+        "{err:?}"
+    );
+}
+
+#[test]
+fn warp_op_metrics_and_fetch_spacing() {
+    // A single warp cannot exceed IPC 0.25 (front-end spacing 4).
+    let mut cfg = SimConfig::paper();
+    cfg.nw = 1;
+    let gpu = run(cfg, |a| {
+        for _ in 0..64 {
+            a.addi(T0, T0, 1); // independent-ish chain
+        }
+        a.ecall();
+    });
+    let ipc = gpu.cores[0].metrics.ipc();
+    assert!(ipc <= 0.26, "single-warp IPC {ipc:.3} must be spacing-bound");
+}

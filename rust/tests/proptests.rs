@@ -1,0 +1,334 @@
+//! Property tests (in-house driver, see DESIGN.md §2):
+//!  * ISA encode∘decode and disasm∘parse identities over random
+//!    instructions/programs;
+//!  * random KIR kernels: interpreter ≡ HW path ≡ SW path on all
+//!    outputs;
+//!  * simulator invariants (retired instruction count is
+//!    scheduler-policy independent).
+
+use vortex_warp::coordinator::{run_hw, run_sw};
+use vortex_warp::isa::{self, asm::regs, decode, encode, Instr};
+use vortex_warp::prt::interp::{self, Env};
+use vortex_warp::prt::kir::Expr as E;
+use vortex_warp::prt::kir::*;
+use vortex_warp::sim::SimConfig;
+use vortex_warp::util::prop::run_prop;
+use vortex_warp::util::XorShift;
+
+// ---------------------------------------------------------------------
+// ISA properties
+// ---------------------------------------------------------------------
+
+fn random_instr(r: &mut XorShift) -> Instr {
+    use vortex_warp::isa::{AluOp, MulOp, ShflMode, VoteMode, Width};
+    let rd = (r.below(32)) as u8;
+    let rs1 = (r.below(32)) as u8;
+    let rs2 = (r.below(32)) as u8;
+    let alu = [
+        AluOp::Add,
+        AluOp::Sub,
+        AluOp::Sll,
+        AluOp::Slt,
+        AluOp::Sltu,
+        AluOp::Xor,
+        AluOp::Srl,
+        AluOp::Sra,
+        AluOp::Or,
+        AluOp::And,
+    ];
+    let mul = [
+        MulOp::Mul,
+        MulOp::Mulh,
+        MulOp::Mulhsu,
+        MulOp::Mulhu,
+        MulOp::Div,
+        MulOp::Divu,
+        MulOp::Rem,
+        MulOp::Remu,
+    ];
+    let imm12 = r.range_i32(-2048, 2048);
+    match r.below(20) {
+        0 => Instr::Alu { op: *r.pick(&alu), rd, rs1, rs2 },
+        1 => {
+            let op = *r.pick(&alu);
+            let imm = if matches!(op, AluOp::Sll | AluOp::Srl | AluOp::Sra) {
+                r.range_i32(0, 32)
+            } else if op == AluOp::Sub {
+                return Instr::AluImm { op: AluOp::Add, rd, rs1, imm: imm12 };
+            } else {
+                imm12
+            };
+            Instr::AluImm { op, rd, rs1, imm }
+        }
+        2 => Instr::Mul { op: *r.pick(&mul), rd, rs1, rs2 },
+        3 => Instr::Lui { rd, imm: (r.next_u32() & 0xFFFF_F000) as i32 },
+        4 => Instr::Auipc { rd, imm: (r.next_u32() & 0xFFFF_F000) as i32 },
+        5 => Instr::Load {
+            width: *r.pick(&[Width::Byte, Width::Half, Width::Word, Width::ByteU, Width::HalfU]),
+            rd,
+            rs1,
+            imm: imm12,
+        },
+        6 => Instr::Store {
+            width: *r.pick(&[Width::Byte, Width::Half, Width::Word]),
+            rs1,
+            rs2,
+            imm: imm12,
+        },
+        7 => Instr::Branch {
+            op: *r.pick(&[
+                vortex_warp::isa::inst::BranchOp::Beq,
+                vortex_warp::isa::inst::BranchOp::Bne,
+                vortex_warp::isa::inst::BranchOp::Blt,
+                vortex_warp::isa::inst::BranchOp::Bge,
+                vortex_warp::isa::inst::BranchOp::Bltu,
+                vortex_warp::isa::inst::BranchOp::Bgeu,
+            ]),
+            rs1,
+            rs2,
+            imm: r.range_i32(-2048, 2048) & !1,
+        },
+        8 => Instr::Jal { rd, imm: r.range_i32(-(1 << 19), 1 << 19) & !1 },
+        9 => Instr::Jalr { rd, rs1, imm: imm12 },
+        10 => Instr::CsrRead { rd, csr: (r.below(4096)) as u16 },
+        11 => Instr::Ecall,
+        12 => Instr::Tmc { rs1 },
+        13 => Instr::Wspawn { rs1, rs2 },
+        14 => Instr::Split { rd, rs1 },
+        15 => Instr::Join { rs1 },
+        16 => Instr::Bar { rs1, rs2 },
+        17 => Instr::Vote {
+            mode: vortex_warp::isa::VoteMode::from_bits(r.below(4)),
+            rd,
+            rs1,
+            mreg: (r.below(32)) as u8,
+        },
+        18 => Instr::Shfl {
+            mode: vortex_warp::isa::ShflMode::from_bits(r.below(4)),
+            rd,
+            rs1,
+            delta: (r.below(32)) as u8,
+            creg: (r.below(32)) as u8,
+        },
+        _ => Instr::Tile { rs1, rs2 },
+    }
+}
+
+#[test]
+fn prop_encode_decode_roundtrip() {
+    run_prop(
+        "encode_decode",
+        0xB5EED,
+        4000,
+        random_instr,
+        |i| {
+            let w = encode(i);
+            match decode(w) {
+                Ok(back) if back == *i => Ok(()),
+                Ok(back) => Err(format!("decoded {back:?} from {w:#010x}")),
+                Err(e) => Err(format!("decode failed: {e}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_disasm_parse_roundtrip() {
+    run_prop(
+        "disasm_parse",
+        0xD15A,
+        2000,
+        random_instr,
+        |i| {
+            // Branch/jump offsets print as relative offsets; parse at
+            // position 0 resolves numeric targets verbatim.
+            let text = isa::text::disasm(i);
+            let prog = isa::text::parse(&text).map_err(|e| e.to_string())?;
+            if prog.len() != 1 {
+                return Err(format!("parsed {} instrs from `{text}`", prog.len()));
+            }
+            if prog[0] == *i {
+                Ok(())
+            } else {
+                Err(format!("`{text}` parsed to {:?}", prog[0]))
+            }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Random-kernel differential property
+// ---------------------------------------------------------------------
+
+/// Generate a random (but well-formed) KIR kernel exercising warp-level
+/// features: every Table III function, tiled partitions, divergent ifs,
+/// loops, shared memory.
+fn random_kernel(r: &mut XorShift) -> (Kernel, Env) {
+    let block = 32u32;
+    let grid = 1 + r.below(3);
+    let n = (block * grid) as usize;
+    let mut body = Vec::new();
+    // Optional tiled partition.
+    let tile = *r.pick(&[0u32, 4, 8]);
+    if tile != 0 {
+        body.push(Stmt::TilePartition(tile));
+    }
+    let gid = E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx);
+    body.push(Stmt::Assign("v", E::load("in", gid.clone())));
+
+    // A couple of random arithmetic steps.
+    for (i, name) in [(0u32, "w"), (1, "u")] {
+        let op = *r.pick(&[BinOp::Add, BinOp::Sub, BinOp::Mul, BinOp::Xor, BinOp::And]);
+        let operand = if r.bool() {
+            E::c(r.range_i32(-7, 8))
+        } else {
+            E::ThreadIdx
+        };
+        let src = if i == 0 { E::l("v") } else { E::l("w") };
+        body.push(Stmt::Assign(name, E::b(op, src, operand)));
+    }
+
+    // A warp-level function (sometimes guarded).
+    let f = *r.pick(&[
+        WarpFn::VoteAny,
+        WarpFn::VoteAll,
+        WarpFn::VoteUni,
+        WarpFn::Ballot,
+        WarpFn::ShflUp,
+        WarpFn::ShflDown,
+        WarpFn::ShflXor,
+        WarpFn::Shfl,
+    ]);
+    let seg = if tile == 0 { 8 } else { tile };
+    let delta = (1 + r.below(seg - 1)) as u8;
+    let wassign = Stmt::Assign("wr", E::warp(f, E::l("u"), delta));
+    if r.bool() {
+        // Guard aligned to whole segments so HW active-mask semantics
+        // and the serialized guard agree on shuffle sources.
+        let groups = block / seg;
+        let cut = (1 + r.below(groups - 1).max(0)) * seg;
+        body.push(Stmt::Assign("g", E::b(BinOp::Lt, E::ThreadIdx, E::c(cut as i32))));
+        body.push(Stmt::If(E::l("g"), vec![wassign], vec![]));
+    } else {
+        body.push(wassign);
+    }
+
+    // Divergent post-processing.
+    body.push(Stmt::If(
+        E::b(BinOp::Rem, E::l("v"), E::c(2)),
+        vec![Stmt::Assign("out_v", E::add(E::l("wr"), E::c(1000)))],
+        vec![Stmt::Assign("out_v", E::l("wr"))],
+    ));
+    body.push(Stmt::Store("out", gid, E::l("out_v")));
+
+    let k = Kernel::new("rand", grid, block, 8)
+        .param("in", n, ParamDir::In)
+        .param("out", n, ParamDir::Out)
+        .body(body);
+    let input: Vec<i32> = (0..n).map(|_| r.range_i32(-20, 21)).collect();
+    (k, Env::default().with("in", input))
+}
+
+#[test]
+fn prop_three_executors_agree_on_random_kernels() {
+    run_prop(
+        "three_executors_agree",
+        0xC0FFEE,
+        60,
+        random_kernel,
+        |(k, inputs)| {
+            let oracle = interp::run(k, inputs).map_err(|e| format!("interp: {e}"))?;
+            let hw = run_hw(k, &SimConfig::paper(), inputs).map_err(|e| format!("hw: {e}"))?;
+            let sw =
+                run_sw(k, &SimConfig::baseline(), inputs).map_err(|e| format!("sw: {e}"))?;
+            if oracle.get("out") != hw.env.get("out") {
+                return Err(format!(
+                    "HW mismatch\nkernel:\n{k}\noracle: {:?}\nhw:     {:?}",
+                    oracle.get("out"),
+                    hw.env.get("out")
+                ));
+            }
+            if oracle.get("out") != sw.env.get("out") {
+                return Err(format!(
+                    "SW mismatch\nkernel:\n{k}\noracle: {:?}\nsw:     {:?}",
+                    oracle.get("out"),
+                    sw.env.get("out")
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Simulator invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_retired_instrs_independent_of_scheduler_policy() {
+    use vortex_warp::sim::config::SchedPolicy;
+    run_prop(
+        "sched_policy_invariant",
+        0x5EED5,
+        20,
+        random_kernel,
+        |(k, inputs)| {
+            let mut rr = SimConfig::paper();
+            rr.sched = SchedPolicy::RoundRobin;
+            let mut gto = SimConfig::paper();
+            gto.sched = SchedPolicy::Gto;
+            let a = run_hw(k, &rr, inputs).map_err(|e| format!("rr: {e}"))?;
+            let b = run_hw(k, &gto, inputs).map_err(|e| format!("gto: {e}"))?;
+            if a.metrics.instrs != b.metrics.instrs {
+                return Err(format!(
+                    "retired count differs: rr={} gto={}",
+                    a.metrics.instrs, b.metrics.instrs
+                ));
+            }
+            if a.env.get("out") != b.env.get("out") {
+                return Err("outputs differ across scheduling policies".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_crossbar_ablation_changes_timing_not_results() {
+    // Merged-tile collectives must produce identical values with and
+    // without the crossbar; only cycles may differ.
+    let k = Kernel::new("merged", 1, 32, 8)
+        .param("in", 32, ParamDir::In)
+        .param("out", 32, ParamDir::Out)
+        .body(vec![
+            Stmt::TilePartition(16),
+            Stmt::Assign("v", E::load("in", E::ThreadIdx)),
+            Stmt::Assign("r", E::warp(WarpFn::Ballot, E::l("v"), 0)),
+            Stmt::Store("out", E::ThreadIdx, E::l("r")),
+        ]);
+    run_prop(
+        "crossbar_ablation",
+        0xAB1A7,
+        15,
+        |r| {
+            let input: Vec<i32> = (0..32).map(|_| r.below(2) as i32).collect();
+            Env::default().with("in", input)
+        },
+        |inputs| {
+            let with = run_hw(&k, &SimConfig::paper(), inputs).map_err(|e| e.to_string())?;
+            let mut cfg = SimConfig::paper();
+            cfg.crossbar = false;
+            let without = run_hw(&k, &cfg, inputs).map_err(|e| e.to_string())?;
+            if with.env.get("out") != without.env.get("out") {
+                return Err("crossbar ablation changed results".into());
+            }
+            if without.metrics.cycles < with.metrics.cycles {
+                return Err(format!(
+                    "mux serialization should not be faster: with={} without={}",
+                    with.metrics.cycles, without.metrics.cycles
+                ));
+            }
+            Ok(())
+        },
+    );
+}
