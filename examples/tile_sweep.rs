@@ -3,9 +3,14 @@
 //! core) and report IPC + crossbar traffic — the merged-warp
 //! configurations exercise the register-bank crossbar of §III.
 //!
+//! The four configurations are independent launches, so they are
+//! dispatched in one `coordinator::launch_batch` call and simulate in
+//! parallel across host cores.
+//!
 //! Usage: cargo run --release --example tile_sweep
 
-use vortex_warp::coordinator::run_hw;
+use vortex_warp::coordinator::dispatch::Solution;
+use vortex_warp::coordinator::{launch_batch, BatchJob};
 use vortex_warp::prt::interp::Env;
 use vortex_warp::prt::kir::Expr as E;
 use vortex_warp::prt::kir::*;
@@ -50,9 +55,22 @@ fn main() {
         "cycles",
         "crossbar hops",
     ]);
-    for tile in [4u32, 8, 16, 32] {
+    let tiles = [4u32, 8, 16, 32];
+    let jobs: Vec<BatchJob> = tiles
+        .iter()
+        .map(|&tile| {
+            BatchJob::new(
+                format!("tile{tile}"),
+                Solution::Hw,
+                kernel(tile),
+                base.clone(),
+                inputs.clone(),
+            )
+        })
+        .collect();
+    for (&tile, r) in tiles.iter().zip(launch_batch(&jobs)) {
         let cfg = TileConfig::for_size(32, tile).unwrap();
-        let r = run_hw(&kernel(tile), &base, &inputs).expect("run");
+        let r = r.expect("run");
         t.row(vec![
             format!("{} groups - {} threads", 32 / tile, tile),
             format!("{:08b}", cfg.group_mask),

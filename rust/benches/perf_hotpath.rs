@@ -1,46 +1,138 @@
 //! Perf bench for the L3 hot path: raw simulator throughput (simulated
 //! instructions per wall-clock second) on representative workloads.
-//! This is the §Perf measurement target in EXPERIMENTS.md.
 //!
-//! Run: cargo bench --bench perf_hotpath
+//! Three measurements per run:
+//!   1. the retained one-cycle **reference** engine (the seed's
+//!      pre-change behavior) — the baseline for the ≥2× acceptance bar;
+//!   2. the event-driven **fast-forward** engine (single thread);
+//!   3. a **batched** run over every (kernel × solution) job through
+//!      `coordinator::launch_batch`, saturating all host cores.
+//!
+//! While measuring, the bench asserts the two engines return
+//! bit-identical `Metrics` — the equivalence invariant — and writes a
+//! machine-readable `BENCH_perf.json` (override the path with the
+//! `BENCH_PERF_OUT` env var) so CI tracks the trajectory.
+//!
+//! Run: cargo bench --bench perf_hotpath          (full)
+//!      cargo bench --bench perf_hotpath -- --smoke   (CI smoke run)
 
 use std::time::Instant;
+use vortex_warp::bench_harness::perf::{PerfReport, PerfRow};
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
+use vortex_warp::coordinator::{launch_batch, BatchJob};
 use vortex_warp::kernels;
-use vortex_warp::sim::SimConfig;
+use vortex_warp::sim::{EngineMode, SimConfig};
+
+fn best_of(iters: usize, mut f: impl FnMut() -> u64) -> (u128, u64) {
+    let mut best_ns = u128::MAX;
+    let mut instrs = 0;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        instrs = f();
+        best_ns = best_ns.min(t0.elapsed().as_nanos());
+    }
+    (best_ns, instrs)
+}
 
 fn main() {
-    let base = SimConfig::paper();
-    println!("=== simulator throughput (simulated instrs / wall second) ===\n");
-    let mut total_instr = 0u64;
-    let mut total_ns = 0u128;
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let iters = if smoke { 2 } else { 5 };
+    let batch_repeats = if smoke { 1 } else { 4 };
+
+    let fast = SimConfig::paper();
+    let reference = SimConfig { engine: EngineMode::Reference, ..SimConfig::paper() };
+
+    println!("=== simulator throughput (simulated instrs / wall second) ===");
+    println!(
+        "{:24} {:>10}  {:>10}  {:>10}  {:>8}",
+        "workload", "instrs", "ref M i/s", "fast M i/s", "speedup"
+    );
+
+    let mut report = PerfReport {
+        host_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        ..PerfReport::default()
+    };
+
     for b in kernels::all() {
         for sol in [Solution::Hw, Solution::Sw] {
-            // Warm once, then measure the best of 5.
-            dispatch(sol, &b.kernel, &base, &b.inputs).expect("warm");
-            let mut best_ns = u128::MAX;
-            let mut instrs = 0;
-            for _ in 0..5 {
-                let t0 = Instant::now();
-                let r = dispatch(sol, &b.kernel, &base, &b.inputs).expect("run");
-                let dt = t0.elapsed().as_nanos();
-                best_ns = best_ns.min(dt);
-                instrs = r.metrics.instrs;
-            }
-            let mips = instrs as f64 / (best_ns as f64 / 1e9) / 1e6;
-            println!(
-                "{:24} {:>10} instrs  {:>10.3} ms  {:>8.2} M instr/s",
-                format!("{}[{}]", b.name, sol.name()),
-                instrs,
-                best_ns as f64 / 1e6,
-                mips
+            // Warm both engines once and check the equivalence
+            // invariant on real workloads while we're at it.
+            let warm_ref = dispatch(sol, &b.kernel, &reference, &b.inputs).expect("ref warm");
+            let warm_fast = dispatch(sol, &b.kernel, &fast, &b.inputs).expect("fast warm");
+            assert_eq!(
+                warm_ref.metrics, warm_fast.metrics,
+                "{}[{}]: fast-forward metrics diverged from reference",
+                b.name,
+                sol.name()
             );
-            total_instr += instrs;
-            total_ns += best_ns;
+
+            let (ref_ns, ref_instrs) = best_of(iters, || {
+                dispatch(sol, &b.kernel, &reference, &b.inputs).expect("ref run").metrics.instrs
+            });
+            let (fast_ns, fast_instrs) = best_of(iters, || {
+                dispatch(sol, &b.kernel, &fast, &b.inputs).expect("fast run").metrics.instrs
+            });
+            assert_eq!(ref_instrs, fast_instrs);
+
+            let row = PerfRow {
+                bench: b.name.to_string(),
+                solution: sol.name().to_string(),
+                instrs: fast_instrs,
+                reference_ns: ref_ns,
+                fast_ns,
+            };
+            println!(
+                "{:24} {:>10}  {:>10.2}  {:>10.2}  {:>7.2}x",
+                format!("{}[{}]", b.name, sol.name()),
+                row.instrs,
+                row.reference_mips(),
+                row.fast_mips(),
+                row.engine_speedup(),
+            );
+            report.rows.push(row);
         }
     }
+
+    // Batched run: every (kernel x solution) job, repeated so each host
+    // thread has work, through the scoped-thread batch launcher.
+    let mut jobs = Vec::new();
+    for _ in 0..batch_repeats {
+        for b in kernels::all() {
+            for sol in [Solution::Hw, Solution::Sw] {
+                jobs.push(BatchJob::new(
+                    format!("{}[{}]", b.name, sol.name()),
+                    sol,
+                    b.kernel.clone(),
+                    fast.clone(),
+                    b.inputs.clone(),
+                ));
+            }
+        }
+    }
+    launch_batch(&jobs); // warm
+    let t0 = Instant::now();
+    let results = launch_batch(&jobs);
+    report.batch_wall_ns = t0.elapsed().as_nanos();
+    report.batch_instrs =
+        results.iter().map(|r| r.as_ref().expect("batch run").metrics.instrs).sum();
+
     println!(
-        "\naggregate: {:.2} M simulated instr/s",
-        total_instr as f64 / (total_ns as f64 / 1e9) / 1e6
+        "\naggregate (single thread): reference {:.2} M instr/s, fast-forward {:.2} M instr/s \
+         -> {:.2}x engine speedup",
+        report.aggregate_reference_mips(),
+        report.aggregate_fast_mips(),
+        report.engine_speedup(),
     );
+    println!(
+        "aggregate (launch_batch, {} jobs over {} threads): {:.2} M instr/s",
+        jobs.len(),
+        report.host_threads,
+        report.aggregate_batch_mips(),
+    );
+
+    let out = std::env::var("BENCH_PERF_OUT").unwrap_or_else(|_| "BENCH_perf.json".into());
+    match report.write_json(&out) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("cannot write {out}: {e}"),
+    }
 }

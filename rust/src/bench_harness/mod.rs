@@ -3,5 +3,6 @@
 //! DESIGN.md §2).
 
 pub mod fig5;
+pub mod perf;
 pub mod tables;
 pub mod timing;

@@ -1,0 +1,233 @@
+//! Machine-readable throughput reporting for `benches/perf_hotpath.rs`.
+//!
+//! The bench measures simulated-instructions-per-wall-second three
+//! ways — the retained reference engine, the event-driven fast-forward
+//! engine, and a `launch_batch` run saturating all host cores — and
+//! serializes them to `BENCH_perf.json` (hand-rolled JSON; serde is not
+//! vendored offline) so CI can track the perf trajectory across PRs.
+
+use std::io::Write as _;
+
+/// One benchmark × solution measurement.
+#[derive(Clone, Debug)]
+pub struct PerfRow {
+    pub bench: String,
+    /// "HW" or "SW".
+    pub solution: String,
+    /// Retired warp-instructions per launch (identical under both
+    /// engines — asserted by the bench).
+    pub instrs: u64,
+    /// Best-of-N wall time with the reference one-cycle engine.
+    pub reference_ns: u128,
+    /// Best-of-N wall time with the fast-forward engine.
+    pub fast_ns: u128,
+}
+
+impl PerfRow {
+    pub fn reference_mips(&self) -> f64 {
+        mips(self.instrs, self.reference_ns)
+    }
+
+    pub fn fast_mips(&self) -> f64 {
+        mips(self.instrs, self.fast_ns)
+    }
+
+    /// Wall-clock speedup of the fast-forward engine on this workload.
+    pub fn engine_speedup(&self) -> f64 {
+        if self.fast_ns == 0 {
+            0.0
+        } else {
+            self.reference_ns as f64 / self.fast_ns as f64
+        }
+    }
+}
+
+/// Full report: per-row numbers plus batch-level aggregates.
+#[derive(Clone, Debug, Default)]
+pub struct PerfReport {
+    pub rows: Vec<PerfRow>,
+    /// Wall time of one `launch_batch` over every (bench × solution)
+    /// job with the fast engine.
+    pub batch_wall_ns: u128,
+    /// Total simulated instructions of that batch.
+    pub batch_instrs: u64,
+    pub host_threads: usize,
+}
+
+impl PerfReport {
+    /// Aggregate M instr/s: total instructions over total wall time.
+    pub fn aggregate_reference_mips(&self) -> f64 {
+        let (i, ns) = self.totals(|r| r.reference_ns);
+        mips(i, ns)
+    }
+
+    pub fn aggregate_fast_mips(&self) -> f64 {
+        let (i, ns) = self.totals(|r| r.fast_ns);
+        mips(i, ns)
+    }
+
+    /// Aggregate throughput of the multi-threaded batch run.
+    pub fn aggregate_batch_mips(&self) -> f64 {
+        mips(self.batch_instrs, self.batch_wall_ns)
+    }
+
+    /// Single-thread engine speedup (the ISSUE's ≥2× acceptance metric
+    /// compares this pair on the same host).
+    pub fn engine_speedup(&self) -> f64 {
+        let fast = self.aggregate_fast_mips();
+        let reference = self.aggregate_reference_mips();
+        if reference == 0.0 {
+            0.0
+        } else {
+            fast / reference
+        }
+    }
+
+    fn totals(&self, ns_of: impl Fn(&PerfRow) -> u128) -> (u64, u128) {
+        let instrs = self.rows.iter().map(|r| r.instrs).sum();
+        let ns = self.rows.iter().map(ns_of).sum();
+        (instrs, ns)
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"schema\": \"vortex_warp.perf.v1\",\n");
+        s.push_str(&format!("  \"host_threads\": {},\n", self.host_threads));
+        s.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"bench\": {}, \"solution\": {}, \"instrs\": {}, \
+                 \"reference_ns\": {}, \"fast_ns\": {}, \"reference_mips\": {:.4}, \
+                 \"fast_mips\": {:.4}, \"engine_speedup\": {:.4}}}{}\n",
+                json_str(&r.bench),
+                json_str(&r.solution),
+                r.instrs,
+                r.reference_ns,
+                r.fast_ns,
+                r.reference_mips(),
+                r.fast_mips(),
+                r.engine_speedup(),
+                if i + 1 == self.rows.len() { "" } else { "," },
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str(&format!(
+            "  \"aggregate\": {{\"reference_mips\": {:.4}, \"fast_mips\": {:.4}, \
+             \"batch_mips\": {:.4}, \"engine_speedup\": {:.4}, \"batch_wall_ns\": {}, \
+             \"batch_instrs\": {}}}\n",
+            self.aggregate_reference_mips(),
+            self.aggregate_fast_mips(),
+            self.aggregate_batch_mips(),
+            self.engine_speedup(),
+            self.batch_wall_ns,
+            self.batch_instrs,
+        ));
+        s.push_str("}\n");
+        s
+    }
+
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().as_bytes())
+    }
+}
+
+fn mips(instrs: u64, ns: u128) -> f64 {
+    if ns == 0 {
+        0.0
+    } else {
+        instrs as f64 / (ns as f64 / 1e9) / 1e6
+    }
+}
+
+/// Minimal JSON string encoding (bench/solution names are plain
+/// identifiers, but escape defensively).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> PerfReport {
+        PerfReport {
+            rows: vec![
+                PerfRow {
+                    bench: "matmul".into(),
+                    solution: "HW".into(),
+                    instrs: 1_000_000,
+                    reference_ns: 1_000_000_000,
+                    fast_ns: 250_000_000,
+                },
+                PerfRow {
+                    bench: "reduce".into(),
+                    solution: "SW".into(),
+                    instrs: 3_000_000,
+                    reference_ns: 1_000_000_000,
+                    fast_ns: 750_000_000,
+                },
+            ],
+            batch_wall_ns: 500_000_000,
+            batch_instrs: 4_000_000,
+            host_threads: 4,
+        }
+    }
+
+    #[test]
+    fn aggregates_are_total_over_total() {
+        let r = report();
+        // 4M instrs / 2 s = 2 M instr/s reference.
+        assert!((r.aggregate_reference_mips() - 2.0).abs() < 1e-9);
+        // 4M instrs / 1 s = 4 M instr/s fast -> 2x engine speedup.
+        assert!((r.aggregate_fast_mips() - 4.0).abs() < 1e-9);
+        assert!((r.engine_speedup() - 2.0).abs() < 1e-9);
+        // 4M instrs / 0.5 s = 8 M instr/s batched.
+        assert!((r.aggregate_batch_mips() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_speedup() {
+        let r = report();
+        assert!((r.rows[0].engine_speedup() - 4.0).abs() < 1e-9);
+        assert!((r.rows[0].fast_mips() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_shape() {
+        let j = report().to_json();
+        assert!(j.contains("\"schema\": \"vortex_warp.perf.v1\""));
+        assert!(j.contains("\"bench\": \"matmul\""));
+        assert!(j.contains("\"aggregate\""));
+        assert!(j.contains("\"engine_speedup\": 2.0000"));
+        // Balanced braces/brackets (cheap well-formedness check).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(json_str("x\ny"), "\"x\\ny\"");
+    }
+
+    #[test]
+    fn zero_division_safe() {
+        let r = PerfReport::default();
+        assert_eq!(r.aggregate_reference_mips(), 0.0);
+        assert_eq!(r.engine_speedup(), 0.0);
+        assert_eq!(r.aggregate_batch_mips(), 0.0);
+    }
+}

@@ -120,6 +120,81 @@ pub fn run_sw(k: &Kernel, cfg: &SimConfig, inputs: &Env) -> Result<LaunchResult,
     launch(cfg, &img, inputs)
 }
 
+/// One independent launch for [`launch_batch`].
+pub struct BatchJob {
+    /// Free-form label reported back by benches/sweeps.
+    pub label: String,
+    pub solution: dispatch::Solution,
+    pub kernel: Kernel,
+    /// Base config; `dispatch` derives the solution-matched hardware
+    /// from it (HW forces the extension on, SW runs the baseline).
+    pub cfg: SimConfig,
+    pub inputs: Env,
+}
+
+impl BatchJob {
+    pub fn new(
+        label: impl Into<String>,
+        solution: dispatch::Solution,
+        kernel: Kernel,
+        cfg: SimConfig,
+        inputs: Env,
+    ) -> Self {
+        BatchJob { label: label.into(), solution, kernel, cfg, inputs }
+    }
+}
+
+/// Run a batch of independent launches across host threads.
+///
+/// Each launch owns its own `Gpu` (cores + memory), so jobs share
+/// nothing and the result vector — returned in job order — is
+/// deterministic regardless of thread count or scheduling. Workers are
+/// plain `std::thread::scope` threads (no external dependencies) that
+/// pull the next job index from a shared atomic counter, so uneven job
+/// costs stay load-balanced and the benches and sweeps saturate all
+/// host cores.
+pub fn launch_batch(jobs: &[BatchJob]) -> Vec<Result<LaunchResult, LaunchError>> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(jobs.len());
+    let next = AtomicUsize::new(0);
+    let mut results: Vec<Option<Result<LaunchResult, LaunchError>>> =
+        (0..jobs.len()).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut done = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        let Some(job) = jobs.get(i) else { break };
+                        done.push((
+                            i,
+                            dispatch::dispatch(job.solution, &job.kernel, &job.cfg, &job.inputs),
+                        ));
+                    }
+                    done
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("batch worker panicked") {
+                results[i] = Some(r);
+            }
+        }
+    });
+    results
+        .into_iter()
+        .map(|r| r.expect("every batch slot is filled by its worker"))
+        .collect()
+}
+
 fn validate_inputs(k: &Kernel, inputs: &Env) -> Result<(), LaunchError> {
     for p in &k.params {
         if p.dir == ParamDir::In || p.dir == ParamDir::InOut {
@@ -175,6 +250,35 @@ mod tests {
         assert_eq!(hw.env.get("dst"), want);
         assert_eq!(sw.env.get("dst"), want);
         assert!(hw.metrics.instrs > 0 && sw.metrics.instrs > 0);
+    }
+
+    #[test]
+    fn launch_batch_matches_sequential_dispatch() {
+        use dispatch::Solution;
+        let k = copy_kernel();
+        let inputs = Env::default().with("src", (0..64).collect());
+        let jobs: Vec<BatchJob> = (0..4)
+            .map(|i| {
+                let sol = if i % 2 == 0 { Solution::Hw } else { Solution::Sw };
+                BatchJob::new(
+                    format!("job{i}"),
+                    sol,
+                    k.clone(),
+                    SimConfig::paper(),
+                    inputs.clone(),
+                )
+            })
+            .collect();
+        let batch = launch_batch(&jobs);
+        assert_eq!(batch.len(), jobs.len());
+        for (job, got) in jobs.iter().zip(&batch) {
+            let got = got.as_ref().unwrap();
+            let want =
+                dispatch::dispatch(job.solution, &job.kernel, &job.cfg, &job.inputs).unwrap();
+            assert_eq!(got.metrics, want.metrics, "{}", job.label);
+            assert_eq!(got.env.get("dst"), want.env.get("dst"), "{}", job.label);
+        }
+        assert!(launch_batch(&[]).is_empty());
     }
 
     #[test]

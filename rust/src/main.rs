@@ -107,7 +107,10 @@ fn main() {
         }
         Some("validate") => {
             let dir = flag_value(&args, "--artifacts").unwrap_or_else(|| "artifacts".into());
-            let mut rt = Runtime::new(&dir).expect("PJRT runtime");
+            let mut rt = Runtime::new(&dir).unwrap_or_else(|e| {
+                eprintln!("validate: {e}");
+                std::process::exit(2);
+            });
             let cfg = config_from(&args);
             let mut bad = 0;
             for b in kernels::all() {

@@ -67,6 +67,23 @@ impl Default for CacheConfig {
     }
 }
 
+/// Simulation engine driving [`crate::sim::Gpu::run`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Event-driven fast-forward: when no warp can issue, jump straight
+    /// to the next cycle at which state can change (earliest in-flight
+    /// `done_at` or pipeline `ready_at`) and bulk-attribute the skipped
+    /// cycles to the stall counter the one-cycle path would have
+    /// incremented. Produces `Metrics` bit-identical to [`Reference`]
+    /// (asserted by `tests/engine_equivalence.rs`).
+    ///
+    /// [`Reference`]: EngineMode::Reference
+    FastForward,
+    /// One-cycle-at-a-time stepping (the original engine), retained as
+    /// the equivalence oracle for the fast-forward path.
+    Reference,
+}
+
 /// Warp scheduling policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SchedPolicy {
@@ -97,6 +114,9 @@ pub struct SimConfig {
     pub lat: Latencies,
     pub dcache: CacheConfig,
     pub sched: SchedPolicy,
+    /// Engine used by `run` (fast-forward by default; the reference
+    /// one-cycle path is kept for equivalence testing).
+    pub engine: EngineMode,
     /// Capture a per-instruction trace (slow; tests/debug only).
     pub trace: bool,
 }
@@ -114,6 +134,7 @@ impl SimConfig {
             lat: Latencies::default(),
             dcache: CacheConfig::default(),
             sched: SchedPolicy::RoundRobin,
+            engine: EngineMode::FastForward,
             trace: false,
         }
     }
@@ -174,6 +195,13 @@ mod tests {
         let b = SimConfig::baseline();
         assert!(!b.warp_hw);
         assert_eq!(b.nt, SimConfig::paper().nt);
+    }
+
+    #[test]
+    fn default_engine_is_fast_forward() {
+        assert_eq!(SimConfig::paper().engine, EngineMode::FastForward);
+        let r = SimConfig { engine: EngineMode::Reference, ..SimConfig::paper() };
+        assert_eq!(r.engine, EngineMode::Reference);
     }
 
     #[test]

@@ -22,6 +22,7 @@ use super::regfile::RegFile;
 use super::scheduler::Scheduler;
 use super::scoreboard::Scoreboard;
 use super::warp::{full_mask, Warp, WarpState};
+use super::wb::{InFlight, WbQueue};
 use crate::isa::{csr, Instr, Width};
 
 /// Pipeline-refill penalty for control instructions (taken branches,
@@ -79,13 +80,20 @@ impl From<MemFault> for SimError {
     }
 }
 
-/// An issued instruction waiting for writeback.
-struct InFlight {
-    warp: usize,
-    rd: u8,
-    vals: [u32; 32],
-    mask: u32,
-    done_at: u64,
+/// What the issue stage did in the most recent cycle — the class of
+/// counter a stalled cycle charged. The fast-forward engine replays
+/// this classification for every skipped cycle: between two events
+/// (writeback retirement or `ready_at` expiry) the sets of
+/// scoreboard-blocked and pipeline-blocked warps cannot change, so
+/// every cycle in the window charges the same counter the one-cycle
+/// reference path would have.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum IssueOutcome {
+    Issued,
+    StallScoreboard,
+    StallPipeline,
+    StallBarrier,
+    Idle,
 }
 
 /// Barrier bookkeeping: warps arrived so far per barrier id.
@@ -105,13 +113,20 @@ pub struct Core {
     sb: Scoreboard,
     pub sched: Scheduler,
     pub dcache: DCache,
-    inflight: Vec<InFlight>,
+    inflight: WbQueue,
+    /// Outcome of the most recent cycle (drives fast-forward skips).
+    outcome: IssueOutcome,
     barriers: BarrierTable,
     /// Earliest cycle each warp may issue again (pipeline penalties).
     ready_at: Vec<u64>,
     /// Architectural register foreign lanes contribute during a
     /// merged-warp collective (crossbar read path); set at dispatch.
     pending_collective_reg: u8,
+    /// Reusable operand/result buffers for merged-warp collectives
+    /// (sized to NT × NW once at construction; moved out/in around the
+    /// collective closure so the hot path never allocates or re-zeroes).
+    scratch_vals: Vec<u32>,
+    scratch_res: Vec<u32>,
     pub metrics: Metrics,
     /// Optional instruction trace (cfg.trace).
     pub trace: Vec<String>,
@@ -129,10 +144,13 @@ impl Core {
             sb: Scoreboard::new(nw),
             sched: Scheduler::new(cfg.sched, nw, nt),
             dcache: DCache::new(cfg.dcache.clone()),
-            inflight: Vec::new(),
+            inflight: WbQueue::with_capacity(2 * nw),
+            outcome: IssueOutcome::Idle,
             barriers: BarrierTable::default(),
             ready_at: vec![0; nw],
             pending_collective_reg: 0,
+            scratch_vals: vec![0; nw * nt],
+            scratch_res: vec![0; nw * nt],
             metrics: Metrics::default(),
             trace: Vec::new(),
             cfg,
@@ -158,6 +176,7 @@ impl Core {
         self.sched = Scheduler::new(self.cfg.sched, nw, nt);
         self.dcache = DCache::new(self.cfg.dcache.clone());
         self.inflight.clear();
+        self.outcome = IssueOutcome::Idle;
         self.barriers = BarrierTable::default();
         self.ready_at = vec![0; nw];
         self.metrics = Metrics::default();
@@ -179,8 +198,9 @@ impl Core {
         Ok(self.prog[off / 4])
     }
 
-    /// Advance one cycle. Returns `busy()`.
-    pub fn step(&mut self, mem: &mut Memory) -> Result<bool, SimError> {
+    /// Advance exactly one cycle — the reference timing path. Returns
+    /// `busy()`.
+    pub fn step_one_cycle(&mut self, mem: &mut Memory) -> Result<bool, SimError> {
         if !self.busy() {
             return Ok(false);
         }
@@ -188,15 +208,9 @@ impl Core {
         let now = self.metrics.cycles;
 
         // ---- writeback ----
-        let mut i = 0;
-        while i < self.inflight.len() {
-            if self.inflight[i].done_at <= now {
-                let f = self.inflight.swap_remove(i);
-                self.rf.write_masked(f.warp, f.rd, f.mask, &f.vals);
-                self.sb.clear(f.warp, f.rd);
-            } else {
-                i += 1;
-            }
+        while let Some(f) = self.inflight.pop_due(now) {
+            self.rf.write_masked(f.warp as usize, f.rd, f.mask, &f.vals);
+            self.sb.clear(f.warp as usize, f.rd);
         }
 
         // ---- issue ----
@@ -234,37 +248,87 @@ impl Core {
             break;
         }
 
-        if !issued {
-            if saw_sb_stall {
-                self.metrics.stall_scoreboard += 1;
-            } else if saw_pipe_stall {
-                self.metrics.stall_pipeline += 1;
-            } else if any_active {
-                self.metrics.idle_cycles += 1;
-            } else if self.warps.iter().any(|w| matches!(w.state, WarpState::Barrier { .. })) {
-                self.metrics.stall_barrier += 1;
-                if self.inflight.is_empty()
-                    && !self.warps.iter().any(|w| w.is_active())
-                {
-                    return Err(SimError::Deadlock { cycle: now });
-                }
-            } else {
-                self.metrics.idle_cycles += 1;
+        if issued {
+            self.outcome = IssueOutcome::Issued;
+        } else if saw_sb_stall {
+            self.outcome = IssueOutcome::StallScoreboard;
+            self.metrics.stall_scoreboard += 1;
+        } else if saw_pipe_stall {
+            self.outcome = IssueOutcome::StallPipeline;
+            self.metrics.stall_pipeline += 1;
+        } else if any_active {
+            self.outcome = IssueOutcome::Idle;
+            self.metrics.idle_cycles += 1;
+        } else if self.warps.iter().any(|w| matches!(w.state, WarpState::Barrier { .. })) {
+            self.outcome = IssueOutcome::StallBarrier;
+            self.metrics.stall_barrier += 1;
+            if self.inflight.is_empty() && !self.warps.iter().any(|w| w.is_active()) {
+                return Err(SimError::Deadlock { cycle: now });
             }
+        } else {
+            self.outcome = IssueOutcome::Idle;
+            self.metrics.idle_cycles += 1;
         }
 
         Ok(self.busy())
     }
 
-    /// Run until idle, with a cycle cap.
-    pub fn run(&mut self, mem: &mut Memory, max_cycles: u64) -> Result<(), SimError> {
-        while self.step(mem)? {
-            if self.metrics.cycles >= max_cycles {
-                return Err(SimError::Timeout { cycles: max_cycles });
+    /// True if the most recent cycle issued an instruction (fast-
+    /// forward only skips over stalled cycles).
+    #[inline]
+    pub fn issued_last_cycle(&self) -> bool {
+        self.outcome == IssueOutcome::Issued
+    }
+
+    /// Next cycle at which this core's state can change: the earliest
+    /// in-flight retirement or the earliest pipeline-penalty expiry of
+    /// an active warp. `None` when neither exists (the core is idle, or
+    /// the very next cycle would raise a barrier deadlock — both cases
+    /// where the caller must fall back to single stepping).
+    ///
+    /// Barrier releases and warp spawns only happen as a side effect of
+    /// an *issue*, so they cannot occur strictly between two events and
+    /// need no candidate of their own.
+    pub fn next_event(&self) -> Option<u64> {
+        let now = self.metrics.cycles;
+        let mut next = self.inflight.next_done().unwrap_or(u64::MAX);
+        for (w, warp) in self.warps.iter().enumerate() {
+            if warp.is_active() && self.ready_at[w] > now && self.ready_at[w] < next {
+                next = self.ready_at[w];
             }
         }
-        Ok(())
+        (next != u64::MAX).then_some(next)
     }
+
+    /// Fast-forward a stalled core so the next executed cycle is
+    /// `target`: bulk-charge cycles `now+1 ..= target-1` to the counter
+    /// the last (stalled) cycle charged, and advance the clock.
+    ///
+    /// Caller contract (`Gpu::run_fast`): the last cycle did NOT
+    /// issue, and `target` does not exceed the core's
+    /// [`Core::next_event`] — i.e. no writeback retires and no warp
+    /// becomes fetchable anywhere in the skipped window, so each
+    /// skipped cycle would have repeated the recorded stall exactly.
+    pub fn skip_to(&mut self, target: u64) {
+        let now = self.metrics.cycles;
+        debug_assert!(target > now + 1, "skip_to({target}) from cycle {now} skips nothing");
+        debug_assert!(self.outcome != IssueOutcome::Issued, "cannot skip after an issue");
+        let skip = target - 1 - now;
+        match self.outcome {
+            IssueOutcome::StallScoreboard => self.metrics.stall_scoreboard += skip,
+            IssueOutcome::StallPipeline => self.metrics.stall_pipeline += skip,
+            IssueOutcome::StallBarrier => self.metrics.stall_barrier += skip,
+            IssueOutcome::Idle => self.metrics.idle_cycles += skip,
+            IssueOutcome::Issued => unreachable!("checked above"),
+        }
+        self.metrics.cycles = target - 1;
+    }
+
+    // The engine loops (reference stepping and event-driven
+    // fast-forward) live in ONE place — `Gpu::run_reference` /
+    // `Gpu::run_fast` — which handle any core count including one.
+    // Keeping a second per-core copy here would let the two skip loops
+    // silently diverge.
 
     // ------------------------------------------------------------------
     // Execution (functional at issue + latency scheduling)
@@ -508,10 +572,10 @@ impl Core {
                 self.rf.read_all(w, mreg, &mut b);
                 let first = self.warps[w].first_lane();
                 let members = b[first];
-                retire_lat = self.collective(w, tmask, &a, members, &mut out, |vals, act, mem_m| {
-                    let r = warp_ops::vote(mode, vals, act, mem_m);
-                    vec![r; vals.len()]
-                });
+                retire_lat =
+                    self.collective(w, tmask, &a, members, &mut out, |vals, act, mem_m, dst| {
+                        dst.fill(warp_ops::vote(mode, vals, act, mem_m));
+                    });
                 wb_rd = rd;
                 self.metrics.warp_collectives += 1;
             }
@@ -523,8 +587,8 @@ impl Core {
                 let first = self.warps[w].first_lane();
                 let clamp = b[first];
                 retire_lat =
-                    self.collective(w, tmask, &a, 0, &mut out, |vals, _act, _m| {
-                        warp_ops::shfl(mode, vals, delta as u32, clamp)
+                    self.collective(w, tmask, &a, 0, &mut out, |vals, _act, _m, dst| {
+                        warp_ops::shfl_into(mode, vals, delta as u32, clamp, dst);
                     });
                 wb_rd = rd;
                 self.metrics.warp_collectives += 1;
@@ -552,13 +616,10 @@ impl Core {
         if let Some(rd) = Instr::rd(&instr) {
             debug_assert_eq!(rd, wb_rd);
             self.sb.set_pending(w, rd);
-            self.inflight.push(InFlight {
-                warp: w,
-                rd,
-                vals: out,
-                mask: tmask,
-                done_at: now + retire_lat,
-            });
+            self.inflight.push(
+                now + retire_lat,
+                InFlight { warp: w as u32, rd, vals: out, mask: tmask },
+            );
         }
         Ok(())
     }
@@ -584,6 +645,11 @@ impl Core {
     ///   the foreign lanes are collected across register banks through
     ///   the crossbar (charging `crossbar_hop` per extra warp), exactly
     ///   the structure §III adds to the execute stage.
+    ///
+    /// `f` writes each segment's per-lane results into the slice it is
+    /// handed (same length as `vals`) — directly into `out` on the
+    /// sub-warp path, through the per-core scratch buffers on the
+    /// merged path — so the hot path never allocates.
     fn collective(
         &mut self,
         w: usize,
@@ -591,22 +657,20 @@ impl Core {
         own_vals: &[u32; 32],
         members: u32,
         out: &mut [u32; 32],
-        f: impl Fn(&[u32], u32, u32) -> Vec<u32>,
+        f: impl Fn(&[u32], u32, u32, &mut [u32]),
     ) -> u64 {
         let nt = self.cfg.nt;
         let seg = (self.sched.tile.size as usize).min(self.cfg.hw_threads());
         let mut lat = self.cfg.lat.warp_op as u64;
         if seg <= nt {
-            // Sub-warp (or whole-warp) tiles: segment the warp lanes.
+            // Sub-warp (or whole-warp) tiles: segment the warp lanes,
+            // writing each segment's results straight into `out`
+            // (`own_vals` and `out` are distinct borrows).
             let nseg = nt / seg;
             for s in 0..nseg {
                 let base = s * seg;
-                let vals: Vec<u32> = (0..seg).map(|i| own_vals[base + i]).collect();
                 let act = (tmask >> base) & warp_ops::mask_of(seg);
-                let res = f(&vals, act, members);
-                for i in 0..seg {
-                    out[base + i] = res[i];
-                }
+                f(&own_vals[base..base + seg], act, members, &mut out[base..base + seg]);
             }
         } else {
             // Merged warps: group = `span` consecutive warps aligned on
@@ -614,7 +678,13 @@ impl Core {
             // through the crossbar.
             let span = (seg / nt).max(1).min(self.cfg.nw);
             let group_base = (w / span) * span;
-            let mut vals = vec![0u32; span * nt];
+            let total = span * nt;
+            // Move the scratch buffers out of `self` for the duration
+            // of the gather (read_cross needs `&mut self.rf`), then put
+            // them back — no allocation, no re-zeroing: every word in
+            // `vals[..total]` and `res[..total]` is overwritten below.
+            let mut vals = std::mem::take(&mut self.scratch_vals);
+            let mut res = std::mem::take(&mut self.scratch_res);
             let mut act = 0u32;
             for mw in 0..span {
                 let warp_idx = group_base + mw;
@@ -633,10 +703,10 @@ impl Core {
                 let m = if warp_idx == w { tmask } else { self.warps[warp_idx].tmask };
                 act |= (m & warp_ops::mask_of(nt)) << (mw * nt);
             }
-            let res = f(&vals, act, members);
-            for l in 0..nt {
-                out[l] = res[(w - group_base) * nt + l];
-            }
+            f(&vals[..total], act, members, &mut res[..total]);
+            out[..nt].copy_from_slice(&res[(w - group_base) * nt..(w - group_base) * nt + nt]);
+            self.scratch_vals = vals;
+            self.scratch_res = res;
             let hops = (span - 1) as u64;
             self.metrics.crossbar_hops += hops;
             lat += if self.cfg.crossbar {

@@ -114,15 +114,28 @@ pub fn shfl_src(
     }
 }
 
-/// Evaluate a shuffle over one segment: returns per-lane results.
-pub fn shfl(mode: ShflMode, vals: &[u32], delta: u32, clamp: u32) -> Vec<u32> {
+/// Evaluate a shuffle over one segment, writing per-lane results into
+/// `out[..vals.len()]` — the allocation-free form the simulator's issue
+/// hot path uses. `out` must not alias `vals` (distinct borrows enforce
+/// this in safe code).
+pub fn shfl_into(mode: ShflMode, vals: &[u32], delta: u32, clamp: u32, out: &mut [u32]) {
     let seg = vals.len();
-    (0..seg)
-        .map(|lane| match shfl_src(mode, lane, delta, clamp, seg) {
+    debug_assert!(out.len() >= seg);
+    for (lane, dst) in out[..seg].iter_mut().enumerate() {
+        *dst = match shfl_src(mode, lane, delta, clamp, seg) {
             Some(s) => vals[s],
             None => vals[lane],
-        })
-        .collect()
+        };
+    }
+}
+
+/// Evaluate a shuffle over one segment: returns per-lane results.
+/// (Allocating convenience wrapper over [`shfl_into`] for tests,
+/// the KIR interpreter, and reference implementations.)
+pub fn shfl(mode: ShflMode, vals: &[u32], delta: u32, clamp: u32) -> Vec<u32> {
+    let mut out = vec![0u32; vals.len()];
+    shfl_into(mode, vals, delta, clamp, &mut out);
+    out
 }
 
 #[inline]
@@ -180,6 +193,21 @@ mod tests {
         let once = shfl(ShflMode::Bfly, &v, 3, 0);
         let twice = shfl(ShflMode::Bfly, &once, 3, 0);
         assert_eq!(twice, v);
+    }
+
+    #[test]
+    fn shfl_into_matches_allocating_shfl() {
+        let v = [10u32, 11, 12, 13, 14, 15, 16, 17];
+        for mode in [ShflMode::Up, ShflMode::Down, ShflMode::Bfly, ShflMode::Idx] {
+            for delta in 0..8u32 {
+                for clamp in [0u32, 3, 7] {
+                    let want = shfl(mode, &v, delta, clamp);
+                    let mut got = [0u32; 8];
+                    shfl_into(mode, &v, delta, clamp, &mut got);
+                    assert_eq!(want, got, "{mode:?} d={delta} c={clamp}");
+                }
+            }
+        }
     }
 
     #[test]

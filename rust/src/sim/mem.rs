@@ -49,10 +49,14 @@ impl Memory {
 
     #[inline]
     fn slot(&mut self, addr: u32, len: u32, store: bool) -> Result<&mut [u8], MemFault> {
-        if addr >= map::GLOBAL_BASE && addr + len <= map::GLOBAL_BASE + map::GLOBAL_SIZE {
+        // `addr + len` can wrap (e.g. an access near u32::MAX), which
+        // would turn an out-of-range access into a slice-index panic;
+        // checked_add keeps it a clean MemFault.
+        let end = addr.checked_add(len).ok_or(MemFault { addr, store })?;
+        if addr >= map::GLOBAL_BASE && end <= map::GLOBAL_BASE + map::GLOBAL_SIZE {
             let o = (addr - map::GLOBAL_BASE) as usize;
             Ok(&mut self.global[o..o + len as usize])
-        } else if addr >= map::SHARED_BASE && addr + len <= map::SHARED_BASE + map::SHARED_SIZE {
+        } else if addr >= map::SHARED_BASE && end <= map::SHARED_BASE + map::SHARED_SIZE {
             let o = (addr - map::SHARED_BASE) as usize;
             Ok(&mut self.shared[o..o + len as usize])
         } else {
@@ -192,6 +196,19 @@ mod tests {
         assert!(m.write_u32(map::GLOBAL_BASE + map::GLOBAL_SIZE, 1).is_err());
         // straddling the end faults too
         assert!(m.read_u32(map::GLOBAL_BASE + map::GLOBAL_SIZE - 2).is_err());
+    }
+
+    #[test]
+    fn near_wraparound_addresses_fault_cleanly() {
+        // addr + len used to wrap to a tiny `end`, passing the bounds
+        // check and panicking on the slice index instead of faulting.
+        let mut m = Memory::new();
+        for addr in [u32::MAX, u32::MAX - 1, u32::MAX - 3] {
+            assert_eq!(m.read_u32(addr), Err(MemFault { addr, store: false }));
+            assert_eq!(m.write_u32(addr, 1), Err(MemFault { addr, store: true }));
+        }
+        assert!(m.read_u16(u32::MAX).is_err());
+        assert!(m.write_u8(u32::MAX, 1).is_err());
     }
 
     #[test]

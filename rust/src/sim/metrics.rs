@@ -2,7 +2,11 @@
 //! retired warp-instructions / cycles.
 
 /// Counter block, reset per kernel launch.
-#[derive(Clone, Debug, Default)]
+///
+/// `PartialEq`/`Eq` support the engine-equivalence invariant: the
+/// fast-forward engine must produce a counter block bit-identical to
+/// the reference one-cycle engine (`tests/engine_equivalence.rs`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Metrics {
     pub cycles: u64,
     /// Retired warp-instructions.

@@ -22,6 +22,7 @@ pub mod regfile;
 pub mod scheduler;
 pub mod scoreboard;
 pub mod warp;
+pub mod wb;
 
 pub mod exec {
     //! Functional-unit semantics.
@@ -29,7 +30,7 @@ pub mod exec {
 }
 
 pub use self::core::{Core, SimError};
-pub use config::{Latencies, SimConfig};
+pub use config::{EngineMode, Latencies, SimConfig};
 pub use mem::{DCache, Memory};
 pub use metrics::Metrics;
 pub use warp::Warp;
@@ -63,13 +64,19 @@ pub mod map {
 pub struct Gpu {
     pub cores: Vec<Core>,
     pub mem: Memory,
+    /// GPU-level clock: number of cycles any core was still running.
+    /// This (not core 0's counter, which freezes when core 0 halts)
+    /// drives the [`Gpu::run`] timeout, so a multi-core config cannot
+    /// spin past the cap after core 0 finishes.
+    pub cycles: u64,
+    engine: config::EngineMode,
 }
 
 impl Gpu {
     pub fn new(cfg: &SimConfig) -> Self {
         let mem = Memory::new();
         let cores = (0..cfg.num_cores).map(|cid| Core::new(cfg.clone(), cid as u32)).collect();
-        Gpu { cores, mem }
+        Gpu { cores, mem, cycles: 0, engine: cfg.engine }
     }
 
     /// Load a program (shared by all cores) at [`map::CODE_BASE`].
@@ -77,23 +84,86 @@ impl Gpu {
         for c in &mut self.cores {
             c.load_program(prog);
         }
+        self.cycles = 0;
     }
 
-    /// Advance one cycle on every core. Returns true while any core is
-    /// still running.
+    /// Advance one cycle on every still-busy core (idle cores are
+    /// skipped — they can never become busy again, since warps are only
+    /// spawned core-locally). Returns true while any core is running.
     pub fn step(&mut self) -> Result<bool, SimError> {
         let mut busy = false;
         for c in &mut self.cores {
-            busy |= c.step(&mut self.mem)?;
+            if c.busy() {
+                busy |= c.step_one_cycle(&mut self.mem)?;
+            }
+        }
+        if busy {
+            self.cycles += 1;
         }
         Ok(busy)
     }
 
-    /// Run to completion (all warps halted) with a cycle cap.
+    /// Run to completion (all warps halted) with a cycle cap, honoring
+    /// the configured engine.
     pub fn run(&mut self, max_cycles: u64) -> Result<(), SimError> {
+        match self.engine {
+            config::EngineMode::Reference => self.run_reference(max_cycles),
+            config::EngineMode::FastForward => self.run_fast(max_cycles),
+        }
+    }
+
+    /// Reference engine: lockstep, one cycle at a time.
+    pub fn run_reference(&mut self, max_cycles: u64) -> Result<(), SimError> {
         while self.step()? {
-            if self.cores[0].metrics.cycles > max_cycles {
+            if self.cycles >= max_cycles {
                 return Err(SimError::Timeout { cycles: max_cycles });
+            }
+        }
+        Ok(())
+    }
+
+    /// Event-driven engine: whenever *every* busy core stalled in the
+    /// current cycle, jump all of them to the earliest next event
+    /// (writeback retirement or pipeline-penalty expiry on any core).
+    /// Cores never interact except through issued instructions (shared
+    /// global memory), so a window in which no core can issue is
+    /// functionally inert and can be skipped wholesale; each core
+    /// bulk-charges its own stall counter for the window. `Metrics` are
+    /// bit-identical to [`Gpu::run_reference`].
+    pub fn run_fast(&mut self, max_cycles: u64) -> Result<(), SimError> {
+        while self.step()? {
+            if self.cycles >= max_cycles {
+                return Err(SimError::Timeout { cycles: max_cycles });
+            }
+            let mut next = u64::MAX;
+            for c in &self.cores {
+                if !c.busy() {
+                    continue;
+                }
+                if c.issued_last_cycle() {
+                    next = u64::MAX;
+                    break;
+                }
+                match c.next_event() {
+                    Some(e) => next = next.min(e),
+                    None => {
+                        // No predictable event (deadlock fires on the
+                        // next step): single-step.
+                        next = u64::MAX;
+                        break;
+                    }
+                }
+            }
+            if next != u64::MAX {
+                let target = next.min(max_cycles);
+                if target > self.cycles + 1 {
+                    for c in &mut self.cores {
+                        if c.busy() {
+                            c.skip_to(target);
+                        }
+                    }
+                    self.cycles = target - 1;
+                }
             }
         }
         Ok(())

@@ -1,0 +1,216 @@
+//! Equivalence suite for the event-driven fast-forward engine.
+//!
+//! The engine contract: for any program and configuration, the
+//! fast-forward path produces `Metrics` (cycles, full stall breakdown,
+//! instruction mix, memory counters) **bit-identical** to the retained
+//! one-cycle reference path, plus identical functional outputs. These
+//! tests pin that contract over every paper kernel under both the HW
+//! and SW solutions, under GTO scheduling, and on multi-core configs,
+//! and additionally pin `launch_batch` determinism and the GPU-level
+//! timeout fix.
+
+use vortex_warp::coordinator::dispatch::{dispatch, Solution};
+use vortex_warp::coordinator::{launch_batch, BatchJob};
+use vortex_warp::isa::asm::regs::*;
+use vortex_warp::isa::{csr, Asm};
+use vortex_warp::kernels;
+use vortex_warp::sim::config::SchedPolicy;
+use vortex_warp::sim::{EngineMode, Gpu, SimConfig, SimError};
+
+fn reference(base: &SimConfig) -> SimConfig {
+    SimConfig { engine: EngineMode::Reference, ..base.clone() }
+}
+
+/// Run every kernel under both solutions and both engines against
+/// `base`; assert outputs and metrics match exactly.
+fn assert_equivalent_over_kernels(base: &SimConfig, what: &str) {
+    let refe = reference(base);
+    for b in kernels::all() {
+        for sol in [Solution::Hw, Solution::Sw] {
+            let slow = dispatch(sol, &b.kernel, &refe, &b.inputs)
+                .unwrap_or_else(|e| panic!("{what}: {}[{}] reference: {e}", b.name, sol.name()));
+            let fast = dispatch(sol, &b.kernel, base, &b.inputs)
+                .unwrap_or_else(|e| panic!("{what}: {}[{}] fast: {e}", b.name, sol.name()));
+            b.check(&fast.env)
+                .unwrap_or_else(|e| panic!("{what}: {}[{}] output: {e}", b.name, sol.name()));
+            for name in &b.outputs {
+                assert_eq!(
+                    slow.env.get(name),
+                    fast.env.get(name),
+                    "{what}: {}[{}] output `{name}` differs between engines",
+                    b.name,
+                    sol.name()
+                );
+            }
+            assert_eq!(
+                slow.metrics,
+                fast.metrics,
+                "{what}: {}[{}] metrics not bit-identical (ref cycles={} fast cycles={})",
+                b.name,
+                sol.name(),
+                slow.metrics.cycles,
+                fast.metrics.cycles
+            );
+        }
+    }
+}
+
+#[test]
+fn metrics_bit_identical_on_paper_config() {
+    assert_equivalent_over_kernels(&SimConfig::paper(), "paper");
+}
+
+#[test]
+fn metrics_bit_identical_under_gto_scheduling() {
+    let mut cfg = SimConfig::paper();
+    cfg.sched = SchedPolicy::Gto;
+    assert_equivalent_over_kernels(&cfg, "gto");
+}
+
+#[test]
+fn metrics_bit_identical_on_two_cores() {
+    let mut cfg = SimConfig::paper();
+    cfg.num_cores = 2;
+    assert_equivalent_over_kernels(&cfg, "2-core");
+}
+
+#[test]
+fn metrics_bit_identical_on_single_warp_stall_heavy_config() {
+    // One warp: every dependency stalls the pipeline instead of being
+    // hidden by other warps — maximal fast-forward opportunity.
+    let mut cfg = SimConfig::paper();
+    cfg.nw = 1;
+    assert_equivalent_over_kernels(&cfg, "1-warp");
+}
+
+/// Raw-program equivalence on a Gpu: identical metrics for a
+/// scoreboard-stall chain with memory traffic and barriers.
+#[test]
+fn raw_program_equivalence_with_barriers_and_memory() {
+    use vortex_warp::sim::map;
+    // Warp 0 runs a dependent load/use chain (scoreboard stalls with
+    // memory latency in flight) and finishes through a self-satisfying
+    // barrier.
+    let mut a = Asm::new();
+    a.li(A0, (map::GLOBAL_BASE + 0x800) as i32);
+    a.li(T0, 123);
+    a.sw(T0, A0, 0);
+    for i in 0..16 {
+        a.lw(T1, A0, 0); // load
+        a.add(T2, T1, T1); // RAW on the load -> scoreboard stall
+        a.sw(T2, A0, (4 + 4 * i) as i32);
+    }
+    a.li(T3, 0);
+    a.li(T4, 1);
+    a.bar(T3, T4); // 1-warp barrier: releases immediately
+    a.ecall();
+    let prog = a.finish();
+
+    let base = SimConfig::paper();
+    let mut fast_gpu = Gpu::new(&base);
+    fast_gpu.load_program(&prog);
+    fast_gpu.run(1_000_000).expect("fast");
+
+    let mut ref_gpu = Gpu::new(&reference(&base));
+    ref_gpu.load_program(&prog);
+    ref_gpu.run(1_000_000).expect("reference");
+
+    assert_eq!(fast_gpu.cores[0].metrics, ref_gpu.cores[0].metrics);
+    assert!(fast_gpu.cores[0].metrics.stall_scoreboard > 0, "chain must stall");
+    assert_eq!(
+        fast_gpu.mem.read_u32(map::GLOBAL_BASE + 0x800).unwrap(),
+        ref_gpu.mem.read_u32(map::GLOBAL_BASE + 0x800).unwrap()
+    );
+}
+
+#[test]
+fn deadlock_detected_identically_by_both_engines() {
+    let mut a = Asm::new();
+    a.li(T0, 0);
+    a.li(T1, 4);
+    a.bar(T0, T1); // waits for 4 warps; only warp 0 runs
+    a.ecall();
+    let prog = a.finish();
+
+    let base = SimConfig::paper();
+    let run = |cfg: &SimConfig| {
+        let mut gpu = Gpu::new(cfg);
+        gpu.load_program(&prog);
+        gpu.run(100_000).expect_err("deadlock expected")
+    };
+    let fast_err = run(&base);
+    let ref_err = run(&reference(&base));
+    match (&fast_err, &ref_err) {
+        (SimError::Deadlock { cycle: cf }, SimError::Deadlock { cycle: cr }) => {
+            assert_eq!(cf, cr, "deadlock cycle differs between engines");
+        }
+        other => panic!("expected two deadlocks, got {other:?}"),
+    }
+}
+
+/// The satellite fix: `Gpu::run`'s timeout must use a GPU-level clock,
+/// not core 0's counter (which freezes when core 0 halts). Core 0
+/// exits immediately; core 1 spins forever — the run must time out
+/// under both engines instead of spinning past the cap.
+#[test]
+fn multicore_timeout_uses_gpu_level_clock() {
+    let mut a = Asm::new();
+    a.csrr(T0, csr::CSR_CORE_ID);
+    let done = a.label();
+    a.beq(T0, ZERO, done); // core 0 -> exit
+    let top = a.here();
+    a.j(top); // other cores spin forever
+    a.bind(done);
+    a.ecall();
+    let prog = a.finish();
+
+    let mut cfg = SimConfig::paper();
+    cfg.num_cores = 2;
+    for engine in [EngineMode::FastForward, EngineMode::Reference] {
+        let cfg = SimConfig { engine, ..cfg.clone() };
+        let mut gpu = Gpu::new(&cfg);
+        gpu.load_program(&prog);
+        match gpu.run(10_000) {
+            Err(SimError::Timeout { cycles }) => assert_eq!(cycles, 10_000, "{engine:?}"),
+            other => panic!("{engine:?}: expected timeout, got {other:?}"),
+        }
+        assert!(
+            gpu.cores[0].metrics.cycles < 100,
+            "core 0 halted early (cycles={})",
+            gpu.cores[0].metrics.cycles
+        );
+    }
+}
+
+#[test]
+fn launch_batch_is_deterministic_and_matches_sequential() {
+    let base = SimConfig::paper();
+    let jobs: Vec<BatchJob> = kernels::all()
+        .into_iter()
+        .flat_map(|b| {
+            [Solution::Hw, Solution::Sw].map(|sol| {
+                BatchJob::new(
+                    format!("{}[{}]", b.name, sol.name()),
+                    sol,
+                    b.kernel.clone(),
+                    base.clone(),
+                    b.inputs.clone(),
+                )
+            })
+        })
+        .collect();
+
+    let first = launch_batch(&jobs);
+    let second = launch_batch(&jobs);
+    assert_eq!(first.len(), jobs.len());
+    for ((job, a), b) in jobs.iter().zip(&first).zip(&second) {
+        let a = a.as_ref().unwrap_or_else(|e| panic!("{}: {e}", job.label));
+        let b = b.as_ref().unwrap_or_else(|e| panic!("{}: {e}", job.label));
+        assert_eq!(a.metrics, b.metrics, "{}: batch not deterministic", job.label);
+        let seq = dispatch(job.solution, &job.kernel, &job.cfg, &job.inputs).unwrap();
+        assert_eq!(a.metrics, seq.metrics, "{}: batch != sequential", job.label);
+        for (name, arr) in &seq.env.arrays {
+            assert_eq!(a.env.get(name), arr.as_slice(), "{}: array `{name}`", job.label);
+        }
+    }
+}
