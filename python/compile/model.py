@@ -86,6 +86,24 @@ def reduce_tile(x, *, tile=4):
     return (out, anypos.astype(jnp.int32))
 
 
+def gather_strided(x, *, elems_per_thread=16):
+    """PR-2 memory-bound microbenchmark: thread t sums its contiguous
+    chunk x[t*E:(t+1)*E]; per-block sums over 32 consecutive threads —
+    observably contiguous 512-word block sums."""
+    chunk = BLOCK * elems_per_thread
+    out = jnp.sum(x.reshape(-1, chunk).astype(jnp.int32), axis=1, dtype=jnp.int32)
+    return (out,)
+
+
+def gather_random(x, idx, *, elems_per_thread=16):
+    """PR-2 memory-bound microbenchmark: indexed gather x[idx[j]]
+    before the same per-block sums."""
+    g = jnp.take(x.astype(jnp.int32), idx.astype(jnp.int32))
+    chunk = BLOCK * elems_per_thread
+    out = jnp.sum(g.reshape(-1, chunk), axis=1, dtype=jnp.int32)
+    return (out,)
+
+
 #: name -> (fn, input lengths) — must match the Rust benchmark params.
 BENCHMARKS = {
     "mse_forward": (mse_forward, [2048, 2048]),
@@ -94,4 +112,6 @@ BENCHMARKS = {
     "vote": (vote, [32]),
     "reduce": (reduce, [256]),
     "reduce_tile": (reduce_tile, [64]),
+    "gather_strided": (gather_strided, [1024]),
+    "gather_random": (gather_random, [1024, 1024]),
 }

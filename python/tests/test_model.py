@@ -35,6 +35,14 @@ def rust_inputs(name):
     if name == "reduce_tile":
         i = np.arange(64, dtype=np.int64)
         return [((i * 17 + 7) % 41 - 20).astype(np.int32)]
+    if name == "gather_strided":
+        i = np.arange(1024, dtype=np.int64)
+        return [((i * 7 + 3) % 251 - 125).astype(np.int32)]
+    if name == "gather_random":
+        i = np.arange(1024, dtype=np.int64)
+        x = ((i * 11 + 5) % 199 - 99).astype(np.int32)
+        idx = ((i * 97 + 13) % 1024).astype(np.int32)
+        return [x, idx]
     raise KeyError(name)
 
 
@@ -78,6 +86,12 @@ def numpy_expected(name, inputs):
             tiles.sum(axis=1).astype(np.int32),
             (tiles > 0).any(axis=1).astype(np.int32),
         ]
+    if name == "gather_strided":
+        (x,) = inputs
+        return [x.reshape(2, 512).sum(axis=1).astype(np.int32)]
+    if name == "gather_random":
+        x, idx = inputs
+        return [x[idx].reshape(2, 512).sum(axis=1).astype(np.int32)]
     raise KeyError(name)
 
 

@@ -66,7 +66,10 @@ fn main() {
     println!("=== ablation 2: scheduler policy (all six benchmarks, HW path) ===");
     {
         let mut t = TextTable::new(vec!["benchmark", "RR IPC", "GTO IPC"]);
-        for b in kernels::all() {
+        // The six paper kernels — keeps the recorded ablation tables'
+        // composition (the gather microbenchmarks live in the perf
+        // bench's memhier scenario).
+        for b in kernels::paper() {
             let mut rr = SimConfig::paper();
             rr.sched = SchedPolicy::RoundRobin;
             let mut gto = SimConfig::paper();

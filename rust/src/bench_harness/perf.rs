@@ -46,6 +46,11 @@ impl PerfRow {
 #[derive(Clone, Debug, Default)]
 pub struct PerfReport {
     pub rows: Vec<PerfRow>,
+    /// Memory-bound scenario (PR 2): the gather kernels under the full
+    /// `MemHierConfig::vortex()` hierarchy, both engines. Kept separate
+    /// from `rows` so the pinned `aggregate.engine_speedup` regression
+    /// threshold keeps its original composition.
+    pub memhier_rows: Vec<PerfRow>,
     /// Wall time of one `launch_batch` over every (bench × solution)
     /// job with the fast engine.
     pub batch_wall_ns: u128,
@@ -83,19 +88,34 @@ impl PerfReport {
         }
     }
 
+    /// Fast-engine throughput of the memory-bound scenario.
+    pub fn memhier_fast_mips(&self) -> f64 {
+        let instrs: u64 = self.memhier_rows.iter().map(|r| r.instrs).sum();
+        let ns: u128 = self.memhier_rows.iter().map(|r| r.fast_ns).sum();
+        mips(instrs, ns)
+    }
+
+    /// Engine speedup on the memory-bound scenario (fast-forward must
+    /// also jump memory stalls, not just pipeline stalls).
+    pub fn memhier_engine_speedup(&self) -> f64 {
+        let fast: u128 = self.memhier_rows.iter().map(|r| r.fast_ns).sum();
+        let reference: u128 = self.memhier_rows.iter().map(|r| r.reference_ns).sum();
+        if fast == 0 {
+            0.0
+        } else {
+            reference as f64 / fast as f64
+        }
+    }
+
     fn totals(&self, ns_of: impl Fn(&PerfRow) -> u128) -> (u64, u128) {
         let instrs = self.rows.iter().map(|r| r.instrs).sum();
         let ns = self.rows.iter().map(ns_of).sum();
         (instrs, ns)
     }
 
-    pub fn to_json(&self) -> String {
-        let mut s = String::new();
-        s.push_str("{\n  \"schema\": \"vortex_warp.perf.v1\",\n");
-        s.push_str(&format!("  \"host_threads\": {},\n", self.host_threads));
-        s.push_str("  \"rows\": [\n");
-        for (i, r) in self.rows.iter().enumerate() {
-            s.push_str(&format!(
+    fn rows_json(rows: &[PerfRow], out: &mut String) {
+        for (i, r) in rows.iter().enumerate() {
+            out.push_str(&format!(
                 "    {{\"bench\": {}, \"solution\": {}, \"instrs\": {}, \
                  \"reference_ns\": {}, \"fast_ns\": {}, \"reference_mips\": {:.4}, \
                  \"fast_mips\": {:.4}, \"engine_speedup\": {:.4}}}{}\n",
@@ -107,10 +127,26 @@ impl PerfReport {
                 r.reference_mips(),
                 r.fast_mips(),
                 r.engine_speedup(),
-                if i + 1 == self.rows.len() { "" } else { "," },
+                if i + 1 == rows.len() { "" } else { "," },
             ));
         }
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"schema\": \"vortex_warp.perf.v2\",\n");
+        s.push_str(&format!("  \"host_threads\": {},\n", self.host_threads));
+        s.push_str("  \"rows\": [\n");
+        Self::rows_json(&self.rows, &mut s);
         s.push_str("  ],\n");
+        s.push_str("  \"memhier_rows\": [\n");
+        Self::rows_json(&self.memhier_rows, &mut s);
+        s.push_str("  ],\n");
+        s.push_str(&format!(
+            "  \"memhier\": {{\"fast_mips\": {:.4}, \"engine_speedup\": {:.4}}},\n",
+            self.memhier_fast_mips(),
+            self.memhier_engine_speedup(),
+        ));
         s.push_str(&format!(
             "  \"aggregate\": {{\"reference_mips\": {:.4}, \"fast_mips\": {:.4}, \
              \"batch_mips\": {:.4}, \"engine_speedup\": {:.4}, \"batch_wall_ns\": {}, \
@@ -180,6 +216,13 @@ mod tests {
                     fast_ns: 750_000_000,
                 },
             ],
+            memhier_rows: vec![PerfRow {
+                bench: "gather_strided".into(),
+                solution: "HW".into(),
+                instrs: 2_000_000,
+                reference_ns: 1_000_000_000,
+                fast_ns: 500_000_000,
+            }],
             batch_wall_ns: 500_000_000,
             batch_instrs: 4_000_000,
             host_threads: 4,
@@ -208,9 +251,12 @@ mod tests {
     #[test]
     fn json_shape() {
         let j = report().to_json();
-        assert!(j.contains("\"schema\": \"vortex_warp.perf.v1\""));
+        assert!(j.contains("\"schema\": \"vortex_warp.perf.v2\""));
         assert!(j.contains("\"bench\": \"matmul\""));
         assert!(j.contains("\"aggregate\""));
+        assert!(j.contains("\"memhier_rows\""));
+        assert!(j.contains("\"bench\": \"gather_strided\""));
+        assert!(j.contains("\"memhier\": {\"fast_mips\": 4.0000, \"engine_speedup\": 2.0000}"));
         assert!(j.contains("\"engine_speedup\": 2.0000"));
         // Balanced braces/brackets (cheap well-formedness check).
         assert_eq!(j.matches('{').count(), j.matches('}').count());

@@ -87,11 +87,11 @@ pub fn launch(
         env.arrays.insert(name, out);
     }
 
-    // Aggregate metrics over cores (paper config has one core).
+    // Aggregate metrics over cores (paper config has one core):
+    // counters sum, cycles is the slowest core — see `Metrics::merge`.
     let mut metrics = gpu.cores[0].metrics.clone();
     for c in &gpu.cores[1..] {
-        metrics.cycles = metrics.cycles.max(c.metrics.cycles);
-        metrics.instrs += c.metrics.instrs;
+        metrics.merge(&c.metrics);
     }
     Ok(LaunchResult { env, metrics })
 }

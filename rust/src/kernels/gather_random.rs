@@ -1,0 +1,126 @@
+//! `gather_random` memory-bound microbenchmark (PR 2): an indexed
+//! gather — each thread chases `idx[base + i]` (a fixed pseudo-random
+//! permutation of `0..N`) before loading `in[...]`, so every iteration
+//! costs two dependent loads and the gathered addresses scatter across
+//! cache lines with no spatial locality. This is the cache-hostile
+//! counterpart to `gather_strided`: it keeps the MSHRs and DRAM
+//! channels saturated and gives the banked shared L2 real reuse
+//! pressure. The per-thread sums fold through a butterfly
+//! (shuffle-xor) reduction, exercising the warp features on top of the
+//! memory-bound loop.
+
+use super::Benchmark;
+use crate::prt::interp::Env;
+use crate::prt::kir::Expr as E;
+use crate::prt::kir::*;
+
+pub const GRID: u32 = 2;
+pub const BLOCK: u32 = 32;
+pub const WARP: u32 = 8;
+pub const ELEMS_PER_THREAD: usize = 16;
+pub const N: usize = (GRID * BLOCK) as usize * ELEMS_PER_THREAD;
+const NWARPS: i32 = (BLOCK / WARP) as i32;
+
+fn gid() -> Expr {
+    E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx)
+}
+
+/// The index permutation: multiplying by an odd constant mod the
+/// power-of-two `N` is a bijection, so every element is gathered
+/// exactly once, just in a scattered order.
+fn permute(j: usize) -> i32 {
+    ((j * 97 + 13) % N) as i32
+}
+
+pub fn kernel() -> Kernel {
+    Kernel::new("gather_random", GRID, BLOCK, WARP)
+        .param("in", N, ParamDir::In)
+        .param("idx", N, ParamDir::In)
+        .param("out", GRID as usize, ParamDir::Out)
+        .shared_arr("partials", NWARPS as usize)
+        .body(vec![
+            Stmt::Assign("base", E::mul(gid(), E::c(ELEMS_PER_THREAD as i32))),
+            Stmt::Assign("sum", E::c(0)),
+            Stmt::For(
+                "i",
+                E::c(0),
+                E::c(ELEMS_PER_THREAD as i32),
+                vec![Stmt::Assign(
+                    "sum",
+                    E::add(
+                        E::l("sum"),
+                        // Dependent gather: in[idx[base + i]].
+                        E::load("in", E::load("idx", E::add(E::l("base"), E::l("i")))),
+                    ),
+                )],
+            ),
+            // Butterfly reduction (xor deltas 4, 2, 1 for warp=8):
+            // every lane ends up with the segment total.
+            Stmt::Assign("t", E::warp(WarpFn::ShflXor, E::l("sum"), 4)),
+            Stmt::Assign("sum", E::add(E::l("sum"), E::l("t"))),
+            Stmt::Assign("t", E::warp(WarpFn::ShflXor, E::l("sum"), 2)),
+            Stmt::Assign("sum", E::add(E::l("sum"), E::l("t"))),
+            Stmt::Assign("t", E::warp(WarpFn::ShflXor, E::l("sum"), 1)),
+            Stmt::Assign("sum", E::add(E::l("sum"), E::l("t"))),
+            Stmt::If(
+                E::b(
+                    BinOp::Eq,
+                    E::b(BinOp::Rem, E::ThreadIdx, E::c(WARP as i32)),
+                    E::c(0),
+                ),
+                vec![Stmt::Store(
+                    "partials",
+                    E::b(BinOp::Div, E::ThreadIdx, E::c(WARP as i32)),
+                    E::l("sum"),
+                )],
+                vec![],
+            ),
+            Stmt::Sync,
+            Stmt::If(
+                E::b(BinOp::Eq, E::ThreadIdx, E::c(0)),
+                vec![
+                    Stmt::Assign("blocksum", E::c(0)),
+                    Stmt::For(
+                        "w",
+                        E::c(0),
+                        E::c(NWARPS),
+                        vec![Stmt::Assign(
+                            "blocksum",
+                            E::add(E::l("blocksum"), E::load("partials", E::l("w"))),
+                        )],
+                    ),
+                    Stmt::Store("out", E::BlockIdx, E::l("blocksum")),
+                ],
+                vec![],
+            ),
+        ])
+}
+
+pub fn inputs() -> Env {
+    Env::default()
+        .with("in", (0..N as i32).map(|i| (i * 11 + 5) % 199 - 99).collect())
+        .with("idx", (0..N).map(permute).collect())
+}
+
+pub fn reference(inputs: &Env) -> Env {
+    let input = inputs.get("in");
+    let idx = inputs.get("idx");
+    let chunk = BLOCK as usize * ELEMS_PER_THREAD;
+    let mut out = vec![0i32; GRID as usize];
+    for (b, o) in out.iter_mut().enumerate() {
+        for j in b * chunk..(b + 1) * chunk {
+            *o = o.wrapping_add(input[idx[j] as usize]);
+        }
+    }
+    Env::default().with("out", out)
+}
+
+pub fn benchmark() -> Benchmark {
+    Benchmark {
+        name: "gather_random",
+        kernel: kernel(),
+        inputs: inputs(),
+        outputs: vec!["out"],
+        reference,
+    }
+}

@@ -1,0 +1,115 @@
+//! `gather_strided` memory-bound microbenchmark (PR 2): each thread
+//! sums a contiguous `ELEMS_PER_THREAD`-word chunk, so with 4-byte
+//! words and 64 B cache lines the 8 lanes of a warp start exactly one
+//! line apart — every warp load touches NT *distinct* lines, the fully
+//! uncoalesced worst case (replay per lane, one L1 probe each). The
+//! partials then fold through a warp shuffle-down reduction and
+//! shared-memory staging, so the benchmark exercises the coalescing ×
+//! warp-feature interaction the paper's reductions only brush against:
+//! under the SW solution the shuffle emulation arrays add *more*
+//! memory traffic on top of an already memory-bound loop.
+
+use super::Benchmark;
+use crate::prt::interp::Env;
+use crate::prt::kir::Expr as E;
+use crate::prt::kir::*;
+
+pub const GRID: u32 = 2;
+pub const BLOCK: u32 = 32;
+pub const WARP: u32 = 8;
+/// 16 words = exactly one 64 B cache line per thread chunk.
+pub const ELEMS_PER_THREAD: usize = 16;
+pub const N: usize = (GRID * BLOCK) as usize * ELEMS_PER_THREAD;
+const NWARPS: i32 = (BLOCK / WARP) as i32;
+
+fn gid() -> Expr {
+    E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx)
+}
+
+pub fn kernel() -> Kernel {
+    Kernel::new("gather_strided", GRID, BLOCK, WARP)
+        .param("in", N, ParamDir::In)
+        .param("out", GRID as usize, ParamDir::Out)
+        .shared_arr("partials", NWARPS as usize)
+        .body(vec![
+            // Chunked (blocked) accumulation: lane t reads
+            // in[t*EPT .. t*EPT+EPT] — one cache line per lane.
+            Stmt::Assign("base", E::mul(gid(), E::c(ELEMS_PER_THREAD as i32))),
+            Stmt::Assign("sum", E::c(0)),
+            Stmt::For(
+                "i",
+                E::c(0),
+                E::c(ELEMS_PER_THREAD as i32),
+                vec![Stmt::Assign(
+                    "sum",
+                    E::add(E::l("sum"), E::load("in", E::add(E::l("base"), E::l("i")))),
+                )],
+            ),
+            // Warp shuffle-down reduction (deltas 4, 2, 1 for warp=8).
+            Stmt::Assign("t", E::warp(WarpFn::ShflDown, E::l("sum"), 4)),
+            Stmt::Assign("sum", E::add(E::l("sum"), E::l("t"))),
+            Stmt::Assign("t", E::warp(WarpFn::ShflDown, E::l("sum"), 2)),
+            Stmt::Assign("sum", E::add(E::l("sum"), E::l("t"))),
+            Stmt::Assign("t", E::warp(WarpFn::ShflDown, E::l("sum"), 1)),
+            Stmt::Assign("sum", E::add(E::l("sum"), E::l("t"))),
+            // Lane 0 of each warp stages its partial.
+            Stmt::If(
+                E::b(
+                    BinOp::Eq,
+                    E::b(BinOp::Rem, E::ThreadIdx, E::c(WARP as i32)),
+                    E::c(0),
+                ),
+                vec![Stmt::Store(
+                    "partials",
+                    E::b(BinOp::Div, E::ThreadIdx, E::c(WARP as i32)),
+                    E::l("sum"),
+                )],
+                vec![],
+            ),
+            Stmt::Sync,
+            // Thread 0 combines the per-warp partials.
+            Stmt::If(
+                E::b(BinOp::Eq, E::ThreadIdx, E::c(0)),
+                vec![
+                    Stmt::Assign("blocksum", E::c(0)),
+                    Stmt::For(
+                        "w",
+                        E::c(0),
+                        E::c(NWARPS),
+                        vec![Stmt::Assign(
+                            "blocksum",
+                            E::add(E::l("blocksum"), E::load("partials", E::l("w"))),
+                        )],
+                    ),
+                    Stmt::Store("out", E::BlockIdx, E::l("blocksum")),
+                ],
+                vec![],
+            ),
+        ])
+}
+
+pub fn inputs() -> Env {
+    Env::default().with("in", (0..N as i32).map(|i| (i * 7 + 3) % 251 - 125).collect())
+}
+
+pub fn reference(inputs: &Env) -> Env {
+    let input = inputs.get("in");
+    let chunk = BLOCK as usize * ELEMS_PER_THREAD;
+    let mut out = vec![0i32; GRID as usize];
+    for (b, o) in out.iter_mut().enumerate() {
+        for &v in &input[b * chunk..(b + 1) * chunk] {
+            *o = o.wrapping_add(v);
+        }
+    }
+    Env::default().with("out", out)
+}
+
+pub fn benchmark() -> Benchmark {
+    Benchmark {
+        name: "gather_strided",
+        kernel: kernel(),
+        inputs: inputs(),
+        outputs: vec!["out"],
+        reference,
+    }
+}

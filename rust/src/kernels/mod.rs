@@ -6,10 +6,18 @@
 //! consume the *same* source, exactly like the paper's CUDA sources go
 //! through two backends.
 //!
+//! PR 2 adds two **memory-bound** microbenchmarks (`gather_strided`,
+//! `gather_random`) that exercise the coalescing × warp-feature
+//! interaction against the `sim/memhier` hierarchy: fully uncoalesced
+//! chunked sums and a pseudo-random indexed gather, each folded through
+//! a warp shuffle reduction.
+//!
 //! Every benchmark carries a plain-Rust reference implementation used as
 //! an extra oracle on top of the KIR interpreter and the PJRT golden
 //! model.
 
+pub mod gather_random;
+pub mod gather_strided;
 pub mod matmul;
 pub mod mse_forward;
 pub mod reduce;
@@ -54,9 +62,9 @@ impl Benchmark {
     }
 }
 
-/// All six paper benchmarks (deterministic inputs, seed recorded in
-/// EXPERIMENTS.md).
-pub fn all() -> Vec<Benchmark> {
+/// The six paper benchmarks (§V) — what the Fig 5 / table harnesses
+/// regenerate (deterministic inputs, seed recorded in EXPERIMENTS.md).
+pub fn paper() -> Vec<Benchmark> {
     vec![
         mse_forward::benchmark(),
         matmul::benchmark(),
@@ -65,6 +73,15 @@ pub fn all() -> Vec<Benchmark> {
         reduce::benchmark(),
         reduce_tile::benchmark(),
     ]
+}
+
+/// All benchmarks: the six paper kernels plus the two memory-bound
+/// microbenchmarks.
+pub fn all() -> Vec<Benchmark> {
+    let mut v = paper();
+    v.push(gather_strided::benchmark());
+    v.push(gather_random::benchmark());
+    v
 }
 
 /// Look a benchmark up by name.
@@ -78,11 +95,20 @@ mod tests {
     use crate::prt::interp;
 
     #[test]
-    fn all_six_present() {
+    fn all_benchmarks_present() {
         let names: Vec<_> = all().iter().map(|b| b.name).collect();
         assert_eq!(
             names,
-            ["mse_forward", "matmul", "shuffle", "vote", "reduce", "reduce_tile"]
+            [
+                "mse_forward",
+                "matmul",
+                "shuffle",
+                "vote",
+                "reduce",
+                "reduce_tile",
+                "gather_strided",
+                "gather_random",
+            ]
         );
     }
 

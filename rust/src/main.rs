@@ -21,7 +21,8 @@ fn usage() -> ! {
          \n\
          commands:\n\
            tables [--table 1|2|3|4]     regenerate the paper's tables\n\
-           run --bench <name> [--solution hw|sw] [--nt N] [--nw N] [--trace]\n\
+           run --bench <name> [--solution hw|sw] [--nt N] [--nw N]\n\
+               [--cores N] [--memhier legacy|vortex] [--trace]\n\
            fig5                         IPC of HW vs SW over all six benchmarks\n\
            area [--layout]              Table IV area overhead (+ Fig 6 layout)\n\
            validate [--artifacts DIR]   end-to-end check vs PJRT golden models\n\
@@ -45,6 +46,19 @@ fn config_from(args: &[String]) -> SimConfig {
     }
     if let Some(nw) = flag_value(args, "--nw") {
         cfg.nw = nw.parse().expect("--nw");
+    }
+    if let Some(cores) = flag_value(args, "--cores") {
+        cfg.num_cores = cores.parse().expect("--cores");
+    }
+    if let Some(mh) = flag_value(args, "--memhier") {
+        cfg.memhier = match mh.as_str() {
+            "legacy" => vortex_warp::sim::MemHierConfig::legacy(),
+            "vortex" => vortex_warp::sim::MemHierConfig::vortex(),
+            other => {
+                eprintln!("--memhier {other}: expected `legacy` or `vortex`");
+                std::process::exit(2);
+            }
+        };
     }
     cfg.trace = has_flag(args, "--trace");
     cfg.validate().expect("invalid configuration");

@@ -67,6 +67,102 @@ impl Default for CacheConfig {
     }
 }
 
+/// Memory-hierarchy configuration (`sim/memhier`): per-core L1Ds
+/// backed by MSHRs, a banked shared L2, a DRAM stage with bounded
+/// fills in flight, and scratchpad bank conflicts. The L1 geometry
+/// itself stays in [`SimConfig::dcache`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemHierConfig {
+    /// MSHR entries per core. `0` disables the hierarchy entirely: L1
+    /// misses charge the flat [`Latencies::dcache_miss`] and the
+    /// L2/DRAM/bank state is never consulted — bit-identical timing to
+    /// the seed's single-level model (the legacy-equivalent default
+    /// used by [`SimConfig::paper`]).
+    pub mshr_entries: usize,
+    /// Shared-L2 geometry (one L2 for all cores).
+    pub l2: CacheConfig,
+    /// Line-interleaved L2 banks (power of two).
+    pub l2_banks: usize,
+    /// L2 tag+data access latency; a hit returns after this many
+    /// cycles.
+    pub l2_hit: u32,
+    /// Extra bank/channel occupancy while a dirty victim writes back.
+    pub l2_wb: u32,
+    /// DRAM fill latency (L2 miss → line available at the L2).
+    pub dram_latency: u32,
+    /// Max DRAM fills in flight (the bandwidth bound).
+    pub dram_channels: usize,
+    /// Shared-memory banks, word-interleaved. `0` keeps the legacy
+    /// conflict-free scratchpad.
+    pub smem_banks: usize,
+    /// Extra cycles per serialized bank-conflict pass.
+    pub smem_conflict: u32,
+}
+
+impl MemHierConfig {
+    /// Legacy-equivalent default: hierarchy off, flat
+    /// [`Latencies::dcache_miss`] charge — exactly the seed's timing,
+    /// so the paper-evaluation numbers are unchanged. The L2/DRAM
+    /// knobs below are the values [`MemHierConfig::vortex`] enables.
+    pub fn legacy() -> Self {
+        MemHierConfig {
+            mshr_entries: 0,
+            // 256 KiB, 8-way, 64 B lines — Vortex's default L2 scale.
+            l2: CacheConfig { sets: 512, ways: 8, line: 64 },
+            l2_banks: 4,
+            l2_hit: 10,
+            l2_wb: 4,
+            dram_latency: 100,
+            dram_channels: 4,
+            smem_banks: 0,
+            smem_conflict: 1,
+        }
+    }
+
+    /// Full Vortex-like hierarchy: 8 MSHRs per core, the shared banked
+    /// L2, bounded DRAM fills, and 8 scratchpad banks.
+    pub fn vortex() -> Self {
+        MemHierConfig { mshr_entries: 8, smem_banks: 8, ..Self::legacy() }
+    }
+
+    /// Validate against the L1 geometry. The scratchpad banking is
+    /// checked unconditionally (it is gated on `smem_banks` alone);
+    /// the L2/DRAM checks apply only when the hierarchy is enabled.
+    pub fn validate(&self, l1: &CacheConfig) -> Result<(), String> {
+        if self.smem_banks != 0 && !self.smem_banks.is_power_of_two() {
+            return Err("smem_banks must be 0 (conflict-free) or a power of two".into());
+        }
+        if self.mshr_entries == 0 {
+            return Ok(());
+        }
+        if self.l2.sets == 0 || self.l2.ways == 0 {
+            return Err("l2 sets and ways must be >= 1".into());
+        }
+        if !self.l2.line.is_power_of_two() {
+            return Err("l2 line must be a power of two".into());
+        }
+        if self.l2.line < l1.line {
+            return Err(format!(
+                "l2 line ({}) must be >= the L1 line ({}): one L1 fill maps to one L2 request",
+                self.l2.line, l1.line
+            ));
+        }
+        if self.l2_banks == 0 || !self.l2_banks.is_power_of_two() {
+            return Err("l2_banks must be a power of two >= 1".into());
+        }
+        if self.dram_channels == 0 {
+            return Err("dram_channels must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+impl Default for MemHierConfig {
+    fn default() -> Self {
+        Self::legacy()
+    }
+}
+
 /// Simulation engine driving [`crate::sim::Gpu::run`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineMode {
@@ -113,6 +209,10 @@ pub struct SimConfig {
     pub crossbar: bool,
     pub lat: Latencies,
     pub dcache: CacheConfig,
+    /// Memory hierarchy behind the L1 (MSHRs, shared L2, DRAM,
+    /// scratchpad banks). The default is the legacy-equivalent flat
+    /// model; see [`MemHierConfig::vortex`] for the full hierarchy.
+    pub memhier: MemHierConfig,
     pub sched: SchedPolicy,
     /// Engine used by `run` (fast-forward by default; the reference
     /// one-cycle path is kept for equivalence testing).
@@ -133,6 +233,7 @@ impl SimConfig {
             crossbar: true,
             lat: Latencies::default(),
             dcache: CacheConfig::default(),
+            memhier: MemHierConfig::legacy(),
             sched: SchedPolicy::RoundRobin,
             engine: EngineMode::FastForward,
             trace: false,
@@ -165,6 +266,10 @@ impl SimConfig {
         if !self.dcache.line.is_power_of_two() {
             return Err("dcache line must be a power of two".into());
         }
+        if self.dcache.sets == 0 || self.dcache.ways == 0 {
+            return Err("dcache sets and ways must be >= 1".into());
+        }
+        self.memhier.validate(&self.dcache)?;
         Ok(())
     }
 }
@@ -212,5 +317,50 @@ mod tests {
         c.nt = 8;
         c.dcache.line = 48;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn paper_defaults_to_legacy_memory_model() {
+        let c = SimConfig::paper();
+        assert_eq!(c.memhier.mshr_entries, 0, "paper keeps the seed's flat timing");
+        assert_eq!(c.memhier.smem_banks, 0);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn vortex_hierarchy_validates() {
+        let mut c = SimConfig::paper();
+        c.memhier = MemHierConfig::vortex();
+        assert!(c.memhier.mshr_entries > 0);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn memhier_validation_rejects_bad_geometry() {
+        let l1 = CacheConfig::default();
+        let mut m = MemHierConfig::vortex();
+        m.l2_banks = 3;
+        assert!(m.validate(&l1).is_err());
+        let mut m = MemHierConfig::vortex();
+        m.l2.line = 32; // smaller than the 64 B L1 line
+        assert!(m.validate(&l1).is_err());
+        let mut m = MemHierConfig::vortex();
+        m.dram_channels = 0;
+        assert!(m.validate(&l1).is_err());
+        let mut m = MemHierConfig::vortex();
+        m.l2.sets = 0;
+        assert!(m.validate(&l1).is_err());
+        let mut m = MemHierConfig::vortex();
+        m.smem_banks = 5;
+        assert!(m.validate(&l1).is_err());
+        // Disabled hierarchy skips the L2/DRAM checks...
+        let mut m = MemHierConfig::legacy();
+        m.l2_banks = 3;
+        assert!(m.validate(&l1).is_ok());
+        // ...but never the scratchpad banking, which is active even
+        // with the flat L1 model.
+        let mut m = MemHierConfig::legacy();
+        m.smem_banks = 6;
+        assert!(m.validate(&l1).is_err());
     }
 }

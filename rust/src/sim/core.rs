@@ -16,7 +16,8 @@
 use super::config::SimConfig;
 use super::exec::warp_ops;
 use super::map;
-use super::mem::{DCache, MemFault, Memory};
+use super::mem::{MemFault, Memory};
+use super::memhier::{CoreMem, SharedMem};
 use super::metrics::Metrics;
 use super::regfile::RegFile;
 use super::scheduler::Scheduler;
@@ -112,7 +113,10 @@ pub struct Core {
     pub rf: RegFile,
     sb: Scoreboard,
     pub sched: Scheduler,
-    pub dcache: DCache,
+    /// L1D tags + MSHRs (the per-core front of `sim/memhier`); the
+    /// shared L2/DRAM stages live on the `Gpu` and are threaded into
+    /// [`Core::step_one_cycle`].
+    pub memsys: CoreMem,
     inflight: WbQueue,
     /// Outcome of the most recent cycle (drives fast-forward skips).
     outcome: IssueOutcome,
@@ -143,7 +147,7 @@ impl Core {
             rf: RegFile::new(nw, nt),
             sb: Scoreboard::new(nw),
             sched: Scheduler::new(cfg.sched, nw, nt),
-            dcache: DCache::new(cfg.dcache.clone()),
+            memsys: CoreMem::new(&cfg.dcache, &cfg.memhier),
             inflight: WbQueue::with_capacity(2 * nw),
             outcome: IssueOutcome::Idle,
             barriers: BarrierTable::default(),
@@ -174,7 +178,7 @@ impl Core {
         self.rf = RegFile::new(nw, nt);
         self.sb = Scoreboard::new(nw);
         self.sched = Scheduler::new(self.cfg.sched, nw, nt);
-        self.dcache = DCache::new(self.cfg.dcache.clone());
+        self.memsys.reset();
         self.inflight.clear();
         self.outcome = IssueOutcome::Idle;
         self.barriers = BarrierTable::default();
@@ -199,8 +203,13 @@ impl Core {
     }
 
     /// Advance exactly one cycle — the reference timing path. Returns
-    /// `busy()`.
-    pub fn step_one_cycle(&mut self, mem: &mut Memory) -> Result<bool, SimError> {
+    /// `busy()`. `shared` is the GPU-level L2/DRAM state (inert under
+    /// the legacy flat memory model).
+    pub fn step_one_cycle(
+        &mut self,
+        mem: &mut Memory,
+        shared: &mut SharedMem,
+    ) -> Result<bool, SimError> {
         if !self.busy() {
             return Ok(false);
         }
@@ -238,7 +247,7 @@ impl Core {
                 saw_sb_stall = true;
                 continue;
             }
-            self.execute(w, pc, instr, mem, now)?;
+            self.execute(w, pc, instr, mem, shared, now)?;
             // Front-end turnaround: this warp is not fetchable again
             // until the instruction clears fetch/decode (control
             // instructions may have pushed it further out already).
@@ -341,6 +350,7 @@ impl Core {
         pc: u32,
         instr: Instr,
         mem: &mut Memory,
+        shared: &mut SharedMem,
         now: u64,
     ) -> Result<(), SimError> {
         let nt = self.cfg.nt;
@@ -422,7 +432,7 @@ impl Core {
                     out[l] = load_value(mem, addrs[l], width)?;
                 }
                 wb_rd = rd;
-                retire_lat = self.mem_latency(&addrs[..nt], tmask);
+                retire_lat = self.mem_latency(&addrs[..nt], tmask, false, now, shared);
                 self.metrics.loads += 1;
             }
             Instr::Store { width, rs1, rs2, imm } => {
@@ -438,7 +448,7 @@ impl Core {
                     }
                     store_value(mem, addrs[l], b[l], width)?;
                 }
-                retire_lat = self.mem_latency(&addrs[..nt], tmask);
+                retire_lat = self.mem_latency(&addrs[..nt], tmask, true, now, shared);
                 self.metrics.stores += 1;
             }
             Instr::Branch { op, rs1, rs2, imm } => {
@@ -720,47 +730,36 @@ impl Core {
         lat
     }
 
-    /// dcache/shared-memory latency for one warp access.
-    fn mem_latency(&mut self, addrs: &[u32], tmask: u32) -> u64 {
+    /// Memory latency for one warp access, through `sim/memhier`:
+    /// scratchpad accesses go to the banked shared-memory model,
+    /// global accesses walk L1 → MSHR → L2 → DRAM (or the legacy flat
+    /// L1 when the hierarchy is disabled). All hierarchy state mutates
+    /// here, at issue time, with absolute-cycle timestamps — which is
+    /// what keeps the fast-forward engine's skip windows sound.
+    fn mem_latency(
+        &mut self,
+        addrs: &[u32],
+        tmask: u32,
+        store: bool,
+        now: u64,
+        shared: &mut SharedMem,
+    ) -> u64 {
         if tmask == 0 {
             return self.cfg.lat.alu as u64;
         }
-        // Shared memory: fixed latency, banked (conflict-free model).
         let first = tmask.trailing_zeros() as usize;
         if Memory::is_shared(addrs[first]) {
-            self.metrics.smem_accesses += 1;
-            return self.cfg.lat.smem as u64;
+            return self.memsys.smem_access(&self.cfg.lat, addrs, tmask, &mut self.metrics);
         }
-        // Global: one dcache probe per distinct line; replay per extra
-        // line; latency is the worst probe. Fixed-size scratch (NT <=
-        // 32): no allocation on the hot path.
-        let mut lines = [0u32; 32];
-        let mut n = 0usize;
-        let line_shift = self.cfg.dcache.line.trailing_zeros();
-        for (i, &a) in addrs.iter().enumerate() {
-            if tmask & (1 << i) != 0 {
-                let l = a >> line_shift;
-                if !lines[..n].contains(&l) {
-                    lines[n] = l;
-                    n += 1;
-                }
-            }
-        }
-        let mut worst = 0u64;
-        for &line in &lines[..n] {
-            let hit = self.dcache.access(line << line_shift);
-            let lat = if hit {
-                self.metrics.dcache_hits += 1;
-                self.cfg.lat.dcache_hit as u64
-            } else {
-                self.metrics.dcache_misses += 1;
-                self.cfg.lat.dcache_miss as u64
-            };
-            worst = worst.max(lat);
-        }
-        let replays = (n as u64).saturating_sub(1);
-        self.metrics.mem_replays += replays;
-        worst + replays * self.cfg.lat.replay as u64
+        self.memsys.warp_access(
+            &self.cfg.lat,
+            addrs,
+            tmask,
+            store,
+            now,
+            shared,
+            &mut self.metrics,
+        )
     }
 
     fn read_csr(&self, c: u16, w: usize, lane: usize, now: u64) -> u32 {

@@ -8,6 +8,7 @@
 
 use super::config::CacheConfig;
 use super::map;
+use super::memhier::{distinct_keys, TagArray};
 
 /// Flat backing store for global + shared memory.
 pub struct Memory {
@@ -114,63 +115,57 @@ impl Memory {
     }
 }
 
-/// Set-associative LRU cache *timing* model.
+/// Set-associative LRU cache *timing* model — a thin wrapper over the
+/// generalized [`TagArray`] that `sim/memhier` grew out of it. The
+/// core's load/store path now goes through `sim/memhier::CoreMem`;
+/// this type is retained as the standalone utility (coalescing math,
+/// ad-hoc cache experiments) with the same public API.
 pub struct DCache {
     cfg: CacheConfig,
-    /// tags[set * ways + way] = Some(tag)
-    tags: Vec<Option<u32>>,
-    /// LRU stamps, larger = more recent.
-    stamp: Vec<u64>,
-    tick: u64,
+    tags: TagArray,
     pub hits: u64,
     pub misses: u64,
 }
 
 impl DCache {
     pub fn new(cfg: CacheConfig) -> Self {
-        let n = cfg.sets * cfg.ways;
-        DCache { cfg, tags: vec![None; n], stamp: vec![0; n], tick: 0, hits: 0, misses: 0 }
+        DCache { tags: TagArray::new(&cfg), cfg, hits: 0, misses: 0 }
     }
 
     /// Access `addr`; returns true on hit, updating tags/LRU.
     pub fn access(&mut self, addr: u32) -> bool {
-        self.tick += 1;
-        let line = addr as usize / self.cfg.line;
-        let set = line % self.cfg.sets;
-        let tag = (line / self.cfg.sets) as u32;
-        let base = set * self.cfg.ways;
-        for w in 0..self.cfg.ways {
-            if self.tags[base + w] == Some(tag) {
-                self.stamp[base + w] = self.tick;
-                self.hits += 1;
-                return true;
-            }
+        let line = self.tags.line_of(addr);
+        let (hit, _) = self.tags.access_line(line, false);
+        if hit {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
         }
-        // Miss: fill the LRU way.
-        self.misses += 1;
-        let victim = (0..self.cfg.ways).min_by_key(|&w| self.stamp[base + w]).unwrap();
-        self.tags[base + victim] = Some(tag);
-        self.stamp[base + victim] = self.tick;
-        false
+        hit
     }
 
     /// Distinct cache lines touched by a set of lane addresses
-    /// (coalescing degree of one warp access).
+    /// (coalescing degree of one warp access). Fixed scratch sized to
+    /// the 32-lane mask — no allocation on the issue hot path.
     pub fn lines_touched(&self, addrs: &[u32], mask: u32) -> usize {
-        let mut lines: Vec<usize> = addrs
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| mask & (1 << i) != 0)
-            .map(|(_, &a)| a as usize / self.cfg.line)
-            .collect();
-        lines.sort_unstable();
-        lines.dedup();
-        lines.len()
+        let mut lines = [0u32; 32];
+        let line = self.cfg.line;
+        distinct_keys(addrs, mask, |a| (a as usize / line) as u32, &mut lines)
     }
 
+    /// Invalidate tags AND zero the hit/miss statistics, so
+    /// back-to-back launches reusing one cache never leak stats across
+    /// runs.
     pub fn flush(&mut self) {
-        self.tags.fill(None);
-        self.stamp.fill(0);
+        self.tags.reset();
+        self.reset_stats();
+    }
+
+    /// Zero the statistics only (tags survive — e.g. to measure a warm
+    /// cache from a clean counter baseline).
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
     }
 }
 
@@ -244,5 +239,20 @@ mod tests {
         let addrs: Vec<u32> = (0..8).map(|i| 0x100 + i * 64).collect();
         assert_eq!(c.lines_touched(&addrs, 0x0F), 4);
         assert_eq!(c.lines_touched(&addrs, 0x00), 0);
+    }
+
+    #[test]
+    fn flush_resets_tags_and_stats() {
+        let mut c = DCache::new(CacheConfig { sets: 2, ways: 1, line: 16 });
+        assert!(!c.access(0));
+        assert!(c.access(4));
+        assert_eq!((c.hits, c.misses), (1, 1));
+        c.flush();
+        assert_eq!((c.hits, c.misses), (0, 0), "flush must not leak stats");
+        assert!(!c.access(0), "flush invalidates tags");
+        // reset_stats alone keeps the tags warm.
+        c.reset_stats();
+        assert!(c.access(0));
+        assert_eq!((c.hits, c.misses), (1, 0));
     }
 }

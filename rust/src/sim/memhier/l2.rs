@@ -1,0 +1,213 @@
+//! Banked shared L2 timing model.
+//!
+//! One L2 serves every core (the Vortex baseline topology: per-core
+//! L1s behind a banked shared L2). Lines are interleaved across banks
+//! (`bank = line % banks`); each bank has an absolute busy-until cycle,
+//! so two requests hitting the same bank serialize while requests to
+//! different banks proceed in parallel. Tags fill eagerly at access
+//! time (the same single-source-of-truth simplification the L1 makes);
+//! a miss forwards to [`Dram`], and evicting a dirty victim holds the
+//! bank and the DRAM channel a little longer while the writeback
+//! drains.
+
+use super::dram::Dram;
+use super::tags::TagArray;
+use crate::sim::config::MemHierConfig;
+
+pub struct L2 {
+    tags: TagArray,
+    line_shift: u32,
+    /// Busy-until cycle per bank.
+    banks: Vec<u64>,
+    /// Fills still arriving from DRAM: (line, completion cycle). Tags
+    /// install eagerly, so a request that tag-hits a line whose fill
+    /// is still in flight must not complete before the data exists on
+    /// chip — it finishes at the fill's completion instead (pruned of
+    /// completed fills on every miss).
+    pending: Vec<(u32, u64)>,
+    hit_lat: u64,
+    wb_lat: u64,
+}
+
+/// What one L1-miss fill request experienced at the L2.
+pub struct L2Outcome {
+    /// Cycle the line is back at the requesting L1.
+    pub done_at: u64,
+    pub hit: bool,
+    /// A dirty victim was displaced and written back.
+    pub writeback: bool,
+    /// Cycles the request waited for its bank.
+    pub bank_wait: u64,
+    /// DRAM channel-occupancy cycles added (0 on an L2 hit).
+    pub dram_busy: u64,
+    /// Cycles the fill queued for a free DRAM channel (0 on a hit).
+    pub dram_wait: u64,
+}
+
+impl L2 {
+    pub fn new(cfg: &MemHierConfig) -> Self {
+        L2 {
+            tags: TagArray::new(&cfg.l2),
+            line_shift: cfg.l2.line.trailing_zeros(),
+            banks: vec![0; cfg.l2_banks.max(1)],
+            pending: Vec::new(),
+            hit_lat: cfg.l2_hit as u64,
+            wb_lat: cfg.l2_wb as u64,
+        }
+    }
+
+    /// Bank serving `addr` (line-interleaved).
+    pub fn bank_of(&self, addr: u32) -> usize {
+        (addr >> self.line_shift) as usize % self.banks.len()
+    }
+
+    /// One fill request for `addr` arriving at cycle `at`; returns the
+    /// completion cycle and what happened. All state advances eagerly —
+    /// the request's whole timeline is computed here, at issue.
+    pub fn access(&mut self, addr: u32, store: bool, at: u64, dram: &mut Dram) -> L2Outcome {
+        let line = addr >> self.line_shift;
+        let bank = self.bank_of(addr);
+        let start = at.max(self.banks[bank]);
+        let bank_wait = start - at;
+        let (hit, writeback) = self.tags.access_line(line, store);
+        // The bank is held for the tag+data access; a dirty victim
+        // holds it slightly longer while the writeback drains out.
+        let mut bank_busy = start + self.hit_lat;
+        let (mut done_at, dram_busy, dram_wait) = if hit {
+            (start + self.hit_lat, 0, 0)
+        } else {
+            let f = dram.fill(start + self.hit_lat, if writeback { self.wb_lat } else { 0 });
+            if writeback {
+                bank_busy += self.wb_lat;
+            }
+            self.pending.retain(|&(_, d)| d > at);
+            self.pending.push((line, f.done_at));
+            (f.done_at, f.busy, f.wait)
+        };
+        if hit {
+            // Tag-hit on a line whose fill is still arriving (filled by
+            // an earlier request — possibly another core's): the data
+            // is not on chip before the fill lands.
+            if let Some(&(_, d)) = self.pending.iter().find(|&&(l, d)| l == line && d > at) {
+                done_at = done_at.max(d);
+            }
+        }
+        self.banks[bank] = bank_busy;
+        L2Outcome { done_at, hit, writeback, bank_wait, dram_busy, dram_wait }
+    }
+
+    pub fn reset(&mut self) {
+        self.tags.reset();
+        self.banks.fill(0);
+        self.pending.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::CacheConfig;
+
+    fn cfg() -> MemHierConfig {
+        MemHierConfig {
+            l2: CacheConfig { sets: 2, ways: 2, line: 64 },
+            l2_banks: 2,
+            l2_hit: 10,
+            l2_wb: 4,
+            dram_latency: 100,
+            dram_channels: 2,
+            ..MemHierConfig::vortex()
+        }
+    }
+
+    #[test]
+    fn bank_selection_is_line_interleaved() {
+        let l2 = L2::new(&cfg());
+        assert_eq!(l2.bank_of(0), 0);
+        assert_eq!(l2.bank_of(64), 1);
+        assert_eq!(l2.bank_of(128), 0);
+        assert_eq!(l2.bank_of(64 + 63), 1, "same line, same bank");
+    }
+
+    #[test]
+    fn hit_returns_after_hit_latency_miss_goes_to_dram() {
+        let c = cfg();
+        let mut dram = Dram::new(2, 100);
+        let mut l2 = L2::new(&c);
+        let miss = l2.access(0x0, false, 0, &mut dram);
+        assert!(!miss.hit);
+        assert_eq!(miss.done_at, 110, "tag check (10) + DRAM fill (100)");
+        assert_eq!(miss.dram_busy, 100);
+        // Same line later: the eager fill makes it a hit.
+        let hit = l2.access(0x4, false, 200, &mut dram);
+        assert!(hit.hit);
+        assert_eq!(hit.done_at, 210);
+        assert_eq!(hit.dram_busy, 0);
+    }
+
+    #[test]
+    fn same_bank_requests_serialize_different_banks_overlap() {
+        let c = cfg();
+        let mut dram = Dram::new(4, 100);
+        let mut l2 = L2::new(&c);
+        // Lines 0 and 2 share bank 0 (2 banks); line 1 is bank 1.
+        let a = l2.access(0, false, 0, &mut dram);
+        assert_eq!(a.bank_wait, 0);
+        let b = l2.access(2 * 64, false, 0, &mut dram);
+        assert_eq!(b.bank_wait, 10, "bank 0 busy through the first tag access");
+        let c2 = l2.access(64, false, 0, &mut dram);
+        assert_eq!(c2.bank_wait, 0, "bank 1 is free");
+    }
+
+    #[test]
+    fn dirty_eviction_writes_back_and_holds_the_bank() {
+        let c = cfg();
+        let mut dram = Dram::new(4, 100);
+        let mut l2 = L2::new(&c);
+        // bank = line % 2 and set = line % 2, so lines 0, 4, 8 all map
+        // to bank 0 / set 0 (2 ways): fill the set with two dirty
+        // lines, then displace the LRU.
+        l2.access(0, true, 0, &mut dram);
+        l2.access(4 * 64, true, 0, &mut dram);
+        // Third distinct line in the same set evicts the dirty LRU.
+        let ev = l2.access(8 * 64, false, 1000, &mut dram);
+        assert!(!ev.hit);
+        assert!(ev.writeback, "dirty victim must write back");
+        assert_eq!(ev.dram_busy, 104, "fill (100) + piggybacked writeback (4)");
+        // Bank 0 is held through tag access + writeback drain: a
+        // same-bank request right after waits 10 + 4.
+        let nxt = l2.access(2 * 64, false, 1000, &mut dram);
+        assert_eq!(nxt.bank_wait, 14);
+    }
+
+    #[test]
+    fn tag_hit_on_in_flight_fill_waits_for_the_data() {
+        let c = cfg();
+        let mut dram = Dram::new(2, 100);
+        let mut l2 = L2::new(&c);
+        let miss = l2.access(0x0, false, 0, &mut dram);
+        assert_eq!(miss.done_at, 110);
+        // Another request (e.g. a second core) tag-hits the eagerly
+        // installed line while the fill is still in flight: it counts
+        // as a hit but cannot complete before the data arrives.
+        let hit = l2.access(0x4, false, 20, &mut dram);
+        assert!(hit.hit);
+        assert_eq!(hit.done_at, 110, "in-flight hit completes with the fill");
+        // After the fill lands, hits return at hit latency again.
+        let late = l2.access(0x8, false, 500, &mut dram);
+        assert!(late.hit);
+        assert_eq!(late.done_at, 510);
+    }
+
+    #[test]
+    fn reset_clears_tags_and_banks() {
+        let c = cfg();
+        let mut dram = Dram::new(2, 100);
+        let mut l2 = L2::new(&c);
+        l2.access(0, false, 0, &mut dram);
+        l2.reset();
+        let again = l2.access(0, false, 0, &mut dram);
+        assert!(!again.hit, "reset invalidates the eager fill");
+        assert_eq!(again.bank_wait, 0, "reset frees the banks");
+    }
+}

@@ -1,0 +1,366 @@
+//! `sim/memhier` — the memory-hierarchy subsystem (PR 2).
+//!
+//! Layers, front to back:
+//!
+//! * per-core **L1D** — the seed's set-associative LRU tag model,
+//!   migrated to [`tags::TagArray`];
+//! * per-core **MSHRs** ([`mshr::MshrTable`]) — same-line misses merge
+//!   into the pending fill, and the fixed register count bounds
+//!   per-core miss-level parallelism;
+//! * a **banked shared L2** ([`l2::L2`]) — one tag store for all cores
+//!   (lines interleave across banks, conflicting requests serialize),
+//!   which is what finally makes multi-core runs contend for — and
+//!   constructively share — a cache;
+//! * a **DRAM stage** ([`dram::Dram`]) — configurable fill latency and
+//!   a bounded number of fills in flight (bandwidth);
+//! * a word-interleaved **scratchpad bank-conflict model**
+//!   ([`smem::serial_passes`]).
+//!
+//! ## Fast-forward compatibility
+//!
+//! Every structure keeps *absolute-cycle* state (busy-until
+//! timestamps, `done_at` completion cycles) and mutates **only at
+//! issue time**: an access computes its whole timeline through the
+//! hierarchy at the cycle it issues, reserves the resources it uses,
+//! and returns a completion latency that rides the existing writeback
+//! `done_at` min-heap. Between issues the hierarchy is inert, so the
+//! event-driven fast-forward engine skips stalled windows untouched
+//! and stays bit-identical to the one-cycle reference engine —
+//! `tests/engine_equivalence.rs` pins this across memory configs.
+//!
+//! With [`MemHierConfig::mshr_entries`]` == 0` (the legacy-equivalent
+//! default used by `SimConfig::paper()`), misses charge the flat
+//! [`Latencies::dcache_miss`] and none of the shared state is
+//! consulted — timing-identical to the seed's single-level model, so
+//! the paper-evaluation numbers are unchanged.
+
+pub mod dram;
+pub mod l2;
+pub mod mshr;
+pub mod smem;
+pub mod tags;
+
+pub use dram::Dram;
+pub use l2::{L2Outcome, L2};
+pub use mshr::MshrTable;
+pub use tags::TagArray;
+
+use super::config::{CacheConfig, Latencies, MemHierConfig};
+use super::metrics::Metrics;
+
+/// Collect the distinct `key(addr)` values of the active lanes into
+/// `out` (fixed scratch sized to the 32-lane mask — allocation-free).
+/// Returns the count. Shared by the L1 coalescing walk, the
+/// scratchpad bank-conflict model, and `DCache::lines_touched`, so the
+/// mask/dedup semantics cannot drift apart.
+pub fn distinct_keys(
+    addrs: &[u32],
+    mask: u32,
+    key: impl Fn(u32) -> u32,
+    out: &mut [u32; 32],
+) -> usize {
+    let mut n = 0usize;
+    for (i, &a) in addrs.iter().take(32).enumerate() {
+        if mask & (1 << i) == 0 {
+            continue;
+        }
+        let k = key(a);
+        if !out[..n].contains(&k) {
+            out[n] = k;
+            n += 1;
+        }
+    }
+    n
+}
+
+/// GPU-level shared stages: one banked L2 + one DRAM for all cores.
+/// Owned by `Gpu` and threaded into each core's issue stage, so the
+/// per-cycle core order (core 0 first) gives both engines an identical,
+/// deterministic resource schedule.
+pub struct SharedMem {
+    pub l2: L2,
+    pub dram: Dram,
+}
+
+impl SharedMem {
+    pub fn new(cfg: &MemHierConfig) -> Self {
+        SharedMem { l2: L2::new(cfg), dram: Dram::new(cfg.dram_channels, cfg.dram_latency) }
+    }
+
+    /// Launch boundary: invalidate tags, free banks and channels.
+    pub fn reset(&mut self) {
+        self.l2.reset();
+        self.dram.reset();
+    }
+}
+
+/// Per-core front of the hierarchy: L1D tags + MSHRs.
+pub struct CoreMem {
+    cfg: MemHierConfig,
+    l1: TagArray,
+    line_shift: u32,
+    mshr: MshrTable,
+}
+
+impl CoreMem {
+    pub fn new(l1: &CacheConfig, cfg: &MemHierConfig) -> Self {
+        CoreMem {
+            l1: TagArray::new(l1),
+            line_shift: l1.line.trailing_zeros(),
+            mshr: MshrTable::new(cfg.mshr_entries),
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// `mshr_entries == 0` disables the hierarchy: flat L1-only timing
+    /// (the seed model).
+    #[inline]
+    pub fn hierarchy_enabled(&self) -> bool {
+        self.cfg.mshr_entries > 0
+    }
+
+    /// Reset tags + MSHRs at a launch boundary. Hit/miss statistics
+    /// live in the core's `Metrics`, which the core resets alongside —
+    /// the `reset_stats` discipline, so back-to-back launches on one
+    /// `Gpu` never leak stats across runs.
+    pub fn reset(&mut self) {
+        self.l1.reset();
+        self.mshr.reset();
+    }
+
+    /// Timing for one warp global-memory access issued at `now`:
+    /// coalesce the active lanes into distinct L1 lines, walk each line
+    /// through L1 → MSHR → L2 → DRAM, and return the retire latency
+    /// (worst line plus the uncoalesced replay charge). All counters
+    /// land in the issuing core's `Metrics`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn warp_access(
+        &mut self,
+        lat: &Latencies,
+        addrs: &[u32],
+        tmask: u32,
+        store: bool,
+        now: u64,
+        shared: &mut SharedMem,
+        m: &mut Metrics,
+    ) -> u64 {
+        // Distinct lines via fixed scratch (NT <= 32): the issue hot
+        // path stays allocation-free.
+        let mut lines = [0u32; 32];
+        let shift = self.line_shift;
+        let n = distinct_keys(addrs, tmask, |a| a >> shift, &mut lines);
+        let mut worst = 0u64;
+        for &line in &lines[..n] {
+            worst = worst.max(self.line_access(lat, line, store, now, shared, m));
+        }
+        let replays = (n as u64).saturating_sub(1);
+        m.mem_replays += replays;
+        worst + replays * lat.replay as u64
+    }
+
+    /// One cache-line probe; returns the completion latency relative to
+    /// `now`.
+    fn line_access(
+        &mut self,
+        lat: &Latencies,
+        line: u32,
+        store: bool,
+        now: u64,
+        shared: &mut SharedMem,
+        m: &mut Metrics,
+    ) -> u64 {
+        if !self.hierarchy_enabled() {
+            // Seed-identical flat model: hit or a fixed miss charge.
+            let (hit, _) = self.l1.access_line(line, store);
+            return if hit {
+                m.dcache_hits += 1;
+                lat.dcache_hit as u64
+            } else {
+                m.dcache_misses += 1;
+                lat.dcache_miss as u64
+            };
+        }
+        // Secondary miss: merge into the pending fill (checked before
+        // the tags — fills install tags eagerly, so a pending line
+        // *would* tag-hit even though its data is still in flight).
+        // Floored at the hit latency: the lookup that discovers the
+        // match still takes the L1 access time, so a merge can never
+        // outrun a resident-line hit.
+        if let Some(done) = self.mshr.probe(line, now) {
+            m.dcache_misses += 1;
+            m.mshr_merges += 1;
+            return (done - now).max(lat.dcache_hit as u64);
+        }
+        let (hit, _) = self.l1.access_line(line, store);
+        if hit {
+            m.dcache_hits += 1;
+            return lat.dcache_hit as u64;
+        }
+        m.dcache_misses += 1;
+        // Primary miss: claim an MSHR (queuing while all are pending —
+        // the bound on outstanding misses)...
+        let (slot, start) = self.mshr.allocate(now);
+        m.mshr_stall_cycles += start - now;
+        // ...then cross to the shared L2 after the L1 lookup.
+        let addr = line << self.line_shift;
+        let out = shared.l2.access(addr, store, start + lat.dcache_hit as u64, &mut shared.dram);
+        if out.hit {
+            m.l2_hits += 1;
+        } else {
+            m.l2_misses += 1;
+            m.dram_fills += 1;
+            m.dram_busy_cycles += out.dram_busy;
+            m.dram_wait_cycles += out.dram_wait;
+        }
+        if out.writeback {
+            m.l2_writebacks += 1;
+        }
+        m.l2_bank_wait += out.bank_wait;
+        self.mshr.complete(slot, line, out.done_at);
+        out.done_at - now
+    }
+
+    /// Shared-memory access latency with word-interleaved bank
+    /// conflicts. `smem_banks == 0` keeps the legacy conflict-free
+    /// scratchpad (fixed `lat.smem`).
+    pub fn smem_access(
+        &self,
+        lat: &Latencies,
+        addrs: &[u32],
+        tmask: u32,
+        m: &mut Metrics,
+    ) -> u64 {
+        m.smem_accesses += 1;
+        if self.cfg.smem_banks == 0 {
+            return lat.smem as u64;
+        }
+        let passes = smem::serial_passes(addrs, tmask, self.cfg.smem_banks);
+        let extra = passes.saturating_sub(1);
+        m.smem_bank_conflicts += extra;
+        lat.smem as u64 + extra * self.cfg.smem_conflict as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hier_cfg() -> MemHierConfig {
+        MemHierConfig { mshr_entries: 2, ..MemHierConfig::vortex() }
+    }
+
+    fn l1_cfg() -> CacheConfig {
+        CacheConfig { sets: 4, ways: 2, line: 64 }
+    }
+
+    fn access(
+        cm: &mut CoreMem,
+        shared: &mut SharedMem,
+        m: &mut Metrics,
+        addr: u32,
+        now: u64,
+    ) -> u64 {
+        let lat = Latencies::default();
+        cm.warp_access(&lat, &[addr; 8], 0xFF, false, now, shared, m)
+    }
+
+    #[test]
+    fn primary_miss_walks_l1_mshr_l2_dram() {
+        let cfg = hier_cfg();
+        let mut cm = CoreMem::new(&l1_cfg(), &cfg);
+        let mut shared = SharedMem::new(&cfg);
+        let mut m = Metrics::default();
+        // L1 lookup (4) + L2 tag (10) + DRAM (100).
+        assert_eq!(access(&mut cm, &mut shared, &mut m, 0x1000, 0), 114);
+        assert_eq!((m.dcache_misses, m.l2_misses, m.dram_fills), (1, 1, 1));
+        // Long after the fill: L1 hit.
+        assert_eq!(access(&mut cm, &mut shared, &mut m, 0x1000, 500), 4);
+        assert_eq!(m.dcache_hits, 1);
+    }
+
+    #[test]
+    fn secondary_miss_merges_and_skips_the_l2() {
+        let cfg = hier_cfg();
+        let mut cm = CoreMem::new(&l1_cfg(), &cfg);
+        let mut shared = SharedMem::new(&cfg);
+        let mut m = Metrics::default();
+        access(&mut cm, &mut shared, &mut m, 0x1000, 0); // fill due at 114
+        // Same line, 5 cycles later: completes with the pending fill.
+        assert_eq!(access(&mut cm, &mut shared, &mut m, 0x1000, 5), 109);
+        assert_eq!(m.mshr_merges, 1);
+        assert_eq!(m.l2_hits + m.l2_misses, 1, "merged miss issues no L2 traffic");
+    }
+
+    #[test]
+    fn mshr_capacity_queues_the_third_miss() {
+        let cfg = hier_cfg(); // 2 MSHRs
+        let mut cm = CoreMem::new(&l1_cfg(), &cfg);
+        let mut shared = SharedMem::new(&cfg);
+        let mut m = Metrics::default();
+        access(&mut cm, &mut shared, &mut m, 0x0000, 0);
+        access(&mut cm, &mut shared, &mut m, 0x4000, 0);
+        assert_eq!(m.mshr_stall_cycles, 0);
+        let lat3 = access(&mut cm, &mut shared, &mut m, 0x8000, 1);
+        assert!(m.mshr_stall_cycles > 0, "third miss must wait for a register");
+        assert!(lat3 > 114, "queuing delay is part of the completion latency");
+    }
+
+    #[test]
+    fn l2_hit_after_another_cores_fill() {
+        // Two cores, one shared L2: core B hits the line core A filled.
+        let cfg = hier_cfg();
+        let mut a = CoreMem::new(&l1_cfg(), &cfg);
+        let mut b = CoreMem::new(&l1_cfg(), &cfg);
+        let mut shared = SharedMem::new(&cfg);
+        let mut ma = Metrics::default();
+        let mut mb = Metrics::default();
+        access(&mut a, &mut shared, &mut ma, 0x1000, 0);
+        access(&mut b, &mut shared, &mut mb, 0x1000, 200);
+        assert_eq!(ma.l2_misses, 1);
+        assert_eq!(mb.l2_misses, 0, "second core reuses the shared line");
+        assert_eq!(mb.l2_hits, 1);
+        assert_eq!(mb.dcache_misses, 1, "L1s are private: B still misses its L1");
+    }
+
+    #[test]
+    fn uncoalesced_access_replays_per_extra_line() {
+        let cfg = hier_cfg();
+        let mut cm = CoreMem::new(&l1_cfg(), &cfg);
+        let mut shared = SharedMem::new(&cfg);
+        let mut m = Metrics::default();
+        let lat = Latencies::default();
+        // 8 lanes, 64 B apart: 8 distinct lines.
+        let addrs: Vec<u32> = (0..8u32).map(|i| 0x1000 + i * 64).collect();
+        cm.warp_access(&lat, &addrs, 0xFF, false, 0, &mut shared, &mut m);
+        assert_eq!(m.mem_replays, 7);
+        assert_eq!(m.dcache_misses, 8);
+    }
+
+    #[test]
+    fn legacy_mode_never_touches_shared_state() {
+        let cfg = MemHierConfig::legacy();
+        let mut cm = CoreMem::new(&l1_cfg(), &cfg);
+        let mut shared = SharedMem::new(&cfg);
+        let mut m = Metrics::default();
+        assert!(!cm.hierarchy_enabled());
+        assert_eq!(access(&mut cm, &mut shared, &mut m, 0x1000, 0), 50);
+        assert_eq!(access(&mut cm, &mut shared, &mut m, 0x1000, 10), 4);
+        assert_eq!(m.l2_hits + m.l2_misses + m.dram_fills + m.mshr_merges, 0);
+    }
+
+    #[test]
+    fn smem_conflicts_charge_extra_passes() {
+        let cfg = MemHierConfig { smem_banks: 8, smem_conflict: 2, ..hier_cfg() };
+        let cm = CoreMem::new(&l1_cfg(), &cfg);
+        let mut m = Metrics::default();
+        let lat = Latencies::default();
+        // Word stride 8 over 8 banks: all lanes in bank 0 -> 8 passes.
+        let addrs: Vec<u32> = (0..8u32).map(|i| i * 32).collect();
+        assert_eq!(cm.smem_access(&lat, &addrs, 0xFF, &mut m), 2 + 7 * 2);
+        assert_eq!(m.smem_bank_conflicts, 7);
+        // Conflict-free stride: base latency.
+        let addrs: Vec<u32> = (0..8u32).map(|i| i * 4).collect();
+        assert_eq!(cm.smem_access(&lat, &addrs, 0xFF, &mut m), 2);
+        assert_eq!(m.smem_accesses, 2);
+    }
+}

@@ -1,0 +1,164 @@
+//! Miss-status holding registers: per-core bookkeeping of in-flight L1
+//! misses.
+//!
+//! A *primary* miss claims a register and starts a fill; *secondary*
+//! misses to the same line merge into the pending fill and complete
+//! when its fill returns, issuing no L2/DRAM traffic of their own. The
+//! fixed register count bounds per-core miss-level parallelism: when
+//! every register is pending, the next primary miss queues until the
+//! earliest fill frees its slot.
+//!
+//! The table separates the two things a hardware MSHR conflates:
+//!
+//! * **capacity** — one absolute `free_at` cycle per register; a
+//!   primary miss claims the register that frees earliest and starts
+//!   no sooner than that (the queuing delay);
+//! * **fill knowledge** — a `(line, done_at)` list of fills still in
+//!   flight, kept until each fill *completes* even after its register
+//!   has been re-claimed by a queued miss, so accesses to a displaced
+//!   line keep merging at the true completion time instead of
+//!   tag-hitting data that has not arrived yet. The list is pruned of
+//!   completed fills on every allocation, so it stays small and
+//!   allocation-free in steady state.
+//!
+//! All state is absolute-cycle and mutates at issue time only, which
+//! keeps the table compatible with the event-driven fast-forward
+//! engine: a warp waiting on a fill is just a scoreboard stall whose
+//! `done_at` rides the writeback min-heap.
+
+pub struct MshrTable {
+    /// Busy-until cycle per register (the capacity resource).
+    free_at: Vec<u64>,
+    /// Fills still in flight: (line, completion cycle).
+    pending: Vec<(u32, u64)>,
+}
+
+impl MshrTable {
+    pub fn new(entries: usize) -> Self {
+        MshrTable { free_at: vec![0; entries], pending: Vec::with_capacity(entries) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.free_at.len()
+    }
+
+    /// Completion cycle of the pending fill for `line`, if one is in
+    /// flight at `now` — the secondary-miss merge path.
+    pub fn probe(&self, line: u32, now: u64) -> Option<u64> {
+        self.pending.iter().find(|&&(l, d)| l == line && d > now).map(|&(_, d)| d)
+    }
+
+    /// Claim a register for a primary miss at `now`: picks the slot
+    /// that frees earliest and returns `(slot, start)`, where `start >=
+    /// now` is the cycle the miss can actually begin (later than `now`
+    /// only when every register is still pending — the capacity
+    /// bound). The caller computes the fill's completion and records
+    /// it with [`MshrTable::complete`].
+    pub fn allocate(&mut self, now: u64) -> (usize, u64) {
+        debug_assert!(!self.free_at.is_empty(), "allocate on a disabled MSHR table");
+        // Drop knowledge of fills that have fully completed (retain
+        // reuses the buffer — no allocation).
+        self.pending.retain(|&(_, d)| d > now);
+        let slot = (0..self.free_at.len()).min_by_key(|&i| self.free_at[i]).unwrap();
+        let start = now.max(self.free_at[slot]);
+        (slot, start)
+    }
+
+    /// Record the fill scheduled on `slot`: the register is busy until
+    /// `done_at`, and the line's fill is discoverable by
+    /// [`MshrTable::probe`] until then.
+    pub fn complete(&mut self, slot: usize, line: u32, done_at: u64) {
+        self.free_at[slot] = done_at;
+        self.pending.push((line, done_at));
+    }
+
+    /// Fills still in flight at `now`.
+    pub fn pending(&self, now: u64) -> usize {
+        self.pending.iter().filter(|&&(_, d)| d > now).count()
+    }
+
+    pub fn reset(&mut self) {
+        self.free_at.fill(0);
+        self.pending.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn secondary_miss_merges_while_pending() {
+        let mut t = MshrTable::new(4);
+        let (slot, start) = t.allocate(10);
+        assert_eq!(start, 10, "free register: the miss starts immediately");
+        t.complete(slot, 7, 120);
+        assert_eq!(t.probe(7, 50), Some(120), "same line merges into the fill");
+        assert_eq!(t.probe(8, 50), None, "other lines do not merge");
+        assert_eq!(t.probe(7, 120), None, "completed fills are not pending");
+        assert_eq!(t.pending(50), 1);
+        assert_eq!(t.pending(120), 0);
+    }
+
+    #[test]
+    fn full_table_queues_the_next_primary_miss() {
+        let mut t = MshrTable::new(2);
+        let (a, _) = t.allocate(0);
+        t.complete(a, 1, 100);
+        let (b, _) = t.allocate(0);
+        t.complete(b, 2, 150);
+        // Both registers pending: the third miss waits for the earliest
+        // fill (cycle 100) before it can begin.
+        let (c, start) = t.allocate(5);
+        assert_eq!(start, 100, "capacity bound: queued behind the earliest fill");
+        t.complete(c, 3, 200);
+        assert_eq!(t.probe(3, 150), Some(200));
+        // The displaced register belonged to line 1, but line 1's fill
+        // (due at 100) is STILL in flight at cycle 50: knowledge of it
+        // must survive the register reuse so the access merges at the
+        // true completion time instead of tag-hitting absent data.
+        assert_eq!(t.probe(1, 50), Some(100), "displaced line still merges until its fill lands");
+        assert_eq!(t.probe(1, 100), None, "and stops merging once the fill completes");
+    }
+
+    #[test]
+    fn freed_registers_are_reused_without_queuing() {
+        let mut t = MshrTable::new(1);
+        let (a, _) = t.allocate(0);
+        t.complete(a, 1, 50);
+        let (_, start) = t.allocate(60);
+        assert_eq!(start, 60, "fill completed: no queuing delay");
+    }
+
+    #[test]
+    fn completed_fills_are_pruned_on_allocate() {
+        let mut t = MshrTable::new(1);
+        for round in 0..100u64 {
+            let now = round * 1000;
+            let (slot, start) = t.allocate(now);
+            assert_eq!(start, now);
+            t.complete(slot, round as u32, now + 100);
+        }
+        // Only the last fill can still be pending: the prune in
+        // allocate() keeps the knowledge list from growing.
+        assert!(t.pending.len() <= 2, "pending list grew to {}", t.pending.len());
+    }
+
+    #[test]
+    fn reset_clears_all_state() {
+        let mut t = MshrTable::new(2);
+        let (a, _) = t.allocate(0);
+        t.complete(a, 1, 100);
+        t.reset();
+        assert_eq!(t.probe(1, 10), None);
+        assert_eq!(t.pending(10), 0);
+        let (_, start) = t.allocate(3);
+        assert_eq!(start, 3);
+    }
+
+    #[test]
+    fn capacity_reports_register_count() {
+        assert_eq!(MshrTable::new(8).capacity(), 8);
+        assert_eq!(MshrTable::new(0).capacity(), 0);
+    }
+}

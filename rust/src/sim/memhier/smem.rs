@@ -1,0 +1,59 @@
+//! Shared-memory scratchpad bank-conflict model.
+//!
+//! The scratchpad is word-interleaved across `banks`: word `w` lives in
+//! bank `w % banks`. Active lanes that touch *distinct* words in the
+//! same bank serialize into extra passes; lanes reading the same word
+//! broadcast for free (the CUDA/Vortex convention).
+
+/// Number of serialized passes one warp access needs: the worst bank's
+/// count of distinct active words (>= 1 whenever any lane is active).
+/// Allocation-free: fixed scratch sized to the 32-lane mask.
+pub fn serial_passes(addrs: &[u32], mask: u32, banks: usize) -> u64 {
+    debug_assert!(banks > 0, "serial_passes with banks == 0");
+    // Distinct active words (same-word lanes broadcast).
+    let mut words = [0u32; 32];
+    let n = super::distinct_keys(addrs, mask, |a| a >> 2, &mut words);
+    let mut worst = 0u64;
+    for i in 0..n {
+        let b = words[i] as usize % banks;
+        let same = words[..n].iter().filter(|&&w| w as usize % banks == b).count();
+        worst = worst.max(same as u64);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conflict_free_when_lanes_spread_over_banks() {
+        // 8 lanes, consecutive words, 8 banks: one word per bank.
+        let addrs: Vec<u32> = (0..8).map(|i| i * 4).collect();
+        assert_eq!(serial_passes(&addrs, 0xFF, 8), 1);
+    }
+
+    #[test]
+    fn same_word_broadcasts() {
+        let addrs = [0x40u32; 8];
+        assert_eq!(serial_passes(&addrs, 0xFF, 8), 1, "broadcast is one pass");
+    }
+
+    #[test]
+    fn stride_equal_to_banks_serializes_fully() {
+        // Word stride 8 over 8 banks: every lane hits bank 0.
+        let addrs: Vec<u32> = (0..8).map(|i| i * 8 * 4).collect();
+        assert_eq!(serial_passes(&addrs, 0xFF, 8), 8);
+    }
+
+    #[test]
+    fn partial_conflicts_and_masked_lanes() {
+        // Word stride 2 over 4 banks: words land on banks 0 and 2 only,
+        // four lanes each.
+        let addrs: Vec<u32> = (0..8).map(|i| i * 2 * 4).collect();
+        assert_eq!(serial_passes(&addrs, 0xFF, 4), 4);
+        // Masking half the lanes halves the worst bank's load.
+        assert_eq!(serial_passes(&addrs, 0x0F, 4), 2);
+        assert_eq!(serial_passes(&addrs, 0x00, 4), 0, "no active lanes");
+    }
+}

@@ -29,11 +29,33 @@ pub struct Metrics {
     pub stall_pipeline: u64,
     pub idle_cycles: u64,
 
-    // Memory system.
+    // Memory system (L1).
     pub dcache_hits: u64,
     pub dcache_misses: u64,
     pub smem_accesses: u64,
     pub mem_replays: u64,
+
+    // Memory hierarchy (`sim/memhier`; all zero under the legacy
+    // flat model).
+    /// Secondary misses merged into a pending MSHR fill.
+    pub mshr_merges: u64,
+    /// Cycles primary misses queued waiting for a free MSHR.
+    pub mshr_stall_cycles: u64,
+    pub l2_hits: u64,
+    pub l2_misses: u64,
+    /// Dirty L2 victims written back to DRAM.
+    pub l2_writebacks: u64,
+    /// Cycles requests waited for a busy L2 bank.
+    pub l2_bank_wait: u64,
+    /// Extra serialized scratchpad passes due to bank conflicts.
+    pub smem_bank_conflicts: u64,
+    /// Lines filled from DRAM.
+    pub dram_fills: u64,
+    /// DRAM channel-occupancy cycles (fills + piggybacked writebacks).
+    pub dram_busy_cycles: u64,
+    /// Cycles fills queued waiting for a free DRAM channel (the
+    /// bandwidth bound showing up as latency).
+    pub dram_wait_cycles: u64,
 
     // Crossbar (merged-warp collectives).
     pub crossbar_hops: u64,
@@ -66,9 +88,98 @@ impl Metrics {
         }
     }
 
-    /// One-line human summary.
+    pub fn l2_hit_rate(&self) -> f64 {
+        let t = self.l2_hits + self.l2_misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.l2_hits as f64 / t as f64
+        }
+    }
+
+    /// Mean DRAM channel occupancy over the run (0..=channels).
+    pub fn dram_occupancy(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.dram_busy_cycles as f64 / self.cycles as f64
+        }
+    }
+
+    /// Fold another core's counters into this block: counts add,
+    /// `cycles` takes the max (the launch's wall clock). Used to
+    /// aggregate a multi-core launch into one `Metrics`.
+    ///
+    /// The exhaustive destructuring (no `..`) is deliberate: adding a
+    /// counter to the struct without deciding how it aggregates here
+    /// becomes a compile error instead of a silently-dropped field.
+    pub fn merge(&mut self, o: &Metrics) {
+        let &Metrics {
+            cycles,
+            instrs,
+            thread_instrs,
+            alu_ops,
+            mul_ops,
+            loads,
+            stores,
+            warp_collectives,
+            control_ops,
+            barriers_hit,
+            stall_scoreboard,
+            stall_barrier,
+            stall_pipeline,
+            idle_cycles,
+            dcache_hits,
+            dcache_misses,
+            smem_accesses,
+            mem_replays,
+            mshr_merges,
+            mshr_stall_cycles,
+            l2_hits,
+            l2_misses,
+            l2_writebacks,
+            l2_bank_wait,
+            smem_bank_conflicts,
+            dram_fills,
+            dram_busy_cycles,
+            dram_wait_cycles,
+            crossbar_hops,
+        } = o;
+        self.cycles = self.cycles.max(cycles);
+        self.instrs += instrs;
+        self.thread_instrs += thread_instrs;
+        self.alu_ops += alu_ops;
+        self.mul_ops += mul_ops;
+        self.loads += loads;
+        self.stores += stores;
+        self.warp_collectives += warp_collectives;
+        self.control_ops += control_ops;
+        self.barriers_hit += barriers_hit;
+        self.stall_scoreboard += stall_scoreboard;
+        self.stall_barrier += stall_barrier;
+        self.stall_pipeline += stall_pipeline;
+        self.idle_cycles += idle_cycles;
+        self.dcache_hits += dcache_hits;
+        self.dcache_misses += dcache_misses;
+        self.smem_accesses += smem_accesses;
+        self.mem_replays += mem_replays;
+        self.mshr_merges += mshr_merges;
+        self.mshr_stall_cycles += mshr_stall_cycles;
+        self.l2_hits += l2_hits;
+        self.l2_misses += l2_misses;
+        self.l2_writebacks += l2_writebacks;
+        self.l2_bank_wait += l2_bank_wait;
+        self.smem_bank_conflicts += smem_bank_conflicts;
+        self.dram_fills += dram_fills;
+        self.dram_busy_cycles += dram_busy_cycles;
+        self.dram_wait_cycles += dram_wait_cycles;
+        self.crossbar_hops += crossbar_hops;
+    }
+
+    /// One-line human summary. The memory-hierarchy tail appears only
+    /// when the hierarchy saw traffic (legacy runs keep the seed line).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "cycles={} instrs={} ipc={:.3} tipc={:.2} loads={} stores={} collectives={} \
              d$hit={:.1}% stalls[sb={} bar={} pipe={} idle={}]",
             self.cycles,
@@ -83,7 +194,21 @@ impl Metrics {
             self.stall_barrier,
             self.stall_pipeline,
             self.idle_cycles,
-        )
+        );
+        if self.l2_hits + self.l2_misses > 0 {
+            s.push_str(&format!(
+                " L2hit={:.1}% mshr[merge={} stall={}] dram[fills={} busy={} wait={}] \
+                 bankconf={}",
+                self.l2_hit_rate() * 100.0,
+                self.mshr_merges,
+                self.mshr_stall_cycles,
+                self.dram_fills,
+                self.dram_busy_cycles,
+                self.dram_wait_cycles,
+                self.smem_bank_conflicts,
+            ));
+        }
+        s
     }
 }
 
@@ -104,5 +229,49 @@ mod tests {
         assert!((m.ipc() - 0.75).abs() < 1e-12);
         assert!((m.tipc() - 6.0).abs() < 1e-12);
         assert!(m.summary().contains("ipc=0.750"));
+        assert!(!m.summary().contains("L2hit"), "legacy runs keep the seed summary");
+    }
+
+    #[test]
+    fn merge_sums_counts_and_maxes_cycles() {
+        let mut a = Metrics {
+            cycles: 100,
+            instrs: 10,
+            l2_misses: 3,
+            mshr_merges: 1,
+            dram_busy_cycles: 40,
+            ..Default::default()
+        };
+        let b = Metrics {
+            cycles: 80,
+            instrs: 5,
+            l2_misses: 2,
+            smem_bank_conflicts: 7,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.cycles, 100, "wall clock is the slowest core");
+        assert_eq!(a.instrs, 15);
+        assert_eq!(a.l2_misses, 5);
+        assert_eq!(a.mshr_merges, 1);
+        assert_eq!(a.smem_bank_conflicts, 7);
+        assert_eq!(a.dram_busy_cycles, 40);
+    }
+
+    #[test]
+    fn hierarchy_rates_and_summary_tail() {
+        let m = Metrics {
+            cycles: 100,
+            l2_hits: 3,
+            l2_misses: 1,
+            dram_fills: 1,
+            dram_busy_cycles: 50,
+            ..Default::default()
+        };
+        assert!((m.l2_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((m.dram_occupancy() - 0.5).abs() < 1e-12);
+        assert!(m.summary().contains("L2hit=75.0%"));
+        assert_eq!(Metrics::default().l2_hit_rate(), 0.0);
+        assert_eq!(Metrics::default().dram_occupancy(), 0.0);
     }
 }

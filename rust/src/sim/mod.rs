@@ -4,8 +4,11 @@
 //! core with a warp scheduler, IPDOM divergence stack, scoreboard,
 //! banked register file (plus the paper's operand **crossbar** for
 //! merged warps), ALU / MUL / warp-collective / LSU functional units
-//! with configurable latencies, an L1 data cache over a flat global
-//! memory, a per-core shared-memory scratchpad, and warp barriers.
+//! with configurable latencies, a memory hierarchy over a flat global
+//! memory (per-core L1D + MSHRs behind a banked shared L2 and a
+//! bandwidth-bounded DRAM stage — see [`memhier`]; the default config
+//! keeps the seed's flat L1-only timing), a per-core shared-memory
+//! scratchpad with bank-conflict modeling, and warp barriers.
 //!
 //! The paper's HW solution (Fig 2, Table I) is the
 //! [`config::SimConfig::warp_hw`] feature: when enabled the decoder
@@ -17,6 +20,7 @@
 pub mod config;
 pub mod core;
 pub mod mem;
+pub mod memhier;
 pub mod metrics;
 pub mod regfile;
 pub mod scheduler;
@@ -30,8 +34,9 @@ pub mod exec {
 }
 
 pub use self::core::{Core, SimError};
-pub use config::{EngineMode, Latencies, SimConfig};
+pub use config::{EngineMode, Latencies, MemHierConfig, SimConfig};
 pub use mem::{DCache, Memory};
+pub use memhier::SharedMem;
 pub use metrics::Metrics;
 pub use warp::Warp;
 
@@ -60,10 +65,15 @@ pub mod map {
     pub const STACK_SIZE: u32 = 1 << 20;
 }
 
-/// A GPU: one or more cores over a shared global memory.
+/// A GPU: one or more cores over a shared global memory and a shared
+/// L2/DRAM back end (`sim/memhier`).
 pub struct Gpu {
     pub cores: Vec<Core>,
     pub mem: Memory,
+    /// Shared memory-hierarchy stages (banked L2 + DRAM channels),
+    /// threaded into every core's issue stage. Inert under the
+    /// legacy-equivalent default config.
+    pub memsys: SharedMem,
     /// GPU-level clock: number of cycles any core was still running.
     /// This (not core 0's counter, which freezes when core 0 halts)
     /// drives the [`Gpu::run`] timeout, so a multi-core config cannot
@@ -75,8 +85,9 @@ pub struct Gpu {
 impl Gpu {
     pub fn new(cfg: &SimConfig) -> Self {
         let mem = Memory::new();
+        let memsys = SharedMem::new(&cfg.memhier);
         let cores = (0..cfg.num_cores).map(|cid| Core::new(cfg.clone(), cid as u32)).collect();
-        Gpu { cores, mem, cycles: 0, engine: cfg.engine }
+        Gpu { cores, mem, memsys, cycles: 0, engine: cfg.engine }
     }
 
     /// Load a program (shared by all cores) at [`map::CODE_BASE`].
@@ -84,17 +95,21 @@ impl Gpu {
         for c in &mut self.cores {
             c.load_program(prog);
         }
+        self.memsys.reset();
         self.cycles = 0;
     }
 
     /// Advance one cycle on every still-busy core (idle cores are
     /// skipped — they can never become busy again, since warps are only
-    /// spawned core-locally). Returns true while any core is running.
+    /// spawned core-locally). Cores issue in core-id order, so their
+    /// claims on the shared L2/DRAM state are deterministic and
+    /// identical under both engines. Returns true while any core is
+    /// running.
     pub fn step(&mut self) -> Result<bool, SimError> {
         let mut busy = false;
         for c in &mut self.cores {
             if c.busy() {
-                busy |= c.step_one_cycle(&mut self.mem)?;
+                busy |= c.step_one_cycle(&mut self.mem, &mut self.memsys)?;
             }
         }
         if busy {

@@ -2,20 +2,22 @@
 //!
 //! The engine contract: for any program and configuration, the
 //! fast-forward path produces `Metrics` (cycles, full stall breakdown,
-//! instruction mix, memory counters) **bit-identical** to the retained
+//! instruction mix, memory counters — including the PR-2
+//! L1/L2/MSHR/bank-conflict counters) **bit-identical** to the retained
 //! one-cycle reference path, plus identical functional outputs. These
-//! tests pin that contract over every paper kernel under both the HW
-//! and SW solutions, under GTO scheduling, and on multi-core configs,
-//! and additionally pin `launch_batch` determinism and the GPU-level
-//! timeout fix.
+//! tests pin that contract over every kernel under both the HW and SW
+//! solutions, under GTO scheduling, on multi-core configs, and across
+//! the `sim/memhier` memory configs (legacy default, full hierarchy,
+//! small L2, single MSHR, 2-core shared L2), and additionally pin
+//! `launch_batch` determinism and the GPU-level timeout fix.
 
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
 use vortex_warp::coordinator::{launch_batch, BatchJob};
 use vortex_warp::isa::asm::regs::*;
 use vortex_warp::isa::{csr, Asm};
 use vortex_warp::kernels;
-use vortex_warp::sim::config::SchedPolicy;
-use vortex_warp::sim::{EngineMode, Gpu, SimConfig, SimError};
+use vortex_warp::sim::config::{CacheConfig, SchedPolicy};
+use vortex_warp::sim::{EngineMode, Gpu, MemHierConfig, SimConfig, SimError};
 
 fn reference(base: &SimConfig) -> SimConfig {
     SimConfig { engine: EngineMode::Reference, ..base.clone() }
@@ -65,6 +67,46 @@ fn metrics_bit_identical_under_gto_scheduling() {
     let mut cfg = SimConfig::paper();
     cfg.sched = SchedPolicy::Gto;
     assert_equivalent_over_kernels(&cfg, "gto");
+}
+
+/// The paper config with the full memory hierarchy enabled.
+fn hier(base: &SimConfig) -> SimConfig {
+    SimConfig { memhier: MemHierConfig::vortex(), ..base.clone() }
+}
+
+#[test]
+fn metrics_bit_identical_with_full_memory_hierarchy() {
+    assert_equivalent_over_kernels(&hier(&SimConfig::paper()), "memhier");
+}
+
+#[test]
+fn metrics_bit_identical_with_small_l2() {
+    // A 512 B L2 over 2 banks: constant capacity misses, evictions and
+    // bank pressure — the eviction/writeback paths fast-forward too.
+    let mut cfg = hier(&SimConfig::paper());
+    cfg.memhier.l2 = CacheConfig { sets: 4, ways: 2, line: 64 };
+    cfg.memhier.l2_banks = 2;
+    assert_equivalent_over_kernels(&cfg, "small-l2");
+}
+
+#[test]
+fn metrics_bit_identical_with_single_mshr() {
+    // One MSHR and one DRAM channel: every structural queue in the
+    // hierarchy is exercised on every miss.
+    let mut cfg = hier(&SimConfig::paper());
+    cfg.memhier.mshr_entries = 1;
+    cfg.memhier.dram_channels = 1;
+    assert_equivalent_over_kernels(&cfg, "1-mshr");
+}
+
+#[test]
+fn metrics_bit_identical_on_two_cores_sharing_the_l2() {
+    // Includes the memory-bound gather kernels (in `kernels::all`), so
+    // this pins equivalence while two cores contend for — and
+    // constructively share — the L2 and DRAM channels.
+    let mut cfg = hier(&SimConfig::paper());
+    cfg.num_cores = 2;
+    assert_equivalent_over_kernels(&cfg, "2-core-shared-l2");
 }
 
 #[test]
