@@ -10,7 +10,10 @@
 //!   4. a **memory-bound scenario**: the gather kernels under the full
 //!      `sim/memhier` hierarchy (`MemHierConfig::vortex`), reported
 //!      separately as `memhier_rows` so the pinned
-//!      `aggregate.engine_speedup` threshold keeps its composition.
+//!      `aggregate.engine_speedup` threshold keeps its composition;
+//!   5. an **FU-contention scenario**: representative kernels under the
+//!      bounded-unit `FuConfig::vortex()` pipeline (1 LSU port, 1 WCU),
+//!      reported separately as `fu_rows`.
 //!
 //! While measuring, the bench asserts the two engines return
 //! bit-identical `Metrics` — the equivalence invariant — and writes a
@@ -25,7 +28,7 @@ use vortex_warp::bench_harness::perf::{PerfReport, PerfRow};
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
 use vortex_warp::coordinator::{launch_batch, BatchJob};
 use vortex_warp::kernels;
-use vortex_warp::sim::{EngineMode, MemHierConfig, SimConfig};
+use vortex_warp::sim::{EngineMode, FuConfig, MemHierConfig, SimConfig};
 
 fn best_of(iters: usize, mut f: impl FnMut() -> u64) -> (u128, u64) {
     let mut best_ns = u128::MAX;
@@ -36,6 +39,62 @@ fn best_of(iters: usize, mut f: impl FnMut() -> u64) -> (u128, u64) {
         best_ns = best_ns.min(t0.elapsed().as_nanos());
     }
     (best_ns, instrs)
+}
+
+/// Measure one special-config scenario (named kernels × both
+/// solutions) under both engines: assert the metrics-equivalence
+/// invariant on a warm run, hand the warm fast-engine metrics to
+/// `check_warm` for scenario-specific asserts/reporting, then time
+/// best-of-N per engine and append a `PerfRow` per workload.
+fn run_scenario(
+    title: &str,
+    fast_cfg: &SimConfig,
+    kernel_names: &[&str],
+    iters: usize,
+    rows: &mut Vec<PerfRow>,
+    check_warm: impl Fn(&str, &vortex_warp::sim::Metrics),
+) {
+    let ref_cfg = SimConfig { engine: EngineMode::Reference, ..fast_cfg.clone() };
+    println!("\n=== {title} ===");
+    for name in kernel_names {
+        let b = kernels::by_name(name).expect("scenario benchmark");
+        for sol in [Solution::Hw, Solution::Sw] {
+            let warm_ref = dispatch(sol, &b.kernel, &ref_cfg, &b.inputs).expect("ref warm");
+            let warm_fast = dispatch(sol, &b.kernel, fast_cfg, &b.inputs).expect("fast warm");
+            assert_eq!(
+                warm_ref.metrics, warm_fast.metrics,
+                "{title}: {}[{}] metrics diverged between engines",
+                b.name,
+                sol.name()
+            );
+            check_warm(b.name, &warm_fast.metrics);
+
+            let (ref_ns, ref_instrs) = best_of(iters, || {
+                dispatch(sol, &b.kernel, &ref_cfg, &b.inputs).expect("ref run").metrics.instrs
+            });
+            let (fast_ns, fast_instrs) = best_of(iters, || {
+                dispatch(sol, &b.kernel, fast_cfg, &b.inputs).expect("fast run").metrics.instrs
+            });
+            assert_eq!(ref_instrs, fast_instrs);
+
+            let row = PerfRow {
+                bench: b.name.to_string(),
+                solution: sol.name().to_string(),
+                instrs: fast_instrs,
+                reference_ns: ref_ns,
+                fast_ns,
+            };
+            println!(
+                "{:24} {:>10}  {:>10.2}  {:>10.2}  {:>7.2}x",
+                format!("{}[{}]", b.name, sol.name()),
+                row.instrs,
+                row.reference_mips(),
+                row.fast_mips(),
+                row.engine_speedup(),
+            );
+            rows.push(row);
+        }
+    }
 }
 
 fn main() {
@@ -105,47 +164,32 @@ fn main() {
     // fast-forward engine should shine, and the equivalence invariant
     // now covers the L1/L2/MSHR/bank-conflict counters too.
     let hier_fast = SimConfig { memhier: MemHierConfig::vortex(), ..SimConfig::paper() };
-    let hier_ref = SimConfig { engine: EngineMode::Reference, ..hier_fast.clone() };
-    println!("\n=== memory-bound scenario (MemHierConfig::vortex) ===");
-    for name in ["gather_strided", "gather_random"] {
-        let b = kernels::by_name(name).expect("gather benchmark");
-        for sol in [Solution::Hw, Solution::Sw] {
-            let warm_ref = dispatch(sol, &b.kernel, &hier_ref, &b.inputs).expect("ref warm");
-            let warm_fast = dispatch(sol, &b.kernel, &hier_fast, &b.inputs).expect("fast warm");
-            assert_eq!(
-                warm_ref.metrics, warm_fast.metrics,
-                "{}[{}]: memhier metrics diverged between engines",
-                b.name,
-                sol.name()
-            );
-            assert!(warm_fast.metrics.l2_misses > 0, "{}: scenario must reach DRAM", b.name);
+    run_scenario(
+        "memory-bound scenario (MemHierConfig::vortex)",
+        &hier_fast,
+        &["gather_strided", "gather_random"],
+        iters,
+        &mut report.memhier_rows,
+        |name, m| assert!(m.l2_misses > 0, "{name}: scenario must reach DRAM"),
+    );
 
-            let (ref_ns, ref_instrs) = best_of(iters, || {
-                dispatch(sol, &b.kernel, &hier_ref, &b.inputs).expect("ref run").metrics.instrs
-            });
-            let (fast_ns, fast_instrs) = best_of(iters, || {
-                dispatch(sol, &b.kernel, &hier_fast, &b.inputs).expect("fast run").metrics.instrs
-            });
-            assert_eq!(ref_instrs, fast_instrs);
-
-            let row = PerfRow {
-                bench: b.name.to_string(),
-                solution: sol.name().to_string(),
-                instrs: fast_instrs,
-                reference_ns: ref_ns,
-                fast_ns,
-            };
-            println!(
-                "{:24} {:>10}  {:>10.2}  {:>10.2}  {:>7.2}x",
-                format!("{}[{}]", b.name, sol.name()),
-                row.instrs,
-                row.reference_mips(),
-                row.fast_mips(),
-                row.engine_speedup(),
-            );
-            report.memhier_rows.push(row);
-        }
-    }
+    // FU-contention scenario (PR 3): representative paper kernels under
+    // the bounded-unit pipeline (FuConfig::vortex — 1 LSU port, 1 WCU).
+    // Structural-stall windows must fast-forward like scoreboard and
+    // memory stalls, and the equivalence invariant now covers the
+    // stall_structural / per-FU counters too.
+    let fu_fast = SimConfig { fu: FuConfig::vortex(), ..SimConfig::paper() };
+    run_scenario(
+        "FU-contention scenario (FuConfig::vortex)",
+        &fu_fast,
+        &["reduce", "matmul"],
+        iters,
+        &mut report.fu_rows,
+        |name, m| {
+            assert!(m.stall_structural > 0, "{name}: scenario must contend for units");
+            println!("  {name}: warm-run structural stalls = {}", m.stall_structural);
+        },
+    );
 
     // Batched run: every (paper kernel x solution) job, repeated so
     // each host thread has work, through the scoped-thread batch
@@ -188,6 +232,11 @@ fn main() {
         "memory-bound scenario: {:.2} M instr/s fast, {:.2}x engine speedup",
         report.memhier_fast_mips(),
         report.memhier_engine_speedup(),
+    );
+    println!(
+        "FU-contention scenario: {:.2} M instr/s fast, {:.2}x engine speedup",
+        report.fu_fast_mips(),
+        report.fu_engine_speedup(),
     );
 
     let out = std::env::var("BENCH_PERF_OUT").unwrap_or_else(|_| "BENCH_perf.json".into());

@@ -51,6 +51,10 @@ pub struct PerfReport {
     /// from `rows` so the pinned `aggregate.engine_speedup` regression
     /// threshold keeps its original composition.
     pub memhier_rows: Vec<PerfRow>,
+    /// FU-contention scenario (PR 3): representative kernels under the
+    /// bounded-unit `FuConfig::vortex()` pipeline, both engines. Also
+    /// kept separate from `rows` for the same reason.
+    pub fu_rows: Vec<PerfRow>,
     /// Wall time of one `launch_batch` over every (bench × solution)
     /// job with the fast engine.
     pub batch_wall_ns: u128,
@@ -90,21 +94,24 @@ impl PerfReport {
 
     /// Fast-engine throughput of the memory-bound scenario.
     pub fn memhier_fast_mips(&self) -> f64 {
-        let instrs: u64 = self.memhier_rows.iter().map(|r| r.instrs).sum();
-        let ns: u128 = self.memhier_rows.iter().map(|r| r.fast_ns).sum();
-        mips(instrs, ns)
+        scenario_fast_mips(&self.memhier_rows)
     }
 
     /// Engine speedup on the memory-bound scenario (fast-forward must
     /// also jump memory stalls, not just pipeline stalls).
     pub fn memhier_engine_speedup(&self) -> f64 {
-        let fast: u128 = self.memhier_rows.iter().map(|r| r.fast_ns).sum();
-        let reference: u128 = self.memhier_rows.iter().map(|r| r.reference_ns).sum();
-        if fast == 0 {
-            0.0
-        } else {
-            reference as f64 / fast as f64
-        }
+        scenario_engine_speedup(&self.memhier_rows)
+    }
+
+    /// Fast-engine throughput of the FU-contention scenario.
+    pub fn fu_fast_mips(&self) -> f64 {
+        scenario_fast_mips(&self.fu_rows)
+    }
+
+    /// Engine speedup on the FU-contention scenario (structural-stall
+    /// windows must fast-forward like every other stall).
+    pub fn fu_engine_speedup(&self) -> f64 {
+        scenario_engine_speedup(&self.fu_rows)
     }
 
     fn totals(&self, ns_of: impl Fn(&PerfRow) -> u128) -> (u64, u128) {
@@ -134,7 +141,7 @@ impl PerfReport {
 
     pub fn to_json(&self) -> String {
         let mut s = String::new();
-        s.push_str("{\n  \"schema\": \"vortex_warp.perf.v2\",\n");
+        s.push_str("{\n  \"schema\": \"vortex_warp.perf.v3\",\n");
         s.push_str(&format!("  \"host_threads\": {},\n", self.host_threads));
         s.push_str("  \"rows\": [\n");
         Self::rows_json(&self.rows, &mut s);
@@ -146,6 +153,14 @@ impl PerfReport {
             "  \"memhier\": {{\"fast_mips\": {:.4}, \"engine_speedup\": {:.4}}},\n",
             self.memhier_fast_mips(),
             self.memhier_engine_speedup(),
+        ));
+        s.push_str("  \"fu_rows\": [\n");
+        Self::rows_json(&self.fu_rows, &mut s);
+        s.push_str("  ],\n");
+        s.push_str(&format!(
+            "  \"fu\": {{\"fast_mips\": {:.4}, \"engine_speedup\": {:.4}}},\n",
+            self.fu_fast_mips(),
+            self.fu_engine_speedup(),
         ));
         s.push_str(&format!(
             "  \"aggregate\": {{\"reference_mips\": {:.4}, \"fast_mips\": {:.4}, \
@@ -165,6 +180,24 @@ impl PerfReport {
     pub fn write_json(&self, path: &str) -> std::io::Result<()> {
         let mut f = std::fs::File::create(path)?;
         f.write_all(self.to_json().as_bytes())
+    }
+}
+
+/// Total-over-total fast-engine throughput of one scenario's rows.
+fn scenario_fast_mips(rows: &[PerfRow]) -> f64 {
+    let instrs: u64 = rows.iter().map(|r| r.instrs).sum();
+    let ns: u128 = rows.iter().map(|r| r.fast_ns).sum();
+    mips(instrs, ns)
+}
+
+/// Total-over-total engine speedup of one scenario's rows.
+fn scenario_engine_speedup(rows: &[PerfRow]) -> f64 {
+    let fast: u128 = rows.iter().map(|r| r.fast_ns).sum();
+    let reference: u128 = rows.iter().map(|r| r.reference_ns).sum();
+    if fast == 0 {
+        0.0
+    } else {
+        reference as f64 / fast as f64
     }
 }
 
@@ -223,6 +256,13 @@ mod tests {
                 reference_ns: 1_000_000_000,
                 fast_ns: 500_000_000,
             }],
+            fu_rows: vec![PerfRow {
+                bench: "reduce".into(),
+                solution: "SW".into(),
+                instrs: 3_000_000,
+                reference_ns: 1_500_000_000,
+                fast_ns: 500_000_000,
+            }],
             batch_wall_ns: 500_000_000,
             batch_instrs: 4_000_000,
             host_threads: 4,
@@ -249,14 +289,25 @@ mod tests {
     }
 
     #[test]
+    fn fu_scenario_aggregates() {
+        let r = report();
+        // 3M instrs / 0.5 s fast = 6 M instr/s; 1.5 s ref -> 3x.
+        assert!((r.fu_fast_mips() - 6.0).abs() < 1e-9);
+        assert!((r.fu_engine_speedup() - 3.0).abs() < 1e-9);
+        assert_eq!(PerfReport::default().fu_engine_speedup(), 0.0);
+    }
+
+    #[test]
     fn json_shape() {
         let j = report().to_json();
-        assert!(j.contains("\"schema\": \"vortex_warp.perf.v2\""));
+        assert!(j.contains("\"schema\": \"vortex_warp.perf.v3\""));
         assert!(j.contains("\"bench\": \"matmul\""));
         assert!(j.contains("\"aggregate\""));
         assert!(j.contains("\"memhier_rows\""));
         assert!(j.contains("\"bench\": \"gather_strided\""));
         assert!(j.contains("\"memhier\": {\"fast_mips\": 4.0000, \"engine_speedup\": 2.0000}"));
+        assert!(j.contains("\"fu_rows\""));
+        assert!(j.contains("\"fu\": {\"fast_mips\": 6.0000, \"engine_speedup\": 3.0000}"));
         assert!(j.contains("\"engine_speedup\": 2.0000"));
         // Balanced braces/brackets (cheap well-formedness check).
         assert_eq!(j.matches('{').count(), j.matches('}').count());

@@ -18,6 +18,10 @@ pub const CSR_NUM_WARPS: u16 = 0xFC1;
 pub const CSR_NUM_CORES: u16 = 0xFC2;
 /// Cycle counter (low 32 bits).
 pub const CSR_CYCLE: u16 = 0xC00;
+/// Cycle counter, high 32 bits (RV32 `cycleh`). Reading only
+/// `CSR_CYCLE` silently truncates the 64-bit counter; long-running
+/// kernels must read both words to survive the 32-bit wraparound.
+pub const CSR_CYCLE_H: u16 = 0xC80;
 /// Retired-instruction counter (low 32 bits).
 pub const CSR_INSTRET: u16 = 0xC02;
 /// Current cooperative-group tile size (paper extension: set by
@@ -37,6 +41,7 @@ pub fn name(csr: u16) -> &'static str {
         CSR_NUM_WARPS => "nw",
         CSR_NUM_CORES => "nc",
         CSR_CYCLE => "cycle",
+        CSR_CYCLE_H => "cycleh",
         CSR_INSTRET => "instret",
         CSR_TILE_SIZE => "tilesize",
         CSR_TILE_MASK => "tilemask",
@@ -55,6 +60,7 @@ pub fn by_name(s: &str) -> Option<u16> {
         "nw" => CSR_NUM_WARPS,
         "nc" => CSR_NUM_CORES,
         "cycle" => CSR_CYCLE,
+        "cycleh" => CSR_CYCLE_H,
         "instret" => CSR_INSTRET,
         "tilesize" => CSR_TILE_SIZE,
         "tilemask" => CSR_TILE_MASK,
@@ -77,6 +83,7 @@ mod tests {
             CSR_NUM_WARPS,
             CSR_NUM_CORES,
             CSR_CYCLE,
+            CSR_CYCLE_H,
             CSR_INSTRET,
             CSR_TILE_SIZE,
             CSR_TILE_MASK,

@@ -22,7 +22,11 @@ fn usage() -> ! {
          commands:\n\
            tables [--table 1|2|3|4]     regenerate the paper's tables\n\
            run --bench <name> [--solution hw|sw] [--nt N] [--nw N]\n\
-               [--cores N] [--memhier legacy|vortex] [--trace]\n\
+               [--cores N] [--memhier legacy|vortex] [--fu legacy|vortex]\n\
+               [--issue-width N] [--trace]\n\
+             --fu vortex bounds the functional units (2 ALU, 1 MUL/DIV,\n\
+             1 LSU, 1 WCU; structural hazards show up as fu[struct=..]);\n\
+             --issue-width N (1..=8) sets the per-cycle issue ports\n\
            fig5                         IPC of HW vs SW over all six benchmarks\n\
            area [--layout]              Table IV area overhead (+ Fig 6 layout)\n\
            validate [--artifacts DIR]   end-to-end check vs PJRT golden models\n\
@@ -59,6 +63,19 @@ fn config_from(args: &[String]) -> SimConfig {
                 std::process::exit(2);
             }
         };
+    }
+    if let Some(fu) = flag_value(args, "--fu") {
+        cfg.fu = match fu.as_str() {
+            "legacy" => vortex_warp::sim::FuConfig::legacy(),
+            "vortex" => vortex_warp::sim::FuConfig::vortex(),
+            other => {
+                eprintln!("--fu {other}: expected `legacy` or `vortex`");
+                std::process::exit(2);
+            }
+        };
+    }
+    if let Some(w) = flag_value(args, "--issue-width") {
+        cfg.fu.issue_width = w.parse().expect("--issue-width");
     }
     cfg.trace = has_flag(args, "--trace");
     cfg.validate().expect("invalid configuration");

@@ -163,6 +163,68 @@ impl Default for MemHierConfig {
     }
 }
 
+/// Functional-unit pipeline configuration (`sim/fu`): per-cycle issue
+/// width and per-kind unit counts. A count of `0` models unlimited
+/// units of that kind — no structural hazards, the seed's timing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FuConfig {
+    /// Warps the issue stage may dispatch per cycle (the issue ports).
+    /// The legacy single-issue core uses `1`.
+    pub issue_width: usize,
+    /// Integer ALUs (pipelined; also execute branches and SIMT
+    /// control). `0` = unlimited.
+    pub alu: usize,
+    /// RV32M units (pipelined multiply, iterative divide). `0` =
+    /// unlimited.
+    pub muldiv: usize,
+    /// LSU ports; each holds one outstanding warp access for its full
+    /// latency. `0` = unlimited.
+    pub lsu: usize,
+    /// Warp-collective units (the paper's modified ALU). `0` =
+    /// unlimited.
+    pub wcu: usize,
+}
+
+impl FuConfig {
+    /// Legacy-equivalent default: single issue, unlimited units of
+    /// every kind — exactly the seed's execute-stage timing, so the
+    /// paper-evaluation numbers are unchanged.
+    pub fn legacy() -> Self {
+        FuConfig { issue_width: 1, alu: 0, muldiv: 0, lsu: 0, wcu: 0 }
+    }
+
+    /// Vortex-like discrete units: 2 ALUs, 1 MUL/DIV, 1 LSU port, 1
+    /// warp-collective unit, single issue. Structural hazards become
+    /// visible (`Metrics::stall_structural`).
+    pub fn vortex() -> Self {
+        FuConfig { issue_width: 1, alu: 2, muldiv: 1, lsu: 1, wcu: 1 }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.issue_width == 0 || self.issue_width > 8 {
+            return Err(format!("issue_width={} must be in 1..=8", self.issue_width));
+        }
+        for (n, what) in [
+            (self.alu, "alu"),
+            (self.muldiv, "muldiv"),
+            (self.lsu, "lsu"),
+            (self.wcu, "wcu"),
+        ] {
+            // 0 = unlimited; bounded pools allocate one slot per unit.
+            if n > 64 {
+                return Err(format!("{what}={n} units: use 0 for unlimited, else <= 64"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for FuConfig {
+    fn default() -> Self {
+        Self::legacy()
+    }
+}
+
 /// Simulation engine driving [`crate::sim::Gpu::run`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineMode {
@@ -209,6 +271,10 @@ pub struct SimConfig {
     pub crossbar: bool,
     pub lat: Latencies,
     pub dcache: CacheConfig,
+    /// Functional-unit pipeline: issue width and per-kind unit pools
+    /// (`sim/fu`). The default is the legacy-equivalent unlimited
+    /// model; see [`FuConfig::vortex`] for discrete units.
+    pub fu: FuConfig,
     /// Memory hierarchy behind the L1 (MSHRs, shared L2, DRAM,
     /// scratchpad banks). The default is the legacy-equivalent flat
     /// model; see [`MemHierConfig::vortex`] for the full hierarchy.
@@ -219,6 +285,9 @@ pub struct SimConfig {
     pub engine: EngineMode,
     /// Capture a per-instruction trace (slow; tests/debug only).
     pub trace: bool,
+    /// Max retained trace lines (ring buffer — oldest lines are
+    /// evicted once full). `0` = unbounded.
+    pub trace_cap: usize,
 }
 
 impl SimConfig {
@@ -233,10 +302,12 @@ impl SimConfig {
             crossbar: true,
             lat: Latencies::default(),
             dcache: CacheConfig::default(),
+            fu: FuConfig::legacy(),
             memhier: MemHierConfig::legacy(),
             sched: SchedPolicy::RoundRobin,
             engine: EngineMode::FastForward,
             trace: false,
+            trace_cap: 1 << 16,
         }
     }
 
@@ -269,6 +340,7 @@ impl SimConfig {
         if self.dcache.sets == 0 || self.dcache.ways == 0 {
             return Err("dcache sets and ways must be >= 1".into());
         }
+        self.fu.validate()?;
         self.memhier.validate(&self.dcache)?;
         Ok(())
     }
@@ -317,6 +389,43 @@ mod tests {
         c.nt = 8;
         c.dcache.line = 48;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn paper_defaults_to_legacy_fu_model() {
+        let c = SimConfig::paper();
+        assert_eq!(c.fu, FuConfig::legacy(), "paper keeps the seed's unlimited units");
+        assert_eq!(c.fu.issue_width, 1);
+        assert_eq!(c.fu.lsu, 0, "0 = unlimited");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn vortex_fu_config_validates() {
+        let mut c = SimConfig::paper();
+        c.fu = FuConfig::vortex();
+        assert_eq!(c.fu.lsu, 1);
+        assert_eq!(c.fu.wcu, 1);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn fu_validation_rejects_bad_issue_width() {
+        let mut f = FuConfig::legacy();
+        f.issue_width = 0;
+        assert!(f.validate().is_err());
+        f.issue_width = 9;
+        assert!(f.validate().is_err());
+        f.issue_width = 2;
+        assert!(f.validate().is_ok());
+        let mut f = FuConfig::legacy();
+        f.lsu = 65;
+        assert!(f.validate().is_err(), "unit counts are bounded (0 = unlimited)");
+        f.lsu = 64;
+        assert!(f.validate().is_ok());
+        let mut c = SimConfig::paper();
+        c.fu.issue_width = 0;
+        assert!(c.validate().is_err(), "SimConfig::validate covers the FU knobs");
     }
 
     #[test]

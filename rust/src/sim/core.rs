@@ -1,20 +1,25 @@
-//! The Vortex-style SIMT core: single-issue, in-order per warp, with a
-//! warp scheduler hiding functional-unit and memory latency across
-//! warps (Fig 2).
+//! The Vortex-style SIMT core: single-issue (configurable issue
+//! width), in-order per warp, with a warp scheduler hiding
+//! functional-unit and memory latency across warps (Fig 2).
 //!
-//! Timing model (SimX-style): each cycle the scheduler picks one ready
-//! warp whose next instruction has no scoreboard hazard; the
-//! instruction executes *functionally* at issue, its destination is
-//! marked pending, and the writeback retires after the functional-unit
-//! latency. Control instructions charge a pipeline-refill penalty to
-//! the issuing warp. Memory instructions consult the dcache timing
-//! model (hit/miss + uncoalesced replay). The paper's collectives
-//! execute in the modified ALU; when a `vx_tile` merge spans multiple
-//! hardware warps, operand collection walks the register-bank crossbar
-//! and charges `crossbar_hop` per member warp.
+//! Timing model (SimX-style): each cycle the scheduler picks up to
+//! `FuConfig::issue_width` ready warps whose next instructions have no
+//! scoreboard hazard *and* a free functional unit of the right kind
+//! (`sim/fu`); each instruction executes *functionally* at issue in
+//! its FU's dispatch module, its destination is marked pending, the
+//! unit is occupied for the instruction's initiation interval, and the
+//! writeback retires after the functional-unit latency. Control
+//! instructions charge a pipeline-refill penalty to the issuing warp.
+//! Memory instructions consult the `sim/memhier` timing model. The
+//! paper's collectives execute in the modified warp-collective ALU
+//! (`sim/fu/wcu.rs`).
+//!
+//! This file is the pipeline *glue* — fetch, hazard checks, issue
+//! ports, writeback, barriers, fast-forward events. The per-
+//! instruction semantics live in `sim/fu/{alu,muldiv,lsu,ctrl,wcu}`.
 
 use super::config::SimConfig;
-use super::exec::warp_ops;
+use super::fu::{self, FuKind, FuPool};
 use super::map;
 use super::mem::{MemFault, Memory};
 use super::memhier::{CoreMem, SharedMem};
@@ -22,22 +27,23 @@ use super::metrics::Metrics;
 use super::regfile::RegFile;
 use super::scheduler::Scheduler;
 use super::scoreboard::Scoreboard;
-use super::warp::{full_mask, Warp, WarpState};
+use super::trace::TraceBuf;
+use super::warp::{Warp, WarpState};
 use super::wb::{InFlight, WbQueue};
-use crate::isa::{csr, Instr, Width};
+use crate::isa::{csr, Instr};
 
 /// Pipeline-refill penalty for control instructions (taken branches,
 /// split/join, tile reconfiguration), in cycles.
-const CTRL_PENALTY: u64 = 4;
+pub(crate) const CTRL_PENALTY: u64 = 4;
 /// Per-warp front-end spacing: a warp re-enters fetch only after its
 /// previous instruction has moved through fetch→decode→ibuffer, so a
 /// single warp issues at most once every `FETCH_SPACING` cycles. This
 /// is the Vortex property that makes multi-warp occupancy (not
 /// forwarding) the performance mechanism — and what the SW solution
 /// loses when a serialized block occupies one lane.
-const FETCH_SPACING: u64 = 4;
+pub(crate) const FETCH_SPACING: u64 = 4;
 /// Extra scheduler cycles to rewrite the warp/tile configuration.
-const TILE_PENALTY: u64 = 4;
+pub(crate) const TILE_PENALTY: u64 = 4;
 
 /// Fatal simulation error.
 #[derive(Debug, Clone, PartialEq)]
@@ -84,14 +90,15 @@ impl From<MemFault> for SimError {
 /// What the issue stage did in the most recent cycle — the class of
 /// counter a stalled cycle charged. The fast-forward engine replays
 /// this classification for every skipped cycle: between two events
-/// (writeback retirement or `ready_at` expiry) the sets of
-/// scoreboard-blocked and pipeline-blocked warps cannot change, so
-/// every cycle in the window charges the same counter the one-cycle
-/// reference path would have.
+/// (writeback retirement, `ready_at` expiry, or a functional-unit
+/// release) the sets of scoreboard-, structurally- and
+/// pipeline-blocked warps cannot change, so every cycle in the window
+/// charges the same counter the one-cycle reference path would have.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum IssueOutcome {
     Issued,
     StallScoreboard,
+    StallStructural,
     StallPipeline,
     StallBarrier,
     Idle,
@@ -111,29 +118,37 @@ pub struct Core {
     prog: Vec<Instr>,
     pub warps: Vec<Warp>,
     pub rf: RegFile,
-    sb: Scoreboard,
+    pub(crate) sb: Scoreboard,
     pub sched: Scheduler,
     /// L1D tags + MSHRs (the per-core front of `sim/memhier`); the
     /// shared L2/DRAM stages live on the `Gpu` and are threaded into
     /// [`Core::step_one_cycle`].
     pub memsys: CoreMem,
+    /// Functional-unit pools (`sim/fu`): per-kind `busy_until`
+    /// occupancy, checked by the issue stage.
+    pub(crate) fu: FuPool,
     inflight: WbQueue,
     /// Outcome of the most recent cycle (drives fast-forward skips).
     outcome: IssueOutcome,
     barriers: BarrierTable,
     /// Earliest cycle each warp may issue again (pipeline penalties).
-    ready_at: Vec<u64>,
+    pub(crate) ready_at: Vec<u64>,
+    /// Per-warp spawn generation: bumped when `vx_wspawn` re-spawns a
+    /// warp, so writebacks issued by the previous life are discarded
+    /// instead of clobbering the new warp's registers.
+    pub(crate) spawn_epoch: Vec<u32>,
     /// Architectural register foreign lanes contribute during a
     /// merged-warp collective (crossbar read path); set at dispatch.
-    pending_collective_reg: u8,
+    pub(crate) pending_collective_reg: u8,
     /// Reusable operand/result buffers for merged-warp collectives
     /// (sized to NT × NW once at construction; moved out/in around the
     /// collective closure so the hot path never allocates or re-zeroes).
-    scratch_vals: Vec<u32>,
-    scratch_res: Vec<u32>,
+    pub(crate) scratch_vals: Vec<u32>,
+    pub(crate) scratch_res: Vec<u32>,
     pub metrics: Metrics,
-    /// Optional instruction trace (cfg.trace).
-    pub trace: Vec<String>,
+    /// Optional instruction trace (`cfg.trace`), bounded to
+    /// `cfg.trace_cap` lines.
+    pub trace: TraceBuf,
 }
 
 impl Core {
@@ -148,15 +163,17 @@ impl Core {
             sb: Scoreboard::new(nw),
             sched: Scheduler::new(cfg.sched, nw, nt),
             memsys: CoreMem::new(&cfg.dcache, &cfg.memhier),
+            fu: FuPool::new(&cfg.fu),
             inflight: WbQueue::with_capacity(2 * nw),
             outcome: IssueOutcome::Idle,
             barriers: BarrierTable::default(),
             ready_at: vec![0; nw],
+            spawn_epoch: vec![0; nw],
             pending_collective_reg: 0,
             scratch_vals: vec![0; nw * nt],
             scratch_res: vec![0; nw * nt],
             metrics: Metrics::default(),
-            trace: Vec::new(),
+            trace: TraceBuf::new(cfg.trace_cap),
             cfg,
         }
     }
@@ -179,10 +196,12 @@ impl Core {
         self.sb = Scoreboard::new(nw);
         self.sched = Scheduler::new(self.cfg.sched, nw, nt);
         self.memsys.reset();
+        self.fu.reset();
         self.inflight.clear();
         self.outcome = IssueOutcome::Idle;
         self.barriers = BarrierTable::default();
         self.ready_at = vec![0; nw];
+        self.spawn_epoch = vec![0; nw];
         self.metrics = Metrics::default();
         self.trace.clear();
     }
@@ -218,20 +237,31 @@ impl Core {
 
         // ---- writeback ----
         while let Some(f) = self.inflight.pop_due(now) {
+            if f.epoch != self.spawn_epoch[f.warp as usize] {
+                // Issued by a previous life of a since-respawned warp:
+                // its pending bit was dropped at spawn, and its value
+                // must not clobber the new warp's registers.
+                continue;
+            }
             self.rf.write_masked(f.warp as usize, f.rd, f.mask, &f.vals);
             self.sb.clear(f.warp as usize, f.rd);
         }
 
-        // ---- issue ----
+        // ---- issue (up to `issue_width` warps per cycle) ----
         let nw = self.cfg.nw;
-        let mut issued = false;
+        let issue_width = self.cfg.fu.issue_width;
+        let mut issued = 0usize;
         let mut saw_sb_stall = false;
+        let mut saw_struct_stall = false;
         let mut saw_pipe_stall = false;
         let mut any_active = false;
         // Iterate warps in scheduler order without allocating (hot
         // path: one iteration per cycle).
         let start = self.sched.start(nw);
         for i in 0..nw {
+            if issued >= issue_width {
+                break;
+            }
             let w = (start + i) % nw;
             if !self.warps[w].is_active() {
                 continue;
@@ -247,21 +277,30 @@ impl Core {
                 saw_sb_stall = true;
                 continue;
             }
-            self.execute(w, pc, instr, mem, shared, now)?;
+            let kind = FuKind::classify(&instr);
+            if !self.fu.available(kind, now) {
+                // Structural hazard: every unit of this kind is
+                // occupied — the scheduler skips this warp.
+                saw_struct_stall = true;
+                continue;
+            }
+            self.execute(w, pc, instr, kind, mem, shared, now)?;
             // Front-end turnaround: this warp is not fetchable again
             // until the instruction clears fetch/decode (control
             // instructions may have pushed it further out already).
             self.ready_at[w] = self.ready_at[w].max(now + FETCH_SPACING);
             self.sched.issued(w, nw);
-            issued = true;
-            break;
+            issued += 1;
         }
 
-        if issued {
+        if issued > 0 {
             self.outcome = IssueOutcome::Issued;
         } else if saw_sb_stall {
             self.outcome = IssueOutcome::StallScoreboard;
             self.metrics.stall_scoreboard += 1;
+        } else if saw_struct_stall {
+            self.outcome = IssueOutcome::StallStructural;
+            self.metrics.stall_structural += 1;
         } else if saw_pipe_stall {
             self.outcome = IssueOutcome::StallPipeline;
             self.metrics.stall_pipeline += 1;
@@ -290,10 +329,12 @@ impl Core {
     }
 
     /// Next cycle at which this core's state can change: the earliest
-    /// in-flight retirement or the earliest pipeline-penalty expiry of
-    /// an active warp. `None` when neither exists (the core is idle, or
-    /// the very next cycle would raise a barrier deadlock — both cases
-    /// where the caller must fall back to single stepping).
+    /// in-flight retirement, the earliest pipeline-penalty expiry of
+    /// an active warp, or the earliest functional-unit release
+    /// (`sim/fu` occupancy — what a structurally-stalled warp waits
+    /// for). `None` when none exists (the core is idle, or the very
+    /// next cycle would raise a barrier deadlock — both cases where
+    /// the caller must fall back to single stepping).
     ///
     /// Barrier releases and warp spawns only happen as a side effect of
     /// an *issue*, so they cannot occur strictly between two events and
@@ -306,6 +347,9 @@ impl Core {
                 next = self.ready_at[w];
             }
         }
+        if let Some(r) = self.fu.next_release(now) {
+            next = next.min(r);
+        }
         (next != u64::MAX).then_some(next)
     }
 
@@ -315,9 +359,10 @@ impl Core {
     ///
     /// Caller contract (`Gpu::run_fast`): the last cycle did NOT
     /// issue, and `target` does not exceed the core's
-    /// [`Core::next_event`] — i.e. no writeback retires and no warp
-    /// becomes fetchable anywhere in the skipped window, so each
-    /// skipped cycle would have repeated the recorded stall exactly.
+    /// [`Core::next_event`] — i.e. no writeback retires, no warp
+    /// becomes fetchable, and no functional unit frees anywhere in the
+    /// skipped window, so each skipped cycle would have repeated the
+    /// recorded stall exactly.
     pub fn skip_to(&mut self, target: u64) {
         let now = self.metrics.cycles;
         debug_assert!(target > now + 1, "skip_to({target}) from cycle {now} skips nothing");
@@ -325,6 +370,7 @@ impl Core {
         let skip = target - 1 - now;
         match self.outcome {
             IssueOutcome::StallScoreboard => self.metrics.stall_scoreboard += skip,
+            IssueOutcome::StallStructural => self.metrics.stall_structural += skip,
             IssueOutcome::StallPipeline => self.metrics.stall_pipeline += skip,
             IssueOutcome::StallBarrier => self.metrics.stall_barrier += skip,
             IssueOutcome::Idle => self.metrics.idle_cycles += skip,
@@ -340,26 +386,23 @@ impl Core {
     // silently diverge.
 
     // ------------------------------------------------------------------
-    // Execution (functional at issue + latency scheduling)
+    // Issue-side glue: trace, FU dispatch + occupancy, retire
+    // bookkeeping. Instruction semantics live in `sim/fu`.
     // ------------------------------------------------------------------
 
-    #[allow(clippy::too_many_lines)]
+    #[allow(clippy::too_many_arguments)]
     fn execute(
         &mut self,
         w: usize,
         pc: u32,
         instr: Instr,
+        kind: FuKind,
         mem: &mut Memory,
         shared: &mut SharedMem,
         now: u64,
     ) -> Result<(), SimError> {
-        let nt = self.cfg.nt;
         let tmask = self.warps[w].tmask;
         let lanes = tmask.count_ones() as u64;
-        let mut next_pc = pc.wrapping_add(4);
-        let mut retire_lat = self.cfg.lat.alu as u64;
-        let mut out = [0u32; 32];
-        let mut wb_rd: u8 = 0;
 
         if self.cfg.trace {
             self.trace.push(format!(
@@ -368,273 +411,37 @@ impl Core {
             ));
         }
 
-        let mut a = [0u32; 32];
-        let mut b = [0u32; 32];
+        let mut out = [0u32; 32];
+        let ret = fu::dispatch(self, w, pc, instr, mem, shared, now, &mut out)?;
 
-        match instr {
-            Instr::Alu { op, rd, rs1, rs2 } => {
-                self.rf.read_all(w, rs1, &mut a);
-                self.rf.read_all(w, rs2, &mut b);
-                for l in 0..nt {
-                    out[l] = op.eval(a[l], b[l]);
-                }
-                wb_rd = rd;
-                self.metrics.alu_ops += 1;
-            }
-            Instr::AluImm { op, rd, rs1, imm } => {
-                self.rf.read_all(w, rs1, &mut a);
-                for l in 0..nt {
-                    out[l] = op.eval(a[l], imm as u32);
-                }
-                wb_rd = rd;
-                self.metrics.alu_ops += 1;
-            }
-            Instr::Mul { op, rd, rs1, rs2 } => {
-                self.rf.read_all(w, rs1, &mut a);
-                self.rf.read_all(w, rs2, &mut b);
-                for l in 0..nt {
-                    out[l] = op.eval(a[l], b[l]);
-                }
-                wb_rd = rd;
-                retire_lat = if matches!(
-                    op,
-                    crate::isa::MulOp::Div
-                        | crate::isa::MulOp::Divu
-                        | crate::isa::MulOp::Rem
-                        | crate::isa::MulOp::Remu
-                ) {
-                    self.cfg.lat.div as u64
-                } else {
-                    self.cfg.lat.mul as u64
-                };
-                self.metrics.mul_ops += 1;
-            }
-            Instr::Lui { rd, imm } => {
-                out[..nt].fill(imm as u32);
-                wb_rd = rd;
-                self.metrics.alu_ops += 1;
-            }
-            Instr::Auipc { rd, imm } => {
-                out[..nt].fill(pc.wrapping_add(imm as u32));
-                wb_rd = rd;
-                self.metrics.alu_ops += 1;
-            }
-            Instr::Load { width, rd, rs1, imm } => {
-                self.rf.read_all(w, rs1, &mut a);
-                let mut addrs = [0u32; 32];
-                for l in 0..nt {
-                    addrs[l] = a[l].wrapping_add(imm as u32);
-                }
-                for l in 0..nt {
-                    if tmask & (1 << l) == 0 {
-                        continue;
-                    }
-                    out[l] = load_value(mem, addrs[l], width)?;
-                }
-                wb_rd = rd;
-                retire_lat = self.mem_latency(&addrs[..nt], tmask, false, now, shared);
-                self.metrics.loads += 1;
-            }
-            Instr::Store { width, rs1, rs2, imm } => {
-                self.rf.read_all(w, rs1, &mut a);
-                self.rf.read_all(w, rs2, &mut b);
-                let mut addrs = [0u32; 32];
-                for l in 0..nt {
-                    addrs[l] = a[l].wrapping_add(imm as u32);
-                }
-                for l in 0..nt {
-                    if tmask & (1 << l) == 0 {
-                        continue;
-                    }
-                    store_value(mem, addrs[l], b[l], width)?;
-                }
-                retire_lat = self.mem_latency(&addrs[..nt], tmask, true, now, shared);
-                self.metrics.stores += 1;
-            }
-            Instr::Branch { op, rs1, rs2, imm } => {
-                self.rf.read_all(w, rs1, &mut a);
-                self.rf.read_all(w, rs2, &mut b);
-                let first = self.warps[w].first_lane();
-                let taken = op.taken(a[first], b[first]);
-                // Branches must be warp-uniform over active lanes;
-                // divergence is the compiler's job (vx_split/vx_join).
-                for l in 0..nt {
-                    if tmask & (1 << l) != 0 && op.taken(a[l], b[l]) != taken {
-                        return Err(SimError::DivergentBranch { pc });
-                    }
-                }
-                if taken {
-                    next_pc = pc.wrapping_add(imm as u32);
-                    self.ready_at[w] = now + CTRL_PENALTY;
-                }
-                self.metrics.control_ops += 1;
-            }
-            Instr::Jal { rd, imm } => {
-                out[..nt].fill(pc.wrapping_add(4));
-                wb_rd = rd;
-                next_pc = pc.wrapping_add(imm as u32);
-                self.ready_at[w] = now + CTRL_PENALTY;
-                self.metrics.control_ops += 1;
-            }
-            Instr::Jalr { rd, rs1, imm } => {
-                self.rf.read_all(w, rs1, &mut a);
-                let first = self.warps[w].first_lane();
-                out[..nt].fill(pc.wrapping_add(4));
-                wb_rd = rd;
-                next_pc = a[first].wrapping_add(imm as u32) & !1;
-                self.ready_at[w] = now + CTRL_PENALTY;
-                self.metrics.control_ops += 1;
-            }
-            Instr::CsrRead { rd, csr: c } => {
-                for l in 0..nt {
-                    out[l] = self.read_csr(c, w, l, now);
-                }
-                wb_rd = rd;
-                self.metrics.alu_ops += 1;
-            }
-            Instr::Ecall => {
-                self.warps[w].state = WarpState::Inactive;
-                self.metrics.control_ops += 1;
-            }
-            Instr::Fence => {
-                // Commit-time no-op; charge ALU latency.
-                self.metrics.control_ops += 1;
-            }
-            Instr::Tmc { rs1 } => {
-                self.rf.read_all(w, rs1, &mut a);
-                let first = self.warps[w].first_lane();
-                let m = a[first] & full_mask(nt);
-                if m == 0 {
-                    self.warps[w].state = WarpState::Inactive;
-                } else {
-                    self.warps[w].tmask = m;
-                }
-                self.ready_at[w] = now + CTRL_PENALTY;
-                self.metrics.control_ops += 1;
-            }
-            Instr::Wspawn { rs1, rs2 } => {
-                self.rf.read_all(w, rs1, &mut a);
-                self.rf.read_all(w, rs2, &mut b);
-                let first = self.warps[w].first_lane();
-                let count = (a[first] as usize).min(self.cfg.nw);
-                let target = b[first];
-                for i in 1..count {
-                    self.warps[i].pc = target;
-                    self.warps[i].tmask = full_mask(nt);
-                    self.warps[i].state = WarpState::Active;
-                    self.warps[i].stack.clear();
-                }
-                self.metrics.control_ops += 1;
-            }
-            Instr::Split { rd, rs1 } => {
-                self.rf.read_all(w, rs1, &mut a);
-                let mut taken = 0u32;
-                for l in 0..nt {
-                    if a[l] != 0 {
-                        taken |= 1 << l;
-                    }
-                }
-                let warp = &mut self.warps[w];
-                warp.pc = pc; // split() records else_pc = pc + 4
-                let token = warp.split(taken);
-                out[..nt].fill(token);
-                wb_rd = rd;
-                next_pc = pc.wrapping_add(4);
-                self.ready_at[w] = now + CTRL_PENALTY;
-                self.metrics.control_ops += 1;
-            }
-            Instr::Join { .. } => {
-                let warp = &mut self.warps[w];
-                warp.pc = pc;
-                next_pc = warp.join();
-                self.ready_at[w] = now + CTRL_PENALTY;
-                self.metrics.control_ops += 1;
-            }
-            Instr::Bar { rs1, rs2 } => {
-                self.rf.read_all(w, rs1, &mut a);
-                self.rf.read_all(w, rs2, &mut b);
-                let first = self.warps[w].first_lane();
-                let id = a[first];
-                let required = b[first].max(1);
-                self.metrics.barriers_hit += 1;
-                self.metrics.control_ops += 1;
-                self.arrive_barrier(w, id, required);
-            }
-            Instr::Pred { rs1 } => {
-                self.rf.read_all(w, rs1, &mut a);
-                let mut m = 0u32;
-                for l in 0..nt {
-                    if tmask & (1 << l) != 0 && a[l] != 0 {
-                        m |= 1 << l;
-                    }
-                }
-                if m == 0 {
-                    self.warps[w].state = WarpState::Inactive;
-                } else {
-                    self.warps[w].tmask = m;
-                }
-                self.metrics.control_ops += 1;
-            }
-            Instr::Vote { mode, rd, rs1, mreg } => {
-                self.require_warp_hw(pc, "vx_vote")?;
-                self.pending_collective_reg = rs1;
-                self.rf.read_all(w, rs1, &mut a);
-                self.rf.read_all(w, mreg, &mut b);
-                let first = self.warps[w].first_lane();
-                let members = b[first];
-                retire_lat =
-                    self.collective(w, tmask, &a, members, &mut out, |vals, act, mem_m, dst| {
-                        dst.fill(warp_ops::vote(mode, vals, act, mem_m));
-                    });
-                wb_rd = rd;
-                self.metrics.warp_collectives += 1;
-            }
-            Instr::Shfl { mode, rd, rs1, delta, creg } => {
-                self.require_warp_hw(pc, "vx_shfl")?;
-                self.pending_collective_reg = rs1;
-                self.rf.read_all(w, rs1, &mut a);
-                self.rf.read_all(w, creg, &mut b);
-                let first = self.warps[w].first_lane();
-                let clamp = b[first];
-                retire_lat =
-                    self.collective(w, tmask, &a, 0, &mut out, |vals, _act, _m, dst| {
-                        warp_ops::shfl_into(mode, vals, delta as u32, clamp, dst);
-                    });
-                wb_rd = rd;
-                self.metrics.warp_collectives += 1;
-            }
-            Instr::Tile { rs1, rs2 } => {
-                self.require_warp_hw(pc, "vx_tile")?;
-                self.rf.read_all(w, rs1, &mut a);
-                self.rf.read_all(w, rs2, &mut b);
-                let first = self.warps[w].first_lane();
-                let (mask, size) = (a[first], b[first]);
-                self.sched
-                    .set_tile(mask, size)
-                    .map_err(|e| SimError::IllegalInstr { pc, what: e })?;
-                self.ready_at[w] = now + TILE_PENALTY;
-                self.metrics.warp_collectives += 1;
-                self.metrics.control_ops += 1;
-            }
-        }
+        // Functional-unit accounting + occupancy (no-op occupancy
+        // under unlimited pools).
+        self.metrics.fu_issued[kind as usize] += 1;
+        self.metrics.fu_busy[kind as usize] += ret.occ;
+        self.fu.occupy(kind, now, now + ret.occ);
 
         // Retire bookkeeping. PC always advances (a warp parked at a
         // barrier resumes at the instruction after the vx_bar).
         self.metrics.instrs += 1;
         self.metrics.thread_instrs += lanes;
-        self.warps[w].pc = next_pc;
-        if let Some(rd) = Instr::rd(&instr) {
-            debug_assert_eq!(rd, wb_rd);
+        self.warps[w].pc = ret.next_pc;
+        if let Some(rd) = instr.rd() {
             self.sb.set_pending(w, rd);
             self.inflight.push(
-                now + retire_lat,
-                InFlight { warp: w as u32, rd, vals: out, mask: tmask },
+                now + ret.lat,
+                InFlight {
+                    warp: w as u32,
+                    rd,
+                    mask: tmask,
+                    vals: out,
+                    epoch: self.spawn_epoch[w],
+                },
             );
         }
         Ok(())
     }
 
-    fn require_warp_hw(&self, pc: u32, what: &str) -> Result<(), SimError> {
+    pub(crate) fn require_warp_hw(&self, pc: u32, what: &str) -> Result<(), SimError> {
         if self.cfg.warp_hw {
             Ok(())
         } else {
@@ -646,123 +453,7 @@ impl Core {
         }
     }
 
-    /// Execute a collective (vote/shuffle) for warp `w`, honoring the
-    /// tile table. Returns the latency.
-    ///
-    /// * `seg <= NT`: segments live inside the warp — plain modified-ALU
-    ///   path, `warp_op` latency.
-    /// * `seg > NT`: the group spans `seg/NT` merged warps; operands for
-    ///   the foreign lanes are collected across register banks through
-    ///   the crossbar (charging `crossbar_hop` per extra warp), exactly
-    ///   the structure §III adds to the execute stage.
-    ///
-    /// `f` writes each segment's per-lane results into the slice it is
-    /// handed (same length as `vals`) — directly into `out` on the
-    /// sub-warp path, through the per-core scratch buffers on the
-    /// merged path — so the hot path never allocates.
-    fn collective(
-        &mut self,
-        w: usize,
-        tmask: u32,
-        own_vals: &[u32; 32],
-        members: u32,
-        out: &mut [u32; 32],
-        f: impl Fn(&[u32], u32, u32, &mut [u32]),
-    ) -> u64 {
-        let nt = self.cfg.nt;
-        let seg = (self.sched.tile.size as usize).min(self.cfg.hw_threads());
-        let mut lat = self.cfg.lat.warp_op as u64;
-        if seg <= nt {
-            // Sub-warp (or whole-warp) tiles: segment the warp lanes,
-            // writing each segment's results straight into `out`
-            // (`own_vals` and `out` are distinct borrows).
-            let nseg = nt / seg;
-            for s in 0..nseg {
-                let base = s * seg;
-                let act = (tmask >> base) & warp_ops::mask_of(seg);
-                f(&own_vals[base..base + seg], act, members, &mut out[base..base + seg]);
-            }
-        } else {
-            // Merged warps: group = `span` consecutive warps aligned on
-            // `span`, this warp contributes its lanes and reads the rest
-            // through the crossbar.
-            let span = (seg / nt).max(1).min(self.cfg.nw);
-            let group_base = (w / span) * span;
-            let total = span * nt;
-            // Move the scratch buffers out of `self` for the duration
-            // of the gather (read_cross needs `&mut self.rf`), then put
-            // them back — no allocation, no re-zeroing: every word in
-            // `vals[..total]` and `res[..total]` is overwritten below.
-            let mut vals = std::mem::take(&mut self.scratch_vals);
-            let mut res = std::mem::take(&mut self.scratch_res);
-            let mut act = 0u32;
-            for mw in 0..span {
-                let warp_idx = group_base + mw;
-                for l in 0..nt {
-                    let v = if warp_idx == w {
-                        own_vals[l]
-                    } else {
-                        // Crossbar read from the foreign bank. The
-                        // "value" register index is not re-decoded here;
-                        // foreign lanes hold the same architectural
-                        // register, so read it directly.
-                        self.rf.read_cross(warp_idx, self.pending_collective_reg, l)
-                    };
-                    vals[mw * nt + l] = v;
-                }
-                let m = if warp_idx == w { tmask } else { self.warps[warp_idx].tmask };
-                act |= (m & warp_ops::mask_of(nt)) << (mw * nt);
-            }
-            f(&vals[..total], act, members, &mut res[..total]);
-            out[..nt].copy_from_slice(&res[(w - group_base) * nt..(w - group_base) * nt + nt]);
-            self.scratch_vals = vals;
-            self.scratch_res = res;
-            let hops = (span - 1) as u64;
-            self.metrics.crossbar_hops += hops;
-            lat += if self.cfg.crossbar {
-                hops * self.cfg.lat.crossbar_hop as u64
-            } else {
-                // Ablation: without the crossbar the single-bank mux
-                // serializes one lane group per cycle.
-                hops * (nt as u64)
-            };
-        }
-        lat
-    }
-
-    /// Memory latency for one warp access, through `sim/memhier`:
-    /// scratchpad accesses go to the banked shared-memory model,
-    /// global accesses walk L1 → MSHR → L2 → DRAM (or the legacy flat
-    /// L1 when the hierarchy is disabled). All hierarchy state mutates
-    /// here, at issue time, with absolute-cycle timestamps — which is
-    /// what keeps the fast-forward engine's skip windows sound.
-    fn mem_latency(
-        &mut self,
-        addrs: &[u32],
-        tmask: u32,
-        store: bool,
-        now: u64,
-        shared: &mut SharedMem,
-    ) -> u64 {
-        if tmask == 0 {
-            return self.cfg.lat.alu as u64;
-        }
-        let first = tmask.trailing_zeros() as usize;
-        if Memory::is_shared(addrs[first]) {
-            return self.memsys.smem_access(&self.cfg.lat, addrs, tmask, &mut self.metrics);
-        }
-        self.memsys.warp_access(
-            &self.cfg.lat,
-            addrs,
-            tmask,
-            store,
-            now,
-            shared,
-            &mut self.metrics,
-        )
-    }
-
-    fn read_csr(&self, c: u16, w: usize, lane: usize, now: u64) -> u32 {
+    pub(crate) fn read_csr(&self, c: u16, w: usize, lane: usize, now: u64) -> u32 {
         match c {
             csr::CSR_THREAD_ID => lane as u32,
             csr::CSR_WARP_ID => w as u32,
@@ -772,6 +463,7 @@ impl Core {
             csr::CSR_NUM_WARPS => self.cfg.nw as u32,
             csr::CSR_NUM_CORES => self.cfg.num_cores as u32,
             csr::CSR_CYCLE => now as u32,
+            csr::CSR_CYCLE_H => (now >> 32) as u32,
             csr::CSR_INSTRET => self.metrics.instrs as u32,
             csr::CSR_TILE_SIZE => self.sched.tile.size,
             csr::CSR_TILE_MASK => self.sched.tile.group_mask,
@@ -779,7 +471,18 @@ impl Core {
         }
     }
 
-    fn arrive_barrier(&mut self, w: usize, id: u32, required: u32) {
+    /// Drop warp `w`'s arrival bit from every active barrier (respawn
+    /// hygiene): a dead warp's previous-life arrival must not count
+    /// toward — and prematurely release — a barrier its next life (or
+    /// its peers) wait on. Entries left with no arrivals are removed.
+    pub(crate) fn clear_barrier_arrivals(&mut self, w: usize) {
+        for (_, _, m) in &mut self.barriers.active {
+            *m &= !(1 << w);
+        }
+        self.barriers.active.retain(|&(_, _, m)| m != 0);
+    }
+
+    pub(crate) fn arrive_barrier(&mut self, w: usize, id: u32, required: u32) {
         let entry = self.barriers.active.iter_mut().find(|(i, _, _)| *i == id);
         let (req, arrived) = match entry {
             Some((_, r, m)) => {
@@ -810,20 +513,56 @@ impl Core {
     }
 }
 
-fn load_value(mem: &mut Memory, addr: u32, width: Width) -> Result<u32, MemFault> {
-    Ok(match width {
-        Width::Word => mem.read_u32(addr)?,
-        Width::Byte => mem.read_u8(addr)? as i8 as i32 as u32,
-        Width::ByteU => mem.read_u8(addr)? as u32,
-        Width::Half => mem.read_u16(addr)? as i16 as i32 as u32,
-        Width::HalfU => mem.read_u16(addr)? as u32,
-    })
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-fn store_value(mem: &mut Memory, addr: u32, v: u32, width: Width) -> Result<(), MemFault> {
-    match width {
-        Width::Word => mem.write_u32(addr, v),
-        Width::Byte | Width::ByteU => mem.write_u8(addr, v as u8),
-        Width::Half | Width::HalfU => mem.write_u16(addr, v as u16),
+    /// PR-3 satellite: `CSR_CYCLE` truncates the u64 cycle counter to
+    /// its low word by design; `CSR_CYCLE_H` exposes the high word so
+    /// kernels can reassemble the full count across the 32-bit
+    /// wraparound boundary.
+    #[test]
+    fn csr_cycle_high_word_crosses_the_32_bit_boundary() {
+        let core = Core::new(SimConfig::paper(), 0);
+        // Below the boundary.
+        assert_eq!(core.read_csr(csr::CSR_CYCLE, 0, 0, 42), 42);
+        assert_eq!(core.read_csr(csr::CSR_CYCLE_H, 0, 0, 42), 0);
+        // At the boundary.
+        let max = u32::MAX as u64;
+        assert_eq!(core.read_csr(csr::CSR_CYCLE, 0, 0, max), u32::MAX);
+        assert_eq!(core.read_csr(csr::CSR_CYCLE_H, 0, 0, max), 0);
+        // One past: low word wraps to 0, high word carries.
+        assert_eq!(core.read_csr(csr::CSR_CYCLE, 0, 0, max + 1), 0);
+        assert_eq!(core.read_csr(csr::CSR_CYCLE_H, 0, 0, max + 1), 1);
+        // Far past.
+        let big = (7u64 << 32) | 5;
+        assert_eq!(core.read_csr(csr::CSR_CYCLE, 0, 0, big), 5);
+        assert_eq!(core.read_csr(csr::CSR_CYCLE_H, 0, 0, big), 7);
+    }
+
+    #[test]
+    fn trace_buffer_is_bounded_by_trace_cap() {
+        use crate::isa::Asm;
+        let mut cfg = SimConfig::paper();
+        cfg.nw = 1;
+        cfg.trace = true;
+        cfg.trace_cap = 8;
+        let mut a = Asm::new();
+        for _ in 0..64 {
+            a.addi(5, 0, 1);
+        }
+        a.ecall();
+        let prog = a.finish();
+        let mut gpu = crate::sim::Gpu::new(&cfg);
+        gpu.load_program(&prog);
+        gpu.run(1_000_000).unwrap();
+        let core = &gpu.cores[0];
+        assert_eq!(core.trace.len(), 8, "ring buffer capped");
+        assert_eq!(core.trace.dropped(), 65 - 8, "older lines evicted");
+        // Format unchanged: the retained lines are the most recent
+        // ones and keep the seed's layout.
+        let last = core.trace.iter().last().unwrap();
+        assert!(last.contains("c0 w0 pc="), "{last}");
+        assert!(last.contains("ecall"), "newest line retained: {last}");
     }
 }

@@ -1,0 +1,57 @@
+//! Integer-ALU dispatch: register/immediate ALU ops, LUI/AUIPC, CSR
+//! reads, and FENCE. Fully pipelined — a bounded ALU accepts a new
+//! instruction every cycle (`occ = 1`).
+
+use super::Retire;
+use crate::isa::Instr;
+use crate::sim::core::Core;
+
+pub(crate) fn execute(
+    core: &mut Core,
+    w: usize,
+    pc: u32,
+    instr: Instr,
+    now: u64,
+    out: &mut [u32; 32],
+) -> Retire {
+    let nt = core.cfg.nt;
+    let mut a = [0u32; 32];
+    let mut b = [0u32; 32];
+    match instr {
+        Instr::Alu { op, rs1, rs2, .. } => {
+            core.rf.read_all(w, rs1, &mut a);
+            core.rf.read_all(w, rs2, &mut b);
+            for l in 0..nt {
+                out[l] = op.eval(a[l], b[l]);
+            }
+            core.metrics.alu_ops += 1;
+        }
+        Instr::AluImm { op, rs1, imm, .. } => {
+            core.rf.read_all(w, rs1, &mut a);
+            for l in 0..nt {
+                out[l] = op.eval(a[l], imm as u32);
+            }
+            core.metrics.alu_ops += 1;
+        }
+        Instr::Lui { imm, .. } => {
+            out[..nt].fill(imm as u32);
+            core.metrics.alu_ops += 1;
+        }
+        Instr::Auipc { imm, .. } => {
+            out[..nt].fill(pc.wrapping_add(imm as u32));
+            core.metrics.alu_ops += 1;
+        }
+        Instr::CsrRead { csr: c, .. } => {
+            for l in 0..nt {
+                out[l] = core.read_csr(c, w, l, now);
+            }
+            core.metrics.alu_ops += 1;
+        }
+        Instr::Fence => {
+            // Commit-time no-op; charge ALU latency.
+            core.metrics.control_ops += 1;
+        }
+        other => unreachable!("non-ALU instruction dispatched to the ALU: {other:?}"),
+    }
+    Retire { next_pc: pc.wrapping_add(4), lat: core.cfg.lat.alu as u64, occ: 1 }
+}

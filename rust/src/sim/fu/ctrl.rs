@@ -1,0 +1,154 @@
+//! Control-flow and SIMT-control dispatch: branches, jumps, ECALL,
+//! and the Vortex warp-control instructions (tmc/wspawn/split/join/
+//! bar/pred). These execute on the ALU kind (Vortex's ALU/branch
+//! unit), occupy it for one cycle, and charge their pipeline-refill
+//! penalties to the issuing warp's `ready_at`.
+
+use super::Retire;
+use crate::isa::Instr;
+use crate::sim::core::{Core, SimError, CTRL_PENALTY};
+use crate::sim::warp::{full_mask, WarpState};
+
+pub(crate) fn execute(
+    core: &mut Core,
+    w: usize,
+    pc: u32,
+    instr: Instr,
+    now: u64,
+    out: &mut [u32; 32],
+) -> Result<Retire, SimError> {
+    let nt = core.cfg.nt;
+    let tmask = core.warps[w].tmask;
+    let mut a = [0u32; 32];
+    let mut b = [0u32; 32];
+    let mut next_pc = pc.wrapping_add(4);
+    match instr {
+        Instr::Branch { op, rs1, rs2, imm } => {
+            core.rf.read_all(w, rs1, &mut a);
+            core.rf.read_all(w, rs2, &mut b);
+            let first = core.warps[w].first_lane();
+            let taken = op.taken(a[first], b[first]);
+            // Branches must be warp-uniform over active lanes;
+            // divergence is the compiler's job (vx_split/vx_join).
+            for l in 0..nt {
+                if tmask & (1 << l) != 0 && op.taken(a[l], b[l]) != taken {
+                    return Err(SimError::DivergentBranch { pc });
+                }
+            }
+            if taken {
+                next_pc = pc.wrapping_add(imm as u32);
+                core.ready_at[w] = now + CTRL_PENALTY;
+            }
+            core.metrics.control_ops += 1;
+        }
+        Instr::Jal { imm, .. } => {
+            out[..nt].fill(pc.wrapping_add(4));
+            next_pc = pc.wrapping_add(imm as u32);
+            core.ready_at[w] = now + CTRL_PENALTY;
+            core.metrics.control_ops += 1;
+        }
+        Instr::Jalr { rs1, imm, .. } => {
+            core.rf.read_all(w, rs1, &mut a);
+            let first = core.warps[w].first_lane();
+            out[..nt].fill(pc.wrapping_add(4));
+            next_pc = a[first].wrapping_add(imm as u32) & !1;
+            core.ready_at[w] = now + CTRL_PENALTY;
+            core.metrics.control_ops += 1;
+        }
+        Instr::Ecall => {
+            core.warps[w].state = WarpState::Inactive;
+            core.metrics.control_ops += 1;
+        }
+        Instr::Tmc { rs1 } => {
+            core.rf.read_all(w, rs1, &mut a);
+            let first = core.warps[w].first_lane();
+            let m = a[first] & full_mask(nt);
+            if m == 0 {
+                core.warps[w].state = WarpState::Inactive;
+            } else {
+                core.warps[w].tmask = m;
+            }
+            core.ready_at[w] = now + CTRL_PENALTY;
+            core.metrics.control_ops += 1;
+        }
+        Instr::Wspawn { rs1, rs2 } => {
+            core.rf.read_all(w, rs1, &mut a);
+            core.rf.read_all(w, rs2, &mut b);
+            let first = core.warps[w].first_lane();
+            let count = (a[first] as usize).min(core.cfg.nw);
+            let target = b[first];
+            for i in 1..count {
+                core.warps[i].pc = target;
+                core.warps[i].tmask = full_mask(nt);
+                core.warps[i].state = WarpState::Active;
+                core.warps[i].stack.clear();
+                if i != w {
+                    // Respawn hygiene (PR-3 bugfix): a warp re-spawned
+                    // after halting must not inherit its previous
+                    // life's transient pipeline state — a stale
+                    // `ready_at` penalty, stale scoreboard pending
+                    // bits, a stale barrier arrival, or an in-flight
+                    // writeback that would clobber the new warp's
+                    // registers. Bumping the spawn epoch makes the
+                    // writeback stage discard the dead warp's
+                    // outstanding retirements.
+                    core.ready_at[i] = 0;
+                    core.sb.clear_warp(i);
+                    core.clear_barrier_arrivals(i);
+                    core.spawn_epoch[i] = core.spawn_epoch[i].wrapping_add(1);
+                }
+            }
+            core.metrics.control_ops += 1;
+        }
+        Instr::Split { rs1, .. } => {
+            core.rf.read_all(w, rs1, &mut a);
+            let mut taken = 0u32;
+            for l in 0..nt {
+                if a[l] != 0 {
+                    taken |= 1 << l;
+                }
+            }
+            let warp = &mut core.warps[w];
+            warp.pc = pc; // split() records else_pc = pc + 4
+            let token = warp.split(taken);
+            out[..nt].fill(token);
+            next_pc = pc.wrapping_add(4);
+            core.ready_at[w] = now + CTRL_PENALTY;
+            core.metrics.control_ops += 1;
+        }
+        Instr::Join { .. } => {
+            let warp = &mut core.warps[w];
+            warp.pc = pc;
+            next_pc = warp.join();
+            core.ready_at[w] = now + CTRL_PENALTY;
+            core.metrics.control_ops += 1;
+        }
+        Instr::Bar { rs1, rs2 } => {
+            core.rf.read_all(w, rs1, &mut a);
+            core.rf.read_all(w, rs2, &mut b);
+            let first = core.warps[w].first_lane();
+            let id = a[first];
+            let required = b[first].max(1);
+            core.metrics.barriers_hit += 1;
+            core.metrics.control_ops += 1;
+            core.arrive_barrier(w, id, required);
+        }
+        Instr::Pred { rs1 } => {
+            core.rf.read_all(w, rs1, &mut a);
+            let mut m = 0u32;
+            for l in 0..nt {
+                if tmask & (1 << l) != 0 && a[l] != 0 {
+                    m |= 1 << l;
+                }
+            }
+            if m == 0 {
+                core.warps[w].state = WarpState::Inactive;
+            } else {
+                core.warps[w].tmask = m;
+            }
+            core.metrics.control_ops += 1;
+        }
+        other => unreachable!("non-control instruction dispatched to ctrl: {other:?}"),
+    }
+    Ok(Retire { next_pc, lat: core.cfg.lat.alu as u64, occ: 1 })
+}

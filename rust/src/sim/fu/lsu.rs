@@ -1,0 +1,115 @@
+//! Load-store-unit dispatch: functional memory access at issue plus
+//! the timing walk through `sim/memhier`. A bounded LSU port is held
+//! for the access's full latency (one outstanding warp access per
+//! port), which is what serializes concurrent loads when
+//! `FuConfig::lsu` is small — the structural-hazard half of the
+//! HW-vs-SW cost story.
+
+use super::Retire;
+use crate::isa::{Instr, Width};
+use crate::sim::core::{Core, SimError};
+use crate::sim::mem::{MemFault, Memory};
+use crate::sim::memhier::SharedMem;
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn execute(
+    core: &mut Core,
+    w: usize,
+    pc: u32,
+    instr: Instr,
+    mem: &mut Memory,
+    shared: &mut SharedMem,
+    now: u64,
+    out: &mut [u32; 32],
+) -> Result<Retire, SimError> {
+    let nt = core.cfg.nt;
+    let tmask = core.warps[w].tmask;
+    let mut a = [0u32; 32];
+    let mut b = [0u32; 32];
+    let mut addrs = [0u32; 32];
+    let lat = match instr {
+        Instr::Load { width, rs1, imm, .. } => {
+            core.rf.read_all(w, rs1, &mut a);
+            for l in 0..nt {
+                addrs[l] = a[l].wrapping_add(imm as u32);
+            }
+            for l in 0..nt {
+                if tmask & (1 << l) == 0 {
+                    continue;
+                }
+                out[l] = load_value(mem, addrs[l], width)?;
+            }
+            let lat = mem_latency(core, &addrs[..nt], tmask, false, now, shared);
+            core.metrics.loads += 1;
+            lat
+        }
+        Instr::Store { width, rs1, rs2, imm } => {
+            core.rf.read_all(w, rs1, &mut a);
+            core.rf.read_all(w, rs2, &mut b);
+            for l in 0..nt {
+                addrs[l] = a[l].wrapping_add(imm as u32);
+            }
+            for l in 0..nt {
+                if tmask & (1 << l) == 0 {
+                    continue;
+                }
+                store_value(mem, addrs[l], b[l], width)?;
+            }
+            let lat = mem_latency(core, &addrs[..nt], tmask, true, now, shared);
+            core.metrics.stores += 1;
+            lat
+        }
+        other => unreachable!("non-memory instruction dispatched to the LSU: {other:?}"),
+    };
+    Ok(Retire { next_pc: pc.wrapping_add(4), lat, occ: lat })
+}
+
+/// Memory latency for one warp access, through `sim/memhier`:
+/// scratchpad accesses go to the banked shared-memory model, global
+/// accesses walk L1 → MSHR → L2 → DRAM (or the legacy flat L1 when the
+/// hierarchy is disabled). All hierarchy state mutates here, at issue
+/// time, with absolute-cycle timestamps — which is what keeps the
+/// fast-forward engine's skip windows sound.
+fn mem_latency(
+    core: &mut Core,
+    addrs: &[u32],
+    tmask: u32,
+    store: bool,
+    now: u64,
+    shared: &mut SharedMem,
+) -> u64 {
+    if tmask == 0 {
+        return core.cfg.lat.alu as u64;
+    }
+    let first = tmask.trailing_zeros() as usize;
+    if Memory::is_shared(addrs[first]) {
+        return core.memsys.smem_access(&core.cfg.lat, addrs, tmask, &mut core.metrics);
+    }
+    core.memsys.warp_access(
+        &core.cfg.lat,
+        addrs,
+        tmask,
+        store,
+        now,
+        shared,
+        &mut core.metrics,
+    )
+}
+
+fn load_value(mem: &mut Memory, addr: u32, width: Width) -> Result<u32, MemFault> {
+    Ok(match width {
+        Width::Word => mem.read_u32(addr)?,
+        Width::Byte => mem.read_u8(addr)? as i8 as i32 as u32,
+        Width::ByteU => mem.read_u8(addr)? as u32,
+        Width::Half => mem.read_u16(addr)? as i16 as i32 as u32,
+        Width::HalfU => mem.read_u16(addr)? as u32,
+    })
+}
+
+fn store_value(mem: &mut Memory, addr: u32, v: u32, width: Width) -> Result<(), MemFault> {
+    match width {
+        Width::Word => mem.write_u32(addr, v),
+        Width::Byte | Width::ByteU => mem.write_u8(addr, v as u8),
+        Width::Half | Width::HalfU => mem.write_u16(addr, v as u16),
+    }
+}

@@ -1,0 +1,35 @@
+//! RV32M dispatch. The multiplier is pipelined (`occ = 1`); the
+//! divider is iterative and holds its unit for the full divide
+//! latency, so a bounded MUL/DIV pool serializes back-to-back divides
+//! across warps.
+
+use super::Retire;
+use crate::isa::{Instr, MulOp};
+use crate::sim::core::Core;
+
+pub(crate) fn execute(
+    core: &mut Core,
+    w: usize,
+    pc: u32,
+    instr: Instr,
+    out: &mut [u32; 32],
+) -> Retire {
+    let nt = core.cfg.nt;
+    let mut a = [0u32; 32];
+    let mut b = [0u32; 32];
+    let op = match instr {
+        Instr::Mul { op, rs1, rs2, .. } => {
+            core.rf.read_all(w, rs1, &mut a);
+            core.rf.read_all(w, rs2, &mut b);
+            for l in 0..nt {
+                out[l] = op.eval(a[l], b[l]);
+            }
+            core.metrics.mul_ops += 1;
+            op
+        }
+        other => unreachable!("non-RV32M instruction dispatched to MUL/DIV: {other:?}"),
+    };
+    let iterative = matches!(op, MulOp::Div | MulOp::Divu | MulOp::Rem | MulOp::Remu);
+    let lat = if iterative { core.cfg.lat.div as u64 } else { core.cfg.lat.mul as u64 };
+    Retire { next_pc: pc.wrapping_add(4), lat, occ: if iterative { lat } else { 1 } }
+}

@@ -1,0 +1,133 @@
+//! Per-kind functional-unit pools with absolute-cycle occupancy.
+//!
+//! Each bounded kind owns a small vector of `busy_until` timestamps —
+//! one per unit. A unit is free to accept an instruction at cycle
+//! `now` when `busy_until <= now`; issuing writes the new release
+//! time. An empty vector models *unlimited* units (the
+//! legacy-equivalent default): no state is kept, no structural hazard
+//! can occur, and `next_release` contributes no events — timing is
+//! bit-identical to the seed's execute stage.
+//!
+//! State mutates only at issue and is all absolute-cycle, so the
+//! fast-forward engine folds [`FuPool::next_release`] into the event
+//! set and skips structural-stall windows soundly.
+
+use super::FuKind;
+use crate::sim::config::FuConfig;
+
+/// Unit pools for all [`FuKind`]s of one core.
+pub struct FuPool {
+    /// `busy_until` per unit, indexed by `FuKind as usize`; an empty
+    /// vector means unlimited units of that kind.
+    units: [Vec<u64>; FuKind::COUNT],
+}
+
+impl FuPool {
+    pub fn new(cfg: &FuConfig) -> Self {
+        FuPool {
+            units: [
+                vec![0; cfg.alu],
+                vec![0; cfg.muldiv],
+                vec![0; cfg.lsu],
+                vec![0; cfg.wcu],
+            ],
+        }
+    }
+
+    /// Release every unit (kernel-launch reset).
+    pub fn reset(&mut self) {
+        for pool in &mut self.units {
+            for u in pool.iter_mut() {
+                *u = 0;
+            }
+        }
+    }
+
+    /// True when an instruction of `kind` can issue at cycle `now`.
+    #[inline]
+    pub fn available(&self, kind: FuKind, now: u64) -> bool {
+        let pool = &self.units[kind as usize];
+        pool.is_empty() || pool.iter().any(|&u| u <= now)
+    }
+
+    /// Occupy one free unit of `kind` until cycle `until` (exclusive:
+    /// the unit accepts again at `until`). No-op for unlimited kinds.
+    /// Callers must have checked [`FuPool::available`] this cycle.
+    pub fn occupy(&mut self, kind: FuKind, now: u64, until: u64) {
+        let pool = &mut self.units[kind as usize];
+        if pool.is_empty() {
+            return;
+        }
+        match pool.iter_mut().find(|u| **u <= now) {
+            Some(u) => *u = until,
+            None => debug_assert!(false, "occupy({kind:?}) without a free unit"),
+        }
+    }
+
+    /// Earliest cycle strictly after `now` at which any occupied unit
+    /// frees — the event a structurally-stalled warp waits for.
+    pub fn next_release(&self, now: u64) -> Option<u64> {
+        let mut next = u64::MAX;
+        for pool in &self.units {
+            for &u in pool {
+                if u > now && u < next {
+                    next = u;
+                }
+            }
+        }
+        (next != u64::MAX).then_some(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bounded() -> FuPool {
+        FuPool::new(&FuConfig { issue_width: 1, alu: 2, muldiv: 1, lsu: 1, wcu: 1 })
+    }
+
+    #[test]
+    fn unlimited_kind_is_always_available_and_eventless() {
+        let mut p = FuPool::new(&FuConfig::legacy());
+        for k in FuKind::all() {
+            assert!(p.available(k, 0));
+            p.occupy(k, 0, 1_000); // no-op
+            assert!(p.available(k, 0));
+        }
+        assert_eq!(p.next_release(0), None);
+    }
+
+    #[test]
+    fn bounded_unit_blocks_until_release() {
+        let mut p = bounded();
+        assert!(p.available(FuKind::Lsu, 10));
+        p.occupy(FuKind::Lsu, 10, 60);
+        assert!(!p.available(FuKind::Lsu, 10));
+        assert!(!p.available(FuKind::Lsu, 59));
+        assert!(p.available(FuKind::Lsu, 60), "release cycle accepts again");
+        assert_eq!(p.next_release(10), Some(60));
+        assert_eq!(p.next_release(60), None, "past releases are not events");
+    }
+
+    #[test]
+    fn multiple_units_fill_independently() {
+        let mut p = bounded();
+        p.occupy(FuKind::Alu, 5, 6);
+        assert!(p.available(FuKind::Alu, 5), "second ALU still free");
+        p.occupy(FuKind::Alu, 5, 9);
+        assert!(!p.available(FuKind::Alu, 5));
+        // Earliest of the two releases is the next event.
+        assert_eq!(p.next_release(5), Some(6));
+        assert!(p.available(FuKind::Alu, 6));
+    }
+
+    #[test]
+    fn reset_frees_everything() {
+        let mut p = bounded();
+        p.occupy(FuKind::Wcu, 0, 100);
+        p.reset();
+        assert!(p.available(FuKind::Wcu, 0));
+        assert_eq!(p.next_release(0), None);
+    }
+}

@@ -1,0 +1,154 @@
+//! Warp-collective-unit dispatch — the paper's modified ALU (§III):
+//! `vx_vote`/`vx_shfl` collectives segmented by the scheduler's tile
+//! table, `vx_tile` reconfiguration, and the merged-warp operand walk
+//! through the register-bank crossbar. A bounded WCU is held for a
+//! collective's full latency (crossbar hops included); `vx_tile` only
+//! rewrites the scheduler's tile table — it charges its penalty to the
+//! issuing warp's `ready_at` and occupies the unit for a single cycle.
+
+use super::Retire;
+use crate::isa::Instr;
+use crate::sim::core::{Core, SimError, TILE_PENALTY};
+use crate::sim::exec::warp_ops;
+
+pub(crate) fn execute(
+    core: &mut Core,
+    w: usize,
+    pc: u32,
+    instr: Instr,
+    now: u64,
+    out: &mut [u32; 32],
+) -> Result<Retire, SimError> {
+    let tmask = core.warps[w].tmask;
+    let mut a = [0u32; 32];
+    let mut b = [0u32; 32];
+    let (lat, occ) = match instr {
+        Instr::Vote { mode, rs1, mreg, .. } => {
+            core.require_warp_hw(pc, "vx_vote")?;
+            core.pending_collective_reg = rs1;
+            core.rf.read_all(w, rs1, &mut a);
+            core.rf.read_all(w, mreg, &mut b);
+            let first = core.warps[w].first_lane();
+            let members = b[first];
+            let lat =
+                collective(core, w, tmask, &a, members, out, |vals, act, mem_m, dst| {
+                    dst.fill(warp_ops::vote(mode, vals, act, mem_m));
+                });
+            core.metrics.warp_collectives += 1;
+            (lat, lat)
+        }
+        Instr::Shfl { mode, rs1, delta, creg, .. } => {
+            core.require_warp_hw(pc, "vx_shfl")?;
+            core.pending_collective_reg = rs1;
+            core.rf.read_all(w, rs1, &mut a);
+            core.rf.read_all(w, creg, &mut b);
+            let first = core.warps[w].first_lane();
+            let clamp = b[first];
+            let lat = collective(core, w, tmask, &a, 0, out, |vals, _act, _m, dst| {
+                warp_ops::shfl_into(mode, vals, delta as u32, clamp, dst);
+            });
+            core.metrics.warp_collectives += 1;
+            (lat, lat)
+        }
+        Instr::Tile { rs1, rs2 } => {
+            core.require_warp_hw(pc, "vx_tile")?;
+            core.rf.read_all(w, rs1, &mut a);
+            core.rf.read_all(w, rs2, &mut b);
+            let first = core.warps[w].first_lane();
+            let (mask, size) = (a[first], b[first]);
+            core.sched
+                .set_tile(mask, size)
+                .map_err(|e| SimError::IllegalInstr { pc, what: e })?;
+            core.ready_at[w] = now + TILE_PENALTY;
+            core.metrics.warp_collectives += 1;
+            core.metrics.control_ops += 1;
+            (core.cfg.lat.alu as u64, 1)
+        }
+        other => unreachable!("non-collective instruction dispatched to the WCU: {other:?}"),
+    };
+    Ok(Retire { next_pc: pc.wrapping_add(4), lat, occ })
+}
+
+/// Execute a collective (vote/shuffle) for warp `w`, honoring the
+/// tile table. Returns the latency.
+///
+/// * `seg <= NT`: segments live inside the warp — plain modified-ALU
+///   path, `warp_op` latency.
+/// * `seg > NT`: the group spans `seg/NT` merged warps; operands for
+///   the foreign lanes are collected across register banks through
+///   the crossbar (charging `crossbar_hop` per extra warp), exactly
+///   the structure §III adds to the execute stage.
+///
+/// `f` writes each segment's per-lane results into the slice it is
+/// handed (same length as `vals`) — directly into `out` on the
+/// sub-warp path, through the per-core scratch buffers on the
+/// merged path — so the hot path never allocates.
+fn collective(
+    core: &mut Core,
+    w: usize,
+    tmask: u32,
+    own_vals: &[u32; 32],
+    members: u32,
+    out: &mut [u32; 32],
+    f: impl Fn(&[u32], u32, u32, &mut [u32]),
+) -> u64 {
+    let nt = core.cfg.nt;
+    let seg = (core.sched.tile.size as usize).min(core.cfg.hw_threads());
+    let mut lat = core.cfg.lat.warp_op as u64;
+    if seg <= nt {
+        // Sub-warp (or whole-warp) tiles: segment the warp lanes,
+        // writing each segment's results straight into `out`
+        // (`own_vals` and `out` are distinct borrows).
+        let nseg = nt / seg;
+        for s in 0..nseg {
+            let base = s * seg;
+            let act = (tmask >> base) & warp_ops::mask_of(seg);
+            f(&own_vals[base..base + seg], act, members, &mut out[base..base + seg]);
+        }
+    } else {
+        // Merged warps: group = `span` consecutive warps aligned on
+        // `span`, this warp contributes its lanes and reads the rest
+        // through the crossbar.
+        let span = (seg / nt).max(1).min(core.cfg.nw);
+        let group_base = (w / span) * span;
+        let total = span * nt;
+        // Move the scratch buffers out of the core for the duration
+        // of the gather (read_cross needs `&mut core.rf`), then put
+        // them back — no allocation, no re-zeroing: every word in
+        // `vals[..total]` and `res[..total]` is overwritten below.
+        let mut vals = std::mem::take(&mut core.scratch_vals);
+        let mut res = std::mem::take(&mut core.scratch_res);
+        let mut act = 0u32;
+        for mw in 0..span {
+            let warp_idx = group_base + mw;
+            for l in 0..nt {
+                let v = if warp_idx == w {
+                    own_vals[l]
+                } else {
+                    // Crossbar read from the foreign bank. The
+                    // "value" register index is not re-decoded here;
+                    // foreign lanes hold the same architectural
+                    // register, so read it directly.
+                    core.rf.read_cross(warp_idx, core.pending_collective_reg, l)
+                };
+                vals[mw * nt + l] = v;
+            }
+            let m = if warp_idx == w { tmask } else { core.warps[warp_idx].tmask };
+            act |= (m & warp_ops::mask_of(nt)) << (mw * nt);
+        }
+        f(&vals[..total], act, members, &mut res[..total]);
+        out[..nt].copy_from_slice(&res[(w - group_base) * nt..(w - group_base) * nt + nt]);
+        core.scratch_vals = vals;
+        core.scratch_res = res;
+        let hops = (span - 1) as u64;
+        core.metrics.crossbar_hops += hops;
+        lat += if core.cfg.crossbar {
+            hops * core.cfg.lat.crossbar_hop as u64
+        } else {
+            // Ablation: without the crossbar the single-bank mux
+            // serializes one lane group per cycle.
+            hops * (nt as u64)
+        };
+    }
+    lat
+}

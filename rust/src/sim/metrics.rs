@@ -1,6 +1,8 @@
 //! Per-core performance counters. IPC — the paper's Fig 5 metric — is
 //! retired warp-instructions / cycles.
 
+use super::fu::FuKind;
+
 /// Counter block, reset per kernel launch.
 ///
 /// `PartialEq`/`Eq` support the engine-equivalence invariant: the
@@ -27,7 +29,20 @@ pub struct Metrics {
     pub stall_scoreboard: u64,
     pub stall_barrier: u64,
     pub stall_pipeline: u64,
+    /// Cycles where some warp was ready but every unit of its
+    /// instruction's FU kind was occupied (`sim/fu` structural
+    /// hazard). Always zero under the unlimited legacy FU config.
+    pub stall_structural: u64,
     pub idle_cycles: u64,
+
+    // Functional units (`sim/fu`), indexed by `FuKind as usize`
+    // ([ALU, MUL/DIV, LSU, WCU]).
+    /// Instructions issued per FU kind.
+    pub fu_issued: [u64; FuKind::COUNT],
+    /// Unit-occupancy cycles reserved at issue per FU kind (1 per
+    /// pipelined op; the full latency for the iterative divider, LSU
+    /// ports and collectives).
+    pub fu_busy: [u64; FuKind::COUNT],
 
     // Memory system (L1).
     pub dcache_hits: u64,
@@ -128,7 +143,10 @@ impl Metrics {
             stall_scoreboard,
             stall_barrier,
             stall_pipeline,
+            stall_structural,
             idle_cycles,
+            fu_issued,
+            fu_busy,
             dcache_hits,
             dcache_misses,
             smem_accesses,
@@ -158,7 +176,12 @@ impl Metrics {
         self.stall_scoreboard += stall_scoreboard;
         self.stall_barrier += stall_barrier;
         self.stall_pipeline += stall_pipeline;
+        self.stall_structural += stall_structural;
         self.idle_cycles += idle_cycles;
+        for k in 0..FuKind::COUNT {
+            self.fu_issued[k] += fu_issued[k];
+            self.fu_busy[k] += fu_busy[k];
+        }
         self.dcache_hits += dcache_hits;
         self.dcache_misses += dcache_misses;
         self.smem_accesses += smem_accesses;
@@ -195,6 +218,16 @@ impl Metrics {
             self.stall_pipeline,
             self.idle_cycles,
         );
+        if self.stall_structural > 0 {
+            s.push_str(&format!(
+                " fu[struct={} alu={} mul={} lsu={} wcu={}]",
+                self.stall_structural,
+                self.fu_issued[FuKind::Alu as usize],
+                self.fu_issued[FuKind::MulDiv as usize],
+                self.fu_issued[FuKind::Lsu as usize],
+                self.fu_issued[FuKind::Wcu as usize],
+            ));
+        }
         if self.l2_hits + self.l2_misses > 0 {
             s.push_str(&format!(
                 " L2hit={:.1}% mshr[merge={} stall={}] dram[fills={} busy={} wait={}] \
@@ -230,6 +263,30 @@ mod tests {
         assert!((m.tipc() - 6.0).abs() < 1e-12);
         assert!(m.summary().contains("ipc=0.750"));
         assert!(!m.summary().contains("L2hit"), "legacy runs keep the seed summary");
+        assert!(!m.summary().contains("fu["), "no FU tail without structural stalls");
+    }
+
+    #[test]
+    fn structural_stalls_surface_in_summary() {
+        let mut m = Metrics { cycles: 10, stall_structural: 3, ..Default::default() };
+        m.fu_issued[FuKind::Lsu as usize] = 2;
+        let s = m.summary();
+        assert!(s.contains("fu[struct=3"), "{s}");
+        assert!(s.contains("lsu=2"), "{s}");
+    }
+
+    #[test]
+    fn merge_adds_fu_counters_elementwise() {
+        let mut a = Metrics { stall_structural: 2, ..Default::default() };
+        a.fu_issued = [1, 2, 3, 4];
+        a.fu_busy = [10, 0, 0, 0];
+        let mut b = Metrics { stall_structural: 5, ..Default::default() };
+        b.fu_issued = [10, 20, 30, 40];
+        b.fu_busy = [0, 0, 7, 0];
+        a.merge(&b);
+        assert_eq!(a.stall_structural, 7);
+        assert_eq!(a.fu_issued, [11, 22, 33, 44]);
+        assert_eq!(a.fu_busy, [10, 0, 7, 0]);
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! SimX-like cycle-level simulator of a Vortex-style RISC-V GPU core.
 //!
-//! This is the evaluation substrate of the paper: a single-issue SIMT
-//! core with a warp scheduler, IPDOM divergence stack, scoreboard,
-//! banked register file (plus the paper's operand **crossbar** for
-//! merged warps), ALU / MUL / warp-collective / LSU functional units
-//! with configurable latencies, a memory hierarchy over a flat global
+//! This is the evaluation substrate of the paper: a SIMT core with a
+//! warp scheduler, IPDOM divergence stack, scoreboard, banked register
+//! file (plus the paper's operand **crossbar** for merged warps),
+//! discrete ALU / MUL-DIV / LSU / warp-collective functional units
+//! with configurable latencies, per-kind unit pools and issue width
+//! (see [`fu`]; the default models the seed's unlimited units), a
+//! memory hierarchy over a flat global
 //! memory (per-core L1D + MSHRs behind a banked shared L2 and a
 //! bandwidth-bounded DRAM stage — see [`memhier`]; the default config
 //! keeps the seed's flat L1-only timing), a per-core shared-memory
@@ -19,12 +21,14 @@
 
 pub mod config;
 pub mod core;
+pub mod fu;
 pub mod mem;
 pub mod memhier;
 pub mod metrics;
 pub mod regfile;
 pub mod scheduler;
 pub mod scoreboard;
+pub mod trace;
 pub mod warp;
 pub mod wb;
 
@@ -34,10 +38,12 @@ pub mod exec {
 }
 
 pub use self::core::{Core, SimError};
-pub use config::{EngineMode, Latencies, MemHierConfig, SimConfig};
+pub use config::{EngineMode, FuConfig, Latencies, MemHierConfig, SimConfig};
+pub use fu::{FuKind, FuPool};
 pub use mem::{DCache, Memory};
 pub use memhier::SharedMem;
 pub use metrics::Metrics;
+pub use trace::TraceBuf;
 pub use warp::Warp;
 
 /// Memory map (documented in README §Architecture).

@@ -40,6 +40,15 @@ impl Scoreboard {
         self.pending[warp] &= !(1 << reg);
     }
 
+    /// Drop every pending bit of one warp. Used when `vx_wspawn`
+    /// re-spawns a halted warp: the dead warp's in-flight writers are
+    /// discarded by the spawn-epoch check at writeback, so their
+    /// pending bits must not gate the new warp's issue.
+    #[inline]
+    pub fn clear_warp(&mut self, warp: usize) {
+        self.pending[warp] = 0;
+    }
+
     /// Any register of this warp still pending?
     #[inline]
     pub fn warp_idle(&self, warp: usize) -> bool {
@@ -65,6 +74,18 @@ mod tests {
         assert!(sb.can_issue(0, &[Some(1), Some(2), None], Some(3)));
         sb.clear(0, 5);
         assert!(sb.can_issue(0, &[Some(5), None, None], Some(5)));
+    }
+
+    #[test]
+    fn clear_warp_drops_all_pending_bits() {
+        let mut sb = Scoreboard::new(2);
+        sb.set_pending(0, 5);
+        sb.set_pending(0, 9);
+        sb.set_pending(1, 5);
+        sb.clear_warp(0);
+        assert!(sb.warp_idle(0));
+        assert!(sb.can_issue(0, &[Some(5), Some(9), None], Some(5)));
+        assert!(sb.busy(1, 5), "other warps untouched");
     }
 
     #[test]

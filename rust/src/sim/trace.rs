@@ -1,0 +1,98 @@
+//! Bounded instruction-trace buffer (PR-3 satellite).
+//!
+//! `cfg.trace` used to append every executed instruction to an
+//! unbounded `Vec<String>`, so long traced runs grew memory without
+//! limit. [`TraceBuf`] is a ring buffer capped at
+//! `SimConfig::trace_cap` lines: once full, the oldest line is dropped
+//! for each new one (and counted), keeping the most recent window —
+//! the part that matters when debugging where a run ended up. The
+//! per-line format is unchanged.
+
+use std::collections::VecDeque;
+
+/// Ring buffer of trace lines. A capacity of `0` means unbounded (the
+/// pre-PR behavior, for short runs that need the full history).
+#[derive(Debug, Default)]
+pub struct TraceBuf {
+    cap: usize,
+    lines: VecDeque<String>,
+    dropped: u64,
+}
+
+impl TraceBuf {
+    pub fn new(cap: usize) -> Self {
+        TraceBuf { cap, lines: VecDeque::new(), dropped: 0 }
+    }
+
+    /// Append a line, evicting the oldest when at capacity.
+    pub fn push(&mut self, line: String) {
+        if self.cap != 0 && self.lines.len() == self.cap {
+            self.lines.pop_front();
+            self.dropped += 1;
+        }
+        self.lines.push_back(line);
+    }
+
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+
+    /// Lines evicted so far (0 until the cap is exceeded).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Retained lines, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &str> {
+        self.lines.iter().map(String::as_str)
+    }
+
+    pub fn clear(&mut self) {
+        self.lines.clear();
+        self.dropped = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_the_most_recent_window() {
+        let mut t = TraceBuf::new(3);
+        for i in 0..5 {
+            t.push(format!("line {i}"));
+        }
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.dropped(), 2);
+        let got: Vec<&str> = t.iter().collect();
+        assert_eq!(got, ["line 2", "line 3", "line 4"]);
+    }
+
+    #[test]
+    fn zero_cap_is_unbounded() {
+        let mut t = TraceBuf::new(0);
+        for i in 0..100 {
+            t.push(format!("{i}"));
+        }
+        assert_eq!(t.len(), 100);
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut t = TraceBuf::new(2);
+        t.push("a".into());
+        t.push("b".into());
+        t.push("c".into());
+        assert_eq!(t.dropped(), 1);
+        t.clear();
+        assert!(t.is_empty());
+        assert_eq!(t.dropped(), 0);
+        assert_eq!(t.iter().count(), 0);
+    }
+}

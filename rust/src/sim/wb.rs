@@ -28,6 +28,12 @@ pub struct InFlight {
     pub rd: u8,
     pub mask: u32,
     pub vals: [u32; 32],
+    /// Spawn generation of the issuing warp. The writeback stage
+    /// discards entries whose epoch no longer matches the warp's
+    /// current `spawn_epoch` — a `vx_wspawn` re-spawned the warp while
+    /// this write was in flight, and it must not clobber the new
+    /// warp's registers.
+    pub epoch: u32,
 }
 
 /// Slab + min-heap writeback queue (see module docs).
@@ -104,7 +110,7 @@ mod tests {
     use super::*;
 
     fn entry(warp: u32) -> InFlight {
-        InFlight { warp, rd: 1, mask: 0xFF, vals: [warp; 32] }
+        InFlight { warp, rd: 1, mask: 0xFF, vals: [warp; 32], epoch: 0 }
     }
 
     #[test]

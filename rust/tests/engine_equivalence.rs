@@ -6,10 +6,12 @@
 //! L1/L2/MSHR/bank-conflict counters) **bit-identical** to the retained
 //! one-cycle reference path, plus identical functional outputs. These
 //! tests pin that contract over every kernel under both the HW and SW
-//! solutions, under GTO scheduling, on multi-core configs, and across
+//! solutions, under GTO scheduling, on multi-core configs, across
 //! the `sim/memhier` memory configs (legacy default, full hierarchy,
-//! small L2, single MSHR, 2-core shared L2), and additionally pin
-//! `launch_batch` determinism and the GPU-level timeout fix.
+//! small L2, single MSHR, 2-core shared L2), and across the `sim/fu`
+//! functional-unit configs (unlimited/legacy, bounded `vortex()`
+//! units, issue-width 2, and FU+memhier combined), and additionally
+//! pin `launch_batch` determinism and the GPU-level timeout fix.
 
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
 use vortex_warp::coordinator::{launch_batch, BatchJob};
@@ -17,7 +19,7 @@ use vortex_warp::isa::asm::regs::*;
 use vortex_warp::isa::{csr, Asm};
 use vortex_warp::kernels;
 use vortex_warp::sim::config::{CacheConfig, SchedPolicy};
-use vortex_warp::sim::{EngineMode, Gpu, MemHierConfig, SimConfig, SimError};
+use vortex_warp::sim::{EngineMode, FuConfig, Gpu, MemHierConfig, SimConfig, SimError};
 
 fn reference(base: &SimConfig) -> SimConfig {
     SimConfig { engine: EngineMode::Reference, ..base.clone() }
@@ -107,6 +109,51 @@ fn metrics_bit_identical_on_two_cores_sharing_the_l2() {
     let mut cfg = hier(&SimConfig::paper());
     cfg.num_cores = 2;
     assert_equivalent_over_kernels(&cfg, "2-core-shared-l2");
+}
+
+/// The paper config with a given functional-unit pipeline (`sim/fu`).
+fn fu(base: &SimConfig, f: FuConfig) -> SimConfig {
+    let mut cfg = base.clone();
+    cfg.fu = f;
+    cfg
+}
+
+#[test]
+fn metrics_bit_identical_with_explicit_legacy_fu_pools() {
+    // FU config 1 of 3: unlimited units (the legacy default, spelled
+    // out explicitly so the default can never silently drift).
+    assert_equivalent_over_kernels(&fu(&SimConfig::paper(), FuConfig::legacy()), "fu-legacy");
+}
+
+#[test]
+fn metrics_bit_identical_with_vortex_fu_pools() {
+    // FU config 2 of 3: discrete bounded units (2 ALU, 1 MUL/DIV,
+    // 1 LSU, 1 WCU) — structural-stall windows must fast-forward to
+    // the unit-release events and charge `stall_structural`
+    // identically under both engines.
+    assert_equivalent_over_kernels(&fu(&SimConfig::paper(), FuConfig::vortex()), "fu-vortex");
+}
+
+#[test]
+fn metrics_bit_identical_with_issue_width_2() {
+    // FU config 3 of 3: dual issue. Multi-issue cycles are never
+    // skipped (any issue blocks fast-forward), so the engines must
+    // agree on which cycles dual-issue and which stall.
+    let mut f = FuConfig::legacy();
+    f.issue_width = 2;
+    assert_equivalent_over_kernels(&fu(&SimConfig::paper(), f), "issue-width-2");
+}
+
+#[test]
+fn metrics_bit_identical_with_fu_pools_and_memory_hierarchy() {
+    // Everything at once: bounded units + dual issue over the full
+    // shared-L2/DRAM hierarchy on two cores — FU release events, memory
+    // completions and pipeline penalties interleave in one event set.
+    let mut cfg = hier(&SimConfig::paper());
+    cfg.num_cores = 2;
+    cfg.fu = FuConfig::vortex();
+    cfg.fu.issue_width = 2;
+    assert_equivalent_over_kernels(&cfg, "fu+memhier+2-core");
 }
 
 #[test]

@@ -1,0 +1,149 @@
+//! Dedicated error-path coverage (PR-3 satellite). The fatal
+//! `SimError` variants were previously only exercised incidentally;
+//! these tests pin the exact payloads (faulting PC, deadlock cycle,
+//! timeout cap, diagnostic text) under BOTH engines, so the
+//! fast-forward path can never fail differently from the reference
+//! path.
+
+use vortex_warp::isa::asm::regs::*;
+use vortex_warp::isa::{csr, Asm, ShflMode, VoteMode};
+use vortex_warp::sim::{map, EngineMode, Gpu, SimConfig, SimError};
+
+fn engines(base: &SimConfig) -> [SimConfig; 2] {
+    [
+        SimConfig { engine: EngineMode::FastForward, ..base.clone() },
+        SimConfig { engine: EngineMode::Reference, ..base.clone() },
+    ]
+}
+
+fn run_err(cfg: &SimConfig, prog: &[vortex_warp::isa::Instr], max: u64) -> SimError {
+    let mut gpu = Gpu::new(cfg);
+    gpu.load_program(prog);
+    gpu.run(max).expect_err("expected a fatal simulation error")
+}
+
+#[test]
+fn timeout_reports_the_exact_cycle_cap_on_both_engines() {
+    let mut a = Asm::new();
+    let top = a.here();
+    a.j(top);
+    let prog = a.finish();
+    for cfg in engines(&SimConfig::paper()) {
+        match run_err(&cfg, &prog, 5_000) {
+            SimError::Timeout { cycles } => assert_eq!(cycles, 5_000, "{:?}", cfg.engine),
+            other => panic!("{:?}: expected Timeout, got {other:?}", cfg.engine),
+        }
+    }
+}
+
+#[test]
+fn barrier_deadlock_reports_the_same_cycle_on_both_engines() {
+    // A single warp waits for 4 arrivals that can never come.
+    let mut a = Asm::new();
+    a.li(T0, 0);
+    a.li(T1, 4);
+    a.bar(T0, T1);
+    a.ecall();
+    let prog = a.finish();
+    let mut cycles = Vec::new();
+    for cfg in engines(&SimConfig::paper()) {
+        match run_err(&cfg, &prog, 100_000) {
+            SimError::Deadlock { cycle } => cycles.push(cycle),
+            other => panic!("{:?}: expected Deadlock, got {other:?}", cfg.engine),
+        }
+    }
+    assert_eq!(cycles[0], cycles[1], "deadlock cycle must not depend on the engine");
+    assert!(cycles[0] < 100_000);
+}
+
+#[test]
+fn divergent_branch_reports_the_faulting_pc() {
+    // Lanes disagree on (tid < 4) without a vx_split guard. The branch
+    // is the third instruction, so its PC is CODE_BASE + 8.
+    let mut a = Asm::new();
+    a.csrr(T0, csr::CSR_THREAD_ID); // idx 0
+    a.slti(T1, T0, 4); // idx 1
+    let skip = a.label();
+    a.beq(T1, ZERO, skip); // idx 2 <- divergent
+    a.addi(T2, ZERO, 1);
+    a.bind(skip);
+    a.ecall();
+    let prog = a.finish();
+    for cfg in engines(&SimConfig::paper()) {
+        match run_err(&cfg, &prog, 100_000) {
+            SimError::DivergentBranch { pc } => {
+                assert_eq!(pc, map::CODE_BASE + 8, "{:?}", cfg.engine);
+            }
+            other => panic!("{:?}: expected DivergentBranch, got {other:?}", cfg.engine),
+        }
+    }
+}
+
+#[test]
+fn baseline_hardware_rejects_every_warp_collective_with_pc_and_hint() {
+    // warp_hw = false (baseline Vortex): each paper instruction must
+    // trap as IllegalInstr at its own PC, naming the instruction and
+    // pointing at the SW solution.
+    let programs: Vec<(&str, Vec<vortex_warp::isa::Instr>)> = vec![
+        ("vx_vote", {
+            let mut a = Asm::new();
+            a.vote(VoteMode::Any, T0, T1, ZERO);
+            a.ecall();
+            a.finish()
+        }),
+        ("vx_shfl", {
+            let mut a = Asm::new();
+            a.shfl(ShflMode::Down, T0, T1, 1, ZERO);
+            a.ecall();
+            a.finish()
+        }),
+        ("vx_tile", {
+            let mut a = Asm::new();
+            a.li(T0, 0xFF);
+            a.li(T1, 4);
+            a.tile(T0, T1);
+            a.ecall();
+            a.finish()
+        }),
+    ];
+    for (name, prog) in &programs {
+        // The collective's index: vote/shfl at 0; tile after two
+        // 1-instruction `li`s.
+        let expect_pc = if *name == "vx_tile" { map::CODE_BASE + 8 } else { map::CODE_BASE };
+        for cfg in engines(&SimConfig::baseline()) {
+            match run_err(&cfg, prog, 100_000) {
+                SimError::IllegalInstr { pc, what } => {
+                    assert_eq!(pc, expect_pc, "{name} under {:?}", cfg.engine);
+                    assert!(what.contains(name), "{name}: {what}");
+                    assert!(what.contains("SW solution"), "{name}: {what}");
+                }
+                other => panic!("{name} {:?}: expected IllegalInstr, got {other:?}", cfg.engine),
+            }
+        }
+    }
+}
+
+#[test]
+fn jump_outside_the_program_is_a_bad_pc() {
+    let mut a = Asm::new();
+    a.li(T0, 0);
+    a.jalr(ZERO, T0, 0); // jump to address 0 — outside the code region
+    a.ecall();
+    let prog = a.finish();
+    for cfg in engines(&SimConfig::paper()) {
+        match run_err(&cfg, &prog, 100_000) {
+            SimError::BadPc { pc } => assert_eq!(pc, 0, "{:?}", cfg.engine),
+            other => panic!("{:?}: expected BadPc, got {other:?}", cfg.engine),
+        }
+    }
+}
+
+#[test]
+fn error_display_is_actionable() {
+    let e = SimError::DivergentBranch { pc: 0x1008 };
+    assert!(e.to_string().contains("vx_split"), "{e}");
+    let e = SimError::Deadlock { cycle: 42 };
+    assert!(e.to_string().contains("42"), "{e}");
+    let e = SimError::Timeout { cycles: 7 };
+    assert!(e.to_string().contains("7"), "{e}");
+}
