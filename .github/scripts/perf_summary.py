@@ -1,0 +1,158 @@
+#!/usr/bin/env python3
+"""Render BENCH_perf.json as GitHub step-summary markdown, with an
+informational comparison against the latest `main`-branch BENCH_perf
+artifact.
+
+Usage: perf_summary.py <BENCH_perf.json>   (output goes to stdout; CI
+appends it to $GITHUB_STEP_SUMMARY)
+
+The baseline fetch uses the GitHub artifacts API with GH_TOKEN /
+GITHUB_TOKEN and silently degrades to "no baseline" on any failure —
+the perf trajectory is a dashboard, not a gate, so this script never
+exits non-zero because of a comparison result.
+"""
+
+import io
+import json
+import os
+import sys
+import urllib.error
+import urllib.request
+import zipfile
+
+SCENARIOS = [
+    ("aggregate", "aggregate (paper kernels)"),
+    ("memhier", "memhier (gather + full hierarchy)"),
+    ("fu", "fu (bounded units)"),
+    ("opc", "opc (operand collector, dual issue)"),
+]
+
+
+def scenario_stats(report):
+    """name -> (fast_mips, engine_speedup) for every scenario present."""
+    out = {}
+    for key, _ in SCENARIOS:
+        block = report.get(key)
+        if isinstance(block, dict) and "fast_mips" in block:
+            out[key] = (block["fast_mips"], block.get("engine_speedup", 0.0))
+    return out
+
+
+class _NoRedirect(urllib.request.HTTPRedirectHandler):
+    def redirect_request(self, *args, **kwargs):
+        return None
+
+
+def _api(url, token, timeout):
+    req = urllib.request.Request(
+        url,
+        headers={
+            "Authorization": f"Bearer {token}",
+            "Accept": "application/vnd.github+json",
+            "X-GitHub-Api-Version": "2022-11-28",
+        },
+    )
+    return urllib.request.urlopen(req, timeout=timeout)
+
+
+def _download(url, token, timeout):
+    """Fetch an artifact archive. GitHub 302-redirects these to signed
+    blob storage, and the signed URL must be fetched WITHOUT the
+    Authorization header (the default redirect handler would forward
+    it and the blob store rejects the request), so follow the redirect
+    manually."""
+    req = urllib.request.Request(
+        url,
+        headers={
+            "Authorization": f"Bearer {token}",
+            "Accept": "application/vnd.github+json",
+            "X-GitHub-Api-Version": "2022-11-28",
+        },
+    )
+    opener = urllib.request.build_opener(_NoRedirect)
+    try:
+        return opener.open(req, timeout=timeout).read()
+    except urllib.error.HTTPError as e:
+        if e.code in (301, 302, 303, 307, 308):
+            return urllib.request.urlopen(e.headers["Location"], timeout=timeout).read()
+        raise
+
+
+def fetch_baseline():
+    """Latest unexpired BENCH_perf artifact produced by a main-branch
+    run, or (None, reason)."""
+    repo = os.environ.get("GITHUB_REPOSITORY")
+    token = os.environ.get("GH_TOKEN") or os.environ.get("GITHUB_TOKEN")
+    if not repo or not token:
+        return None, "no GITHUB_REPOSITORY / GITHUB_TOKEN in the environment"
+    # Every PR run uploads a same-named artifact, so a main-branch one
+    # can sit several pages deep — walk up to 5 pages (newest first).
+    for page in range(1, 6):
+        listing = json.load(
+            _api(
+                f"https://api.github.com/repos/{repo}/actions/artifacts"
+                f"?name=BENCH_perf&per_page=100&page={page}",
+                token,
+                30,
+            )
+        )
+        artifacts = listing.get("artifacts", [])
+        if not artifacts:
+            break
+        for art in artifacts:
+            run = art.get("workflow_run") or {}
+            if art.get("expired") or run.get("head_branch") != "main":
+                continue
+            blob = _download(art["archive_download_url"], token, 60)
+            with zipfile.ZipFile(io.BytesIO(blob)) as z:
+                for name in z.namelist():
+                    if name.endswith(".json"):
+                        return json.loads(z.read(name)), None
+    return None, "no unexpired BENCH_perf artifact from a main-branch run yet"
+
+
+def main():
+    with open(sys.argv[1]) as f:
+        current = json.load(f)
+
+    try:
+        baseline, why = fetch_baseline()
+    except Exception as e:  # API/network/zip failures are all non-fatal
+        baseline, why = None, f"baseline fetch failed: {e}"
+
+    cur = scenario_stats(current)
+    base = scenario_stats(baseline) if baseline else {}
+
+    print("## Perf trajectory (`BENCH_perf.json`)")
+    print()
+    print(
+        f"schema `{current.get('schema', '?')}` · "
+        f"{len(current.get('rows', []))} tracked workloads · "
+        f"{current.get('host_threads', '?')} host threads"
+    )
+    print()
+    print("| scenario | fast M instr/s | engine speedup | fast Δ vs main |")
+    print("|---|---:|---:|---:|")
+    for key, label in SCENARIOS:
+        if key not in cur:
+            continue
+        mips, speedup = cur[key]
+        if key in base and base[key][0] > 0:
+            pct = (mips - base[key][0]) / base[key][0] * 100.0
+            delta = f"{pct:+.1f}%"
+        else:
+            delta = "—"
+        print(f"| {label} | {mips:.2f} | {speedup:.2f}× | {delta} |")
+    print()
+    if baseline is None:
+        print(f"_no main baseline: {why}_")
+    else:
+        print(
+            "_deltas are informational (shared-runner noise applies); "
+            "the only blocking perf gate is the "
+            "`aggregate.engine_speedup` floor_"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,11 @@
 //!      `aggregate.engine_speedup` threshold keeps its composition;
 //!   5. an **FU-contention scenario**: representative kernels under the
 //!      bounded-unit `FuConfig::vortex()` pipeline (1 LSU port, 1 WCU),
-//!      reported separately as `fu_rows`.
+//!      reported separately as `fu_rows`;
+//!   6. an **operand-collector scenario**: representative kernels under
+//!      the bounded `OpcConfig::vortex()` front/back end (4 collectors,
+//!      1 read port per register bank, 1 result bus per FU kind) with
+//!      dual issue, reported separately as `opc_rows`.
 //!
 //! While measuring, the bench asserts the two engines return
 //! bit-identical `Metrics` — the equivalence invariant — and writes a
@@ -28,7 +32,7 @@ use vortex_warp::bench_harness::perf::{PerfReport, PerfRow};
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
 use vortex_warp::coordinator::{launch_batch, BatchJob};
 use vortex_warp::kernels;
-use vortex_warp::sim::{EngineMode, FuConfig, MemHierConfig, SimConfig};
+use vortex_warp::sim::{EngineMode, FuConfig, MemHierConfig, OpcConfig, SimConfig};
 
 fn best_of(iters: usize, mut f: impl FnMut() -> u64) -> (u128, u64) {
     let mut best_ns = u128::MAX;
@@ -191,6 +195,33 @@ fn main() {
         },
     );
 
+    // Operand-collector scenario (PR 5): bounded collectors, per-bank
+    // read ports and per-FU result buses under dual issue
+    // (OpcConfig::vortex). Operand-stall windows and bus-delayed
+    // writebacks must fast-forward like every other stall, and the
+    // equivalence invariant now covers stall_operand / stall_wb_port /
+    // per-bank occupancy too.
+    let opc_fast = {
+        let mut c = SimConfig::paper();
+        c.opc = OpcConfig::vortex();
+        c.fu.issue_width = 2;
+        c
+    };
+    run_scenario(
+        "operand-collector scenario (OpcConfig::vortex, issue-width 2)",
+        &opc_fast,
+        &["reduce", "reduce_tile"],
+        iters,
+        &mut report.opc_rows,
+        |name, m| {
+            assert!(m.stall_operand > 0, "{name}: scenario must serialize operand reads");
+            println!(
+                "  {name}: warm-run operand stalls = {} wb-port waits = {}",
+                m.stall_operand, m.stall_wb_port
+            );
+        },
+    );
+
     // Batched run: every (paper kernel x solution) job, repeated so
     // each host thread has work, through the scoped-thread batch
     // launcher (same composition as the tracked rows above).
@@ -237,6 +268,11 @@ fn main() {
         "FU-contention scenario: {:.2} M instr/s fast, {:.2}x engine speedup",
         report.fu_fast_mips(),
         report.fu_engine_speedup(),
+    );
+    println!(
+        "operand-collector scenario: {:.2} M instr/s fast, {:.2}x engine speedup",
+        report.opc_fast_mips(),
+        report.opc_engine_speedup(),
     );
 
     let out = std::env::var("BENCH_PERF_OUT").unwrap_or_else(|_| "BENCH_perf.json".into());

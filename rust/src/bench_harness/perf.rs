@@ -55,6 +55,11 @@ pub struct PerfReport {
     /// bounded-unit `FuConfig::vortex()` pipeline, both engines. Also
     /// kept separate from `rows` for the same reason.
     pub fu_rows: Vec<PerfRow>,
+    /// Operand-collector scenario (PR 5): representative kernels under
+    /// the bounded `OpcConfig::vortex()` collectors/read-ports/result
+    /// buses with dual issue, both engines. Also kept separate from
+    /// `rows` for the same reason.
+    pub opc_rows: Vec<PerfRow>,
     /// Wall time of one `launch_batch` over every (bench × solution)
     /// job with the fast engine.
     pub batch_wall_ns: u128,
@@ -114,6 +119,18 @@ impl PerfReport {
         scenario_engine_speedup(&self.fu_rows)
     }
 
+    /// Fast-engine throughput of the operand-collector scenario.
+    pub fn opc_fast_mips(&self) -> f64 {
+        scenario_fast_mips(&self.opc_rows)
+    }
+
+    /// Engine speedup on the operand-collector scenario (operand-stall
+    /// windows and bus-delayed writebacks must fast-forward like every
+    /// other stall).
+    pub fn opc_engine_speedup(&self) -> f64 {
+        scenario_engine_speedup(&self.opc_rows)
+    }
+
     fn totals(&self, ns_of: impl Fn(&PerfRow) -> u128) -> (u64, u128) {
         let instrs = self.rows.iter().map(|r| r.instrs).sum();
         let ns = self.rows.iter().map(ns_of).sum();
@@ -141,7 +158,7 @@ impl PerfReport {
 
     pub fn to_json(&self) -> String {
         let mut s = String::new();
-        s.push_str("{\n  \"schema\": \"vortex_warp.perf.v3\",\n");
+        s.push_str("{\n  \"schema\": \"vortex_warp.perf.v4\",\n");
         s.push_str(&format!("  \"host_threads\": {},\n", self.host_threads));
         s.push_str("  \"rows\": [\n");
         Self::rows_json(&self.rows, &mut s);
@@ -161,6 +178,14 @@ impl PerfReport {
             "  \"fu\": {{\"fast_mips\": {:.4}, \"engine_speedup\": {:.4}}},\n",
             self.fu_fast_mips(),
             self.fu_engine_speedup(),
+        ));
+        s.push_str("  \"opc_rows\": [\n");
+        Self::rows_json(&self.opc_rows, &mut s);
+        s.push_str("  ],\n");
+        s.push_str(&format!(
+            "  \"opc\": {{\"fast_mips\": {:.4}, \"engine_speedup\": {:.4}}},\n",
+            self.opc_fast_mips(),
+            self.opc_engine_speedup(),
         ));
         s.push_str(&format!(
             "  \"aggregate\": {{\"reference_mips\": {:.4}, \"fast_mips\": {:.4}, \
@@ -263,6 +288,13 @@ mod tests {
                 reference_ns: 1_500_000_000,
                 fast_ns: 500_000_000,
             }],
+            opc_rows: vec![PerfRow {
+                bench: "reduce_tile".into(),
+                solution: "HW".into(),
+                instrs: 1_000_000,
+                reference_ns: 800_000_000,
+                fast_ns: 200_000_000,
+            }],
             batch_wall_ns: 500_000_000,
             batch_instrs: 4_000_000,
             host_threads: 4,
@@ -298,9 +330,18 @@ mod tests {
     }
 
     #[test]
+    fn opc_scenario_aggregates() {
+        let r = report();
+        // 1M instrs / 0.2 s fast = 5 M instr/s; 0.8 s ref -> 4x.
+        assert!((r.opc_fast_mips() - 5.0).abs() < 1e-9);
+        assert!((r.opc_engine_speedup() - 4.0).abs() < 1e-9);
+        assert_eq!(PerfReport::default().opc_engine_speedup(), 0.0);
+    }
+
+    #[test]
     fn json_shape() {
         let j = report().to_json();
-        assert!(j.contains("\"schema\": \"vortex_warp.perf.v3\""));
+        assert!(j.contains("\"schema\": \"vortex_warp.perf.v4\""));
         assert!(j.contains("\"bench\": \"matmul\""));
         assert!(j.contains("\"aggregate\""));
         assert!(j.contains("\"memhier_rows\""));
@@ -308,6 +349,9 @@ mod tests {
         assert!(j.contains("\"memhier\": {\"fast_mips\": 4.0000, \"engine_speedup\": 2.0000}"));
         assert!(j.contains("\"fu_rows\""));
         assert!(j.contains("\"fu\": {\"fast_mips\": 6.0000, \"engine_speedup\": 3.0000}"));
+        assert!(j.contains("\"opc_rows\""));
+        assert!(j.contains("\"bench\": \"reduce_tile\""));
+        assert!(j.contains("\"opc\": {\"fast_mips\": 5.0000, \"engine_speedup\": 4.0000}"));
         assert!(j.contains("\"engine_speedup\": 2.0000"));
         // Balanced braces/brackets (cheap well-formedness check).
         assert_eq!(j.matches('{').count(), j.matches('}').count());

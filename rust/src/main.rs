@@ -23,10 +23,16 @@ fn usage() -> ! {
            tables [--table 1|2|3|4]     regenerate the paper's tables\n\
            run --bench <name> [--solution hw|sw] [--nt N] [--nw N]\n\
                [--cores N] [--memhier legacy|vortex] [--fu legacy|vortex]\n\
-               [--issue-width N] [--trace]\n\
+               [--issue-width N] [--opc legacy|vortex] [--collectors N]\n\
+               [--read-ports N] [--wb-ports N] [--trace]\n\
              --fu vortex bounds the functional units (2 ALU, 1 MUL/DIV,\n\
              1 LSU, 1 WCU; structural hazards show up as fu[struct=..]);\n\
-             --issue-width N (1..=8) sets the per-cycle issue ports\n\
+             --issue-width N (1..=8) sets the per-cycle issue ports;\n\
+             --opc vortex bounds operand collection and writeback (4\n\
+             collector units, 1 read port per register bank, 1 result\n\
+             bus per FU kind; contention shows up as opc[operand=..\n\
+             wbport=..]); --collectors/--read-ports/--wb-ports override\n\
+             the individual knobs (0 = unlimited)\n\
            fig5                         IPC of HW vs SW over all six benchmarks\n\
            area [--layout]              Table IV area overhead (+ Fig 6 layout)\n\
            validate [--artifacts DIR]   end-to-end check vs PJRT golden models\n\
@@ -76,6 +82,25 @@ fn config_from(args: &[String]) -> SimConfig {
     }
     if let Some(w) = flag_value(args, "--issue-width") {
         cfg.fu.issue_width = w.parse().expect("--issue-width");
+    }
+    if let Some(opc) = flag_value(args, "--opc") {
+        cfg.opc = match opc.as_str() {
+            "legacy" => vortex_warp::sim::OpcConfig::legacy(),
+            "vortex" => vortex_warp::sim::OpcConfig::vortex(),
+            other => {
+                eprintln!("--opc {other}: expected `legacy` or `vortex`");
+                std::process::exit(2);
+            }
+        };
+    }
+    if let Some(n) = flag_value(args, "--collectors") {
+        cfg.opc.collectors = n.parse().expect("--collectors");
+    }
+    if let Some(n) = flag_value(args, "--read-ports") {
+        cfg.opc.read_ports = n.parse().expect("--read-ports");
+    }
+    if let Some(n) = flag_value(args, "--wb-ports") {
+        cfg.opc.wb_ports = n.parse().expect("--wb-ports");
     }
     cfg.trace = has_flag(args, "--trace");
     cfg.validate().expect("invalid configuration");

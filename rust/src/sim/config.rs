@@ -225,6 +225,65 @@ impl Default for FuConfig {
     }
 }
 
+/// Operand-collector + result-bus configuration (`sim/opc`): collector
+/// units between issue and dispatch, register-file read ports per warp
+/// bank, and writeback ports per FU kind. A knob of `0` models the
+/// unlimited resource — no backpressure, the seed's timing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct OpcConfig {
+    /// Collector units staging issued instructions while their operands
+    /// are read. `0` = unlimited (free operand collection).
+    pub collectors: usize,
+    /// Register-file read ports per warp bank: `k` same-cycle reads to
+    /// one bank serialize over `ceil(k / read_ports)` cycles, charging
+    /// [`crate::sim::Metrics::stall_operand`]. `0` = unlimited.
+    pub read_ports: usize,
+    /// Writeback (result-bus) ports per FU kind: completions beyond
+    /// this many per cycle slip to later cycles, charging
+    /// [`crate::sim::Metrics::stall_wb_port`]. `0` = unlimited.
+    pub wb_ports: usize,
+}
+
+impl OpcConfig {
+    /// Legacy-equivalent default: unlimited collectors, read ports and
+    /// writeback ports — exactly the seed's free operand collection and
+    /// unbounded retirement, so the paper-evaluation numbers are
+    /// unchanged.
+    pub fn legacy() -> Self {
+        OpcConfig { collectors: 0, read_ports: 0, wb_ports: 0 }
+    }
+
+    /// Vortex-like bounded front/back end: 4 collector units, 1 read
+    /// port per register bank, 1 result bus per FU kind. Operand
+    /// serialization and writeback contention become visible
+    /// (`stall_operand` / `stall_wb_port`).
+    pub fn vortex() -> Self {
+        OpcConfig { collectors: 4, read_ports: 1, wb_ports: 1 }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.collectors > 64 {
+            return Err(format!("collectors={}: use 0 for unlimited, else <= 64", self.collectors));
+        }
+        if self.read_ports > 8 {
+            return Err(format!(
+                "read_ports={}: use 0 for unlimited, else <= 8 (instructions read <= 3 operands)",
+                self.read_ports
+            ));
+        }
+        if self.wb_ports > 8 {
+            return Err(format!("wb_ports={}: use 0 for unlimited, else <= 8", self.wb_ports));
+        }
+        Ok(())
+    }
+}
+
+impl Default for OpcConfig {
+    fn default() -> Self {
+        Self::legacy()
+    }
+}
+
 /// Simulation engine driving [`crate::sim::Gpu::run`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineMode {
@@ -275,6 +334,11 @@ pub struct SimConfig {
     /// (`sim/fu`). The default is the legacy-equivalent unlimited
     /// model; see [`FuConfig::vortex`] for discrete units.
     pub fu: FuConfig,
+    /// Operand collection + result-bus contention (`sim/opc`):
+    /// collector units, per-bank register read ports, per-FU writeback
+    /// ports. The default is the legacy-equivalent free model; see
+    /// [`OpcConfig::vortex`] for the bounded front/back end.
+    pub opc: OpcConfig,
     /// Memory hierarchy behind the L1 (MSHRs, shared L2, DRAM,
     /// scratchpad banks). The default is the legacy-equivalent flat
     /// model; see [`MemHierConfig::vortex`] for the full hierarchy.
@@ -303,6 +367,7 @@ impl SimConfig {
             lat: Latencies::default(),
             dcache: CacheConfig::default(),
             fu: FuConfig::legacy(),
+            opc: OpcConfig::legacy(),
             memhier: MemHierConfig::legacy(),
             sched: SchedPolicy::RoundRobin,
             engine: EngineMode::FastForward,
@@ -341,6 +406,7 @@ impl SimConfig {
             return Err("dcache sets and ways must be >= 1".into());
         }
         self.fu.validate()?;
+        self.opc.validate()?;
         self.memhier.validate(&self.dcache)?;
         Ok(())
     }
@@ -426,6 +492,41 @@ mod tests {
         let mut c = SimConfig::paper();
         c.fu.issue_width = 0;
         assert!(c.validate().is_err(), "SimConfig::validate covers the FU knobs");
+    }
+
+    #[test]
+    fn paper_defaults_to_legacy_opc_model() {
+        let c = SimConfig::paper();
+        assert_eq!(c.opc, OpcConfig::legacy(), "paper keeps free operand collection");
+        assert_eq!(c.opc.collectors, 0, "0 = unlimited");
+        assert_eq!(c.opc.wb_ports, 0);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn vortex_opc_config_validates() {
+        let mut c = SimConfig::paper();
+        c.opc = OpcConfig::vortex();
+        assert_eq!(c.opc, OpcConfig { collectors: 4, read_ports: 1, wb_ports: 1 });
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn opc_validation_rejects_oversized_knobs() {
+        let mut o = OpcConfig::legacy();
+        o.collectors = 65;
+        assert!(o.validate().is_err(), "collectors bounded (0 = unlimited)");
+        o.collectors = 64;
+        assert!(o.validate().is_ok());
+        let mut o = OpcConfig::legacy();
+        o.read_ports = 9;
+        assert!(o.validate().is_err());
+        let mut o = OpcConfig::legacy();
+        o.wb_ports = 9;
+        assert!(o.validate().is_err());
+        let mut c = SimConfig::paper();
+        c.opc.read_ports = 9;
+        assert!(c.validate().is_err(), "SimConfig::validate covers the OPC knobs");
     }
 
     #[test]

@@ -4,11 +4,14 @@
 //!
 //! Timing model (SimX-style): each cycle the scheduler picks up to
 //! `FuConfig::issue_width` ready warps whose next instructions have no
-//! scoreboard hazard *and* a free functional unit of the right kind
-//! (`sim/fu`); each instruction executes *functionally* at issue in
-//! its FU's dispatch module, its destination is marked pending, the
-//! unit is occupied for the instruction's initiation interval, and the
-//! writeback retires after the functional-unit latency. Control
+//! scoreboard hazard, can start operand collection (`sim/opc`: a free
+//! collector unit and idle register bank(s)) *and* find a free
+//! functional unit of the right kind (`sim/fu`); each instruction
+//! executes *functionally* at issue in its FU's dispatch module, its
+//! destination is marked pending, the unit is occupied for the
+//! instruction's initiation interval, and the writeback retires after
+//! the functional-unit latency (plus any serialized operand-read
+//! cycles and result-bus wait). Control
 //! instructions charge a pipeline-refill penalty to the issuing warp.
 //! Memory instructions consult the `sim/memhier` timing model. The
 //! paper's collectives execute in the modified warp-collective ALU
@@ -24,6 +27,7 @@ use super::map;
 use super::mem::{MemFault, Memory};
 use super::memhier::{CoreMem, SharedMem};
 use super::metrics::Metrics;
+use super::opc::Opc;
 use super::regfile::RegFile;
 use super::scheduler::Scheduler;
 use super::scoreboard::Scoreboard;
@@ -90,14 +94,19 @@ impl From<MemFault> for SimError {
 /// What the issue stage did in the most recent cycle — the class of
 /// counter a stalled cycle charged. The fast-forward engine replays
 /// this classification for every skipped cycle: between two events
-/// (writeback retirement, `ready_at` expiry, or a functional-unit
-/// release) the sets of scoreboard-, structurally- and
-/// pipeline-blocked warps cannot change, so every cycle in the window
-/// charges the same counter the one-cycle reference path would have.
+/// (writeback retirement, `ready_at` expiry, a functional-unit
+/// release, or a collector/register-bank release) the sets of
+/// scoreboard-, operand-, structurally- and pipeline-blocked warps
+/// cannot change, so every cycle in the window charges the same
+/// counter the one-cycle reference path would have.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum IssueOutcome {
     Issued,
     StallScoreboard,
+    /// Every candidate warp was blocked in operand collection
+    /// (`sim/opc`: no free collector unit, or a needed register bank
+    /// busy with serialized reads / a crossbar walk).
+    StallOperand,
     StallStructural,
     StallPipeline,
     StallBarrier,
@@ -127,6 +136,11 @@ pub struct Core {
     /// Functional-unit pools (`sim/fu`): per-kind `busy_until`
     /// occupancy, checked by the issue stage.
     pub(crate) fu: FuPool,
+    /// Operand collector + result bus (`sim/opc`): collector units,
+    /// per-bank read-port serialization and per-FU writeback ports,
+    /// checked by the issue stage between the scoreboard and the FU
+    /// pools. Inert under the legacy free default.
+    pub(crate) opc: Opc,
     inflight: WbQueue,
     /// Outcome of the most recent cycle (drives fast-forward skips).
     outcome: IssueOutcome,
@@ -155,15 +169,17 @@ impl Core {
     pub fn new(cfg: SimConfig, core_id: u32) -> Self {
         cfg.validate().expect("invalid SimConfig");
         let (nw, nt) = (cfg.nw, cfg.nt);
+        let rf = RegFile::new(nw, nt);
         Core {
             core_id,
             prog: Vec::new(),
             warps: (0..nw).map(|_| Warp::new(nt)).collect(),
-            rf: RegFile::new(nw, nt),
             sb: Scoreboard::new(nw),
             sched: Scheduler::new(cfg.sched, nw, nt),
             memsys: CoreMem::new(&cfg.dcache, &cfg.memhier),
             fu: FuPool::new(&cfg.fu),
+            opc: Opc::new(&cfg.opc, rf.banks()),
+            rf,
             inflight: WbQueue::with_capacity(2 * nw),
             outcome: IssueOutcome::Idle,
             barriers: BarrierTable::default(),
@@ -197,6 +213,7 @@ impl Core {
         self.sched = Scheduler::new(self.cfg.sched, nw, nt);
         self.memsys.reset();
         self.fu.reset();
+        self.opc.reset();
         self.inflight.clear();
         self.outcome = IssueOutcome::Idle;
         self.barriers = BarrierTable::default();
@@ -252,6 +269,7 @@ impl Core {
         let issue_width = self.cfg.fu.issue_width;
         let mut issued = 0usize;
         let mut saw_sb_stall = false;
+        let mut saw_operand_stall = false;
         let mut saw_struct_stall = false;
         let mut saw_pipe_stall = false;
         let mut any_active = false;
@@ -273,8 +291,20 @@ impl Core {
             }
             let pc = self.warps[w].pc;
             let instr = self.fetch(pc)?;
-            if !self.sb.can_issue(w, &instr.srcs(), instr.rd()) {
+            let srcs = instr.srcs();
+            if !self.sb.can_issue(w, &srcs, instr.rd()) {
                 saw_sb_stall = true;
+                continue;
+            }
+            // Operand collection (`sim/opc`): the instruction must get
+            // a collector unit and find its register bank(s) idle —
+            // merged-warp collectives read every member bank through
+            // the crossbar. Trivially true under the legacy free
+            // default.
+            let reads = srcs.iter().flatten().count();
+            let (obase, ospan) = self.operand_span(w, &instr);
+            if !self.opc.can_collect(obase, ospan, reads, now) {
+                saw_operand_stall = true;
                 continue;
             }
             let kind = FuKind::classify(&instr);
@@ -284,7 +314,7 @@ impl Core {
                 saw_struct_stall = true;
                 continue;
             }
-            self.execute(w, pc, instr, kind, mem, shared, now)?;
+            self.execute(w, pc, instr, kind, reads, obase, ospan, mem, shared, now)?;
             // Front-end turnaround: this warp is not fetchable again
             // until the instruction clears fetch/decode (control
             // instructions may have pushed it further out already).
@@ -298,6 +328,12 @@ impl Core {
         } else if saw_sb_stall {
             self.outcome = IssueOutcome::StallScoreboard;
             self.metrics.stall_scoreboard += 1;
+        } else if saw_operand_stall {
+            // Charged in pipeline-stage order, like the scoreboard-
+            // before-structural precedent: a warp blocked here cleared
+            // its hazards but could not start collecting operands.
+            self.outcome = IssueOutcome::StallOperand;
+            self.metrics.stall_operand += 1;
         } else if saw_struct_stall {
             self.outcome = IssueOutcome::StallStructural;
             self.metrics.stall_structural += 1;
@@ -330,11 +366,14 @@ impl Core {
 
     /// Next cycle at which this core's state can change: the earliest
     /// in-flight retirement, the earliest pipeline-penalty expiry of
-    /// an active warp, or the earliest functional-unit release
+    /// an active warp, the earliest functional-unit release
     /// (`sim/fu` occupancy — what a structurally-stalled warp waits
-    /// for). `None` when none exists (the core is idle, or the very
-    /// next cycle would raise a barrier deadlock — both cases where
-    /// the caller must fall back to single stepping).
+    /// for), or the earliest collector/register-bank release
+    /// (`sim/opc` — what an operand-stalled warp waits for; result-bus
+    /// waits are folded into `done_at` and need no candidate). `None`
+    /// when none exists (the core is idle, or the very next cycle
+    /// would raise a barrier deadlock — both cases where the caller
+    /// must fall back to single stepping).
     ///
     /// Barrier releases and warp spawns only happen as a side effect of
     /// an *issue*, so they cannot occur strictly between two events and
@@ -348,6 +387,9 @@ impl Core {
             }
         }
         if let Some(r) = self.fu.next_release(now) {
+            next = next.min(r);
+        }
+        if let Some(r) = self.opc.next_release(now) {
             next = next.min(r);
         }
         (next != u64::MAX).then_some(next)
@@ -370,6 +412,7 @@ impl Core {
         let skip = target - 1 - now;
         match self.outcome {
             IssueOutcome::StallScoreboard => self.metrics.stall_scoreboard += skip,
+            IssueOutcome::StallOperand => self.metrics.stall_operand += skip,
             IssueOutcome::StallStructural => self.metrics.stall_structural += skip,
             IssueOutcome::StallPipeline => self.metrics.stall_pipeline += skip,
             IssueOutcome::StallBarrier => self.metrics.stall_barrier += skip,
@@ -397,6 +440,9 @@ impl Core {
         pc: u32,
         instr: Instr,
         kind: FuKind,
+        reads: usize,
+        obase: usize,
+        ospan: usize,
         mem: &mut Memory,
         shared: &mut SharedMem,
         now: u64,
@@ -411,24 +457,38 @@ impl Core {
             ));
         }
 
+        // Operand collection (`sim/opc`): claim a collector unit and
+        // occupy the register bank(s) for the serialized reads; the
+        // cycles beyond the first read delay this instruction.
+        // `reads`/`obase`/`ospan` come from the issue stage's
+        // `can_collect` check, so the claim can never diverge from it.
+        // No-op under the legacy free default.
+        let extra = self.opc.collect(obase, ospan, reads, now, &mut self.metrics);
+
         let mut out = [0u32; 32];
         let ret = fu::dispatch(self, w, pc, instr, mem, shared, now, &mut out)?;
 
         // Functional-unit accounting + occupancy (no-op occupancy
-        // under unlimited pools).
+        // under unlimited pools). Operand serialization pushes the
+        // unit's release out with the rest of the instruction, and
+        // `fu_busy` charges the whole reserved window so utilization
+        // reconciles with the structural stalls the hold causes.
         self.metrics.fu_issued[kind as usize] += 1;
-        self.metrics.fu_busy[kind as usize] += ret.occ;
-        self.fu.occupy(kind, now, now + ret.occ);
+        self.metrics.fu_busy[kind as usize] += extra + ret.occ;
+        self.fu.occupy(kind, now, now + extra + ret.occ);
 
         // Retire bookkeeping. PC always advances (a warp parked at a
-        // barrier resumes at the instruction after the vx_bar).
+        // barrier resumes at the instruction after the vx_bar). The
+        // writeback waits for the serialized operand reads and then
+        // for a slot on its FU kind's result bus.
         self.metrics.instrs += 1;
         self.metrics.thread_instrs += lanes;
         self.warps[w].pc = ret.next_pc;
         if let Some(rd) = instr.rd() {
             self.sb.set_pending(w, rd);
+            let done = self.opc.wb_slot(kind, now + extra + ret.lat, &mut self.metrics);
             self.inflight.push(
-                now + ret.lat,
+                done,
                 InFlight {
                     warp: w as u32,
                     rd,
@@ -439,6 +499,20 @@ impl Core {
             );
         }
         Ok(())
+    }
+
+    /// Register banks an instruction's operand collection touches:
+    /// `(base, span)`. Operands come from the issuing warp's own bank,
+    /// except for collectives while the tile table spans several
+    /// hardware warps (`vx_tile` merge): those gather every member
+    /// warp's operands through the crossbar, so the whole group's
+    /// banks participate — the same `fu::wcu::group_span` geometry the
+    /// execution walk uses, so the two cannot drift apart.
+    fn operand_span(&self, w: usize, instr: &Instr) -> (usize, usize) {
+        if matches!(instr, Instr::Vote { .. } | Instr::Shfl { .. }) {
+            return fu::wcu::group_span(self.sched.tile.size, self.cfg.nt, self.cfg.nw, w);
+        }
+        (w, 1)
     }
 
     pub(crate) fn require_warp_hw(&self, pc: u32, what: &str) -> Result<(), SimError> {

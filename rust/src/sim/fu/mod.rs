@@ -42,6 +42,16 @@
 //! folded into `Core::next_event`, so the event-driven engine skips
 //! structural-stall windows and stays bit-identical to the reference
 //! engine (`tests/engine_equivalence.rs` pins this across FU configs).
+//!
+//! ## Upstream/downstream stages (PR 5)
+//!
+//! Dispatch is bracketed by `sim/opc`: before an instruction reaches
+//! its unit it must clear operand collection (a free collector and
+//! idle register bank(s) — serialized reads extend both the
+//! instruction's latency and the unit's occupancy window), and a
+//! result with a destination register must reserve a slot on its
+//! kind's bounded result bus before it can write back. Both are inert
+//! under the legacy `OpcConfig`.
 
 pub mod alu;
 pub mod ctrl;

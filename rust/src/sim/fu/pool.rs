@@ -53,6 +53,9 @@ impl FuPool {
     /// Occupy one free unit of `kind` until cycle `until` (exclusive:
     /// the unit accepts again at `until`). No-op for unlimited kinds.
     /// Callers must have checked [`FuPool::available`] this cycle.
+    /// `until` may include cycles the instruction spent serializing
+    /// operand reads upstream (`sim/opc`): the unit is claimed at
+    /// issue and held through the whole issue-to-release window.
     pub fn occupy(&mut self, kind: FuKind, now: u64, until: u64) {
         let pool = &mut self.units[kind as usize];
         if pool.is_empty() {

@@ -83,6 +83,23 @@ pub(crate) fn execute(
 /// handed (same length as `vals`) — directly into `out` on the
 /// sub-warp path, through the per-core scratch buffers on the
 /// merged path — so the hot path never allocates.
+/// Register banks a collective on warp `w` spans under tile size
+/// `tile_size`: `(group_base, span)` — `span` consecutive warps
+/// aligned on `span` when the tile merges several hardware warps,
+/// `(w, 1)` when it fits inside one. Shared by the execution walk
+/// below and the operand collector's bank model
+/// (`Core::operand_span`), so the two can never disagree about which
+/// banks a merged collective touches.
+pub(crate) fn group_span(tile_size: u32, nt: usize, nw: usize, w: usize) -> (usize, usize) {
+    let seg = (tile_size as usize).min(nt * nw);
+    if seg > nt {
+        let span = (seg / nt).max(1).min(nw);
+        ((w / span) * span, span)
+    } else {
+        (w, 1)
+    }
+}
+
 fn collective(
     core: &mut Core,
     w: usize,
@@ -109,8 +126,7 @@ fn collective(
         // Merged warps: group = `span` consecutive warps aligned on
         // `span`, this warp contributes its lanes and reads the rest
         // through the crossbar.
-        let span = (seg / nt).max(1).min(core.cfg.nw);
-        let group_base = (w / span) * span;
+        let (group_base, span) = group_span(core.sched.tile.size, nt, core.cfg.nw, w);
         let total = span * nt;
         // Move the scratch buffers out of the core for the duration
         // of the gather (read_cross needs `&mut core.rf`), then put
@@ -151,4 +167,24 @@ fn collective(
         };
     }
     lat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_span_matches_the_tile_geometry() {
+        // nt=8, nw=4: a 32-thread tile merges all four warps...
+        assert_eq!(group_span(32, 8, 4, 0), (0, 4));
+        assert_eq!(group_span(32, 8, 4, 3), (0, 4));
+        // ...a 16-thread tile pairs warps, aligned on the pair.
+        assert_eq!(group_span(16, 8, 4, 1), (0, 2));
+        assert_eq!(group_span(16, 8, 4, 2), (2, 2));
+        // Sub-warp and whole-warp tiles stay in the issuing warp's bank.
+        assert_eq!(group_span(8, 8, 4, 2), (2, 1));
+        assert_eq!(group_span(4, 8, 4, 1), (1, 1));
+        // Oversized sizes clamp to the hardware thread count.
+        assert_eq!(group_span(64, 8, 4, 0), (0, 4));
+    }
 }

@@ -33,6 +33,17 @@ pub struct Metrics {
     /// instruction's FU kind was occupied (`sim/fu` structural
     /// hazard). Always zero under the unlimited legacy FU config.
     pub stall_structural: u64,
+    /// Cycles lost to operand collection (`sim/opc`): issue cycles
+    /// where every candidate warp was blocked on a busy collector unit
+    /// or register bank, plus the per-instruction read cycles beyond
+    /// the first when same-cycle reads to one bank serialize through
+    /// its bounded ports. Always zero under the unlimited legacy OPC
+    /// config.
+    pub stall_operand: u64,
+    /// Cycles completed results waited for a free per-FU-kind
+    /// writeback port (`sim/opc` result-bus contention). Always zero
+    /// under the unlimited legacy OPC config.
+    pub stall_wb_port: u64,
     pub idle_cycles: u64,
 
     // Functional units (`sim/fu`), indexed by `FuKind as usize`
@@ -41,7 +52,8 @@ pub struct Metrics {
     pub fu_issued: [u64; FuKind::COUNT],
     /// Unit-occupancy cycles reserved at issue per FU kind (1 per
     /// pipelined op; the full latency for the iterative divider, LSU
-    /// ports and collectives).
+    /// ports and collectives; plus any serialized operand-read cycles
+    /// under a bounded `sim/opc` config, which extend the hold).
     pub fu_busy: [u64; FuKind::COUNT],
 
     // Memory system (L1).
@@ -74,6 +86,13 @@ pub struct Metrics {
 
     // Crossbar (merged-warp collectives).
     pub crossbar_hops: u64,
+
+    // Operand collector (`sim/opc`; all zero under the legacy free
+    // model).
+    /// Per-register-bank read-occupancy cycles, indexed by warp bank
+    /// (only the first `nw` entries are live — `nw <= 32`). Merged
+    /// collectives charge every member bank for the crossbar walk.
+    pub opc_bank_busy: [u64; 32],
 }
 
 impl Metrics {
@@ -144,6 +163,8 @@ impl Metrics {
             stall_barrier,
             stall_pipeline,
             stall_structural,
+            stall_operand,
+            stall_wb_port,
             idle_cycles,
             fu_issued,
             fu_busy,
@@ -162,6 +183,7 @@ impl Metrics {
             dram_busy_cycles,
             dram_wait_cycles,
             crossbar_hops,
+            opc_bank_busy,
         } = o;
         self.cycles = self.cycles.max(cycles);
         self.instrs += instrs;
@@ -177,6 +199,8 @@ impl Metrics {
         self.stall_barrier += stall_barrier;
         self.stall_pipeline += stall_pipeline;
         self.stall_structural += stall_structural;
+        self.stall_operand += stall_operand;
+        self.stall_wb_port += stall_wb_port;
         self.idle_cycles += idle_cycles;
         for k in 0..FuKind::COUNT {
             self.fu_issued[k] += fu_issued[k];
@@ -197,6 +221,9 @@ impl Metrics {
         self.dram_busy_cycles += dram_busy_cycles;
         self.dram_wait_cycles += dram_wait_cycles;
         self.crossbar_hops += crossbar_hops;
+        for (mine, theirs) in self.opc_bank_busy.iter_mut().zip(opc_bank_busy) {
+            *mine += theirs;
+        }
     }
 
     /// One-line human summary. The memory-hierarchy tail appears only
@@ -226,6 +253,14 @@ impl Metrics {
                 self.fu_issued[FuKind::MulDiv as usize],
                 self.fu_issued[FuKind::Lsu as usize],
                 self.fu_issued[FuKind::Wcu as usize],
+            ));
+        }
+        if self.stall_operand > 0 || self.stall_wb_port > 0 {
+            s.push_str(&format!(
+                " opc[operand={} wbport={} bankbusy={}]",
+                self.stall_operand,
+                self.stall_wb_port,
+                self.opc_bank_busy.iter().sum::<u64>(),
             ));
         }
         if self.l2_hits + self.l2_misses > 0 {
@@ -264,6 +299,36 @@ mod tests {
         assert!(m.summary().contains("ipc=0.750"));
         assert!(!m.summary().contains("L2hit"), "legacy runs keep the seed summary");
         assert!(!m.summary().contains("fu["), "no FU tail without structural stalls");
+        assert!(!m.summary().contains("opc["), "no OPC tail without operand/bus stalls");
+    }
+
+    #[test]
+    fn operand_and_wb_port_stalls_surface_in_summary() {
+        let mut m =
+            Metrics { cycles: 10, stall_operand: 4, stall_wb_port: 2, ..Default::default() };
+        m.opc_bank_busy[0] = 5;
+        m.opc_bank_busy[3] = 2;
+        let s = m.summary();
+        assert!(s.contains("opc[operand=4 wbport=2 bankbusy=7]"), "{s}");
+        // Either counter alone is enough to show the tail.
+        let only_wb = Metrics { cycles: 10, stall_wb_port: 1, ..Default::default() };
+        assert!(only_wb.summary().contains("opc[operand=0 wbport=1"), "{}", only_wb.summary());
+    }
+
+    #[test]
+    fn merge_adds_opc_counters_elementwise() {
+        let mut a = Metrics { stall_operand: 2, stall_wb_port: 1, ..Default::default() };
+        a.opc_bank_busy[0] = 10;
+        a.opc_bank_busy[31] = 1;
+        let mut b = Metrics { stall_operand: 5, stall_wb_port: 7, ..Default::default() };
+        b.opc_bank_busy[0] = 3;
+        b.opc_bank_busy[2] = 4;
+        a.merge(&b);
+        assert_eq!(a.stall_operand, 7);
+        assert_eq!(a.stall_wb_port, 8);
+        assert_eq!(a.opc_bank_busy[0], 13);
+        assert_eq!(a.opc_bank_busy[2], 4);
+        assert_eq!(a.opc_bank_busy[31], 1, "every bank slot aggregates");
     }
 
     #[test]

@@ -5,8 +5,10 @@
 //! file (plus the paper's operand **crossbar** for merged warps),
 //! discrete ALU / MUL-DIV / LSU / warp-collective functional units
 //! with configurable latencies, per-kind unit pools and issue width
-//! (see [`fu`]; the default models the seed's unlimited units), a
-//! memory hierarchy over a flat global
+//! (see [`fu`]; the default models the seed's unlimited units), an
+//! operand-collector stage with per-bank read ports and a per-FU
+//! result bus (see [`opc`]; the default models the seed's free
+//! operand collection), a memory hierarchy over a flat global
 //! memory (per-core L1D + MSHRs behind a banked shared L2 and a
 //! bandwidth-bounded DRAM stage — see [`memhier`]; the default config
 //! keeps the seed's flat L1-only timing), a per-core shared-memory
@@ -25,6 +27,7 @@ pub mod fu;
 pub mod mem;
 pub mod memhier;
 pub mod metrics;
+pub mod opc;
 pub mod regfile;
 pub mod scheduler;
 pub mod scoreboard;
@@ -38,11 +41,12 @@ pub mod exec {
 }
 
 pub use self::core::{Core, SimError};
-pub use config::{EngineMode, FuConfig, Latencies, MemHierConfig, SimConfig};
+pub use config::{EngineMode, FuConfig, Latencies, MemHierConfig, OpcConfig, SimConfig};
 pub use fu::{FuKind, FuPool};
 pub use mem::{DCache, Memory};
 pub use memhier::SharedMem;
 pub use metrics::Metrics;
+pub use opc::Opc;
 pub use trace::TraceBuf;
 pub use warp::Warp;
 

@@ -1,0 +1,117 @@
+//! Per-FU-kind result-bus (writeback-port) arbitration.
+//!
+//! The seed retired every completed instruction the cycle its latency
+//! expired, as if each functional unit had an unbounded writeback path
+//! into the register file. Real Vortex gives each unit kind a bounded
+//! number of writeback ports: when more results complete than ports
+//! exist, the extras wait. This module models that as an **in-order
+//! bus reservation** made at issue time: each port keeps the absolute
+//! cycle of its latest reservation (its *frontier*), and a new result
+//! nominally completing at cycle `done` takes the least-loaded port —
+//! at `done` if that port's frontier is earlier, else one cycle after
+//! the frontier. A later-issued result never overtakes an earlier
+//! reservation on the same port, which is how an in-order response
+//! path (e.g. one LSU port draining a cache miss) also delays the
+//! fast hits queued behind it.
+//!
+//! Because the slot is computed at issue and the delayed completion
+//! rides the existing `done_at` writeback min-heap, no new event source
+//! is needed: the fast-forward engine already jumps to writeback
+//! retirements, and both engines reserve in identical issue order, so
+//! `Metrics` stay bit-identical. An empty port list (the
+//! legacy-equivalent default, `wb_ports == 0`) models unlimited ports:
+//! `reserve` returns `done` unchanged and keeps no state.
+
+use crate::sim::fu::FuKind;
+
+/// Writeback ports per [`FuKind`] (empty per-kind list = unlimited).
+pub struct ResultBus {
+    /// Reservation frontier per port, indexed by `FuKind as usize`.
+    ports: [Vec<u64>; FuKind::COUNT],
+}
+
+impl ResultBus {
+    /// `ports_per_kind == 0` models unlimited writeback ports.
+    pub fn new(ports_per_kind: usize) -> Self {
+        ResultBus { ports: std::array::from_fn(|_| vec![0; ports_per_kind]) }
+    }
+
+    /// Clear all reservations (kernel-launch reset).
+    pub fn reset(&mut self) {
+        for kind in &mut self.ports {
+            for p in kind.iter_mut() {
+                *p = 0;
+            }
+        }
+    }
+
+    /// Reserve a writeback slot for a result of `kind` nominally
+    /// completing at cycle `done`. Returns the actual completion cycle
+    /// (`>= done`); the difference is the result-bus wait the caller
+    /// charges to `Metrics::stall_wb_port`.
+    pub fn reserve(&mut self, kind: FuKind, done: u64) -> u64 {
+        let ports = &mut self.ports[kind as usize];
+        if ports.is_empty() {
+            return done;
+        }
+        // Least-loaded port: the earliest frontier (first on ties, so
+        // arbitration is deterministic and engine-independent).
+        let p = ports.iter_mut().min_by_key(|f| **f).expect("bounded bus has ports");
+        let slot = if *p < done { done } else { *p + 1 };
+        *p = slot;
+        slot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_bus_never_delays() {
+        let mut b = ResultBus::new(0);
+        assert_eq!(b.reserve(FuKind::Alu, 10), 10);
+        assert_eq!(b.reserve(FuKind::Alu, 10), 10, "no state, no contention");
+    }
+
+    #[test]
+    fn same_cycle_completions_serialize_on_one_port() {
+        let mut b = ResultBus::new(1);
+        assert_eq!(b.reserve(FuKind::Alu, 10), 10);
+        assert_eq!(b.reserve(FuKind::Alu, 10), 11, "second result slips a cycle");
+        assert_eq!(b.reserve(FuKind::Alu, 10), 12);
+        assert_eq!(b.reserve(FuKind::Alu, 20), 20, "a later gap is free again");
+    }
+
+    #[test]
+    fn kinds_have_independent_buses() {
+        let mut b = ResultBus::new(1);
+        assert_eq!(b.reserve(FuKind::Alu, 10), 10);
+        assert_eq!(b.reserve(FuKind::Lsu, 10), 10, "LSU bus unaffected by the ALU one");
+    }
+
+    #[test]
+    fn in_order_bus_delays_fast_results_behind_slow_ones() {
+        // A cache miss reserves cycle 60; a later-issued hit nominally
+        // done at 20 queues behind it — the in-order response path.
+        let mut b = ResultBus::new(1);
+        assert_eq!(b.reserve(FuKind::Lsu, 60), 60);
+        assert_eq!(b.reserve(FuKind::Lsu, 20), 61);
+    }
+
+    #[test]
+    fn two_ports_drain_two_per_cycle() {
+        let mut b = ResultBus::new(2);
+        assert_eq!(b.reserve(FuKind::Alu, 10), 10);
+        assert_eq!(b.reserve(FuKind::Alu, 10), 10, "second port takes the overflow");
+        assert_eq!(b.reserve(FuKind::Alu, 10), 11, "third result waits");
+    }
+
+    #[test]
+    fn reset_clears_frontiers() {
+        let mut b = ResultBus::new(1);
+        b.reserve(FuKind::Alu, 50);
+        b.reset();
+        assert_eq!(b.reserve(FuKind::Alu, 10), 10);
+    }
+}

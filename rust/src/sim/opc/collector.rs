@@ -1,0 +1,114 @@
+//! Collector-unit pool with absolute-cycle occupancy.
+//!
+//! Every issued instruction stages through one collector unit while its
+//! operands are read from the banked register file. A collector is held
+//! from issue until the last operand read completes (at least one
+//! cycle; longer when reads serialize through the bank ports or a
+//! merged-warp collective walks the crossbar). The pool has the same
+//! shape as `sim/fu`'s `FuPool`: a small vector of `busy_until`
+//! timestamps, one per unit, where an **empty vector models unlimited
+//! collectors** — no state, no backpressure, the legacy-equivalent
+//! free-operand-collection default.
+//!
+//! State mutates only at issue and is all absolute-cycle, so the
+//! fast-forward engine folds [`CollectorPool::next_release`] into the
+//! event set and skips operand-stall windows soundly.
+
+/// Collector units of one core (empty = unlimited).
+pub struct CollectorPool {
+    /// `busy_until` per collector; a unit accepts a new instruction at
+    /// cycle `now` when `busy_until <= now`.
+    units: Vec<u64>,
+}
+
+impl CollectorPool {
+    /// `count == 0` models unlimited collectors.
+    pub fn new(count: usize) -> Self {
+        CollectorPool { units: vec![0; count] }
+    }
+
+    /// Release every collector (kernel-launch reset).
+    pub fn reset(&mut self) {
+        for u in &mut self.units {
+            *u = 0;
+        }
+    }
+
+    /// True when a collector can accept an instruction at cycle `now`.
+    #[inline]
+    pub fn available(&self, now: u64) -> bool {
+        self.units.is_empty() || self.units.iter().any(|&u| u <= now)
+    }
+
+    /// Claim one free collector until cycle `until` (exclusive: it
+    /// accepts again at `until`). No-op under unlimited collectors.
+    /// Callers must have checked [`CollectorPool::available`] this
+    /// cycle.
+    pub fn claim(&mut self, now: u64, until: u64) {
+        if self.units.is_empty() {
+            return;
+        }
+        match self.units.iter_mut().find(|u| **u <= now) {
+            Some(u) => *u = until,
+            None => debug_assert!(false, "collector claim without a free unit"),
+        }
+    }
+
+    /// Earliest cycle strictly after `now` at which a held collector
+    /// frees — the event an operand-stalled warp waits for.
+    pub fn next_release(&self, now: u64) -> Option<u64> {
+        let mut next = u64::MAX;
+        for &u in &self.units {
+            if u > now && u < next {
+                next = u;
+            }
+        }
+        (next != u64::MAX).then_some(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_pool_is_always_available_and_eventless() {
+        let mut p = CollectorPool::new(0);
+        assert!(p.available(0));
+        p.claim(0, 1_000); // no-op
+        assert!(p.available(0));
+        assert_eq!(p.next_release(0), None);
+    }
+
+    #[test]
+    fn bounded_collector_blocks_until_release() {
+        let mut p = CollectorPool::new(1);
+        assert!(p.available(5));
+        p.claim(5, 7);
+        assert!(!p.available(5));
+        assert!(!p.available(6));
+        assert!(p.available(7), "release cycle accepts again");
+        assert_eq!(p.next_release(5), Some(7));
+        assert_eq!(p.next_release(7), None, "past releases are not events");
+    }
+
+    #[test]
+    fn units_fill_independently() {
+        let mut p = CollectorPool::new(2);
+        p.claim(3, 5);
+        assert!(p.available(3), "second collector still free");
+        p.claim(3, 9);
+        assert!(!p.available(3));
+        assert_eq!(p.next_release(3), Some(5), "earliest release is the event");
+        assert!(p.available(5));
+    }
+
+    #[test]
+    fn reset_frees_everything() {
+        let mut p = CollectorPool::new(2);
+        p.claim(0, 100);
+        p.reset();
+        assert!(p.available(0));
+        assert_eq!(p.next_release(0), None);
+    }
+}

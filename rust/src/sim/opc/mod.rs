@@ -1,0 +1,277 @@
+//! `sim/opc` — operand collection and result-bus contention (PR 5).
+//!
+//! PR 3 gave the issue stage ports (`FuConfig::issue_width`), but
+//! operand collection stayed free: a dual-issue core could read any
+//! number of register operands per cycle and retire any number of
+//! results, so width > 1 overstated the hardware path's advantage.
+//! This module adds the two bounded structures that make the claim
+//! honest, both sitting on the existing per-warp-bank [`RegFile`]:
+//!
+//! * **Collector units** ([`collector`]): every issued instruction
+//!   stages through one collector while its operands are read. Warp
+//!   `w`'s operands come only from bank `w` (selected through the
+//!   multiplexer §III replaces); with `read_ports` ports per bank,
+//!   `k` same-cycle reads to one bank serialize over
+//!   `ceil(k / read_ports)` cycles. The serialized cycles beyond the
+//!   first are charged to [`Metrics::stall_operand`] and added to the
+//!   instruction's latency; the bank's occupancy lands in the per-bank
+//!   [`Metrics::opc_bank_busy`] counters. A merged-warp collective
+//!   (`vx_tile` group spanning several hardware warps) gathers foreign
+//!   operands through the register-bank **crossbar** (§III), holding
+//!   *every member bank* for the read plus one cycle per crossbar hop
+//!   — which is exactly how the paper's modified execute stage loads
+//!   the register file, and why heavy merged collectives back-pressure
+//!   the other warps' operand reads. When no collector is free or a
+//!   needed bank is busy, the warp cannot issue; a cycle in which only
+//!   such warps were ready charges `stall_operand` as an issue-stall.
+//!
+//! * **Result bus** ([`bus`]): each [`FuKind`] has a bounded number of
+//!   writeback ports. Completing results reserve a port slot at issue
+//!   (in order); overflow slips to later cycles and the wait is
+//!   charged to [`Metrics::stall_wb_port`].
+//!
+//! ## Legacy equivalence and fast-forward compatibility
+//!
+//! [`OpcConfig::legacy`](crate::sim::config::OpcConfig::legacy) (the
+//! default) sets every knob to 0 = unlimited: no state is allocated,
+//! no check can fail, no cycle is added — timing is byte-identical to
+//! the seed's free operand collection. All bounded state is
+//! absolute-cycle (`busy_until` per collector/bank, reservation
+//! frontiers per bus port) and mutates only at issue, mirroring
+//! `sim/fu` and `sim/memhier`: collector/bank releases fold into
+//! [`Core::next_event`](crate::sim::Core::next_event) so the
+//! fast-forward engine skips operand-stall windows and stays
+//! bit-identical to the reference engine, while bus-delayed
+//! completions ride the existing `done_at` writeback min-heap
+//! (`sim/wb`) and need no event source of their own
+//! (`tests/engine_equivalence.rs` and `tests/opc.rs` pin both).
+//!
+//! [`RegFile`]: crate::sim::regfile::RegFile
+//! [`Metrics::stall_operand`]: crate::sim::Metrics::stall_operand
+//! [`Metrics::stall_wb_port`]: crate::sim::Metrics::stall_wb_port
+//! [`Metrics::opc_bank_busy`]: crate::sim::Metrics::opc_bank_busy
+
+pub mod bus;
+pub mod collector;
+
+pub use bus::ResultBus;
+pub use collector::CollectorPool;
+
+use crate::sim::config::OpcConfig;
+use crate::sim::fu::FuKind;
+use crate::sim::metrics::Metrics;
+
+/// Operand-collector + result-bus state of one core.
+pub struct Opc {
+    pool: CollectorPool,
+    /// Register-file read ports per warp bank (0 = unlimited).
+    read_ports: usize,
+    /// `busy_until` per register bank (bank `w` = warp `w`'s bank);
+    /// empty when reads are unlimited.
+    banks: Vec<u64>,
+    bus: ResultBus,
+}
+
+impl Opc {
+    /// `banks` is the number of register banks — one per hardware warp
+    /// ([`RegFile::banks`](crate::sim::regfile::RegFile::banks)).
+    pub fn new(cfg: &OpcConfig, banks: usize) -> Self {
+        Opc {
+            pool: CollectorPool::new(cfg.collectors),
+            read_ports: cfg.read_ports,
+            banks: if cfg.read_ports == 0 { Vec::new() } else { vec![0; banks] },
+            bus: ResultBus::new(cfg.wb_ports),
+        }
+    }
+
+    /// Release everything (kernel-launch reset).
+    pub fn reset(&mut self) {
+        self.pool.reset();
+        for b in &mut self.banks {
+            *b = 0;
+        }
+        self.bus.reset();
+    }
+
+    /// True when an instruction reading `reads` operands from banks
+    /// `base..base + span` can start collecting at cycle `now`: a
+    /// collector unit is free and every needed bank is idle. `span > 1`
+    /// only for merged-warp collectives (the crossbar gather).
+    #[inline]
+    pub fn can_collect(&self, base: usize, span: usize, reads: usize, now: u64) -> bool {
+        if !self.pool.available(now) {
+            return false;
+        }
+        if reads > 0 && !self.banks.is_empty() {
+            // Slice strictly (like `collect`'s claim below): a span
+            // outside the bank array is a geometry bug and must fail
+            // loudly here, not approve the issue and crash at claim.
+            for &b in &self.banks[base..base + span] {
+                if b > now {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Run operand collection for one issued instruction: claim a
+    /// collector and occupy banks `base..base + span` for the
+    /// serialized read (`ceil(reads / read_ports)` cycles) plus one
+    /// crossbar hop per extra member bank. Returns the extra cycles
+    /// (beyond the free-collection baseline) to add to the
+    /// instruction's latency; the same amount is charged to
+    /// [`Metrics::stall_operand`]. Callers must have checked
+    /// [`Opc::can_collect`] this cycle.
+    pub fn collect(
+        &mut self,
+        base: usize,
+        span: usize,
+        reads: usize,
+        now: u64,
+        metrics: &mut Metrics,
+    ) -> u64 {
+        let serial = if self.read_ports == 0 || reads == 0 {
+            0
+        } else {
+            reads.div_ceil(self.read_ports) as u64
+        };
+        let hops = (span - 1) as u64;
+        self.pool.claim(now, now + (serial + hops).max(1));
+        if serial > 0 {
+            let hold = serial + hops;
+            for b in base..base + span {
+                self.banks[b] = now + hold;
+                metrics.opc_bank_busy[b] += hold;
+            }
+            // The first read cycle is the seed's free collection; the
+            // serialized remainder is the new, visible cost.
+            metrics.stall_operand += serial - 1;
+        }
+        serial.saturating_sub(1)
+    }
+
+    /// Reserve a writeback slot on `kind`'s result bus for a result
+    /// nominally done at `done`; the wait (if any) is charged to
+    /// [`Metrics::stall_wb_port`]. Returns the actual completion cycle.
+    #[inline]
+    pub fn wb_slot(&mut self, kind: FuKind, done: u64, metrics: &mut Metrics) -> u64 {
+        let slot = self.bus.reserve(kind, done);
+        metrics.stall_wb_port += slot - done;
+        slot
+    }
+
+    /// Earliest cycle strictly after `now` at which a collector or a
+    /// register bank frees — the events an operand-stalled warp waits
+    /// for (bus waits ride the writeback heap instead).
+    pub fn next_release(&self, now: u64) -> Option<u64> {
+        let mut next = self.pool.next_release(now).unwrap_or(u64::MAX);
+        for &b in &self.banks {
+            if b > now && b < next {
+                next = b;
+            }
+        }
+        (next != u64::MAX).then_some(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opc(collectors: usize, read_ports: usize, wb_ports: usize) -> Opc {
+        Opc::new(&OpcConfig { collectors, read_ports, wb_ports }, 4)
+    }
+
+    #[test]
+    fn legacy_config_keeps_no_state_and_charges_nothing() {
+        let mut o = opc(0, 0, 0);
+        let mut m = Metrics::default();
+        assert!(o.can_collect(0, 1, 2, 5));
+        assert_eq!(o.collect(0, 1, 2, 5, &mut m), 0, "free collection");
+        assert!(o.can_collect(0, 1, 2, 5), "still free: nothing was claimed");
+        assert_eq!(o.wb_slot(FuKind::Alu, 9, &mut m), 9);
+        assert_eq!(o.next_release(0), None);
+        assert_eq!(m.stall_operand, 0);
+        assert_eq!(m.stall_wb_port, 0);
+        assert!(m.opc_bank_busy.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn reads_serialize_through_one_port() {
+        let mut o = opc(0, 1, 0);
+        let mut m = Metrics::default();
+        // 2 reads / 1 port -> 2 cycles: 1 extra, bank 0 held till 12.
+        assert_eq!(o.collect(0, 1, 2, 10, &mut m), 1);
+        assert_eq!(m.stall_operand, 1);
+        assert_eq!(m.opc_bank_busy[0], 2);
+        assert!(!o.can_collect(0, 1, 1, 11), "bank 0 still busy");
+        assert!(o.can_collect(1, 1, 1, 11), "bank 1 untouched");
+        assert!(o.can_collect(0, 1, 1, 12), "bank frees at its release cycle");
+        assert_eq!(o.next_release(10), Some(12));
+    }
+
+    #[test]
+    fn two_ports_read_two_operands_in_one_cycle() {
+        let mut o = opc(0, 2, 0);
+        let mut m = Metrics::default();
+        assert_eq!(o.collect(0, 1, 2, 10, &mut m), 0, "2 reads / 2 ports: no extra");
+        assert_eq!(m.stall_operand, 0);
+        assert_eq!(m.opc_bank_busy[0], 1, "bank held for the single read cycle");
+    }
+
+    #[test]
+    fn zero_read_instructions_skip_the_banks() {
+        let mut o = opc(1, 1, 0);
+        let mut m = Metrics::default();
+        assert_eq!(o.collect(0, 1, 0, 10, &mut m), 0);
+        assert_eq!(m.opc_bank_busy[0], 0, "no reads, no bank occupancy");
+        assert!(!o.pool.available(10), "but the collector is still staged through");
+        assert!(o.pool.available(11), "held one cycle");
+    }
+
+    #[test]
+    fn merged_collective_holds_every_member_bank_for_the_crossbar_walk() {
+        let mut o = opc(0, 1, 0);
+        let mut m = Metrics::default();
+        // 4-warp merged group, 2 reads: serial 2 + 3 hops = 5-cycle
+        // hold on banks 0..4.
+        assert_eq!(o.collect(0, 4, 2, 10, &mut m), 1, "extra latency is the serial part");
+        for b in 0..4 {
+            assert_eq!(m.opc_bank_busy[b], 5);
+            assert!(!o.can_collect(b, 1, 1, 14), "bank {b} held through the walk");
+        }
+        assert!(o.can_collect(0, 1, 1, 15));
+        assert_eq!(o.next_release(10), Some(15));
+    }
+
+    #[test]
+    fn collector_exhaustion_blocks_and_releases() {
+        let mut o = opc(1, 1, 0);
+        let mut m = Metrics::default();
+        o.collect(0, 1, 2, 10, &mut m); // collector held till 12
+        assert!(!o.can_collect(1, 1, 1, 11), "no free collector for bank 1");
+        assert!(o.can_collect(1, 1, 1, 12));
+    }
+
+    #[test]
+    fn wb_slot_charges_the_wait() {
+        let mut o = opc(0, 0, 1);
+        let mut m = Metrics::default();
+        assert_eq!(o.wb_slot(FuKind::Alu, 10, &mut m), 10);
+        assert_eq!(o.wb_slot(FuKind::Alu, 10, &mut m), 11);
+        assert_eq!(m.stall_wb_port, 1);
+    }
+
+    #[test]
+    fn reset_clears_collectors_banks_and_bus() {
+        let mut o = opc(1, 1, 1);
+        let mut m = Metrics::default();
+        o.collect(0, 1, 2, 10, &mut m);
+        o.wb_slot(FuKind::Alu, 100, &mut m);
+        o.reset();
+        assert!(o.can_collect(0, 1, 2, 0));
+        assert_eq!(o.next_release(0), None);
+        assert_eq!(o.wb_slot(FuKind::Alu, 1, &mut m), 1);
+    }
+}

@@ -8,9 +8,16 @@
 //! The timing cost of crossing banks is charged in the core
 //! (`Latencies::crossbar_hop`); this module provides the storage and
 //! counts cross-bank reads so the ablation bench can report them.
+//!
+//! Each bank exposes a bounded number of read ports when the operand
+//! collector is enabled (`sim/opc`, PR 5): the collector stage
+//! serializes same-cycle reads to one bank through
+//! `OpcConfig::read_ports` and tracks per-bank occupancy against the
+//! bank layout declared here ([`RegFile::banks`]).
 
 /// Register file: `nw` banks × 32 architectural registers × `nt` lanes.
 pub struct RegFile {
+    nw: usize,
     nt: usize,
     data: Vec<u32>, // [warp][reg][lane]
     /// Reads served from a bank other than the issuing warp's own
@@ -20,7 +27,15 @@ pub struct RegFile {
 
 impl RegFile {
     pub fn new(nw: usize, nt: usize) -> Self {
-        RegFile { nt, data: vec![0; nw * 32 * nt], cross_bank_reads: 0 }
+        RegFile { nw, nt, data: vec![0; nw * 32 * nt], cross_bank_reads: 0 }
+    }
+
+    /// Number of register banks — one per hardware warp (warp `w`'s
+    /// operands live in bank `w`). The operand collector (`sim/opc`)
+    /// sizes its per-bank occupancy state from this.
+    #[inline]
+    pub fn banks(&self) -> usize {
+        self.nw
     }
 
     #[inline]
@@ -110,6 +125,12 @@ mod tests {
             let want = if lane % 2 == 1 { 100 + lane as u32 } else { 0 };
             assert_eq!(rf.read(0, 7, lane), want);
         }
+    }
+
+    #[test]
+    fn one_bank_per_warp() {
+        assert_eq!(RegFile::new(4, 8).banks(), 4);
+        assert_eq!(RegFile::new(1, 32).banks(), 1);
     }
 
     #[test]

@@ -21,7 +21,11 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-/// An issued instruction waiting for writeback.
+/// An issued instruction waiting for writeback. Its `done_at` key in
+/// the queue is fully resolved at issue: functional-unit latency plus
+/// any serialized operand-read cycles and result-bus wait (`sim/opc`)
+/// — so bus-delayed completions need no separate event source in the
+/// fast-forward engine.
 #[derive(Clone, Copy)]
 pub struct InFlight {
     pub warp: u32,

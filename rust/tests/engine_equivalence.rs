@@ -8,10 +8,13 @@
 //! tests pin that contract over every kernel under both the HW and SW
 //! solutions, under GTO scheduling, on multi-core configs, across
 //! the `sim/memhier` memory configs (legacy default, full hierarchy,
-//! small L2, single MSHR, 2-core shared L2), and across the `sim/fu`
+//! small L2, single MSHR, 2-core shared L2), across the `sim/fu`
 //! functional-unit configs (unlimited/legacy, bounded `vortex()`
-//! units, issue-width 2, and FU+memhier combined), and additionally
-//! pin `launch_batch` determinism and the GPU-level timeout fix.
+//! units, issue-width 2, and FU+memhier combined), and across the
+//! `sim/opc` operand-collector configs (explicit legacy, bounded
+//! `vortex()` collectors/read-ports/result-buses under dual issue, and
+//! OPC+FU+memhier on two cores), and additionally pin `launch_batch`
+//! determinism and the GPU-level timeout fix.
 
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
 use vortex_warp::coordinator::{launch_batch, BatchJob};
@@ -19,7 +22,7 @@ use vortex_warp::isa::asm::regs::*;
 use vortex_warp::isa::{csr, Asm};
 use vortex_warp::kernels;
 use vortex_warp::sim::config::{CacheConfig, SchedPolicy};
-use vortex_warp::sim::{EngineMode, FuConfig, Gpu, MemHierConfig, SimConfig, SimError};
+use vortex_warp::sim::{EngineMode, FuConfig, Gpu, MemHierConfig, OpcConfig, SimConfig, SimError};
 
 fn reference(base: &SimConfig) -> SimConfig {
     SimConfig { engine: EngineMode::Reference, ..base.clone() }
@@ -154,6 +157,43 @@ fn metrics_bit_identical_with_fu_pools_and_memory_hierarchy() {
     cfg.fu = FuConfig::vortex();
     cfg.fu.issue_width = 2;
     assert_equivalent_over_kernels(&cfg, "fu+memhier+2-core");
+}
+
+#[test]
+fn metrics_bit_identical_with_explicit_legacy_opc() {
+    // OPC config 1 of 3: the unlimited legacy default spelled out
+    // explicitly, so the free-operand-collection default can never
+    // silently drift.
+    let mut cfg = SimConfig::paper();
+    cfg.opc = OpcConfig::legacy();
+    assert_equivalent_over_kernels(&cfg, "opc-legacy");
+}
+
+#[test]
+fn metrics_bit_identical_with_vortex_opc_and_dual_issue() {
+    // OPC config 2 of 3: the bounded collector/read-port/result-bus
+    // front and back end under dual issue — operand-stall windows must
+    // fast-forward to the collector/bank release events and charge
+    // `stall_operand`/`stall_wb_port` identically under both engines.
+    let mut cfg = SimConfig::paper();
+    cfg.opc = OpcConfig::vortex();
+    cfg.fu.issue_width = 2;
+    assert_equivalent_over_kernels(&cfg, "opc-vortex");
+}
+
+#[test]
+fn metrics_bit_identical_with_opc_fu_pools_and_memory_hierarchy() {
+    // OPC config 3 of 3, everything at once: bounded collectors and
+    // writeback ports + bounded units + dual issue over the full
+    // shared-L2/DRAM hierarchy on two cores — collector/bank releases,
+    // FU releases, bus-delayed writebacks and memory completions all
+    // interleave in one event set.
+    let mut cfg = hier(&SimConfig::paper());
+    cfg.num_cores = 2;
+    cfg.fu = FuConfig::vortex();
+    cfg.fu.issue_width = 2;
+    cfg.opc = OpcConfig::vortex();
+    assert_equivalent_over_kernels(&cfg, "opc+fu+memhier+2-core");
 }
 
 #[test]

@@ -1,0 +1,288 @@
+//! Operand-collector + result-bus tests (`sim/opc`, PR 5).
+//!
+//! Pins the contention the free-operand model could not see: bounded
+//! register-bank read ports serialize same-cycle operand reads, a
+//! bounded collector pool back-pressures the issue stage, merged-warp
+//! collectives hold every member bank through the crossbar walk, and
+//! an in-order per-FU result bus delays completions behind slow ones —
+//! while the legacy default keeps every seed kernel byte-identical and
+//! both engines stay bit-identical under all of it.
+
+use vortex_warp::coordinator::dispatch::{dispatch, Solution};
+use vortex_warp::isa::asm::regs::*;
+use vortex_warp::isa::{Asm, Instr, ShflMode};
+use vortex_warp::kernels;
+use vortex_warp::sim::{map, EngineMode, Gpu, Metrics, OpcConfig, SimConfig};
+
+/// Run `prog` to completion under `cfg`, returning core 0's metrics.
+fn metrics(cfg: &SimConfig, prog: &[Instr]) -> Metrics {
+    let mut gpu = Gpu::new(cfg);
+    gpu.load_program(prog);
+    gpu.run(10_000_000).expect("simulation failed");
+    gpu.cores[0].metrics.clone()
+}
+
+fn with_opc(base: &SimConfig, collectors: usize, read_ports: usize, wb_ports: usize) -> SimConfig {
+    let mut cfg = base.clone();
+    cfg.opc = OpcConfig { collectors, read_ports, wb_ports };
+    cfg
+}
+
+/// Both engines must agree bit-for-bit on raw programs too.
+fn assert_engines_agree(cfg: &SimConfig, prog: &[Instr]) -> Metrics {
+    let fast = metrics(cfg, prog);
+    let refe = metrics(&SimConfig { engine: EngineMode::Reference, ..cfg.clone() }, prog);
+    assert_eq!(fast, refe, "operand/bus stalls must fast-forward losslessly");
+    fast
+}
+
+/// Rotating destination registers: enough spacing that writeback
+/// latency never causes WAW scoreboard stalls between the streamed ops.
+const ROT: [u8; 4] = [T2, T3, T4, T5];
+
+#[test]
+fn legacy_opc_default_is_free_on_every_kernel() {
+    assert_eq!(SimConfig::paper().opc, OpcConfig::legacy());
+    let explicit = with_opc(&SimConfig::paper(), 0, 0, 0);
+    for b in kernels::all() {
+        for sol in [Solution::Hw, Solution::Sw] {
+            let d = dispatch(sol, &b.kernel, &SimConfig::paper(), &b.inputs)
+                .unwrap_or_else(|e| panic!("{}[{}]: {e}", b.name, sol.name()));
+            assert_eq!(d.metrics.stall_operand, 0, "{}[{}]", b.name, sol.name());
+            assert_eq!(d.metrics.stall_wb_port, 0, "{}[{}]", b.name, sol.name());
+            assert!(
+                d.metrics.opc_bank_busy.iter().all(|&c| c == 0),
+                "{}[{}]: legacy runs must not touch bank occupancy",
+                b.name,
+                sol.name()
+            );
+            let e = dispatch(sol, &b.kernel, &explicit, &b.inputs).unwrap();
+            assert_eq!(
+                d.metrics, e.metrics,
+                "{}[{}]: explicit legacy OPC must match the default byte-for-byte",
+                b.name,
+                sol.name()
+            );
+        }
+    }
+}
+
+/// Single warp, 16 two-source adds through one read port: every add
+/// serializes its two same-cycle bank reads over two cycles, charging
+/// exactly one `stall_operand` cycle and two bank-occupancy cycles
+/// each. No issue can ever be *blocked* here (one warp, bank frees
+/// before the warp refetches), so the counts are exact.
+#[test]
+fn one_read_port_serializes_two_source_operands() {
+    let mut a = Asm::new();
+    a.addi(S2, ZERO, 3);
+    a.addi(S3, ZERO, 4);
+    for i in 0..16 {
+        a.add(ROT[i % 4], S2, S3);
+    }
+    a.ecall();
+    let prog = a.finish();
+
+    let mut base = SimConfig::paper();
+    base.nw = 1;
+    let legacy = metrics(&base, &prog);
+    assert_eq!(legacy.stall_operand, 0);
+
+    let serial = assert_engines_agree(&with_opc(&base, 0, 1, 0), &prog);
+    assert_eq!(serial.instrs, legacy.instrs, "same program, same work");
+    assert_eq!(serial.stall_operand, 16, "one serialized read cycle per 2-source add");
+    assert_eq!(serial.opc_bank_busy[0], 32, "bank 0 held 2 cycles per add");
+    assert!(serial.opc_bank_busy[1..].iter().all(|&c| c == 0), "only warp 0's bank");
+    assert!(
+        serial.cycles > legacy.cycles,
+        "serialized reads must cost cycles ({} vs {})",
+        serial.cycles,
+        legacy.cycles
+    );
+}
+
+/// One-source instructions fit through a single read port in the one
+/// cycle the free model already charges: timing is untouched, only the
+/// bank-occupancy bookkeeping appears.
+#[test]
+fn single_source_ops_are_free_through_one_port() {
+    let mut a = Asm::new();
+    a.addi(S2, ZERO, 7);
+    for i in 0..16 {
+        a.addi(ROT[i % 4], S2, 1);
+    }
+    a.ecall();
+    let prog = a.finish();
+
+    let mut base = SimConfig::paper();
+    base.nw = 1;
+    let legacy = metrics(&base, &prog);
+    let ported = assert_engines_agree(&with_opc(&base, 0, 1, 0), &prog);
+    assert_eq!(ported.cycles, legacy.cycles, "1 read / 1 port: no serialization");
+    assert_eq!(ported.stall_operand, 0);
+    assert!(ported.opc_bank_busy[0] > 0, "occupancy is still tracked");
+}
+
+/// Four warps streaming two-source adds through ONE collector unit:
+/// each collection holds the collector for two cycles, so demand (one
+/// ready warp per cycle) outstrips capacity (one issue per two cycles)
+/// and warps that cleared the scoreboard block on the collector —
+/// `stall_operand` must exceed the pure serialization charge, and the
+/// run must be slower than with unlimited collectors.
+#[test]
+fn one_collector_back_pressures_the_issue_stage() {
+    let mut a = Asm::new();
+    a.li(T0, 4); // 1 instr (addi)
+    a.li(T1, (map::CODE_BASE + 4 * 4) as i32); // 2 instrs (lui+addi)
+    a.wspawn(T0, T1);
+    // worker (index 4): per-warp init, then 8 independent 2-source adds.
+    a.addi(S2, ZERO, 3);
+    a.addi(S3, ZERO, 4);
+    for i in 0..8 {
+        a.add(ROT[i % 4], S2, S3);
+    }
+    a.ecall();
+    let prog = a.finish();
+    assert!(
+        matches!(prog[4], Instr::AluImm { .. }),
+        "worker must start at index 4, got {:?}",
+        prog[4]
+    );
+
+    let base = SimConfig::paper(); // nw = 4
+    let unlimited = assert_engines_agree(&with_opc(&base, 0, 1, 0), &prog);
+    let limited = assert_engines_agree(&with_opc(&base, 1, 1, 0), &prog);
+
+    assert_eq!(limited.instrs, unlimited.instrs, "same program, same work");
+    // 4 warps x 8 adds serialize one extra read cycle each under both
+    // configs (+1 for the two-source wspawn in the preamble); only the
+    // bounded pool adds blocked issue cycles on top.
+    assert_eq!(unlimited.stall_operand, 33, "serialization only");
+    assert!(
+        limited.stall_operand > 33,
+        "one collector must block scoreboard-clear warps (stall_operand = {})",
+        limited.stall_operand
+    );
+    assert!(
+        limited.cycles > unlimited.cycles,
+        "collector backpressure must cost cycles ({} vs {})",
+        limited.cycles,
+        unlimited.cycles
+    );
+}
+
+/// A merged-warp collective (`vx_tile` group spanning all four
+/// hardware warps) gathers operands from every member bank through the
+/// crossbar, holding banks 0..4 for the serialized read plus three hop
+/// cycles. The other members' own operand reads queue behind that
+/// walk, so collectives serialize across the group — the §III cost the
+/// free model hid.
+#[test]
+fn merged_collective_crossbar_walk_holds_every_member_bank() {
+    let mut a = Asm::new();
+    a.li(T0, 0b1000_0000); // Table II mask: one group... (idx 0)
+    a.li(T1, 32); // ...spanning all 32 hw threads  (idx 1)
+    a.tile(T0, T1); // idx 2: merge the 4 warps
+    a.li(T0, 4); // idx 3
+    a.li(T1, (map::CODE_BASE + 4 * 7) as i32); // idx 4-5 (lui+addi)
+    a.wspawn(T0, T1); // idx 6
+    // worker (index 7): value + clamp regs, then 8 tile-wide shuffles.
+    a.addi(S2, ZERO, 5); // idx 7
+    a.addi(S3, ZERO, 0); // idx 8
+    for i in 0..8 {
+        a.shfl(ShflMode::Down, ROT[i % 4], S2, 1, S3);
+    }
+    a.ecall();
+    let prog = a.finish();
+    assert!(
+        matches!(prog[7], Instr::AluImm { .. }),
+        "worker must start at index 7, got {:?}",
+        prog[7]
+    );
+
+    let base = SimConfig::paper(); // nw = 4, warp_hw
+    let legacy = metrics(&base, &prog);
+    assert_eq!(legacy.stall_operand, 0);
+    assert!(legacy.crossbar_hops > 0, "the collectives really span warps");
+
+    let opc = assert_engines_agree(&with_opc(&base, 0, 1, 0), &prog);
+    assert_eq!(opc.instrs, legacy.instrs);
+    // 32 shuffles x (2-cycle serialized read + 3 crossbar hops) land on
+    // each of the 4 member banks — the walk is fully visible per bank.
+    // Bank 0 additionally carries warp 0's preamble reads: vx_tile (2)
+    // + the li's addi (1) + vx_wspawn (2).
+    for b in 1..4 {
+        assert_eq!(opc.opc_bank_busy[b], 160, "bank {b} occupancy");
+    }
+    assert_eq!(opc.opc_bank_busy[0], 165, "bank 0 = walk + preamble reads");
+    // Pure serialization charges 34 (32 shuffles + tile + wspawn); the
+    // bank holds must additionally block other members'
+    // scoreboard-clear shuffles.
+    assert!(
+        opc.stall_operand > 34,
+        "crossbar bank holds must block the group (stall_operand = {})",
+        opc.stall_operand
+    );
+    assert!(
+        opc.cycles > legacy.cycles,
+        "merged collectives must pay for the banked register file ({} vs {})",
+        opc.cycles,
+        legacy.cycles
+    );
+}
+
+/// In-order result bus: a cache-missing load reserves the single LSU
+/// writeback port deep in the future, and the fast hit issued behind
+/// it must wait its turn — `stall_wb_port` counts the slip.
+#[test]
+fn one_wb_port_delays_a_hit_queued_behind_a_miss() {
+    let mut a = Asm::new();
+    a.li(A0, (map::GLOBAL_BASE + 0x800) as i32);
+    a.lw(T2, A0, 0); // cold miss: ~50-cycle completion
+    a.lw(T3, A0, 4); // same line: a 4-cycle hit right behind it
+    a.ecall();
+    let prog = a.finish();
+
+    let mut base = SimConfig::paper();
+    base.nw = 1;
+    let unlimited = assert_engines_agree(&with_opc(&base, 0, 0, 0), &prog);
+    assert_eq!(unlimited.stall_wb_port, 0);
+
+    let one_port = assert_engines_agree(&with_opc(&base, 0, 0, 1), &prog);
+    assert_eq!(one_port.instrs, unlimited.instrs);
+    assert!(
+        one_port.stall_wb_port > 0,
+        "the hit must queue behind the miss on the single LSU writeback port"
+    );
+    assert!(
+        one_port.cycles > unlimited.cycles,
+        "the delayed writeback must extend the run ({} vs {})",
+        one_port.cycles,
+        unlimited.cycles
+    );
+}
+
+/// The acceptance scenario: `--opc vortex --issue-width 2` over the
+/// whole kernel suite. Operand serialization (1 read port) and
+/// result-bus contention (1 port per FU kind) must both be visible,
+/// and every kernel must still produce correct outputs — the model
+/// changes timing only.
+#[test]
+fn vortex_opc_with_dual_issue_surfaces_contention_on_kernels() {
+    let mut cfg = SimConfig::paper();
+    cfg.opc = OpcConfig::vortex();
+    cfg.fu.issue_width = 2;
+    let (mut total_operand, mut total_wb) = (0u64, 0u64);
+    for b in kernels::all() {
+        for sol in [Solution::Hw, Solution::Sw] {
+            let r = dispatch(sol, &b.kernel, &cfg, &b.inputs)
+                .unwrap_or_else(|e| panic!("{}[{}]: {e}", b.name, sol.name()));
+            b.check(&r.env)
+                .unwrap_or_else(|e| panic!("{}[{}] output: {e}", b.name, sol.name()));
+            total_operand += r.metrics.stall_operand;
+            total_wb += r.metrics.stall_wb_port;
+        }
+    }
+    assert!(total_operand > 0, "some kernel must serialize operand reads");
+    assert!(total_wb > 0, "some kernel must contend for writeback ports");
+}
