@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""Gate for the PR-6 fault-injection smoke campaign.
+
+Usage:
+    fault_campaign_check.py FIXTURE REPORT [REPORT ...]
+
+Checks, in order:
+
+1. **Determinism** — every REPORT (the same campaign run under
+   different engines / thread counts) is byte-identical. This is the
+   hard acceptance bar: the fault plan, the isolating coordinator and
+   the classifier may not leak engine or host-parallelism effects into
+   the report.
+2. **Accounting** — the outcome histogram sums to the launch count
+   (no launch silently dropped by the isolation layer).
+3. **Fixture** — the histogram matches the committed FIXTURE, so the
+   masked/sdc/detected/hang rates cannot drift without a reviewed
+   fixture update. A fixture containing ``{"bootstrap": true}`` passes
+   with a notice and prints the block to commit (first-run semantics,
+   same as BENCH_perf baselines).
+"""
+
+import json
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"FAULT-CAMPAIGN GATE: {msg}", file=sys.stderr)
+    raise SystemExit(1)
+
+
+def main(argv: list[str]) -> None:
+    if len(argv) < 3:
+        fail(f"usage: {argv[0]} FIXTURE REPORT [REPORT ...]")
+    fixture_path, report_paths = argv[1], argv[2:]
+
+    blobs = [open(p, "rb").read() for p in report_paths]
+    for path, blob in zip(report_paths[1:], blobs[1:]):
+        if blob != blobs[0]:
+            fail(
+                f"report {path} differs from {report_paths[0]} — the campaign "
+                "is not deterministic across engines/thread counts"
+            )
+    print(f"byte-identical across {len(report_paths)} runs: OK")
+
+    report = json.loads(blobs[0])
+    histogram = report["histogram"]
+    launches = report["launches"]
+    total = sum(histogram.values())
+    if total != launches:
+        fail(f"histogram sums to {total}, expected {launches}: {histogram}")
+    print(f"histogram sums to launches ({launches}): OK")
+    print("  " + json.dumps(histogram, sort_keys=True))
+
+    fixture = json.load(open(fixture_path))
+    if fixture.get("bootstrap"):
+        print("fixture is in bootstrap mode — commit this to pin the campaign:")
+        pinned = {
+            "seed": report["seed"],
+            "launches": launches,
+            "kernel": report["kernel"],
+            "solution": report["solution"],
+            "histogram": histogram,
+        }
+        print(json.dumps(pinned, indent=2, sort_keys=True))
+        return
+
+    for key in ("seed", "launches", "kernel", "solution"):
+        if fixture[key] != report[key]:
+            fail(f"fixture {key}={fixture[key]!r} but report has {report[key]!r}")
+    if fixture["histogram"] != histogram:
+        fail(
+            "outcome histogram drifted:\n"
+            f"  fixture: {json.dumps(fixture['histogram'], sort_keys=True)}\n"
+            f"  report:  {json.dumps(histogram, sort_keys=True)}\n"
+            "If the shift is intended (e.g. a new detector), update "
+            "rust/tests/fixtures/fault_campaign_smoke.json in the same PR."
+        )
+    print("histogram matches committed fixture: OK")
+
+
+if __name__ == "__main__":
+    main(sys.argv)

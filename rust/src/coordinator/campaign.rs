@@ -1,0 +1,397 @@
+//! Fault-injection campaign driver (PR 6): the resilience-evaluation
+//! axis on top of the paper's IPC story.
+//!
+//! A campaign runs one kernel N times, each launch with its own
+//! deterministic fault plan (seed derived from the campaign seed and
+//! the launch index via splitmix64 — adjacent xorshift seeds would
+//! start correlated), compares every outcome against a clean golden
+//! run, and classifies it:
+//!
+//! * **masked** — the launch completed and every output array matches
+//!   the golden run (the flip landed in dead state or was overwritten);
+//! * **sdc** — silent data corruption: completed, outputs differ;
+//! * **detected** — the simulator caught the corruption as a fatal
+//!   error (`SimError` variant name) or the launch panicked;
+//! * **hang** — the per-launch watchdog budget expired.
+//!
+//! # Determinism contract
+//!
+//! The report — histogram AND per-launch classifications, serialized
+//! as JSON — is byte-identical across engines (`Metrics` equivalence
+//! extends under injection) and across `--threads` values: jobs are
+//! keyed by launch index alone, processed in fixed-size chunks, and
+//! classified strictly in index order. `tests/fault.rs` and the CI
+//! `fault-campaign` job pin this.
+
+use super::dispatch::{dispatch_budgeted, Solution};
+use super::{
+    launch_batch_isolated, BatchJob, BatchPolicy, IsolationPolicy, LaunchError, LaunchResult,
+    MAX_CYCLES,
+};
+use crate::prt::interp::Env;
+use crate::prt::kir::{Kernel, ParamDir};
+use crate::sim::{CoreError, FaultConfig, SimConfig, SimError};
+use crate::util::rng::derive_seed;
+use std::collections::BTreeMap;
+
+/// Jobs dispatched per [`launch_batch_isolated`] call. A constant (not
+/// derived from the thread count) so chunk boundaries — and therefore
+/// the report — cannot depend on host parallelism.
+const CHUNK: usize = 32;
+
+/// Watchdog headroom multiplier for the auto budget: a fault can slow
+/// a launch (cache-tag flips, divergent re-execution) but a healthy
+/// one stays within a small factor of the golden cycle count.
+const AUTO_BUDGET_FACTOR: u64 = 16;
+const AUTO_BUDGET_SLACK: u64 = 10_000;
+
+/// What one campaign launch turned out to be.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum OutcomeClass {
+    Masked,
+    Sdc,
+    /// The simulator (or the isolation boundary) caught it; the label
+    /// is the `SimError` variant name, `"panic"`, `"codegen"` or
+    /// `"badinput"`.
+    Detected(String),
+    Hang,
+}
+
+impl OutcomeClass {
+    /// Histogram key (part of the committed-fixture format).
+    pub fn label(&self) -> String {
+        match self {
+            OutcomeClass::Masked => "masked".into(),
+            OutcomeClass::Sdc => "sdc".into(),
+            OutcomeClass::Detected(what) => format!("detected:{what}"),
+            OutcomeClass::Hang => "hang".into(),
+        }
+    }
+}
+
+/// Verdict for one launch, in launch-index order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LaunchVerdict {
+    pub index: usize,
+    /// The derived fault seed this launch ran under.
+    pub seed: u64,
+    pub class: OutcomeClass,
+    pub attempts: u32,
+    /// Wall-clock cycles of the launch (0 when it did not complete).
+    pub cycles: u64,
+}
+
+/// Campaign parameters.
+#[derive(Clone, Debug)]
+pub struct CampaignSpec {
+    pub label: String,
+    pub solution: Solution,
+    pub kernel: Kernel,
+    pub inputs: Env,
+    /// Base machine config; its own `fault` field is ignored (the
+    /// golden run forces `legacy`, injected runs use `inject`).
+    pub base: SimConfig,
+    /// Injection template: `seed` keys the campaign, and launch `i`
+    /// runs under `derive_seed(seed, i)` with the same count/window/
+    /// targets.
+    pub inject: FaultConfig,
+    pub launches: usize,
+    /// Worker threads; `0` = all available host parallelism. Does not
+    /// affect the report.
+    pub threads: usize,
+    /// Watchdog cycle budget per launch; `0` = auto
+    /// (`16 × golden cycles + 10_000`).
+    pub budget: u64,
+    /// Bounded retries for panics/timeouts (normally 0: under
+    /// injection a timeout is a deterministic hang verdict).
+    pub retries: u32,
+}
+
+/// Campaign result: the histogram plus per-launch verdicts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CampaignReport {
+    pub label: String,
+    pub solution: Solution,
+    pub kernel: &'static str,
+    pub launches: usize,
+    pub seed: u64,
+    pub faults_per_launch: u32,
+    pub window: u64,
+    pub targets: String,
+    /// The resolved watchdog budget (auto budgets are materialized so
+    /// the report is self-describing).
+    pub budget: u64,
+    pub golden_cycles: u64,
+    /// Outcome label → count. `masked`/`sdc`/`hang` always present;
+    /// `detected:*` keys appear only when seen.
+    pub histogram: BTreeMap<String, u64>,
+    pub verdicts: Vec<LaunchVerdict>,
+}
+
+impl CampaignReport {
+    /// Deterministic JSON (hand-rolled — the crate is std-only). Keys
+    /// emit in a fixed order; the histogram is a `BTreeMap`, so its
+    /// iteration order is the key order. This exact byte stream is
+    /// what the CI fixture diff pins.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(256 + 96 * self.verdicts.len());
+        s.push_str("{\n");
+        s.push_str(&format!("  \"campaign\": {},\n", json_str(&self.label)));
+        s.push_str(&format!("  \"solution\": {},\n", json_str(self.solution.name())));
+        s.push_str(&format!("  \"kernel\": {},\n", json_str(self.kernel)));
+        s.push_str(&format!("  \"launches\": {},\n", self.launches));
+        s.push_str(&format!("  \"seed\": {},\n", self.seed));
+        s.push_str(&format!("  \"faults_per_launch\": {},\n", self.faults_per_launch));
+        s.push_str(&format!("  \"window\": {},\n", self.window));
+        s.push_str(&format!("  \"targets\": {},\n", json_str(&self.targets)));
+        s.push_str(&format!("  \"budget\": {},\n", self.budget));
+        s.push_str(&format!("  \"golden_cycles\": {},\n", self.golden_cycles));
+        s.push_str("  \"histogram\": {");
+        let mut first = true;
+        for (k, v) in &self.histogram {
+            if !first {
+                s.push_str(", ");
+            }
+            first = false;
+            s.push_str(&format!("{}: {}", json_str(k), v));
+        }
+        s.push_str("},\n");
+        s.push_str("  \"verdicts\": [\n");
+        for (i, v) in self.verdicts.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"i\": {}, \"seed\": {}, \"class\": {}, \"attempts\": {}, \"cycles\": {}}}{}\n",
+                v.index,
+                v.seed,
+                json_str(&v.class.label()),
+                v.attempts,
+                v.cycles,
+                if i + 1 < self.verdicts.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+/// Minimal JSON string escaping (labels are ASCII in practice, but
+/// stay correct for anything).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Classify one launch against the golden run: outputs compare over
+/// the kernel's non-`In` parameters (inputs are identical by
+/// construction, so comparing them would only dilute the verdict).
+fn classify(
+    kernel: &Kernel,
+    golden: &LaunchResult,
+    result: &Result<LaunchResult, LaunchError>,
+) -> OutcomeClass {
+    match result {
+        Ok(res) => {
+            let clean = kernel
+                .params
+                .iter()
+                .filter(|p| p.dir != ParamDir::In)
+                .all(|p| res.env.get(p.name) == golden.env.get(p.name));
+            if clean {
+                OutcomeClass::Masked
+            } else {
+                OutcomeClass::Sdc
+            }
+        }
+        Err(LaunchError::Sim(CoreError { err: SimError::Timeout { .. }, .. })) => {
+            OutcomeClass::Hang
+        }
+        Err(LaunchError::Sim(CoreError { err, .. })) => {
+            OutcomeClass::Detected(err.variant_name().into())
+        }
+        Err(LaunchError::Panic(_)) => OutcomeClass::Detected("panic".into()),
+        Err(LaunchError::Codegen(_)) => OutcomeClass::Detected("codegen".into()),
+        Err(LaunchError::BadInput(_)) => OutcomeClass::Detected("badinput".into()),
+    }
+}
+
+/// Run a campaign. See [`run_campaign_with`] for the streaming
+/// variant; this one just collects the report.
+pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport, LaunchError> {
+    run_campaign_with(spec, |_| {})
+}
+
+/// Run a campaign, invoking `on_verdict` for every launch verdict in
+/// strict launch-index order (streaming progress for long campaigns).
+/// Fails only when the clean golden run itself fails — every injected
+/// outcome, however broken, is a classified verdict.
+pub fn run_campaign_with(
+    spec: &CampaignSpec,
+    mut on_verdict: impl FnMut(&LaunchVerdict),
+) -> Result<CampaignReport, LaunchError> {
+    // Golden run: the clean reference every verdict compares against.
+    let clean_cfg = SimConfig { fault: FaultConfig::legacy(), ..spec.base.clone() };
+    let golden_budget = if spec.budget > 0 { spec.budget } else { MAX_CYCLES };
+    let golden = dispatch_budgeted(
+        spec.solution,
+        &spec.kernel,
+        &clean_cfg,
+        &spec.inputs,
+        golden_budget,
+    )?;
+    let budget = if spec.budget > 0 {
+        spec.budget
+    } else {
+        AUTO_BUDGET_FACTOR * golden.metrics.cycles + AUTO_BUDGET_SLACK
+    };
+
+    let mut histogram: BTreeMap<String, u64> = BTreeMap::new();
+    for k in ["masked", "sdc", "hang"] {
+        histogram.insert(k.into(), 0);
+    }
+    let mut verdicts = Vec::with_capacity(spec.launches);
+    let policy = BatchPolicy {
+        threads: spec.threads,
+        isolation: IsolationPolicy { max_cycles: budget, retries: spec.retries },
+    };
+
+    let mut start = 0usize;
+    while start < spec.launches {
+        let end = (start + CHUNK).min(spec.launches);
+        let jobs: Vec<BatchJob> = (start..end)
+            .map(|i| {
+                let fault =
+                    FaultConfig { seed: derive_seed(spec.inject.seed, i as u64), ..spec.inject.clone() };
+                let cfg = SimConfig { fault, ..spec.base.clone() };
+                BatchJob::new(
+                    format!("{}#{i}", spec.label),
+                    spec.solution,
+                    spec.kernel.clone(),
+                    cfg,
+                    spec.inputs.clone(),
+                )
+            })
+            .collect();
+        let reports = launch_batch_isolated(&jobs, &policy);
+        for (off, report) in reports.iter().enumerate() {
+            let i = start + off;
+            let class = classify(&spec.kernel, &golden, &report.result);
+            let cycles = report.result.as_ref().map(|r| r.metrics.cycles).unwrap_or(0);
+            let verdict = LaunchVerdict {
+                index: i,
+                seed: derive_seed(spec.inject.seed, i as u64),
+                class: class.clone(),
+                attempts: report.attempts,
+                cycles,
+            };
+            *histogram.entry(class.label()).or_insert(0) += 1;
+            on_verdict(&verdict);
+            verdicts.push(verdict);
+        }
+        start = end;
+    }
+
+    let targets: Vec<&str> = spec.inject.targets.iter().map(|t| t.name()).collect();
+    Ok(CampaignReport {
+        label: spec.label.clone(),
+        solution: spec.solution,
+        kernel: spec.kernel.name,
+        launches: spec.launches,
+        seed: spec.inject.seed,
+        faults_per_launch: spec.inject.count,
+        window: spec.inject.window,
+        targets: targets.join("+"),
+        budget,
+        golden_cycles: golden.metrics.cycles,
+        histogram,
+        verdicts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prt::kir::{BinOp, Expr as E, Stmt};
+
+    fn copy_kernel() -> Kernel {
+        Kernel::new("copy", 2, 32, 8)
+            .param("src", 64, ParamDir::In)
+            .param("dst", 64, ParamDir::Out)
+            .body(vec![Stmt::Store(
+                "dst",
+                E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx),
+                E::b(
+                    BinOp::Mul,
+                    E::load("src", E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx)),
+                    E::c(2),
+                ),
+            )])
+    }
+
+    fn spec(launches: usize, count: u32) -> CampaignSpec {
+        CampaignSpec {
+            label: "unit".into(),
+            solution: Solution::Hw,
+            kernel: copy_kernel(),
+            inputs: Env::default().with("src", (0..64).collect()),
+            base: SimConfig::paper(),
+            inject: FaultConfig { seed: 0xC0FFEE, count, ..FaultConfig::legacy() },
+            launches,
+            threads: 1,
+            budget: 0,
+            retries: 0,
+        }
+    }
+
+    #[test]
+    fn zero_fault_campaign_is_all_masked() {
+        let report = run_campaign(&spec(6, 0)).unwrap();
+        assert_eq!(report.histogram["masked"], 6);
+        assert_eq!(report.histogram["sdc"], 0);
+        assert_eq!(report.histogram["hang"], 0);
+        assert_eq!(report.verdicts.len(), 6);
+        assert!(report.verdicts.iter().all(|v| v.class == OutcomeClass::Masked));
+        assert!(report.golden_cycles > 0);
+        assert_eq!(report.budget, AUTO_BUDGET_FACTOR * report.golden_cycles + AUTO_BUDGET_SLACK);
+    }
+
+    #[test]
+    fn histogram_sums_to_launches_and_streams_in_order() {
+        let mut seen = Vec::new();
+        let report = run_campaign_with(&spec(10, 2), |v| seen.push(v.index)).unwrap();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>(), "verdicts stream in index order");
+        let total: u64 = report.histogram.values().sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let report = run_campaign(&spec(2, 0)).unwrap();
+        let j = report.to_json();
+        assert!(j.contains("\"campaign\": \"unit\""), "{j}");
+        assert!(j.contains("\"solution\": \"HW\""), "{j}");
+        assert!(j.contains("\"kernel\": \"copy\""), "{j}");
+        assert!(j.contains("\"histogram\": {\"hang\": 0, \"masked\": 2, \"sdc\": 0}"), "{j}");
+        assert!(j.contains("\"class\": \"masked\""), "{j}");
+        assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+    }
+
+    #[test]
+    fn outcome_labels_are_the_fixture_format() {
+        assert_eq!(OutcomeClass::Masked.label(), "masked");
+        assert_eq!(OutcomeClass::Sdc.label(), "sdc");
+        assert_eq!(OutcomeClass::Hang.label(), "hang");
+        assert_eq!(OutcomeClass::Detected("CorruptState".into()).label(), "detected:CorruptState");
+    }
+}

@@ -3,7 +3,7 @@
 //! hardware and software implementations based on application
 //! requirements and area constraints" — §VI).
 
-use super::{run_hw, run_sw, LaunchError, LaunchResult};
+use super::{run_hw, run_sw, run_hw_budgeted, run_sw_budgeted, LaunchError, LaunchResult};
 use crate::prt::interp::Env;
 use crate::prt::kir::Kernel;
 use crate::sim::SimConfig;
@@ -51,6 +51,29 @@ pub fn dispatch(
         Solution::Sw => {
             let cfg = SimConfig { warp_hw: false, ..base.clone() };
             run_sw(k, &cfg, inputs)
+        }
+    }
+}
+
+/// [`dispatch`] with an explicit per-launch cycle budget — the
+/// watchdog entry point used by `launch_isolated`. The struct-update
+/// derivation keeps everything else from `base`, including any
+/// fault-injection plan (`base.fault`).
+pub fn dispatch_budgeted(
+    sol: Solution,
+    k: &Kernel,
+    base: &SimConfig,
+    inputs: &Env,
+    max_cycles: u64,
+) -> Result<LaunchResult, LaunchError> {
+    match sol {
+        Solution::Hw => {
+            let cfg = SimConfig { warp_hw: true, ..base.clone() };
+            run_hw_budgeted(k, &cfg, inputs, max_cycles)
+        }
+        Solution::Sw => {
+            let cfg = SimConfig { warp_hw: false, ..base.clone() };
+            run_sw_budgeted(k, &cfg, inputs, max_cycles)
         }
     }
 }

@@ -7,21 +7,40 @@
 //! a [`LaunchImage`]; [`run_hw`] / [`run_sw`] are the two solution
 //! paths of the paper (HW: SIMT codegen on the extended core; SW: PR
 //! transformation + scalar codegen on the baseline core).
+//!
+//! ## Hardened batch path (PR 6)
+//!
+//! The ROADMAP's sim-as-a-service north star needs a coordinator that
+//! survives millions of launches: one bad config or hung kernel must
+//! not take down the batch. [`launch_isolated`] runs a single launch
+//! under `catch_unwind` panic isolation with a per-launch cycle-budget
+//! watchdog ([`IsolationPolicy::max_cycles`]) and bounded retry —
+//! retries apply ONLY to nondeterministic-looking failures (panics and
+//! watchdog timeouts), never to deterministic `SimError`s, which would
+//! just fail the same way again. [`launch_batch_isolated`] fans jobs
+//! across host threads and returns one [`LaunchReport`] per job, in
+//! job order, regardless of sibling failures. The fault-injection
+//! campaign driver ([`campaign`]) builds on exactly this path.
 
+pub mod campaign;
 pub mod dispatch;
 
 use crate::prt::codegen::{codegen_scalar, codegen_simt, LaunchImage};
 use crate::prt::interp::Env;
 use crate::prt::kir::{Kernel, ParamDir};
 use crate::prt::transform;
-use crate::sim::{map, Gpu, Metrics, SimConfig, SimError};
+use crate::sim::{map, CoreError, Gpu, Metrics, SimConfig, SimError};
 
 /// Launch failure.
-#[derive(Debug)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum LaunchError {
     Codegen(String),
-    Sim(SimError),
+    /// A fatal simulation error, attributed to the core that raised it.
+    Sim(CoreError),
     BadInput(String),
+    /// The launch panicked (caught by [`launch_isolated`]'s
+    /// `catch_unwind` boundary); the payload message is preserved.
+    Panic(String),
 }
 
 impl std::fmt::Display for LaunchError {
@@ -30,14 +49,15 @@ impl std::fmt::Display for LaunchError {
             LaunchError::Codegen(e) => write!(f, "codegen: {e}"),
             LaunchError::Sim(e) => write!(f, "simulation: {e}"),
             LaunchError::BadInput(e) => write!(f, "bad input: {e}"),
+            LaunchError::Panic(e) => write!(f, "panic: {e}"),
         }
     }
 }
 
 impl std::error::Error for LaunchError {}
 
-impl From<SimError> for LaunchError {
-    fn from(e: SimError) -> Self {
+impl From<CoreError> for LaunchError {
+    fn from(e: CoreError) -> Self {
         LaunchError::Sim(e)
     }
 }
@@ -52,37 +72,50 @@ pub struct LaunchResult {
     pub metrics: Metrics,
 }
 
-/// Run a compiled kernel image on a GPU with the given inputs.
+/// Run a compiled kernel image on a GPU with the given inputs, under
+/// the default [`MAX_CYCLES`] budget.
 pub fn launch(
     cfg: &SimConfig,
     img: &LaunchImage,
     inputs: &Env,
 ) -> Result<LaunchResult, LaunchError> {
+    launch_budgeted(cfg, img, inputs, MAX_CYCLES)
+}
+
+/// [`launch`] with an explicit cycle budget — the watchdog primitive:
+/// a hung kernel surfaces as `SimError::Timeout { cycles: max_cycles }`
+/// instead of burning the default 200M-cycle budget.
+pub fn launch_budgeted(
+    cfg: &SimConfig,
+    img: &LaunchImage,
+    inputs: &Env,
+    max_cycles: u64,
+) -> Result<LaunchResult, LaunchError> {
     let mut gpu = Gpu::new(cfg);
+
+    // Host-side faults while staging arguments are input problems
+    // (array outside the device memory map), not simulation errors.
+    let stage = |m: crate::sim::mem::MemFault| LaunchError::BadInput(format!("staging: {m}"));
 
     // Write parameter arrays + the argument mailbox.
     for (i, &(name, base, len)) in img.params.iter().enumerate() {
-        gpu.mem
-            .write_u32(map::KARG_BASE + 4 * i as u32, base)
-            .map_err(SimError::from)?;
+        gpu.mem.write_u32(map::KARG_BASE + 4 * i as u32, base).map_err(stage)?;
         let data = inputs.arrays.get(name);
         for j in 0..len {
             let v = data.and_then(|d| d.get(j)).copied().unwrap_or(0);
-            gpu.mem
-                .write_u32(base + 4 * j as u32, v as u32)
-                .map_err(SimError::from)?;
+            gpu.mem.write_u32(base + 4 * j as u32, v as u32).map_err(stage)?;
         }
     }
 
     gpu.load_program(&img.prog);
-    gpu.run(MAX_CYCLES)?;
+    gpu.run(max_cycles)?;
 
     // Read back all arrays.
     let mut env = inputs.clone();
     for &(name, base, len) in &img.params {
         let mut out = Vec::with_capacity(len);
         for j in 0..len {
-            out.push(gpu.mem.read_u32(base + 4 * j as u32).map_err(SimError::from)? as i32);
+            out.push(gpu.mem.read_u32(base + 4 * j as u32).map_err(stage)? as i32);
         }
         env.arrays.insert(name, out);
     }
@@ -98,6 +131,16 @@ pub fn launch(
 
 /// The HW solution: SIMT codegen, extended hardware.
 pub fn run_hw(k: &Kernel, cfg: &SimConfig, inputs: &Env) -> Result<LaunchResult, LaunchError> {
+    run_hw_budgeted(k, cfg, inputs, MAX_CYCLES)
+}
+
+/// [`run_hw`] with an explicit cycle budget.
+pub fn run_hw_budgeted(
+    k: &Kernel,
+    cfg: &SimConfig,
+    inputs: &Env,
+    max_cycles: u64,
+) -> Result<LaunchResult, LaunchError> {
     if !cfg.warp_hw {
         return Err(LaunchError::BadInput(
             "run_hw needs a SimConfig with warp_hw enabled".into(),
@@ -106,18 +149,28 @@ pub fn run_hw(k: &Kernel, cfg: &SimConfig, inputs: &Env) -> Result<LaunchResult,
     validate_inputs(k, inputs)?;
     let img =
         codegen_simt(k, cfg.nt as u32, cfg.nw as u32).map_err(LaunchError::Codegen)?;
-    launch(cfg, &img, inputs)
+    launch_budgeted(cfg, &img, inputs, max_cycles)
 }
 
 /// The SW solution: PR transformation + scalar codegen; runs on the
 /// baseline core (works on the extended one too, using no extension
 /// instructions).
 pub fn run_sw(k: &Kernel, cfg: &SimConfig, inputs: &Env) -> Result<LaunchResult, LaunchError> {
+    run_sw_budgeted(k, cfg, inputs, MAX_CYCLES)
+}
+
+/// [`run_sw`] with an explicit cycle budget.
+pub fn run_sw_budgeted(
+    k: &Kernel,
+    cfg: &SimConfig,
+    inputs: &Env,
+    max_cycles: u64,
+) -> Result<LaunchResult, LaunchError> {
     validate_inputs(k, inputs)?;
     let scalar = transform(k).map_err(LaunchError::Codegen)?;
     let img =
         codegen_scalar(&scalar, cfg.nt as u32, cfg.nw as u32).map_err(LaunchError::Codegen)?;
-    launch(cfg, &img, inputs)
+    launch_budgeted(cfg, &img, inputs, max_cycles)
 }
 
 /// One independent launch for [`launch_batch`].
@@ -144,28 +197,115 @@ impl BatchJob {
     }
 }
 
-/// Run a batch of independent launches across host threads.
+/// Per-launch hardening knobs for [`launch_isolated`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IsolationPolicy {
+    /// Watchdog: cycle budget per attempt. A kernel still running at
+    /// the budget surfaces as `SimError::Timeout`.
+    pub max_cycles: u64,
+    /// Extra attempts after a panic or watchdog timeout (so total
+    /// attempts = `retries + 1`). Deterministic `SimError`s are NEVER
+    /// retried — they would fail identically again.
+    pub retries: u32,
+}
+
+impl Default for IsolationPolicy {
+    fn default() -> Self {
+        IsolationPolicy { max_cycles: MAX_CYCLES, retries: 0 }
+    }
+}
+
+/// Outcome of one isolated launch: what happened, and how many
+/// attempts it took.
+#[derive(Debug)]
+pub struct LaunchReport {
+    pub label: String,
+    /// Attempts consumed (1 unless a retryable failure was retried).
+    pub attempts: u32,
+    pub result: Result<LaunchResult, LaunchError>,
+}
+
+/// Render a `catch_unwind` payload (the panic message is a `&str` or
+/// `String` for every `panic!`/`expect` in this crate).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".into()
+    }
+}
+
+/// True when retrying could plausibly change the outcome: panics and
+/// watchdog timeouts only. Everything else is deterministic.
+fn retryable(r: &Result<LaunchResult, LaunchError>) -> bool {
+    matches!(
+        r,
+        Err(LaunchError::Panic(_))
+            | Err(LaunchError::Sim(CoreError { err: SimError::Timeout { .. }, .. }))
+    )
+}
+
+/// Run one launch under panic isolation with a cycle-budget watchdog
+/// and bounded retry. Never panics and never aborts siblings: every
+/// outcome — including a `panic!` anywhere in codegen or the simulator
+/// — comes back as a [`LaunchReport`].
+pub fn launch_isolated(job: &BatchJob, policy: &IsolationPolicy) -> LaunchReport {
+    let mut attempts = 0u32;
+    loop {
+        attempts += 1;
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            dispatch::dispatch_budgeted(
+                job.solution,
+                &job.kernel,
+                &job.cfg,
+                &job.inputs,
+                policy.max_cycles,
+            )
+        }));
+        let result = match caught {
+            Ok(r) => r,
+            Err(p) => Err(LaunchError::Panic(panic_message(p.as_ref()))),
+        };
+        if !retryable(&result) || attempts > policy.retries {
+            return LaunchReport { label: job.label.clone(), attempts, result };
+        }
+    }
+}
+
+/// Thread-fanout knobs for [`launch_batch_isolated`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchPolicy {
+    /// Worker threads; `0` = all available host parallelism.
+    pub threads: usize,
+    pub isolation: IsolationPolicy,
+}
+
+/// Run a batch of independent launches across host threads, each under
+/// [`launch_isolated`].
 ///
 /// Each launch owns its own `Gpu` (cores + memory), so jobs share
-/// nothing and the result vector — returned in job order — is
+/// nothing and the report vector — returned in job order — is
 /// deterministic regardless of thread count or scheduling. Workers are
 /// plain `std::thread::scope` threads (no external dependencies) that
 /// pull the next job index from a shared atomic counter, so uneven job
-/// costs stay load-balanced and the benches and sweeps saturate all
-/// host cores.
-pub fn launch_batch(jobs: &[BatchJob]) -> Vec<Result<LaunchResult, LaunchError>> {
+/// costs stay load-balanced. A poisoned job (panic, timeout, any
+/// error) fills its own slot and leaves every sibling untouched.
+pub fn launch_batch_isolated(jobs: &[BatchJob], policy: &BatchPolicy) -> Vec<LaunchReport> {
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     if jobs.is_empty() {
         return Vec::new();
     }
-    let workers = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(jobs.len());
+    let workers = if policy.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        policy.threads
+    }
+    .min(jobs.len());
     let next = AtomicUsize::new(0);
-    let mut results: Vec<Option<Result<LaunchResult, LaunchError>>> =
-        (0..jobs.len()).map(|_| None).collect();
+    let mut results: Vec<Option<LaunchReport>> = (0..jobs.len()).map(|_| None).collect();
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..workers)
             .map(|_| {
@@ -174,17 +314,17 @@ pub fn launch_batch(jobs: &[BatchJob]) -> Vec<Result<LaunchResult, LaunchError>>
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         let Some(job) = jobs.get(i) else { break };
-                        done.push((
-                            i,
-                            dispatch::dispatch(job.solution, &job.kernel, &job.cfg, &job.inputs),
-                        ));
+                        done.push((i, launch_isolated(job, &policy.isolation)));
                     }
                     done
                 })
             })
             .collect();
         for h in handles {
-            for (i, r) in h.join().expect("batch worker panicked") {
+            // Workers run every launch inside catch_unwind, so a join
+            // failure would mean a bug in the harness itself — it can
+            // no longer be triggered by a poisoned job.
+            for (i, r) in h.join().expect("isolated batch worker cannot panic") {
                 results[i] = Some(r);
             }
         }
@@ -192,6 +332,18 @@ pub fn launch_batch(jobs: &[BatchJob]) -> Vec<Result<LaunchResult, LaunchError>>
     results
         .into_iter()
         .map(|r| r.expect("every batch slot is filled by its worker"))
+        .collect()
+}
+
+/// Run a batch of independent launches across host threads, returning
+/// per-launch `Result`s in job order. Delegates to
+/// [`launch_batch_isolated`] under the default policy, so one poisoned
+/// launch (even a panicking one) never suppresses the other N-1
+/// results — it simply yields its own `Err`.
+pub fn launch_batch(jobs: &[BatchJob]) -> Vec<Result<LaunchResult, LaunchError>> {
+    launch_batch_isolated(jobs, &BatchPolicy::default())
+        .into_iter()
+        .map(|r| r.result)
         .collect()
 }
 
@@ -279,6 +431,33 @@ mod tests {
             assert_eq!(got.env.get("dst"), want.env.get("dst"), "{}", job.label);
         }
         assert!(launch_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn retry_gate_covers_timeouts_and_panics_only() {
+        let timeout: Result<LaunchResult, _> = Err(LaunchError::Sim(CoreError {
+            core: 0,
+            err: SimError::Timeout { cycles: 5 },
+        }));
+        assert!(retryable(&timeout));
+        assert!(retryable(&Err(LaunchError::Panic("boom".into()))));
+        let deadlock: Result<LaunchResult, _> = Err(LaunchError::Sim(CoreError {
+            core: 0,
+            err: SimError::Deadlock { cycle: 1 },
+        }));
+        assert!(!retryable(&deadlock), "deterministic SimErrors never retry");
+        assert!(!retryable(&Err(LaunchError::BadInput("x".into()))));
+        assert!(!retryable(&Err(LaunchError::Codegen("y".into()))));
+    }
+
+    #[test]
+    fn panic_payloads_render_for_str_string_and_opaque() {
+        let p: Box<dyn std::any::Any + Send> = Box::new("static message");
+        assert_eq!(panic_message(p.as_ref()), "static message");
+        let p: Box<dyn std::any::Any + Send> = Box::new(String::from("owned message"));
+        assert_eq!(panic_message(p.as_ref()), "owned message");
+        let p: Box<dyn std::any::Any + Send> = Box::new(42u32);
+        assert_eq!(panic_message(p.as_ref()), "opaque panic payload");
     }
 
     #[test]

@@ -6,14 +6,19 @@
 //!   fig5                            IPC comparison over all benchmarks
 //!   area    [--layout]              Table IV / Fig 6
 //!   validate [--artifacts DIR]      e2e: sim vs PJRT golden models
+//!   campaign --bench <name> ...     fault-injection campaign (PR 6)
+//!
+//! All machine-shaping commands also accept `--engine fast|reference`
+//! and `--inject seed=..,count=..[,window=..][,targets=reg+pred+...]`.
 
 use vortex_warp::area::report::{fig6_layout, table4};
 use vortex_warp::bench_harness::{fig5, tables};
+use vortex_warp::coordinator::campaign::{run_campaign_with, CampaignSpec};
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
 use vortex_warp::kernels;
 use vortex_warp::prt::kir::ParamDir;
 use vortex_warp::runtime::Runtime;
-use vortex_warp::sim::SimConfig;
+use vortex_warp::sim::{EngineMode, FaultConfig, FaultTarget, SimConfig};
 
 fn usage() -> ! {
     eprintln!(
@@ -36,7 +41,20 @@ fn usage() -> ! {
            fig5                         IPC of HW vs SW over all six benchmarks\n\
            area [--layout]              Table IV area overhead (+ Fig 6 layout)\n\
            validate [--artifacts DIR]   end-to-end check vs PJRT golden models\n\
-           list                         list benchmarks"
+           campaign --bench <name> [--solution hw|sw] [--launches N]\n\
+               [--seed S] [--count K] [--window W] [--targets a+b+c]\n\
+               [--threads N] [--budget CYCLES] [--retries N]\n\
+               [--json PATH] [--stream] [machine flags as for `run`]\n\
+             fault-injection campaign: N launches, each under a\n\
+             deterministic per-launch fault plan, classified against a\n\
+             clean golden run as masked / sdc / detected:* / hang;\n\
+             JSON report to stdout (or PATH), summary to stderr\n\
+           list                         list benchmarks\n\
+         \n\
+         shared machine flags:\n\
+           --engine fast|reference      simulation engine (default fast)\n\
+           --inject seed=S,count=K[,window=W][,targets=reg+pred+smem+l1tag]\n\
+             arm deterministic fault injection for this run"
     );
     std::process::exit(2);
 }
@@ -47,6 +65,40 @@ fn flag_value(args: &[String], name: &str) -> Option<String> {
 
 fn has_flag(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
+}
+
+fn parse_targets(spec: &str) -> Vec<FaultTarget> {
+    spec.split('+')
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            FaultTarget::parse(t).unwrap_or_else(|| {
+                eprintln!("unknown fault target `{t}` (expected reg|pred|smem|l1tag)");
+                std::process::exit(2);
+            })
+        })
+        .collect()
+}
+
+/// Parse `--inject seed=S,count=K[,window=W][,targets=reg+pred+...]`.
+fn parse_inject(spec: &str) -> FaultConfig {
+    let mut f = FaultConfig { count: 1, ..FaultConfig::legacy() };
+    for kv in spec.split(',').filter(|kv| !kv.is_empty()) {
+        let (key, val) = kv.split_once('=').unwrap_or_else(|| {
+            eprintln!("--inject: `{kv}` is not key=value");
+            std::process::exit(2);
+        });
+        match key {
+            "seed" => f.seed = val.parse().expect("--inject seed"),
+            "count" => f.count = val.parse().expect("--inject count"),
+            "window" => f.window = val.parse().expect("--inject window"),
+            "targets" => f.targets = parse_targets(val),
+            other => {
+                eprintln!("--inject: unknown key `{other}` (seed|count|window|targets)");
+                std::process::exit(2);
+            }
+        }
+    }
+    f
 }
 
 fn config_from(args: &[String]) -> SimConfig {
@@ -102,6 +154,19 @@ fn config_from(args: &[String]) -> SimConfig {
     if let Some(n) = flag_value(args, "--wb-ports") {
         cfg.opc.wb_ports = n.parse().expect("--wb-ports");
     }
+    if let Some(e) = flag_value(args, "--engine") {
+        cfg.engine = match e.as_str() {
+            "fast" | "ff" | "fastforward" => EngineMode::FastForward,
+            "reference" | "ref" => EngineMode::Reference,
+            other => {
+                eprintln!("--engine {other}: expected `fast` or `reference`");
+                std::process::exit(2);
+            }
+        };
+    }
+    if let Some(spec) = flag_value(args, "--inject") {
+        cfg.fault = parse_inject(&spec);
+    }
     cfg.trace = has_flag(args, "--trace");
     cfg.validate().expect("invalid configuration");
     cfg
@@ -141,8 +206,15 @@ fn main() {
                 eprintln!("launch failed: {e}");
                 std::process::exit(1);
             });
-            b.check(&r.env).expect("output mismatch vs native reference");
-            println!("{} [{}] {}", b.name, sol.name(), r.metrics.summary());
+            if cfg.fault.enabled() {
+                // Under injection a corrupted output is a legitimate
+                // observation (SDC), not a harness failure.
+                let verdict = if b.check(&r.env).is_ok() { "OK" } else { "CORRUPTED" };
+                println!("{} [{}] output={verdict} {}", b.name, sol.name(), r.metrics.summary());
+            } else {
+                b.check(&r.env).expect("output mismatch vs native reference");
+                println!("{} [{}] {}", b.name, sol.name(), r.metrics.summary());
+            }
         }
         Some("fig5") => {
             let cfg = config_from(&args);
@@ -194,6 +266,91 @@ fn main() {
                 }
             }
             std::process::exit(if bad > 0 { 1 } else { 0 });
+        }
+        Some("campaign") => {
+            let name = flag_value(&args, "--bench").unwrap_or_else(|| usage());
+            let sol = flag_value(&args, "--solution")
+                .map(|s| Solution::parse(&s).expect("--solution hw|sw"))
+                .unwrap_or(Solution::Hw);
+            let b = kernels::by_name(&name).unwrap_or_else(|| {
+                eprintln!("unknown benchmark `{name}` (try `vortex-warp list`)");
+                std::process::exit(2);
+            });
+            let mut base = config_from(&args);
+            // The campaign owns injection; a stray --inject on the
+            // base config would be ignored anyway, so keep it clean.
+            base.fault = FaultConfig::legacy();
+            let mut inject = FaultConfig { count: 1, ..FaultConfig::legacy() };
+            if let Some(s) = flag_value(&args, "--seed") {
+                inject.seed = s.parse().expect("--seed");
+            }
+            if let Some(c) = flag_value(&args, "--count") {
+                inject.count = c.parse().expect("--count");
+            }
+            if let Some(w) = flag_value(&args, "--window") {
+                inject.window = w.parse().expect("--window");
+            }
+            if let Some(t) = flag_value(&args, "--targets") {
+                inject.targets = parse_targets(&t);
+            }
+            let spec = CampaignSpec {
+                label: name.clone(),
+                solution: sol,
+                kernel: b.kernel.clone(),
+                inputs: b.inputs.clone(),
+                base,
+                inject,
+                launches: flag_value(&args, "--launches")
+                    .map(|n| n.parse().expect("--launches"))
+                    .unwrap_or(100),
+                threads: flag_value(&args, "--threads")
+                    .map(|n| n.parse().expect("--threads"))
+                    .unwrap_or(0),
+                budget: flag_value(&args, "--budget")
+                    .map(|n| n.parse().expect("--budget"))
+                    .unwrap_or(0),
+                retries: flag_value(&args, "--retries")
+                    .map(|n| n.parse().expect("--retries"))
+                    .unwrap_or(0),
+            };
+            let stream = has_flag(&args, "--stream");
+            let report = run_campaign_with(&spec, |v| {
+                if stream {
+                    eprintln!(
+                        "  launch {:4} seed={:20} -> {}",
+                        v.index,
+                        v.seed,
+                        v.class.label()
+                    );
+                }
+            })
+            .unwrap_or_else(|e| {
+                eprintln!("campaign golden run failed: {e}");
+                std::process::exit(1);
+            });
+            let json = report.to_json();
+            match flag_value(&args, "--json") {
+                Some(path) => {
+                    std::fs::write(&path, &json).unwrap_or_else(|e| {
+                        eprintln!("cannot write {path}: {e}");
+                        std::process::exit(1);
+                    });
+                    eprintln!("report written to {path}");
+                }
+                None => print!("{json}"),
+            }
+            let mut parts: Vec<String> =
+                report.histogram.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            parts.sort();
+            eprintln!(
+                "campaign {} [{}] launches={} golden_cycles={} budget={} :: {}",
+                report.label,
+                report.solution.name(),
+                report.launches,
+                report.golden_cycles,
+                report.budget,
+                parts.join(" ")
+            );
         }
         Some("list") => {
             for b in kernels::all() {

@@ -2,6 +2,8 @@
 //! (§V: "eight threads per warp and four warps per thread block for one
 //! core") is [`SimConfig::paper`].
 
+use super::fault::FaultConfig;
+
 /// Functional-unit and memory latencies in cycles.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Latencies {
@@ -344,6 +346,10 @@ pub struct SimConfig {
     /// model; see [`MemHierConfig::vortex`] for the full hierarchy.
     pub memhier: MemHierConfig,
     pub sched: SchedPolicy,
+    /// Fault injection (`sim/fault`): a seeded deterministic plan of
+    /// single-bit upsets. The default is [`FaultConfig::legacy`] — no
+    /// injection, byte-identical to the seed simulator.
+    pub fault: FaultConfig,
     /// Engine used by `run` (fast-forward by default; the reference
     /// one-cycle path is kept for equivalence testing).
     pub engine: EngineMode,
@@ -370,6 +376,7 @@ impl SimConfig {
             opc: OpcConfig::legacy(),
             memhier: MemHierConfig::legacy(),
             sched: SchedPolicy::RoundRobin,
+            fault: FaultConfig::legacy(),
             engine: EngineMode::FastForward,
             trace: false,
             trace_cap: 1 << 16,
@@ -408,6 +415,7 @@ impl SimConfig {
         self.fu.validate()?;
         self.opc.validate()?;
         self.memhier.validate(&self.dcache)?;
+        self.fault.validate()?;
         Ok(())
     }
 }
@@ -542,6 +550,24 @@ mod tests {
         let mut c = SimConfig::paper();
         c.memhier = MemHierConfig::vortex();
         assert!(c.memhier.mshr_entries > 0);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn paper_defaults_to_legacy_fault_model() {
+        let c = SimConfig::paper();
+        assert_eq!(c.fault, FaultConfig::legacy(), "paper injects nothing");
+        assert!(!c.fault.enabled());
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_validation_is_covered_by_sim_config() {
+        let mut c = SimConfig::paper();
+        c.fault.count = 1;
+        c.fault.targets.clear();
+        assert!(c.validate().is_err(), "SimConfig::validate covers the fault knobs");
+        c.fault.targets = crate::sim::fault::FaultTarget::ALL.to_vec();
         c.validate().unwrap();
     }
 

@@ -22,6 +22,7 @@
 //! instruction semantics live in `sim/fu/{alu,muldiv,lsu,ctrl,wcu}`.
 
 use super::config::SimConfig;
+use super::fault::{CoreFaults, FaultEvent, FaultTarget};
 use super::fu::{self, FuKind, FuPool};
 use super::map;
 use super::mem::{MemFault, Memory};
@@ -64,6 +65,28 @@ pub enum SimError {
     /// All warps blocked on barriers that can never be satisfied.
     Deadlock { cycle: u64 },
     Timeout { cycles: u64 },
+    /// Microarchitectural invariant violated — reachable only under
+    /// fault injection (e.g. an Active warp with an empty thread mask
+    /// after a predicate-bit flip; `Tmc`/`Pred` park such warps as
+    /// `Inactive`, so clean runs can never get here). Campaigns count
+    /// this as `detected`.
+    CorruptState { cycle: u64, what: String },
+}
+
+impl SimError {
+    /// Stable short name of the variant — the `detected(...)` label in
+    /// campaign histograms (part of the fixture format).
+    pub fn variant_name(&self) -> &'static str {
+        match self {
+            SimError::IllegalInstr { .. } => "IllegalInstr",
+            SimError::BadPc { .. } => "BadPc",
+            SimError::Mem(_) => "Mem",
+            SimError::DivergentBranch { .. } => "DivergentBranch",
+            SimError::Deadlock { .. } => "Deadlock",
+            SimError::Timeout { .. } => "Timeout",
+            SimError::CorruptState { .. } => "CorruptState",
+        }
+    }
 }
 
 impl std::fmt::Display for SimError {
@@ -79,6 +102,9 @@ impl std::fmt::Display for SimError {
             }
             SimError::Deadlock { cycle } => write!(f, "barrier deadlock at cycle {cycle}"),
             SimError::Timeout { cycles } => write!(f, "timeout after {cycles} cycles"),
+            SimError::CorruptState { cycle, what } => {
+                write!(f, "corrupt state at cycle {cycle}: {what}")
+            }
         }
     }
 }
@@ -88,6 +114,28 @@ impl std::error::Error for SimError {}
 impl From<MemFault> for SimError {
     fn from(m: MemFault) -> Self {
         SimError::Mem(m)
+    }
+}
+
+/// A fatal error attributed to the core that raised it (PR-6
+/// satellite): multi-core batch reports need to know *which* core
+/// failed, not just how. GPU-level errors (the run-loop timeout) carry
+/// the lowest still-busy core id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoreError {
+    pub core: u32,
+    pub err: SimError,
+}
+
+impl std::fmt::Display for CoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "core {}: {}", self.core, self.err)
+    }
+}
+
+impl std::error::Error for CoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        Some(&self.err)
     }
 }
 
@@ -159,6 +207,9 @@ pub struct Core {
     /// collective closure so the hot path never allocates or re-zeroes).
     pub(crate) scratch_vals: Vec<u32>,
     pub(crate) scratch_res: Vec<u32>,
+    /// This core's slice of the fault-injection plan (`sim/fault`);
+    /// empty under `FaultConfig::legacy()`.
+    faults: CoreFaults,
     pub metrics: Metrics,
     /// Optional instruction trace (`cfg.trace`), bounded to
     /// `cfg.trace_cap` lines.
@@ -170,6 +221,7 @@ impl Core {
         cfg.validate().expect("invalid SimConfig");
         let (nw, nt) = (cfg.nw, cfg.nt);
         let rf = RegFile::new(nw, nt);
+        let faults = CoreFaults::new(&cfg, core_id);
         Core {
             core_id,
             prog: Vec::new(),
@@ -188,6 +240,7 @@ impl Core {
             pending_collective_reg: 0,
             scratch_vals: vec![0; nw * nt],
             scratch_res: vec![0; nw * nt],
+            faults,
             metrics: Metrics::default(),
             trace: TraceBuf::new(cfg.trace_cap),
             cfg,
@@ -219,6 +272,7 @@ impl Core {
         self.barriers = BarrierTable::default();
         self.ready_at = vec![0; nw];
         self.spawn_epoch = vec![0; nw];
+        self.faults.reset();
         self.metrics = Metrics::default();
         self.trace.clear();
     }
@@ -264,6 +318,14 @@ impl Core {
             self.sb.clear(f.warp as usize, f.rd);
         }
 
+        // ---- fault injection (`sim/fault`) ----
+        // Applied at ONE fixed point — after the writeback drain, before
+        // the issue loop — on both engines. `next_event` folds the next
+        // fault cycle, so a fast-forward window never skips a flip.
+        while let Some(ev) = self.faults.pop_due(now) {
+            self.apply_fault(&ev, mem);
+        }
+
         // ---- issue (up to `issue_width` warps per cycle) ----
         let nw = self.cfg.nw;
         let issue_width = self.cfg.fu.issue_width;
@@ -283,6 +345,17 @@ impl Core {
             let w = (start + i) % nw;
             if !self.warps[w].is_active() {
                 continue;
+            }
+            if self.warps[w].tmask == 0 {
+                // Unreachable without injection: `Tmc`/`Pred` park
+                // empty-mask warps as Inactive. A flipped predicate bit
+                // can zero the mask of a running warp — detect it here
+                // instead of letting `first_lane` trip a debug assert
+                // (or silently misexecute in release builds).
+                return Err(SimError::CorruptState {
+                    cycle: now,
+                    what: format!("active warp {w} has an empty thread mask"),
+                });
             }
             any_active = true;
             if self.ready_at[w] > now {
@@ -392,7 +465,50 @@ impl Core {
         if let Some(r) = self.opc.next_release(now) {
             next = next.min(r);
         }
+        // Pending fault flips are state changes too: a skip window must
+        // stop so the flip lands on the same cycle as under Reference.
+        if let Some(c) = self.faults.next_cycle() {
+            next = next.min(c);
+        }
         (next != u64::MAX).then_some(next)
+    }
+
+    /// Land one planned bit flip. Coordinates are clamped (modulo) to
+    /// the machine geometry so explicit out-of-range events are still
+    /// valid fault sites rather than panics.
+    fn apply_fault(&mut self, ev: &FaultEvent, mem: &mut Memory) {
+        let w = ev.warp as usize % self.cfg.nw;
+        match ev.target {
+            FaultTarget::RegWord => {
+                let reg = (1 + (ev.loc.wrapping_sub(1)) % 31) as u8;
+                let lane = ev.lane as usize % self.cfg.nt;
+                self.rf.flip_bit(w, reg, lane, ev.bit);
+            }
+            FaultTarget::PredBit => {
+                self.warps[w].flip_mask_bit(ev.bit, self.cfg.nt);
+            }
+            FaultTarget::SmemWord => {
+                mem.flip_shared_bit(ev.loc, ev.bit);
+            }
+            FaultTarget::L1Tag => {
+                // Returns false when the entry was invalid — the flip
+                // had nothing to land on, but it still counts as an
+                // applied (and by construction masked) fault.
+                self.memsys.corrupt_l1_tag(ev.loc, ev.bit);
+            }
+        }
+        self.metrics.faults_applied[ev.target as usize] += 1;
+        if self.cfg.trace {
+            self.trace.push(format!(
+                "[{cyc:6}] c{cid} FAULT {t} w{w} loc={loc} lane={lane} bit={bit}",
+                cyc = ev.cycle,
+                cid = self.core_id,
+                t = ev.target.name(),
+                loc = ev.loc,
+                lane = ev.lane,
+                bit = ev.bit,
+            ));
+        }
     }
 
     /// Fast-forward a stalled core so the next executed cycle is

@@ -1,0 +1,149 @@
+//! Deterministic fault injection (PR 6).
+//!
+//! Resilience characterization for the paper's HW-vs-SW comparison:
+//! the same warp-level feature can keep its state in a hardware
+//! register bank (HW solution) or in software-managed scratch arrays
+//! (SW solution), and a single-bit upset in either lands differently.
+//! This module injects seeded, pre-planned bit flips into
+//! architectural state so campaigns (`coordinator::campaign`) can
+//! measure how often a flip is masked, becomes silent data corruption,
+//! is detected by the simulator, or hangs the kernel.
+//!
+//! # Determinism contract
+//!
+//! The whole design is built around one invariant: **a fault plan is a
+//! pure function of `(SimConfig, seed)` and is applied at one fixed
+//! point in the cycle loop** — in `Core::step_one_cycle`, after the
+//! writeback drain and before the issue loop. Because both engines run
+//! the same `step_one_cycle`, and `Core::next_event` folds the next
+//! pending fault cycle into its minimum (so a FastForward skip window
+//! can never jump over a scheduled flip), FastForward and Reference
+//! produce bit-identical metrics and outputs under any plan.
+//!
+//! `FaultConfig::legacy()` (the default) injects nothing and is
+//! byte-identical to the pre-PR-6 simulator.
+
+pub mod plan;
+
+pub use plan::{FaultConfig, FaultEvent, FaultPlan, FaultTarget, DEFAULT_WINDOW};
+
+use crate::sim::config::SimConfig;
+
+/// Per-core view of the fault plan: the subset of events targeting
+/// this core, consumed in cycle order as the core's clock advances.
+#[derive(Clone, Debug)]
+pub struct CoreFaults {
+    events: Vec<FaultEvent>,
+    cursor: usize,
+}
+
+impl CoreFaults {
+    /// Materialize the plan for `cfg.fault` and keep the events aimed
+    /// at `core_id`. Cheap when injection is disabled (empty plan).
+    pub fn new(cfg: &SimConfig, core_id: u32) -> Self {
+        let events = if cfg.fault.enabled() {
+            FaultPlan::from_config(cfg)
+                .events
+                .into_iter()
+                .filter(|e| e.core == core_id)
+                .collect()
+        } else {
+            Vec::new()
+        };
+        CoreFaults { events, cursor: 0 }
+    }
+
+    /// Rewind to the start of the plan (mirrors `Core::reset`).
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+    }
+
+    /// Cycle of the next unapplied event, if any. Folded into
+    /// `Core::next_event` so skip windows stop at fault cycles.
+    pub fn next_cycle(&self) -> Option<u64> {
+        self.events.get(self.cursor).map(|e| e.cycle)
+    }
+
+    /// Pop the next event due at or before `now`, advancing the
+    /// cursor. Called in a loop so several events can share a cycle.
+    pub fn pop_due(&mut self, now: u64) -> Option<FaultEvent> {
+        let e = *self.events.get(self.cursor)?;
+        if e.cycle <= now {
+            self.cursor += 1;
+            Some(e)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_core_filter_and_cursor() {
+        let mut cfg = SimConfig::paper();
+        cfg.num_cores = 2;
+        cfg.fault = FaultConfig { seed: 7, count: 40, ..FaultConfig::legacy() };
+        let plan = FaultPlan::from_config(&cfg);
+        let mut total = 0;
+        for cid in 0..2 {
+            let mut cf = CoreFaults::new(&cfg, cid);
+            assert!(cf.events.iter().all(|e| e.core == cid));
+            total += cf.events.len();
+            // Drain everything via a far-future clock.
+            let first = cf.next_cycle();
+            let mut popped = 0;
+            while cf.pop_due(u64::MAX).is_some() {
+                popped += 1;
+            }
+            assert_eq!(popped, cf.events.len());
+            assert_eq!(cf.next_cycle(), None);
+            cf.reset();
+            assert_eq!(cf.next_cycle(), first, "reset rewinds the cursor");
+        }
+        assert_eq!(total, plan.events.len(), "per-core split partitions the plan");
+    }
+
+    #[test]
+    fn pop_due_respects_the_clock() {
+        let mut cfg = SimConfig::paper();
+        cfg.fault.explicit = vec![
+            FaultEvent {
+                cycle: 10,
+                core: 0,
+                warp: 0,
+                target: FaultTarget::RegWord,
+                loc: 1,
+                lane: 0,
+                bit: 0,
+            },
+            FaultEvent {
+                cycle: 20,
+                core: 0,
+                warp: 0,
+                target: FaultTarget::PredBit,
+                loc: 0,
+                lane: 0,
+                bit: 1,
+            },
+        ];
+        let mut cf = CoreFaults::new(&cfg, 0);
+        assert_eq!(cf.next_cycle(), Some(10));
+        assert!(cf.pop_due(9).is_none(), "not due yet");
+        assert_eq!(cf.pop_due(10).unwrap().cycle, 10);
+        assert_eq!(cf.next_cycle(), Some(20));
+        assert!(cf.pop_due(10).is_none());
+        assert_eq!(cf.pop_due(25).unwrap().cycle, 20);
+        assert!(cf.pop_due(u64::MAX).is_none());
+    }
+
+    #[test]
+    fn disabled_config_yields_no_events() {
+        let cfg = SimConfig::paper();
+        let cf = CoreFaults::new(&cfg, 0);
+        assert!(cf.events.is_empty());
+        assert_eq!(cf.next_cycle(), None);
+    }
+}

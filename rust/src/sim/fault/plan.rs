@@ -1,0 +1,289 @@
+//! Fault-injection plan: configuration, event generation, validation.
+//!
+//! A [`FaultPlan`] is the fully materialized, sorted list of single-bit
+//! upsets a run will experience. It is derived once, deterministically,
+//! from a [`FaultConfig`] seed via the in-house xorshift64* PRNG
+//! (`util::rng`) — the same seed always yields the same events, on any
+//! host, under either engine and any thread count. Field draw order is
+//! part of the format and must never change (campaign fixtures pin it).
+
+use crate::sim::config::SimConfig;
+use crate::sim::map;
+use crate::util::rng::XorShift;
+
+/// Architectural state a fault event flips one bit of.
+///
+/// The discriminants index [`crate::sim::Metrics::faults_applied`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// One lane's copy of one architectural register (`RegFile`).
+    RegWord = 0,
+    /// One lane bit of a warp's thread/predicate mask (`Warp::tmask`).
+    PredBit = 1,
+    /// One word of the shared-memory scratchpad (`Memory`).
+    SmemWord = 2,
+    /// One L1 dcache tag entry (`TagArray`). The tag store is a timing
+    /// model (data lives in the flat `Memory`), so this target perturbs
+    /// hit/miss behavior but can never corrupt data — campaigns over it
+    /// measure pure timing resilience.
+    L1Tag = 3,
+}
+
+impl FaultTarget {
+    pub const COUNT: usize = 4;
+    pub const ALL: [FaultTarget; Self::COUNT] =
+        [FaultTarget::RegWord, FaultTarget::PredBit, FaultTarget::SmemWord, FaultTarget::L1Tag];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultTarget::RegWord => "reg",
+            FaultTarget::PredBit => "pred",
+            FaultTarget::SmemWord => "smem",
+            FaultTarget::L1Tag => "l1tag",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultTarget> {
+        match s.to_ascii_lowercase().as_str() {
+            "reg" | "regfile" => Some(FaultTarget::RegWord),
+            "pred" | "predicate" => Some(FaultTarget::PredBit),
+            "smem" | "scratchpad" => Some(FaultTarget::SmemWord),
+            "l1tag" | "tag" => Some(FaultTarget::L1Tag),
+            _ => None,
+        }
+    }
+}
+
+/// One scheduled single-bit upset.
+///
+/// Coordinates are interpreted per target and clamped (modulo) at
+/// application time, so any explicit event is a valid fault site:
+///
+/// | target     | `loc`                 | `lane`     | `bit`          |
+/// |------------|-----------------------|------------|----------------|
+/// | `RegWord`  | register (x1..x31)    | lane index | word bit 0..32 |
+/// | `PredBit`  | unused                | unused     | lane bit 0..nt |
+/// | `SmemWord` | scratchpad word index | unused     | word bit 0..32 |
+/// | `L1Tag`    | tag-entry index       | unused     | tag bit 0..32  |
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Absolute cycle (per-core clock) at which the flip lands. Events
+    /// past the program's end never fire — identically on both engines.
+    pub cycle: u64,
+    pub core: u32,
+    pub warp: u32,
+    pub target: FaultTarget,
+    pub loc: u32,
+    pub lane: u32,
+    pub bit: u32,
+}
+
+/// Default injection window (max generated event cycle).
+pub const DEFAULT_WINDOW: u64 = 8192;
+
+/// Fault-injection configuration, part of [`SimConfig`].
+///
+/// [`FaultConfig::legacy`] — the default everywhere — injects nothing
+/// and keeps every metric byte-identical to the seed regardless of the
+/// `seed` field (the plan is only drawn when injection is enabled).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultConfig {
+    /// PRNG seed for plan generation (recorded in campaign reports).
+    pub seed: u64,
+    /// Number of generated events. `0` = no generated injection.
+    pub count: u32,
+    /// Generated event cycles are drawn uniformly from `[1, window]`.
+    pub window: u64,
+    /// Target kinds the generator draws from.
+    pub targets: Vec<FaultTarget>,
+    /// Explicit events (targeted tests, counterexample replay). When
+    /// non-empty these are the whole plan and `count` is ignored.
+    pub explicit: Vec<FaultEvent>,
+}
+
+impl FaultConfig {
+    /// No injection — seed-byte-identical behavior (the default).
+    pub fn legacy() -> Self {
+        FaultConfig {
+            seed: 0,
+            count: 0,
+            window: DEFAULT_WINDOW,
+            targets: FaultTarget::ALL.to_vec(),
+            explicit: Vec::new(),
+        }
+    }
+
+    /// True when this config injects at least one event.
+    pub fn enabled(&self) -> bool {
+        self.count > 0 || !self.explicit.is_empty()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.count > 0 && self.targets.is_empty() {
+            return Err("fault targets must be non-empty when count > 0".into());
+        }
+        if self.count > 100_000 {
+            return Err(format!("fault count={} is unreasonably large (<= 100000)", self.count));
+        }
+        if self.enabled() && (self.window == 0 || self.window > u32::MAX as u64) {
+            return Err(format!("fault window={} must be in 1..=2^32-1", self.window));
+        }
+        Ok(())
+    }
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self::legacy()
+    }
+}
+
+/// The materialized event list, sorted by cycle (stable — generation
+/// order breaks ties, so the plan is a pure function of the config).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Draw the plan for `cfg.fault` against the machine geometry in
+    /// `cfg`. Explicit events short-circuit generation.
+    pub fn from_config(cfg: &SimConfig) -> Self {
+        let f = &cfg.fault;
+        if !f.explicit.is_empty() {
+            let mut events = f.explicit.clone();
+            events.sort_by_key(|e| e.cycle);
+            return FaultPlan { events };
+        }
+        let mut events = Vec::with_capacity(f.count as usize);
+        if f.count == 0 {
+            return FaultPlan { events };
+        }
+        let mut rng = XorShift::new(f.seed);
+        let smem_words = map::SHARED_SIZE / 4;
+        let l1_entries = (cfg.dcache.sets * cfg.dcache.ways) as u32;
+        for _ in 0..f.count {
+            // Fixed draw order (cycle, core, warp, target, coords) —
+            // part of the deterministic-campaign contract.
+            let cycle = 1 + rng.below(f.window as u32) as u64;
+            let core = rng.below(cfg.num_cores as u32);
+            let warp = rng.below(cfg.nw as u32);
+            let target = *rng.pick(&f.targets);
+            let (loc, lane, bit) = match target {
+                FaultTarget::RegWord => {
+                    (1 + rng.below(31), rng.below(cfg.nt as u32), rng.below(32))
+                }
+                FaultTarget::PredBit => (0, 0, rng.below(cfg.nt as u32)),
+                FaultTarget::SmemWord => (rng.below(smem_words), 0, rng.below(32)),
+                FaultTarget::L1Tag => (rng.below(l1_entries), 0, rng.below(32)),
+            };
+            events.push(FaultEvent { cycle, core, warp, target, loc, lane, bit });
+        }
+        events.sort_by_key(|e| e.cycle);
+        FaultPlan { events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inject_cfg(seed: u64, count: u32) -> SimConfig {
+        let mut cfg = SimConfig::paper();
+        cfg.fault = FaultConfig { seed, count, ..FaultConfig::legacy() };
+        cfg
+    }
+
+    #[test]
+    fn legacy_is_disabled_and_default() {
+        let f = FaultConfig::legacy();
+        assert!(!f.enabled());
+        assert_eq!(f, FaultConfig::default());
+        f.validate().unwrap();
+        // A non-zero seed with count 0 is still disabled: seed alone
+        // must never change behavior.
+        let f = FaultConfig { seed: 123, ..FaultConfig::legacy() };
+        assert!(!f.enabled());
+        assert!(FaultPlan::from_config(&SimConfig::paper()).events.is_empty());
+    }
+
+    #[test]
+    fn same_seed_same_plan_sorted_and_in_bounds() {
+        let cfg = inject_cfg(42, 64);
+        let a = FaultPlan::from_config(&cfg);
+        let b = FaultPlan::from_config(&cfg);
+        assert_eq!(a, b, "plan generation must be deterministic");
+        assert_eq!(a.events.len(), 64);
+        let mut prev = 0;
+        for e in &a.events {
+            assert!(e.cycle >= prev, "events sorted by cycle");
+            prev = e.cycle;
+            assert!((1..=DEFAULT_WINDOW).contains(&e.cycle));
+            assert!(e.core < cfg.num_cores as u32);
+            assert!(e.warp < cfg.nw as u32);
+            match e.target {
+                FaultTarget::RegWord => {
+                    assert!((1..32).contains(&e.loc), "never x0");
+                    assert!(e.lane < cfg.nt as u32);
+                    assert!(e.bit < 32);
+                }
+                FaultTarget::PredBit => assert!(e.bit < cfg.nt as u32),
+                FaultTarget::SmemWord => {
+                    assert!(e.loc < map::SHARED_SIZE / 4);
+                    assert!(e.bit < 32);
+                }
+                FaultTarget::L1Tag => {
+                    assert!(e.loc < (cfg.dcache.sets * cfg.dcache.ways) as u32);
+                    assert!(e.bit < 32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = FaultPlan::from_config(&inject_cfg(1, 32));
+        let b = FaultPlan::from_config(&inject_cfg(2, 32));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn explicit_events_override_generation() {
+        let ev = FaultEvent {
+            cycle: 7,
+            core: 0,
+            warp: 1,
+            target: FaultTarget::RegWord,
+            loc: 5,
+            lane: 2,
+            bit: 31,
+        };
+        let mut cfg = inject_cfg(9, 100);
+        cfg.fault.explicit = vec![ev];
+        let plan = FaultPlan::from_config(&cfg);
+        assert_eq!(plan.events, vec![ev], "explicit plan ignores count");
+        assert!(cfg.fault.enabled());
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let mut f = FaultConfig { count: 1, ..FaultConfig::legacy() };
+        f.targets.clear();
+        assert!(f.validate().is_err(), "no targets to draw from");
+        let f = FaultConfig { count: 1, window: 0, ..FaultConfig::legacy() };
+        assert!(f.validate().is_err());
+        let f = FaultConfig { count: 200_000, ..FaultConfig::legacy() };
+        assert!(f.validate().is_err());
+        // Disabled configs never reject (legacy must always validate).
+        let f = FaultConfig { window: 0, ..FaultConfig::legacy() };
+        assert!(f.validate().is_ok(), "window unchecked while disabled");
+    }
+
+    #[test]
+    fn target_names_round_trip() {
+        for t in FaultTarget::ALL {
+            assert_eq!(FaultTarget::parse(t.name()), Some(t));
+        }
+        assert_eq!(FaultTarget::parse("bogus"), None);
+    }
+}

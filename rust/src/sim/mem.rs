@@ -108,6 +108,17 @@ impl Memory {
         (0..n).map(|i| self.read_u32(addr + (i as u32) * 4)).collect()
     }
 
+    /// Flip one bit of one scratchpad word — the fault-injection hook
+    /// (`sim/fault`). `word` indexes 32-bit words from `SHARED_BASE`
+    /// and wraps modulo the scratchpad size, so any planned coordinate
+    /// is a valid fault site.
+    pub fn flip_shared_bit(&mut self, word: u32, bit: u32) {
+        let o = (word as usize % (map::SHARED_SIZE as usize / 4)) * 4;
+        let s = &mut self.shared[o..o + 4];
+        let v = u32::from_le_bytes([s[0], s[1], s[2], s[3]]) ^ (1 << (bit & 31));
+        s.copy_from_slice(&v.to_le_bytes());
+    }
+
     /// True if the address is in the shared-memory scratchpad.
     #[inline]
     pub fn is_shared(addr: u32) -> bool {
@@ -204,6 +215,20 @@ mod tests {
         }
         assert!(m.read_u16(u32::MAX).is_err());
         assert!(m.write_u8(u32::MAX, 1).is_err());
+    }
+
+    #[test]
+    fn flip_shared_bit_targets_one_word_and_wraps() {
+        let mut m = Memory::new();
+        m.write_u32(map::SHARED_BASE + 8, 0x55).unwrap();
+        m.flip_shared_bit(2, 3);
+        assert_eq!(m.read_u32(map::SHARED_BASE + 8).unwrap(), 0x5D);
+        m.flip_shared_bit(2, 3);
+        assert_eq!(m.read_u32(map::SHARED_BASE + 8).unwrap(), 0x55, "involution");
+        // Word index wraps modulo the scratchpad size.
+        m.flip_shared_bit(map::SHARED_SIZE / 4 + 2, 0);
+        assert_eq!(m.read_u32(map::SHARED_BASE + 8).unwrap(), 0x54);
+        assert_eq!(m.read_u32(map::SHARED_BASE + 12).unwrap(), 0, "neighbors untouched");
     }
 
     #[test]

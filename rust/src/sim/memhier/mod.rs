@@ -128,6 +128,14 @@ impl CoreMem {
         self.mshr.reset();
     }
 
+    /// Flip one bit of one L1 tag entry — the fault-injection hook
+    /// (`sim/fault`). Returns false when the entry was invalid. Tags
+    /// are timing-only (data lives in the flat `Memory`), so this can
+    /// shift hit/miss behavior but never corrupt data.
+    pub fn corrupt_l1_tag(&mut self, entry: u32, bit: u32) -> bool {
+        self.l1.corrupt(entry, bit)
+    }
+
     /// Timing for one warp global-memory access issued at `now`:
     /// coalesce the active lanes into distinct L1 lines, walk each line
     /// through L1 → MSHR → L2 → DRAM, and return the retire latency
@@ -334,6 +342,21 @@ mod tests {
         cm.warp_access(&lat, &addrs, 0xFF, false, 0, &mut shared, &mut m);
         assert_eq!(m.mem_replays, 7);
         assert_eq!(m.dcache_misses, 8);
+    }
+
+    #[test]
+    fn corrupt_l1_tag_reaches_the_private_tag_store() {
+        let cfg = MemHierConfig::legacy();
+        let mut cm = CoreMem::new(&l1_cfg(), &cfg);
+        let mut shared = SharedMem::new(&cfg);
+        let mut m = Metrics::default();
+        assert!(!cm.corrupt_l1_tag(0, 0), "cold cache: nothing to corrupt");
+        access(&mut cm, &mut shared, &mut m, 0x1000, 0); // fill
+        assert_eq!(access(&mut cm, &mut shared, &mut m, 0x1000, 10), 4, "hit");
+        // 0x1000 with 64 B lines, 4 sets -> line 64, set 0; entry 0 is
+        // (set 0, way 0), where the LRU fill landed.
+        assert!(cm.corrupt_l1_tag(0, 0));
+        assert_eq!(access(&mut cm, &mut shared, &mut m, 0x1000, 20), 50, "tag flip => miss");
     }
 
     #[test]

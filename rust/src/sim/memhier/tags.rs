@@ -72,6 +72,23 @@ impl TagArray {
         (false, evicted_dirty)
     }
 
+    /// Flip one bit of one tag entry — the fault-injection hook
+    /// (`sim/fault`). `entry` wraps modulo the array size. Returns
+    /// false when the entry held no valid tag (the flip had nothing to
+    /// land on). Tags are timing-only state (data lives in the flat
+    /// `Memory`), so a corrupted tag perturbs hit/miss timing but can
+    /// never corrupt data — by construction, never an SDC.
+    pub fn corrupt(&mut self, entry: u32, bit: u32) -> bool {
+        let i = entry as usize % self.tags.len();
+        match self.tags[i] {
+            Some(t) => {
+                self.tags[i] = Some(t ^ (1 << (bit & 31)));
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Non-mutating presence check (no LRU refresh, no fill).
     pub fn probe(&self, line: u32) -> bool {
         let set = line as usize % self.sets;
@@ -156,6 +173,22 @@ mod tests {
         t.access_line(4, false);
         assert!(!t.probe(0));
         assert!(t.probe(2));
+    }
+
+    #[test]
+    fn corrupt_flips_a_valid_tag_and_skips_invalid_entries() {
+        let mut t = tiny();
+        assert!(!t.corrupt(0, 0), "invalid entry: nothing to flip");
+        t.access_line(0, false); // fill set 0, way 0 with tag 0
+        assert!(t.probe(0));
+        // Entry 0 is (set 0, way 0); flipping tag bit 0 turns tag 0
+        // into tag 1, i.e. line 2 under this 2-set geometry.
+        assert!(t.corrupt(0, 0));
+        assert!(!t.probe(0), "original line no longer matches");
+        assert!(t.probe(2), "corrupted tag aliases another line");
+        // Entry index wraps modulo sets*ways (4 here).
+        assert!(t.corrupt(4, 0));
+        assert!(t.probe(0), "wrap hits entry 0 again, undoing the flip");
     }
 
     #[test]

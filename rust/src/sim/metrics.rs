@@ -1,6 +1,7 @@
 //! Per-core performance counters. IPC — the paper's Fig 5 metric — is
 //! retired warp-instructions / cycles.
 
+use super::fault::FaultTarget;
 use super::fu::FuKind;
 
 /// Counter block, reset per kernel launch.
@@ -86,6 +87,12 @@ pub struct Metrics {
 
     // Crossbar (merged-warp collectives).
     pub crossbar_hops: u64,
+
+    // Fault injection (`sim/fault`; all zero under the legacy
+    // no-injection default), indexed by `FaultTarget as usize`
+    // ([reg, pred, smem, l1tag]).
+    /// Bit flips actually landed per target kind.
+    pub faults_applied: [u64; FaultTarget::COUNT],
 
     // Operand collector (`sim/opc`; all zero under the legacy free
     // model).
@@ -183,6 +190,7 @@ impl Metrics {
             dram_busy_cycles,
             dram_wait_cycles,
             crossbar_hops,
+            faults_applied,
             opc_bank_busy,
         } = o;
         self.cycles = self.cycles.max(cycles);
@@ -221,6 +229,9 @@ impl Metrics {
         self.dram_busy_cycles += dram_busy_cycles;
         self.dram_wait_cycles += dram_wait_cycles;
         self.crossbar_hops += crossbar_hops;
+        for k in 0..FaultTarget::COUNT {
+            self.faults_applied[k] += faults_applied[k];
+        }
         for (mine, theirs) in self.opc_bank_busy.iter_mut().zip(opc_bank_busy) {
             *mine += theirs;
         }
@@ -261,6 +272,15 @@ impl Metrics {
                 self.stall_operand,
                 self.stall_wb_port,
                 self.opc_bank_busy.iter().sum::<u64>(),
+            ));
+        }
+        if self.faults_applied.iter().sum::<u64>() > 0 {
+            s.push_str(&format!(
+                " faults[reg={} pred={} smem={} l1tag={}]",
+                self.faults_applied[FaultTarget::RegWord as usize],
+                self.faults_applied[FaultTarget::PredBit as usize],
+                self.faults_applied[FaultTarget::SmemWord as usize],
+                self.faults_applied[FaultTarget::L1Tag as usize],
             ));
         }
         if self.l2_hits + self.l2_misses > 0 {
@@ -329,6 +349,18 @@ mod tests {
         assert_eq!(a.opc_bank_busy[0], 13);
         assert_eq!(a.opc_bank_busy[2], 4);
         assert_eq!(a.opc_bank_busy[31], 1, "every bank slot aggregates");
+    }
+
+    #[test]
+    fn fault_counters_merge_and_surface_in_summary() {
+        let mut a = Metrics::default();
+        assert!(!a.summary().contains("faults["), "no fault tail under legacy runs");
+        a.faults_applied = [1, 0, 2, 0];
+        let b = Metrics { faults_applied: [4, 1, 0, 3], ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.faults_applied, [5, 1, 2, 3], "elementwise add per target");
+        let s = a.summary();
+        assert!(s.contains("faults[reg=5 pred=1 smem=2 l1tag=3]"), "{s}");
     }
 
     #[test]

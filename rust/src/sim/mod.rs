@@ -23,6 +23,7 @@
 
 pub mod config;
 pub mod core;
+pub mod fault;
 pub mod fu;
 pub mod mem;
 pub mod memhier;
@@ -40,8 +41,9 @@ pub mod exec {
     pub mod warp_ops;
 }
 
-pub use self::core::{Core, SimError};
+pub use self::core::{Core, CoreError, SimError};
 pub use config::{EngineMode, FuConfig, Latencies, MemHierConfig, OpcConfig, SimConfig};
+pub use fault::{FaultConfig, FaultEvent, FaultPlan, FaultTarget};
 pub use fu::{FuKind, FuPool};
 pub use mem::{DCache, Memory};
 pub use memhier::SharedMem;
@@ -114,12 +116,15 @@ impl Gpu {
     /// spawned core-locally). Cores issue in core-id order, so their
     /// claims on the shared L2/DRAM state are deterministic and
     /// identical under both engines. Returns true while any core is
-    /// running.
-    pub fn step(&mut self) -> Result<bool, SimError> {
+    /// running. Errors are attributed to the raising core
+    /// ([`CoreError`]), so multi-core batch reports can name it.
+    pub fn step(&mut self) -> Result<bool, CoreError> {
         let mut busy = false;
         for c in &mut self.cores {
             if c.busy() {
-                busy |= c.step_one_cycle(&mut self.mem, &mut self.memsys)?;
+                busy |= c
+                    .step_one_cycle(&mut self.mem, &mut self.memsys)
+                    .map_err(|err| CoreError { core: c.core_id, err })?;
             }
         }
         if busy {
@@ -128,9 +133,16 @@ impl Gpu {
         Ok(busy)
     }
 
+    /// GPU-level errors (the run-loop timeout) name the lowest
+    /// still-busy core — the one that kept the clock alive.
+    fn attribute(&self, err: SimError) -> CoreError {
+        let core = self.cores.iter().find(|c| c.busy()).map(|c| c.core_id).unwrap_or(0);
+        CoreError { core, err }
+    }
+
     /// Run to completion (all warps halted) with a cycle cap, honoring
     /// the configured engine.
-    pub fn run(&mut self, max_cycles: u64) -> Result<(), SimError> {
+    pub fn run(&mut self, max_cycles: u64) -> Result<(), CoreError> {
         match self.engine {
             config::EngineMode::Reference => self.run_reference(max_cycles),
             config::EngineMode::FastForward => self.run_fast(max_cycles),
@@ -138,10 +150,10 @@ impl Gpu {
     }
 
     /// Reference engine: lockstep, one cycle at a time.
-    pub fn run_reference(&mut self, max_cycles: u64) -> Result<(), SimError> {
+    pub fn run_reference(&mut self, max_cycles: u64) -> Result<(), CoreError> {
         while self.step()? {
             if self.cycles >= max_cycles {
-                return Err(SimError::Timeout { cycles: max_cycles });
+                return Err(self.attribute(SimError::Timeout { cycles: max_cycles }));
             }
         }
         Ok(())
@@ -155,10 +167,10 @@ impl Gpu {
     /// functionally inert and can be skipped wholesale; each core
     /// bulk-charges its own stall counter for the window. `Metrics` are
     /// bit-identical to [`Gpu::run_reference`].
-    pub fn run_fast(&mut self, max_cycles: u64) -> Result<(), SimError> {
+    pub fn run_fast(&mut self, max_cycles: u64) -> Result<(), CoreError> {
         while self.step()? {
             if self.cycles >= max_cycles {
-                return Err(SimError::Timeout { cycles: max_cycles });
+                return Err(self.attribute(SimError::Timeout { cycles: max_cycles }));
             }
             let mut next = u64::MAX;
             for c in &self.cores {

@@ -81,6 +81,19 @@ impl RegFile {
         self.data[i] = v;
     }
 
+    /// Flip one bit of one lane's copy of a register — the fault-
+    /// injection hook (`sim/fault`). x0 stays hardwired to zero: a
+    /// particle strike on a non-existent flop is architecturally
+    /// invisible, so the flip is a no-op there.
+    #[inline]
+    pub fn flip_bit(&mut self, warp: usize, reg: u8, lane: usize, bit: u32) {
+        if reg == 0 {
+            return;
+        }
+        let i = self.idx(warp, reg, lane);
+        self.data[i] ^= 1 << (bit & 31);
+    }
+
     /// Write lanes selected by `mask`.
     #[inline]
     pub fn write_masked(&mut self, warp: usize, reg: u8, mask: u32, vals: &[u32]) {
@@ -131,6 +144,21 @@ mod tests {
     fn one_bank_per_warp() {
         assert_eq!(RegFile::new(4, 8).banks(), 4);
         assert_eq!(RegFile::new(1, 32).banks(), 1);
+    }
+
+    #[test]
+    fn flip_bit_xors_one_lane_and_spares_x0() {
+        let mut rf = RegFile::new(2, 8);
+        rf.write(1, 5, 3, 0b100);
+        rf.flip_bit(1, 5, 3, 0);
+        assert_eq!(rf.read(1, 5, 3), 0b101);
+        rf.flip_bit(1, 5, 3, 0);
+        assert_eq!(rf.read(1, 5, 3), 0b100, "flip is an involution");
+        assert_eq!(rf.read(1, 5, 2), 0, "other lanes untouched");
+        rf.flip_bit(1, 5, 3, 35);
+        assert_eq!(rf.read(1, 5, 3), 0b1100, "bit index wraps mod 32");
+        rf.flip_bit(0, 0, 0, 7);
+        assert_eq!(rf.read(0, 0, 0), 0, "x0 immune to faults");
     }
 
     #[test]

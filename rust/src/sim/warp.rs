@@ -54,6 +54,14 @@ impl Warp {
         self.tmask.trailing_zeros() as usize
     }
 
+    /// Flip one lane bit of the thread mask — the fault-injection hook
+    /// (`sim/fault`). The result stays within the machine's lane width;
+    /// a flip CAN zero the mask of a running warp, which the core
+    /// detects as `SimError::CorruptState` at the next issue attempt.
+    pub fn flip_mask_bit(&mut self, bit: u32, nt: usize) {
+        self.tmask = (self.tmask ^ (1 << (bit as usize % nt))) & full_mask(nt);
+    }
+
     /// Apply `vx_split` with the given per-lane taken mask. Always
     /// pushes an entry (degenerate when non-divergent) and returns the
     /// token (stack depth before push). Execution continues on the
@@ -181,6 +189,22 @@ mod tests {
         w.pc = 0x1014;
         assert_eq!(w.join(), 0x1018);
         assert_eq!(w.tmask, 0xFF);
+    }
+
+    #[test]
+    fn flip_mask_bit_toggles_within_lane_width() {
+        let mut w = active_warp(8);
+        w.flip_mask_bit(2, 8);
+        assert_eq!(w.tmask, 0xFB);
+        w.flip_mask_bit(2, 8);
+        assert_eq!(w.tmask, 0xFF, "flip is an involution");
+        w.flip_mask_bit(10, 8);
+        assert_eq!(w.tmask, 0xFB, "lane index wraps mod nt");
+        // A single-lane warp can be zeroed outright.
+        let mut w = active_warp(1);
+        w.tmask = 1;
+        w.flip_mask_bit(0, 1);
+        assert_eq!(w.tmask, 0, "flip can empty a running warp's mask");
     }
 
     #[test]

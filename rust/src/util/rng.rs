@@ -59,6 +59,24 @@ impl XorShift {
     }
 }
 
+/// One splitmix64 step — a strong 64-bit mixer. Used to derive
+/// decorrelated per-item seeds from a base seed: adjacent xorshift
+/// streams (`seed`, `seed+1`, …) start highly correlated, while
+/// splitmix output does not.
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Seed for the `index`-th item of a campaign keyed by `base`.
+/// Deterministic, and never 0 (0 would collapse to `XorShift::new`'s
+/// floor and collide with seed 1).
+pub fn derive_seed(base: u64, index: u64) -> u64 {
+    splitmix64(base ^ splitmix64(index)).max(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -79,6 +97,19 @@ mod tests {
             assert!(r.below(13) < 13);
             let v = r.range_i32(-5, 6);
             assert!((-5..6).contains(&v));
+        }
+    }
+
+    #[test]
+    fn derive_seed_is_deterministic_decorrelated_and_nonzero() {
+        assert_eq!(derive_seed(42, 7), derive_seed(42, 7));
+        assert_ne!(derive_seed(42, 7), derive_seed(42, 8));
+        assert_ne!(derive_seed(42, 7), derive_seed(43, 7));
+        // Adjacent indices must not yield adjacent seeds.
+        let d = derive_seed(1, 1).abs_diff(derive_seed(1, 2));
+        assert!(d > 1 << 20, "adjacent campaign seeds too close: {d}");
+        for i in 0..64 {
+            assert_ne!(derive_seed(0, i), 0);
         }
     }
 

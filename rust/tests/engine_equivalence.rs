@@ -22,7 +22,10 @@ use vortex_warp::isa::asm::regs::*;
 use vortex_warp::isa::{csr, Asm};
 use vortex_warp::kernels;
 use vortex_warp::sim::config::{CacheConfig, SchedPolicy};
-use vortex_warp::sim::{EngineMode, FuConfig, Gpu, MemHierConfig, OpcConfig, SimConfig, SimError};
+use vortex_warp::sim::{
+    CoreError, EngineMode, FaultConfig, FaultTarget, FuConfig, Gpu, MemHierConfig, OpcConfig,
+    SimConfig, SimError,
+};
 
 fn reference(base: &SimConfig) -> SimConfig {
     SimConfig { engine: EngineMode::Reference, ..base.clone() }
@@ -197,6 +200,25 @@ fn metrics_bit_identical_with_opc_fu_pools_and_memory_hierarchy() {
 }
 
 #[test]
+fn metrics_bit_identical_under_l1tag_fault_injection() {
+    // PR 6: fault injection must preserve engine equivalence. L1-tag
+    // flips are timing-only by construction (tags steer hit/miss, data
+    // lives in flat memory), so every kernel still produces correct
+    // outputs while the fault-perturbed miss pattern — and the
+    // `faults_applied` counters — must stay bit-identical across
+    // engines. Value-corrupting targets (reg/pred/smem) are pinned in
+    // `tests/fault.rs`, where golden-output equality cannot be assumed.
+    let mut cfg = hier(&SimConfig::paper());
+    cfg.fault = FaultConfig {
+        seed: 0xBAD_CAFE,
+        count: 8,
+        targets: vec![FaultTarget::L1Tag],
+        ..FaultConfig::legacy()
+    };
+    assert_equivalent_over_kernels(&cfg, "l1tag-inject");
+}
+
+#[test]
 fn metrics_bit_identical_on_two_cores() {
     let mut cfg = SimConfig::paper();
     cfg.num_cores = 2;
@@ -270,10 +292,13 @@ fn deadlock_detected_identically_by_both_engines() {
     let fast_err = run(&base);
     let ref_err = run(&reference(&base));
     match (&fast_err, &ref_err) {
-        (SimError::Deadlock { cycle: cf }, SimError::Deadlock { cycle: cr }) => {
+        (
+            CoreError { core: 0, err: SimError::Deadlock { cycle: cf } },
+            CoreError { core: 0, err: SimError::Deadlock { cycle: cr } },
+        ) => {
             assert_eq!(cf, cr, "deadlock cycle differs between engines");
         }
-        other => panic!("expected two deadlocks, got {other:?}"),
+        other => panic!("expected two deadlocks on core 0, got {other:?}"),
     }
 }
 
@@ -300,7 +325,10 @@ fn multicore_timeout_uses_gpu_level_clock() {
         let mut gpu = Gpu::new(&cfg);
         gpu.load_program(&prog);
         match gpu.run(10_000) {
-            Err(SimError::Timeout { cycles }) => assert_eq!(cycles, 10_000, "{engine:?}"),
+            Err(CoreError { core, err: SimError::Timeout { cycles } }) => {
+                assert_eq!(cycles, 10_000, "{engine:?}");
+                assert_eq!(core, 1, "{engine:?}: blame must land on the spinning core");
+            }
             other => panic!("{engine:?}: expected timeout, got {other:?}"),
         }
         assert!(

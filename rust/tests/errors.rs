@@ -1,13 +1,21 @@
-//! Dedicated error-path coverage (PR-3 satellite). The fatal
-//! `SimError` variants were previously only exercised incidentally;
-//! these tests pin the exact payloads (faulting PC, deadlock cycle,
-//! timeout cap, diagnostic text) under BOTH engines, so the
-//! fast-forward path can never fail differently from the reference
-//! path.
+//! Dedicated error-path coverage (PR-3 satellite, hardened in PR 6).
+//! The fatal `SimError` variants were previously only exercised
+//! incidentally; these tests pin the exact payloads (faulting PC,
+//! deadlock cycle, timeout cap, diagnostic text) under BOTH engines,
+//! so the fast-forward path can never fail differently from the
+//! reference path. PR 6 wraps every error in [`CoreError`] (which core
+//! raised it) and adds the coordinator's isolation layer: watchdog
+//! budgets, bounded retry, and per-launch panic containment.
 
+use vortex_warp::coordinator::dispatch::Solution;
+use vortex_warp::coordinator::{
+    launch_batch_isolated, launch_isolated, BatchJob, BatchPolicy, IsolationPolicy, LaunchError,
+};
 use vortex_warp::isa::asm::regs::*;
 use vortex_warp::isa::{csr, Asm, ShflMode, VoteMode};
-use vortex_warp::sim::{map, EngineMode, Gpu, SimConfig, SimError};
+use vortex_warp::prt::interp::Env;
+use vortex_warp::prt::kir::{BinOp, Expr as E, Kernel, ParamDir, Stmt};
+use vortex_warp::sim::{map, CoreError, EngineMode, Gpu, SimConfig, SimError};
 
 fn engines(base: &SimConfig) -> [SimConfig; 2] {
     [
@@ -16,10 +24,29 @@ fn engines(base: &SimConfig) -> [SimConfig; 2] {
     ]
 }
 
-fn run_err(cfg: &SimConfig, prog: &[vortex_warp::isa::Instr], max: u64) -> SimError {
+fn run_err(cfg: &SimConfig, prog: &[vortex_warp::isa::Instr], max: u64) -> CoreError {
     let mut gpu = Gpu::new(cfg);
     gpu.load_program(prog);
     gpu.run(max).expect_err("expected a fatal simulation error")
+}
+
+fn copy_kernel() -> Kernel {
+    Kernel::new("copy", 2, 32, 8)
+        .param("src", 64, ParamDir::In)
+        .param("dst", 64, ParamDir::Out)
+        .body(vec![Stmt::Store(
+            "dst",
+            E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx),
+            E::b(
+                BinOp::Mul,
+                E::load("src", E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx)),
+                E::c(2),
+            ),
+        )])
+}
+
+fn copy_inputs() -> Env {
+    Env::default().with("src", (0..64).collect())
 }
 
 #[test]
@@ -30,8 +57,34 @@ fn timeout_reports_the_exact_cycle_cap_on_both_engines() {
     let prog = a.finish();
     for cfg in engines(&SimConfig::paper()) {
         match run_err(&cfg, &prog, 5_000) {
-            SimError::Timeout { cycles } => assert_eq!(cycles, 5_000, "{:?}", cfg.engine),
-            other => panic!("{:?}: expected Timeout, got {other:?}", cfg.engine),
+            CoreError { core: 0, err: SimError::Timeout { cycles } } => {
+                assert_eq!(cycles, 5_000, "{:?}", cfg.engine)
+            }
+            other => panic!("{:?}: expected Timeout on core 0, got {other:?}", cfg.engine),
+        }
+    }
+}
+
+#[test]
+fn timeout_is_attributed_to_the_still_running_core() {
+    // Core 0 exits immediately; core 1 spins forever. The CoreError
+    // must blame the core that is actually stuck, not default to 0.
+    let mut a = Asm::new();
+    a.csrr(T0, csr::CSR_CORE_ID);
+    let done = a.label();
+    a.beq(T0, ZERO, done);
+    let top = a.here();
+    a.j(top);
+    a.bind(done);
+    a.ecall();
+    let prog = a.finish();
+    let base = SimConfig { num_cores: 2, ..SimConfig::paper() };
+    for cfg in engines(&base) {
+        match run_err(&cfg, &prog, 5_000) {
+            CoreError { core: 1, err: SimError::Timeout { cycles } } => {
+                assert_eq!(cycles, 5_000, "{:?}", cfg.engine)
+            }
+            other => panic!("{:?}: expected Timeout on core 1, got {other:?}", cfg.engine),
         }
     }
 }
@@ -48,7 +101,7 @@ fn barrier_deadlock_reports_the_same_cycle_on_both_engines() {
     let mut cycles = Vec::new();
     for cfg in engines(&SimConfig::paper()) {
         match run_err(&cfg, &prog, 100_000) {
-            SimError::Deadlock { cycle } => cycles.push(cycle),
+            CoreError { core: 0, err: SimError::Deadlock { cycle } } => cycles.push(cycle),
             other => panic!("{:?}: expected Deadlock, got {other:?}", cfg.engine),
         }
     }
@@ -71,7 +124,7 @@ fn divergent_branch_reports_the_faulting_pc() {
     let prog = a.finish();
     for cfg in engines(&SimConfig::paper()) {
         match run_err(&cfg, &prog, 100_000) {
-            SimError::DivergentBranch { pc } => {
+            CoreError { core: 0, err: SimError::DivergentBranch { pc } } => {
                 assert_eq!(pc, map::CODE_BASE + 8, "{:?}", cfg.engine);
             }
             other => panic!("{:?}: expected DivergentBranch, got {other:?}", cfg.engine),
@@ -112,7 +165,7 @@ fn baseline_hardware_rejects_every_warp_collective_with_pc_and_hint() {
         let expect_pc = if *name == "vx_tile" { map::CODE_BASE + 8 } else { map::CODE_BASE };
         for cfg in engines(&SimConfig::baseline()) {
             match run_err(&cfg, prog, 100_000) {
-                SimError::IllegalInstr { pc, what } => {
+                CoreError { core: 0, err: SimError::IllegalInstr { pc, what } } => {
                     assert_eq!(pc, expect_pc, "{name} under {:?}", cfg.engine);
                     assert!(what.contains(name), "{name}: {what}");
                     assert!(what.contains("SW solution"), "{name}: {what}");
@@ -132,10 +185,92 @@ fn jump_outside_the_program_is_a_bad_pc() {
     let prog = a.finish();
     for cfg in engines(&SimConfig::paper()) {
         match run_err(&cfg, &prog, 100_000) {
-            SimError::BadPc { pc } => assert_eq!(pc, 0, "{:?}", cfg.engine),
+            CoreError { core: 0, err: SimError::BadPc { pc } } => {
+                assert_eq!(pc, 0, "{:?}", cfg.engine)
+            }
             other => panic!("{:?}: expected BadPc, got {other:?}", cfg.engine),
         }
     }
+}
+
+#[test]
+fn watchdog_timeout_is_retried_within_bounds_on_both_engines() {
+    // The copy kernel cannot finish in 50 cycles: the watchdog fires,
+    // the bounded retry replays it (timeouts are in the retryable
+    // class), and the final report carries the exact budget with
+    // attempts == retries + 1.
+    for cfg in engines(&SimConfig::paper()) {
+        let job = BatchJob::new("wd", Solution::Hw, copy_kernel(), cfg.clone(), copy_inputs());
+        let policy = IsolationPolicy { max_cycles: 50, retries: 2 };
+        let report = launch_isolated(&job, &policy);
+        assert_eq!(report.attempts, 3, "{:?}", cfg.engine);
+        match report.result {
+            Err(LaunchError::Sim(CoreError { err: SimError::Timeout { cycles }, .. })) => {
+                assert_eq!(cycles, 50, "{:?}", cfg.engine)
+            }
+            other => panic!("{:?}: expected watchdog Timeout, got {other:?}", cfg.engine),
+        }
+    }
+}
+
+#[test]
+fn one_poisoned_launch_does_not_suppress_its_siblings() {
+    // Job 1 panics inside Core::new (issue_width = 0 fails config
+    // validation after codegen succeeds). Before PR 6 the panic killed
+    // the batch worker and took the whole batch down; now it comes
+    // back as an Err(Panic) report while both siblings complete.
+    for cfg in engines(&SimConfig::paper()) {
+        let mut poisoned = cfg.clone();
+        poisoned.fu.issue_width = 0;
+        let jobs = vec![
+            BatchJob::new("good-0", Solution::Hw, copy_kernel(), cfg.clone(), copy_inputs()),
+            BatchJob::new("poisoned", Solution::Hw, copy_kernel(), poisoned, copy_inputs()),
+            BatchJob::new("good-1", Solution::Sw, copy_kernel(), cfg.clone(), copy_inputs()),
+        ];
+        let reports = launch_batch_isolated(&jobs, &BatchPolicy::default());
+        assert_eq!(reports.len(), 3);
+        assert!(reports[0].result.is_ok(), "{:?}: {:?}", cfg.engine, reports[0].result);
+        assert!(reports[2].result.is_ok(), "{:?}: {:?}", cfg.engine, reports[2].result);
+        match &reports[1].result {
+            Err(LaunchError::Panic(msg)) => {
+                assert!(msg.contains("invalid SimConfig"), "{:?}: {msg}", cfg.engine)
+            }
+            other => panic!("{:?}: expected Panic, got {other:?}", cfg.engine),
+        }
+        // Default policy: no retries, so the panic burned one attempt.
+        assert_eq!(reports[1].attempts, 1);
+        assert_eq!(reports[1].label, "poisoned");
+    }
+}
+
+#[test]
+fn deterministic_errors_are_never_retried() {
+    // A deadlock is deterministic: retrying would fail identically, so
+    // the isolation layer must report it first try even with a retry
+    // budget available.
+    let mut a = Asm::new();
+    a.li(T0, 0);
+    a.li(T1, 4);
+    a.bar(T0, T1);
+    a.ecall();
+    let prog = a.finish();
+    for cfg in engines(&SimConfig::paper()) {
+        // Sanity: raw run deadlocks...
+        let raw = run_err(&cfg, &prog, 100_000);
+        assert!(matches!(raw.err, SimError::Deadlock { .. }), "{raw:?}");
+    }
+    // ...and through the coordinator a deterministic failure (here a
+    // BadInput: missing `src`) consumes exactly one attempt.
+    let job = BatchJob::new(
+        "missing-input",
+        Solution::Hw,
+        copy_kernel(),
+        SimConfig::paper(),
+        Env::default(),
+    );
+    let report = launch_isolated(&job, &IsolationPolicy { max_cycles: 1_000_000, retries: 5 });
+    assert_eq!(report.attempts, 1, "deterministic errors must not burn retries");
+    assert!(matches!(report.result, Err(LaunchError::BadInput(_))), "{:?}", report.result);
 }
 
 #[test]
@@ -146,4 +281,18 @@ fn error_display_is_actionable() {
     assert!(e.to_string().contains("42"), "{e}");
     let e = SimError::Timeout { cycles: 7 };
     assert!(e.to_string().contains("7"), "{e}");
+    let e = SimError::CorruptState { cycle: 9, what: "empty thread mask".into() };
+    assert!(e.to_string().contains("empty thread mask"), "{e}");
+    assert_eq!(e.variant_name(), "CorruptState");
+}
+
+#[test]
+fn core_error_names_the_core_and_chains_its_source() {
+    use std::error::Error;
+    let e = CoreError { core: 3, err: SimError::Timeout { cycles: 99 } };
+    let text = e.to_string();
+    assert!(text.starts_with("core 3:"), "{text}");
+    assert!(text.contains("99"), "{text}");
+    let src = e.source().expect("CoreError must expose its SimError as source");
+    assert!(src.to_string().contains("99"), "{src}");
 }

@@ -1,0 +1,329 @@
+//! Fault-injection integration suite (PR 6).
+//!
+//! Pins the three contracts the `sim/fault` subsystem makes:
+//!
+//! 1. **Determinism** — the same `--inject` seed yields the same fault
+//!    plan, the same per-launch outcomes, and a byte-identical campaign
+//!    report on the FastForward and Reference engines and across any
+//!    worker-thread count.
+//! 2. **Legacy opacity** — `count = 0` (the `FaultConfig::legacy()`
+//!    default, whatever the seed) leaves every metric byte-identical to
+//!    the uninstrumented simulator.
+//! 3. **Classification physics** — flips into dead registers are always
+//!    masked; scratchpad flips between a store and its readback corrupt
+//!    the same bit on both engines; an empty thread mask on an active
+//!    warp is detected as `CorruptState`; L1 tag flips are timing-only
+//!    and can never be SDC.
+
+use vortex_warp::coordinator::campaign::{run_campaign, CampaignSpec, OutcomeClass};
+use vortex_warp::coordinator::dispatch::{dispatch, Solution};
+use vortex_warp::isa::asm::regs::*;
+use vortex_warp::isa::Asm;
+use vortex_warp::kernels;
+use vortex_warp::sim::{
+    map, CoreError, EngineMode, FaultConfig, FaultEvent, FaultPlan, FaultTarget, Gpu, SimConfig,
+    SimError,
+};
+use vortex_warp::util::prop::run_prop;
+
+fn engines(base: &SimConfig) -> [SimConfig; 2] {
+    [
+        SimConfig { engine: EngineMode::FastForward, ..base.clone() },
+        SimConfig { engine: EngineMode::Reference, ..base.clone() },
+    ]
+}
+
+/// An explicit single-event injection config.
+fn one_shot(ev: FaultEvent) -> FaultConfig {
+    FaultConfig { explicit: vec![ev], ..FaultConfig::legacy() }
+}
+
+#[test]
+fn fault_plans_are_reproducible_from_the_config_alone() {
+    let cfg = SimConfig {
+        fault: FaultConfig { seed: 0xFEED, count: 16, ..FaultConfig::legacy() },
+        ..SimConfig::paper()
+    };
+    let a = FaultPlan::from_config(&cfg);
+    let b = FaultPlan::from_config(&cfg);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.events.len(), 16);
+}
+
+#[test]
+fn disabled_injection_is_byte_identical_to_legacy_whatever_the_seed() {
+    // `count = 0` must be a perfect no-op: same outputs, same metrics,
+    // bit for bit — the acceptance bar for `FaultConfig::legacy()`.
+    let armed_but_empty = FaultConfig { seed: 0xDEAD_BEEF, count: 0, ..FaultConfig::legacy() };
+    for base in engines(&SimConfig::paper()) {
+        let clean = SimConfig { fault: FaultConfig::legacy(), ..base.clone() };
+        let seeded = SimConfig { fault: armed_but_empty.clone(), ..base.clone() };
+        for b in kernels::all() {
+            for sol in [Solution::Hw, Solution::Sw] {
+                let want = dispatch(sol, &b.kernel, &clean, &b.inputs).expect("clean");
+                let got = dispatch(sol, &b.kernel, &seeded, &b.inputs).expect("seeded");
+                assert_eq!(
+                    want.metrics, got.metrics,
+                    "{}[{}] {:?}: disabled injection perturbed metrics",
+                    b.name,
+                    sol.name(),
+                    base.engine
+                );
+                for name in &b.outputs {
+                    assert_eq!(want.env.get(name), got.env.get(name), "{}", b.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn engines_agree_launch_by_launch_under_full_target_injection() {
+    // Injection over every target class: whatever each seed does —
+    // complete cleanly, corrupt outputs, or die with a SimError — both
+    // engines must tell exactly the same story.
+    for seed in [1u64, 42, 0xC0FFEE] {
+        let fault = FaultConfig { seed, count: 3, window: 2_048, ..FaultConfig::legacy() };
+        for b in kernels::all().into_iter().take(2) {
+            let [ff, re] = engines(&SimConfig::paper());
+            let fast = dispatch(
+                Solution::Hw,
+                &b.kernel,
+                &SimConfig { fault: fault.clone(), ..ff },
+                &b.inputs,
+            );
+            let slow = dispatch(
+                Solution::Hw,
+                &b.kernel,
+                &SimConfig { fault: fault.clone(), ..re },
+                &b.inputs,
+            );
+            match (&fast, &slow) {
+                (Ok(f), Ok(r)) => {
+                    assert_eq!(f.metrics, r.metrics, "{} seed={seed}", b.name);
+                    for name in &b.outputs {
+                        assert_eq!(f.env.get(name), r.env.get(name), "{} seed={seed}", b.name);
+                    }
+                }
+                (Err(f), Err(r)) => assert_eq!(f, r, "{} seed={seed}", b.name),
+                other => panic!("{} seed={seed}: engines disagree: {other:?}", b.name),
+            }
+        }
+    }
+}
+
+#[test]
+fn campaign_reports_are_byte_identical_across_engines_and_thread_counts() {
+    // The ISSUE acceptance bar: same seed -> byte-identical campaign
+    // report (histogram AND per-launch classifications) on FastForward
+    // vs Reference and across --threads 1 vs --threads 8.
+    let b = &kernels::all()[0];
+    let mut reports = Vec::new();
+    for engine in [EngineMode::FastForward, EngineMode::Reference] {
+        for threads in [1usize, 8] {
+            let spec = CampaignSpec {
+                label: "equiv".into(),
+                solution: Solution::Hw,
+                kernel: b.kernel.clone(),
+                inputs: b.inputs.clone(),
+                base: SimConfig { engine, ..SimConfig::paper() },
+                inject: FaultConfig {
+                    seed: 20_260_808,
+                    count: 2,
+                    window: 1_024,
+                    ..FaultConfig::legacy()
+                },
+                launches: 24,
+                threads,
+                budget: 0,
+                retries: 0,
+            };
+            let report = run_campaign(&spec).expect("campaign");
+            assert_eq!(report.histogram.values().sum::<u64>(), 24, "{engine:?}/{threads}");
+            reports.push((engine, threads, report.to_json()));
+        }
+    }
+    let (_, _, want) = &reports[0];
+    for (engine, threads, got) in &reports[1..] {
+        assert_eq!(
+            got, want,
+            "campaign report differs under {engine:?}/threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn single_bit_faults_into_dead_registers_are_always_masked() {
+    // Property: the program computes through T-registers only, so
+    // S2..S11 (x18..x27) are dead — never read. A flip anywhere in
+    // them, on any lane, at any point in the run, must be invisible:
+    // same output word, same cycle count, on both engines.
+    let mut a = Asm::new();
+    a.li(A0, (map::GLOBAL_BASE + 0x100) as i32);
+    a.li(T0, 0);
+    for i in 0..64 {
+        a.addi(T0, T0, (i % 7 + 1) as i32);
+    }
+    a.sw(T0, A0, 0);
+    a.ecall();
+    let prog = a.finish();
+
+    let run_with = |engine: EngineMode, fault: FaultConfig| -> (u32, u64) {
+        let cfg = SimConfig { engine, fault, ..SimConfig::paper() };
+        let mut gpu = Gpu::new(&cfg);
+        gpu.load_program(&prog);
+        gpu.run(1_000_000).expect("dead-register flips cannot be fatal");
+        (gpu.mem.read_u32(map::GLOBAL_BASE + 0x100).unwrap(), gpu.cores[0].metrics.cycles)
+    };
+    let golden = [
+        run_with(EngineMode::FastForward, FaultConfig::legacy()),
+        run_with(EngineMode::Reference, FaultConfig::legacy()),
+    ];
+
+    run_prop(
+        "dead-register single-bit faults are masked",
+        0xD0A_11E5,
+        40,
+        |rng| FaultEvent {
+            cycle: 1 + rng.below(300) as u64,
+            core: 0,
+            warp: 0,
+            target: FaultTarget::RegWord,
+            loc: 18 + rng.below(10), // s2..s11
+            lane: rng.below(8),
+            bit: rng.below(32),
+        },
+        |ev| {
+            for (i, engine) in [EngineMode::FastForward, EngineMode::Reference]
+                .into_iter()
+                .enumerate()
+            {
+                let got = run_with(engine, one_shot(*ev));
+                if got != golden[i] {
+                    return Err(format!(
+                        "{engine:?}: dead flip was observable: {got:?} != {:?}",
+                        golden[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn scratchpad_fault_between_store_and_readback_is_the_same_sdc_on_both_engines() {
+    // Store 0x55 to shared word 0, stall ~256 cycles in an addi chain,
+    // read it back to global memory. A bit-3 flip at cycle 150 lands
+    // squarely inside the window, so both engines must read back
+    // 0x55 ^ 0x8 = 0x5D — a deterministic, engine-identical SDC.
+    let mut a = Asm::new();
+    a.li(A0, map::SHARED_BASE as i32);
+    a.li(T0, 0x55);
+    a.sw(T0, A0, 0);
+    for _ in 0..64 {
+        a.addi(T1, T1, 1);
+    }
+    a.lw(T2, A0, 0);
+    a.li(A1, (map::GLOBAL_BASE + 0x200) as i32);
+    a.sw(T2, A1, 0);
+    a.ecall();
+    let prog = a.finish();
+
+    let flip = FaultEvent {
+        cycle: 150,
+        core: 0,
+        warp: 0,
+        target: FaultTarget::SmemWord,
+        loc: 0,
+        lane: 0,
+        bit: 3,
+    };
+    let mut metrics = Vec::new();
+    for cfg in engines(&SimConfig::paper()) {
+        let cfg = SimConfig { fault: one_shot(flip), ..cfg };
+        let mut gpu = Gpu::new(&cfg);
+        gpu.load_program(&prog);
+        gpu.run(1_000_000).expect("smem flip is not fatal");
+        assert_eq!(
+            gpu.mem.read_u32(map::GLOBAL_BASE + 0x200).unwrap(),
+            0x5D,
+            "{:?}: corrupted readback must expose exactly bit 3",
+            cfg.engine
+        );
+        metrics.push(gpu.cores[0].metrics.clone());
+    }
+    assert_eq!(metrics[0], metrics[1], "SDC path must stay engine-identical");
+    assert_eq!(metrics[0].faults_applied[FaultTarget::SmemWord as usize], 1);
+}
+
+#[test]
+fn predicate_fault_emptying_the_mask_is_detected_as_corrupt_state() {
+    // One warp, one lane: flipping predicate bit 0 mid-run zeroes the
+    // thread mask of an Active warp — a state the ISA cannot reach
+    // (vx_tmc/vx_pred park empty warps as Inactive). The issue stage
+    // must detect it as CorruptState at the same cycle on both engines.
+    let mut a = Asm::new();
+    for _ in 0..64 {
+        a.addi(T0, T0, 1);
+    }
+    a.ecall();
+    let prog = a.finish();
+
+    let flip = FaultEvent {
+        cycle: 50,
+        core: 0,
+        warp: 0,
+        target: FaultTarget::PredBit,
+        loc: 0,
+        lane: 0,
+        bit: 0,
+    };
+    let mut cfg = SimConfig::paper();
+    cfg.nt = 1;
+    cfg.nw = 1;
+    let mut errs = Vec::new();
+    for cfg in engines(&cfg) {
+        let cfg = SimConfig { fault: one_shot(flip), ..cfg };
+        let mut gpu = Gpu::new(&cfg);
+        gpu.load_program(&prog);
+        let err = gpu.run(1_000_000).expect_err("an empty active mask must be fatal");
+        assert!(
+            matches!(err, CoreError { core: 0, err: SimError::CorruptState { .. } }),
+            "{:?}: {err:?}",
+            cfg.engine
+        );
+        errs.push(err);
+    }
+    assert_eq!(errs[0], errs[1], "detection cycle must not depend on the engine");
+}
+
+#[test]
+fn l1_tag_faults_are_timing_only_and_never_sdc() {
+    // Tags steer hit/miss; data lives in flat memory. A whole campaign
+    // restricted to L1Tag flips must therefore classify every single
+    // launch as masked — the subsystem's no-SDC-by-construction target.
+    let b = &kernels::all()[0];
+    let spec = CampaignSpec {
+        label: "l1tag".into(),
+        solution: Solution::Hw,
+        kernel: b.kernel.clone(),
+        inputs: b.inputs.clone(),
+        base: SimConfig::paper(),
+        inject: FaultConfig {
+            seed: 7,
+            count: 4,
+            window: 1_024,
+            targets: vec![FaultTarget::L1Tag],
+            ..FaultConfig::legacy()
+        },
+        launches: 8,
+        threads: 2,
+        budget: 0,
+        retries: 0,
+    };
+    let report = run_campaign(&spec).expect("campaign");
+    assert_eq!(report.histogram["masked"], 8, "{:?}", report.histogram);
+    assert_eq!(report.histogram["sdc"], 0);
+    assert!(report.verdicts.iter().all(|v| v.class == OutcomeClass::Masked));
+}

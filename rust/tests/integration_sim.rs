@@ -20,7 +20,9 @@ fn run_err(cfg: SimConfig, build: impl FnOnce(&mut Asm)) -> SimError {
     let prog = a.finish();
     let mut gpu = Gpu::new(&cfg);
     gpu.load_program(&prog);
-    gpu.run(1_000_000).expect_err("expected failure")
+    // Single-core tests only care about the underlying SimError, not
+    // the CoreError attribution wrapper.
+    gpu.run(1_000_000).expect_err("expected failure").err
 }
 
 #[test]
@@ -404,7 +406,8 @@ fn timeout_detected() {
     let prog = a.finish();
     let mut gpu = Gpu::new(&SimConfig::paper());
     gpu.load_program(&prog);
-    assert!(matches!(gpu.run(1000), Err(SimError::Timeout { .. })));
+    let err = gpu.run(1000).expect_err("timeout").err;
+    assert!(matches!(err, SimError::Timeout { .. }), "{err:?}");
 }
 
 // ---------------------------------------------------------------------
@@ -513,7 +516,7 @@ fn barrier_deadlock_detected() {
     let prog = a.finish();
     let mut gpu = Gpu::new(&SimConfig::paper());
     gpu.load_program(&prog);
-    let err = gpu.run(100_000).expect_err("deadlock");
+    let err = gpu.run(100_000).expect_err("deadlock").err;
     assert!(
         matches!(err, SimError::Deadlock { .. } | SimError::Timeout { .. }),
         "{err:?}"
