@@ -25,6 +25,7 @@ SCENARIOS = [
     ("memhier", "memhier (gather + full hierarchy)"),
     ("fu", "fu (bounded units)"),
     ("opc", "opc (operand collector, dual issue)"),
+    ("telemetry", "telemetry (sampled interval 64)"),
 ]
 
 

@@ -1,0 +1,140 @@
+#!/usr/bin/env python3
+"""Gate for the PR-7 telemetry/profiling smoke run.
+
+Usage:
+    profile_smoke_check.py FIXTURE PERFETTO_FAST PERFETTO_REF JSONL
+
+Checks, in order:
+
+1. **Engine equivalence** — the Perfetto trace exported from the
+   fast-forward run is byte-identical to the one from the reference
+   run. Telemetry rides the engine-equivalence contract: skip windows
+   must attribute cycles exactly like the one-cycle walk.
+2. **Trace well-formedness** — the export parses as Chrome trace_event
+   JSON: a ``traceEvents`` list of ``M`` (metadata) and ``X``
+   (complete-span) events with the fields ui.perfetto.dev needs, plus
+   ``displayTimeUnit``.
+3. **Fixture** — the trace's structural summary (track labels, span
+   name vocabulary, event count) matches the committed FIXTURE, so a
+   silent format or attribution change cannot land without a reviewed
+   fixture update. A fixture containing ``{"bootstrap": true}`` passes
+   with a notice and prints the block to commit (first-run semantics,
+   same as the fault-campaign fixture).
+4. **JSON-lines stream** — every line of JSONL parses as one launch
+   record, indices are contiguous from 0 (the reorder buffer emits in
+   job order regardless of thread count), and every launch succeeded.
+"""
+
+import json
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"PROFILE-SMOKE GATE: {msg}", file=sys.stderr)
+    raise SystemExit(1)
+
+
+def summarize(trace: dict) -> dict:
+    """Structural summary of a trace_event export: what a reviewer
+    pins, independent of absolute cycle numbers."""
+    events = trace["traceEvents"]
+    tracks = sorted(
+        e["args"]["name"] for e in events if e["ph"] == "M" and e["name"] == "thread_name"
+    )
+    span_names = sorted({e["name"] for e in events if e["ph"] == "X"})
+    return {"tracks": tracks, "span_names": span_names, "events": len(events)}
+
+
+def check_trace(path: str) -> dict:
+    trace = json.load(open(path))
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: traceEvents missing or empty")
+    if trace.get("displayTimeUnit") != "ns":
+        fail(f"{path}: displayTimeUnit must be 'ns'")
+    n_meta = n_span = 0
+    for e in events:
+        ph = e.get("ph")
+        if ph == "M":
+            n_meta += 1
+            if e.get("name") not in ("process_name", "thread_name"):
+                fail(f"{path}: unexpected metadata event {e}")
+            if "name" not in e.get("args", {}):
+                fail(f"{path}: metadata event without args.name: {e}")
+        elif ph == "X":
+            n_span += 1
+            for key in ("name", "ts", "dur", "pid", "tid"):
+                if key not in e:
+                    fail(f"{path}: span event missing {key!r}: {e}")
+            if e["dur"] <= 0 or e["ts"] < 0:
+                fail(f"{path}: span with non-positive extent: {e}")
+        else:
+            fail(f"{path}: unexpected phase {ph!r}: {e}")
+    if n_meta == 0 or n_span == 0:
+        fail(f"{path}: expected both metadata and span events ({n_meta} M, {n_span} X)")
+    print(f"{path}: well-formed ({n_meta} metadata + {n_span} span events)")
+    return trace
+
+
+def check_jsonl(path: str) -> None:
+    lines = open(path).read().splitlines()
+    if not lines:
+        fail(f"{path}: empty stream")
+    for i, line in enumerate(lines):
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            fail(f"{path}:{i + 1}: not valid JSON ({e})")
+        for key in ("index", "label", "attempts", "wall_ns", "ok"):
+            if key not in rec:
+                fail(f"{path}:{i + 1}: missing {key!r}: {rec}")
+        if rec["index"] != i:
+            fail(
+                f"{path}:{i + 1}: index {rec['index']} out of order — the "
+                "reorder buffer must emit launches in job order"
+            )
+        if not rec["ok"]:
+            fail(f"{path}:{i + 1}: launch failed: {rec}")
+        if not all(rec[k] >= 0 for k in ("cycles", "instrs")):
+            fail(f"{path}:{i + 1}: negative counters: {rec}")
+    print(f"{path}: {len(lines)} launches streamed in job order, all ok")
+
+
+def main(argv: list[str]) -> None:
+    if len(argv) != 5:
+        fail(f"usage: {argv[0]} FIXTURE PERFETTO_FAST PERFETTO_REF JSONL")
+    fixture_path, fast_path, ref_path, jsonl_path = argv[1:]
+
+    fast_blob = open(fast_path, "rb").read()
+    ref_blob = open(ref_path, "rb").read()
+    if fast_blob != ref_blob:
+        fail(
+            f"{fast_path} differs from {ref_path} — telemetry is not "
+            "bit-identical between the fast-forward and reference engines"
+        )
+    print("perfetto export byte-identical across engines: OK")
+
+    trace = check_trace(fast_path)
+    check_trace(ref_path)
+    check_jsonl(jsonl_path)
+
+    summary = summarize(trace)
+    fixture = json.load(open(fixture_path))
+    if fixture.get("bootstrap"):
+        print("fixture is in bootstrap mode — commit this to pin the trace shape:")
+        print(json.dumps(summary, indent=2, sort_keys=True))
+        return
+
+    if fixture != summary:
+        fail(
+            "trace shape drifted:\n"
+            f"  fixture: {json.dumps(fixture, sort_keys=True)}\n"
+            f"  trace:   {json.dumps(summary, sort_keys=True)}\n"
+            "If the change is intended (e.g. a new track), update "
+            "rust/tests/fixtures/profile_smoke_perfetto.json in the same PR."
+        )
+    print("trace shape matches committed fixture: OK")
+
+
+if __name__ == "__main__":
+    main(sys.argv)

@@ -17,7 +17,14 @@
 //!   6. an **operand-collector scenario**: representative kernels under
 //!      the bounded `OpcConfig::vortex()` front/back end (4 collectors,
 //!      1 read port per register bank, 1 result bus per FU kind) with
-//!      dual issue, reported separately as `opc_rows`.
+//!      dual issue, reported separately as `opc_rows`;
+//!   7. a **telemetry scenario**: representative kernels with
+//!      `TelemetryConfig::sampled(64)` — interval timelines, per-warp
+//!      stall attribution and span capture on — reported separately as
+//!      `telemetry_rows`, plus a telemetry-off baseline of the same
+//!      kernels so `telemetry.sampling_overhead` tracks the cost of
+//!      turning sampling on (the off-by-default cost is pinned by the
+//!      main `rows` trajectory staying flat).
 //!
 //! While measuring, the bench asserts the two engines return
 //! bit-identical `Metrics` — the equivalence invariant — and writes a
@@ -32,7 +39,7 @@ use vortex_warp::bench_harness::perf::{PerfReport, PerfRow};
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
 use vortex_warp::coordinator::{launch_batch, BatchJob};
 use vortex_warp::kernels;
-use vortex_warp::sim::{EngineMode, FuConfig, MemHierConfig, OpcConfig, SimConfig};
+use vortex_warp::sim::{EngineMode, FuConfig, MemHierConfig, OpcConfig, SimConfig, TelemetryConfig};
 
 fn best_of(iters: usize, mut f: impl FnMut() -> u64) -> (u128, u64) {
     let mut best_ns = u128::MAX;
@@ -222,6 +229,35 @@ fn main() {
         },
     );
 
+    // Telemetry scenario (PR 7): sampling on (interval timelines,
+    // per-warp stall attribution, span capture) over representative
+    // kernels. The skip-window replay must not cost the fast engine
+    // its lead, and the off-baseline of the same kernels feeds the
+    // `telemetry.sampling_overhead` ratio.
+    let tele_kernels = ["matmul", "reduce"];
+    let tele_fast = {
+        let mut c = SimConfig::paper();
+        c.telemetry = TelemetryConfig::sampled(64);
+        c
+    };
+    run_scenario(
+        "telemetry scenario (TelemetryConfig::sampled(64))",
+        &tele_fast,
+        &tele_kernels,
+        iters,
+        &mut report.telemetry_rows,
+        |name, m| assert!(m.instrs > 0, "{name}: scenario must retire instructions"),
+    );
+    for name in tele_kernels {
+        let b = kernels::by_name(name).expect("telemetry baseline benchmark");
+        for sol in [Solution::Hw, Solution::Sw] {
+            let (off_ns, _) = best_of(iters, || {
+                dispatch(sol, &b.kernel, &fast, &b.inputs).expect("off run").metrics.instrs
+            });
+            report.telemetry_off_ns += off_ns;
+        }
+    }
+
     // Batched run: every (paper kernel x solution) job, repeated so
     // each host thread has work, through the scoped-thread batch
     // launcher (same composition as the tracked rows above).
@@ -273,6 +309,13 @@ fn main() {
         "operand-collector scenario: {:.2} M instr/s fast, {:.2}x engine speedup",
         report.opc_fast_mips(),
         report.opc_engine_speedup(),
+    );
+    println!(
+        "telemetry scenario: {:.2} M instr/s fast, {:.2}x engine speedup, {:.2}x sampling \
+         overhead",
+        report.telemetry_fast_mips(),
+        report.telemetry_engine_speedup(),
+        report.telemetry_sampling_overhead(),
     );
 
     let out = std::env::var("BENCH_PERF_OUT").unwrap_or_else(|_| "BENCH_perf.json".into());

@@ -60,6 +60,17 @@ pub struct PerfReport {
     /// buses with dual issue, both engines. Also kept separate from
     /// `rows` for the same reason.
     pub opc_rows: Vec<PerfRow>,
+    /// Telemetry scenario (PR 7): representative kernels with
+    /// `TelemetryConfig::sampled(64)` — interval timelines, per-warp
+    /// stall attribution and span capture all on — both engines. Also
+    /// kept separate from `rows` for the same reason.
+    pub telemetry_rows: Vec<PerfRow>,
+    /// Fast-engine wall time of the telemetry scenario's kernels with
+    /// telemetry OFF (the legacy default). The ratio against the
+    /// telemetry rows' `fast_ns` is the sampling overhead; the
+    /// telemetry-off cost itself is pinned by `rows` staying on its
+    /// historical trajectory (the `aggregate.engine_speedup` floor).
+    pub telemetry_off_ns: u128,
     /// Wall time of one `launch_batch` over every (bench × solution)
     /// job with the fast engine.
     pub batch_wall_ns: u128,
@@ -131,6 +142,28 @@ impl PerfReport {
         scenario_engine_speedup(&self.opc_rows)
     }
 
+    /// Fast-engine throughput of the telemetry scenario.
+    pub fn telemetry_fast_mips(&self) -> f64 {
+        scenario_fast_mips(&self.telemetry_rows)
+    }
+
+    /// Engine speedup with sampling on (the skip-window replay must not
+    /// cost the fast engine its lead over the reference walk).
+    pub fn telemetry_engine_speedup(&self) -> f64 {
+        scenario_engine_speedup(&self.telemetry_rows)
+    }
+
+    /// Wall-time ratio of sampled telemetry vs telemetry-off on the
+    /// same kernels, fast engine (1.0 = free; 1.2 = 20% slower).
+    pub fn telemetry_sampling_overhead(&self) -> f64 {
+        let on: u128 = self.telemetry_rows.iter().map(|r| r.fast_ns).sum();
+        if self.telemetry_off_ns == 0 {
+            0.0
+        } else {
+            on as f64 / self.telemetry_off_ns as f64
+        }
+    }
+
     fn totals(&self, ns_of: impl Fn(&PerfRow) -> u128) -> (u64, u128) {
         let instrs = self.rows.iter().map(|r| r.instrs).sum();
         let ns = self.rows.iter().map(ns_of).sum();
@@ -158,7 +191,7 @@ impl PerfReport {
 
     pub fn to_json(&self) -> String {
         let mut s = String::new();
-        s.push_str("{\n  \"schema\": \"vortex_warp.perf.v4\",\n");
+        s.push_str("{\n  \"schema\": \"vortex_warp.perf.v5\",\n");
         s.push_str(&format!("  \"host_threads\": {},\n", self.host_threads));
         s.push_str("  \"rows\": [\n");
         Self::rows_json(&self.rows, &mut s);
@@ -186,6 +219,16 @@ impl PerfReport {
             "  \"opc\": {{\"fast_mips\": {:.4}, \"engine_speedup\": {:.4}}},\n",
             self.opc_fast_mips(),
             self.opc_engine_speedup(),
+        ));
+        s.push_str("  \"telemetry_rows\": [\n");
+        Self::rows_json(&self.telemetry_rows, &mut s);
+        s.push_str("  ],\n");
+        s.push_str(&format!(
+            "  \"telemetry\": {{\"fast_mips\": {:.4}, \"engine_speedup\": {:.4}, \
+             \"sampling_overhead\": {:.4}}},\n",
+            self.telemetry_fast_mips(),
+            self.telemetry_engine_speedup(),
+            self.telemetry_sampling_overhead(),
         ));
         s.push_str(&format!(
             "  \"aggregate\": {{\"reference_mips\": {:.4}, \"fast_mips\": {:.4}, \
@@ -295,6 +338,14 @@ mod tests {
                 reference_ns: 800_000_000,
                 fast_ns: 200_000_000,
             }],
+            telemetry_rows: vec![PerfRow {
+                bench: "matmul".into(),
+                solution: "HW".into(),
+                instrs: 1_000_000,
+                reference_ns: 900_000_000,
+                fast_ns: 300_000_000,
+            }],
+            telemetry_off_ns: 250_000_000,
             batch_wall_ns: 500_000_000,
             batch_instrs: 4_000_000,
             host_threads: 4,
@@ -339,9 +390,21 @@ mod tests {
     }
 
     #[test]
+    fn telemetry_scenario_aggregates() {
+        let r = report();
+        // 1M instrs / 0.3 s fast = 3.33 M instr/s; 0.9 s ref -> 3x.
+        assert!((r.telemetry_fast_mips() - 1.0 / 0.3).abs() < 1e-9);
+        assert!((r.telemetry_engine_speedup() - 3.0).abs() < 1e-9);
+        // 0.3 s sampled vs 0.25 s off -> 1.2x sampling overhead.
+        assert!((r.telemetry_sampling_overhead() - 1.2).abs() < 1e-9);
+        assert_eq!(PerfReport::default().telemetry_engine_speedup(), 0.0);
+        assert_eq!(PerfReport::default().telemetry_sampling_overhead(), 0.0);
+    }
+
+    #[test]
     fn json_shape() {
         let j = report().to_json();
-        assert!(j.contains("\"schema\": \"vortex_warp.perf.v4\""));
+        assert!(j.contains("\"schema\": \"vortex_warp.perf.v5\""));
         assert!(j.contains("\"bench\": \"matmul\""));
         assert!(j.contains("\"aggregate\""));
         assert!(j.contains("\"memhier_rows\""));
@@ -352,6 +415,11 @@ mod tests {
         assert!(j.contains("\"opc_rows\""));
         assert!(j.contains("\"bench\": \"reduce_tile\""));
         assert!(j.contains("\"opc\": {\"fast_mips\": 5.0000, \"engine_speedup\": 4.0000}"));
+        assert!(j.contains("\"telemetry_rows\""));
+        assert!(j.contains(
+            "\"telemetry\": {\"fast_mips\": 3.3333, \"engine_speedup\": 3.0000, \
+             \"sampling_overhead\": 1.2000}"
+        ));
         assert!(j.contains("\"engine_speedup\": 2.0000"));
         // Balanced braces/brackets (cheap well-formedness check).
         assert_eq!(j.matches('{').count(), j.matches('}').count());

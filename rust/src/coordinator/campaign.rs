@@ -81,6 +81,22 @@ pub struct LaunchVerdict {
     pub cycles: u64,
 }
 
+impl LaunchVerdict {
+    /// One JSON object, no trailing newline — the `campaign --jsonl`
+    /// streaming protocol (same fields as the report's `verdicts`
+    /// entries, emitted as each verdict retires).
+    pub fn to_json_line(&self) -> String {
+        format!(
+            "{{\"i\":{},\"seed\":{},\"class\":{},\"attempts\":{},\"cycles\":{}}}",
+            self.index,
+            self.seed,
+            json_str(&self.class.label()),
+            self.attempts,
+            self.cycles,
+        )
+    }
+}
+
 /// Campaign parameters.
 #[derive(Clone, Debug)]
 pub struct CampaignSpec {
@@ -385,6 +401,21 @@ mod tests {
         assert!(j.contains("\"histogram\": {\"hang\": 0, \"masked\": 2, \"sdc\": 0}"), "{j}");
         assert!(j.contains("\"class\": \"masked\""), "{j}");
         assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+    }
+
+    #[test]
+    fn verdict_json_line_is_one_object() {
+        let v = LaunchVerdict {
+            index: 3,
+            seed: 42,
+            class: OutcomeClass::Detected("panic".into()),
+            attempts: 2,
+            cycles: 0,
+        };
+        assert_eq!(
+            v.to_json_line(),
+            "{\"i\":3,\"seed\":42,\"class\":\"detected:panic\",\"attempts\":2,\"cycles\":0}"
+        );
     }
 
     #[test]

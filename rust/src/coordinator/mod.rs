@@ -24,12 +24,13 @@
 
 pub mod campaign;
 pub mod dispatch;
+pub mod sink;
 
 use crate::prt::codegen::{codegen_scalar, codegen_simt, LaunchImage};
 use crate::prt::interp::Env;
 use crate::prt::kir::{Kernel, ParamDir};
 use crate::prt::transform;
-use crate::sim::{map, CoreError, Gpu, Metrics, SimConfig, SimError};
+use crate::sim::{map, CoreError, Gpu, Metrics, SimConfig, SimError, TelemetrySnapshot};
 
 /// Launch failure.
 #[derive(Debug, Clone, PartialEq)]
@@ -70,6 +71,13 @@ pub const MAX_CYCLES: u64 = 200_000_000;
 pub struct LaunchResult {
     pub env: Env,
     pub metrics: Metrics,
+    /// Per-core telemetry snapshots (`sim/telemetry`), one per core in
+    /// core-id order; empty under `TelemetryConfig::legacy()`.
+    pub telemetry: Vec<TelemetrySnapshot>,
+    /// Rendered instruction trace (`cfg.trace`), all cores in core-id
+    /// order, including the `... N earlier lines dropped` marker when
+    /// the ring evicted; empty when tracing is off.
+    pub trace: Vec<String>,
 }
 
 /// Run a compiled kernel image on a GPU with the given inputs, under
@@ -126,7 +134,25 @@ pub fn launch_budgeted(
     for c in &gpu.cores[1..] {
         metrics.merge(&c.metrics);
     }
-    Ok(LaunchResult { env, metrics })
+
+    // Freeze telemetry and the instruction trace per core (both empty
+    // under the legacy config, costing nothing).
+    let telemetry = gpu
+        .cores
+        .iter()
+        .enumerate()
+        .filter_map(|(i, c)| c.telemetry.as_ref().map(|t| t.snapshot(i)))
+        .collect();
+    let mut trace = Vec::new();
+    for c in &gpu.cores {
+        if !c.trace.is_empty() || c.trace.dropped() > 0 {
+            if gpu.cores.len() > 1 {
+                trace.push(format!("--- core {} ---", c.core_id));
+            }
+            trace.extend(c.trace.render());
+        }
+    }
+    Ok(LaunchResult { env, metrics, telemetry, trace })
 }
 
 /// The HW solution: SIMT codegen, extended hardware.
@@ -292,47 +318,12 @@ pub struct BatchPolicy {
 /// pull the next job index from a shared atomic counter, so uneven job
 /// costs stay load-balanced. A poisoned job (panic, timeout, any
 /// error) fills its own slot and leaves every sibling untouched.
+///
+/// This is [`sink::launch_batch_streamed`] with the records discarded;
+/// pass a [`sink::MetricsSink`] there to stream per-launch metrics as
+/// launches retire.
 pub fn launch_batch_isolated(jobs: &[BatchJob], policy: &BatchPolicy) -> Vec<LaunchReport> {
-    use std::sync::atomic::{AtomicUsize, Ordering};
-
-    if jobs.is_empty() {
-        return Vec::new();
-    }
-    let workers = if policy.threads == 0 {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    } else {
-        policy.threads
-    }
-    .min(jobs.len());
-    let next = AtomicUsize::new(0);
-    let mut results: Vec<Option<LaunchReport>> = (0..jobs.len()).map(|_| None).collect();
-    std::thread::scope(|s| {
-        let handles: Vec<_> = (0..workers)
-            .map(|_| {
-                s.spawn(|| {
-                    let mut done = Vec::new();
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        let Some(job) = jobs.get(i) else { break };
-                        done.push((i, launch_isolated(job, &policy.isolation)));
-                    }
-                    done
-                })
-            })
-            .collect();
-        for h in handles {
-            // Workers run every launch inside catch_unwind, so a join
-            // failure would mean a bug in the harness itself — it can
-            // no longer be triggered by a poisoned job.
-            for (i, r) in h.join().expect("isolated batch worker cannot panic") {
-                results[i] = Some(r);
-            }
-        }
-    });
-    results
-        .into_iter()
-        .map(|r| r.expect("every batch slot is filled by its worker"))
-        .collect()
+    sink::launch_batch_streamed(jobs, policy, &mut sink::NullSink).0
 }
 
 /// Run a batch of independent launches across host threads, returning

@@ -7,18 +7,25 @@
 //!   area    [--layout]              Table IV / Fig 6
 //!   validate [--artifacts DIR]      e2e: sim vs PJRT golden models
 //!   campaign --bench <name> ...     fault-injection campaign (PR 6)
+//!   profile --bench <name> ...      sampled telemetry views (PR 7)
+//!   batch   --bench <name> ...      streamed isolated batch (PR 7)
 //!
 //! All machine-shaping commands also accept `--engine fast|reference`
 //! and `--inject seed=..,count=..[,window=..][,targets=reg+pred+...]`.
+
+use std::io::Write as _;
 
 use vortex_warp::area::report::{fig6_layout, table4};
 use vortex_warp::bench_harness::{fig5, tables};
 use vortex_warp::coordinator::campaign::{run_campaign_with, CampaignSpec};
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
+use vortex_warp::coordinator::sink::{launch_batch_streamed, JsonlSink, NullSink};
+use vortex_warp::coordinator::{BatchJob, BatchPolicy};
 use vortex_warp::kernels;
 use vortex_warp::prt::kir::ParamDir;
 use vortex_warp::runtime::Runtime;
-use vortex_warp::sim::{EngineMode, FaultConfig, FaultTarget, SimConfig};
+use vortex_warp::sim::telemetry::perfetto;
+use vortex_warp::sim::{EngineMode, FaultConfig, FaultTarget, SimConfig, TelemetryConfig};
 
 fn usage() -> ! {
     eprintln!(
@@ -41,14 +48,33 @@ fn usage() -> ! {
            fig5                         IPC of HW vs SW over all six benchmarks\n\
            area [--layout]              Table IV area overhead (+ Fig 6 layout)\n\
            validate [--artifacts DIR]   end-to-end check vs PJRT golden models\n\
+           profile --bench <name> [--solution hw|sw] [--interval N]\n\
+               [--timeline] [--top-warps N] [--perfetto PATH]\n\
+               [machine flags as for `run`]\n\
+             run one kernel with cycle-attributed telemetry on\n\
+             (bucket width --interval, default 64): --timeline prints\n\
+             the per-interval IPC/stall/occupancy table, --top-warps\n\
+             the most-stalled warps with their cause breakdown,\n\
+             --perfetto writes a Chrome trace_event JSON for\n\
+             ui.perfetto.dev; with no view flag, prints timeline +\n\
+             top 8 warps\n\
+           batch --bench <name> [--solution hw|sw|both] [--repeat N]\n\
+               [--threads N] [--jsonl PATH] [machine flags as for `run`]\n\
+             run a batch of isolated launches across host threads;\n\
+             --jsonl streams one JSON object per launch (in job order)\n\
+             as launches retire; the summary line reports launches/s\n\
+             and host-thread utilization\n\
            campaign --bench <name> [--solution hw|sw] [--launches N]\n\
                [--seed S] [--count K] [--window W] [--targets a+b+c]\n\
                [--threads N] [--budget CYCLES] [--retries N]\n\
-               [--json PATH] [--stream] [machine flags as for `run`]\n\
+               [--json PATH] [--jsonl PATH] [--stream]\n\
+               [machine flags as for `run`]\n\
              fault-injection campaign: N launches, each under a\n\
              deterministic per-launch fault plan, classified against a\n\
              clean golden run as masked / sdc / detected:* / hang;\n\
-             JSON report to stdout (or PATH), summary to stderr\n\
+             JSON report to stdout (or PATH), summary to stderr;\n\
+             --jsonl streams one verdict object per line as launches\n\
+             retire\n\
            list                         list benchmarks\n\
          \n\
          shared machine flags:\n\
@@ -215,6 +241,126 @@ fn main() {
                 b.check(&r.env).expect("output mismatch vs native reference");
                 println!("{} [{}] {}", b.name, sol.name(), r.metrics.summary());
             }
+            // --trace dump: the retained window, with an explicit
+            // marker when the ring evicted earlier lines.
+            for line in &r.trace {
+                println!("{line}");
+            }
+        }
+        Some("profile") => {
+            let name = flag_value(&args, "--bench").unwrap_or_else(|| usage());
+            let sol = flag_value(&args, "--solution")
+                .map(|s| Solution::parse(&s).expect("--solution hw|sw"))
+                .unwrap_or(Solution::Hw);
+            let mut cfg = config_from(&args);
+            let interval = flag_value(&args, "--interval")
+                .map(|n| n.parse().expect("--interval"))
+                .unwrap_or(64);
+            cfg.telemetry = TelemetryConfig::sampled(interval);
+            let b = kernels::by_name(&name).unwrap_or_else(|| {
+                eprintln!("unknown benchmark `{name}` (try `vortex-warp list`)");
+                std::process::exit(2);
+            });
+            let r = dispatch(sol, &b.kernel, &cfg, &b.inputs).unwrap_or_else(|e| {
+                eprintln!("launch failed: {e}");
+                std::process::exit(1);
+            });
+            b.check(&r.env).expect("output mismatch vs native reference");
+            println!("{} [{}] {}", b.name, sol.name(), r.metrics.summary());
+            let timeline = has_flag(&args, "--timeline");
+            let top: Option<usize> =
+                flag_value(&args, "--top-warps").map(|n| n.parse().expect("--top-warps"));
+            let perfetto_path = flag_value(&args, "--perfetto");
+            let default_view = !timeline && top.is_none() && perfetto_path.is_none();
+            if timeline || default_view {
+                for snap in &r.telemetry {
+                    println!("\n{}", snap.render_timeline());
+                }
+            }
+            if let Some(n) = top.or(if default_view { Some(8) } else { None }) {
+                for snap in &r.telemetry {
+                    println!("\n{}", snap.render_top_warps(n));
+                }
+            }
+            if let Some(path) = perfetto_path {
+                let json = perfetto::export(&r.telemetry);
+                std::fs::write(&path, &json).unwrap_or_else(|e| {
+                    eprintln!("cannot write {path}: {e}");
+                    std::process::exit(1);
+                });
+                eprintln!("perfetto trace written to {path} (open in ui.perfetto.dev)");
+            }
+        }
+        Some("batch") => {
+            let name = flag_value(&args, "--bench").unwrap_or_else(|| usage());
+            let b = kernels::by_name(&name).unwrap_or_else(|| {
+                eprintln!("unknown benchmark `{name}` (try `vortex-warp list`)");
+                std::process::exit(2);
+            });
+            let cfg = config_from(&args);
+            let sols: Vec<Solution> = match flag_value(&args, "--solution").as_deref() {
+                None | Some("both") => vec![Solution::Hw, Solution::Sw],
+                Some(s) => vec![Solution::parse(s).expect("--solution hw|sw|both")],
+            };
+            let repeat: usize = flag_value(&args, "--repeat")
+                .map(|n| n.parse().expect("--repeat"))
+                .unwrap_or(1);
+            let mut jobs = Vec::with_capacity(repeat * sols.len());
+            for i in 0..repeat {
+                for &sol in &sols {
+                    jobs.push(BatchJob::new(
+                        format!("{name}[{}]#{i}", sol.name()),
+                        sol,
+                        b.kernel.clone(),
+                        cfg.clone(),
+                        b.inputs.clone(),
+                    ));
+                }
+            }
+            let policy = BatchPolicy {
+                threads: flag_value(&args, "--threads")
+                    .map(|n| n.parse().expect("--threads"))
+                    .unwrap_or(0),
+                ..Default::default()
+            };
+            let jsonl_path = flag_value(&args, "--jsonl");
+            let (reports, summary) = match &jsonl_path {
+                Some(path) => {
+                    let file = std::fs::File::create(path).unwrap_or_else(|e| {
+                        eprintln!("cannot create {path}: {e}");
+                        std::process::exit(2);
+                    });
+                    let mut sink = JsonlSink::new(std::io::BufWriter::new(file));
+                    let out = launch_batch_streamed(&jobs, &policy, &mut sink);
+                    if let Some(e) = sink.error() {
+                        eprintln!("jsonl write failed: {e}");
+                        std::process::exit(1);
+                    }
+                    sink.into_inner().flush().unwrap_or_else(|e| {
+                        eprintln!("jsonl write failed: {e}");
+                        std::process::exit(1);
+                    });
+                    eprintln!("jsonl stream written to {path}");
+                    out
+                }
+                None => launch_batch_streamed(&jobs, &policy, &mut NullSink),
+            };
+            let mut failed = false;
+            for r in &reports {
+                match &r.result {
+                    Ok(res) => {
+                        println!("{} attempts={} {}", r.label, r.attempts, res.metrics.summary())
+                    }
+                    Err(e) => {
+                        failed = true;
+                        println!("{} attempts={} FAILED: {e}", r.label, r.attempts);
+                    }
+                }
+            }
+            println!("{}", summary.render());
+            if failed {
+                std::process::exit(1);
+            }
         }
         Some("fig5") => {
             let cfg = config_from(&args);
@@ -314,6 +460,13 @@ fn main() {
                     .unwrap_or(0),
             };
             let stream = has_flag(&args, "--stream");
+            let jsonl_path = flag_value(&args, "--jsonl");
+            let mut jsonl = jsonl_path.as_ref().map(|path| {
+                std::io::BufWriter::new(std::fs::File::create(path).unwrap_or_else(|e| {
+                    eprintln!("cannot create {path}: {e}");
+                    std::process::exit(2);
+                }))
+            });
             let report = run_campaign_with(&spec, |v| {
                 if stream {
                     eprintln!(
@@ -323,11 +476,27 @@ fn main() {
                         v.class.label()
                     );
                 }
+                if let Some(w) = jsonl.as_mut() {
+                    writeln!(w, "{}", v.to_json_line()).unwrap_or_else(|e| {
+                        eprintln!("jsonl write failed: {e}");
+                        std::process::exit(1);
+                    });
+                }
             })
             .unwrap_or_else(|e| {
                 eprintln!("campaign golden run failed: {e}");
                 std::process::exit(1);
             });
+            if let Some(mut w) = jsonl {
+                w.flush().unwrap_or_else(|e| {
+                    eprintln!("jsonl write failed: {e}");
+                    std::process::exit(1);
+                });
+                eprintln!(
+                    "verdict stream written to {}",
+                    jsonl_path.as_deref().unwrap_or_default()
+                );
+            }
             let json = report.to_json();
             match flag_value(&args, "--json") {
                 Some(path) => {

@@ -3,6 +3,7 @@
 //! core") is [`SimConfig::paper`].
 
 use super::fault::FaultConfig;
+use super::telemetry::TelemetryConfig;
 
 /// Functional-unit and memory latencies in cycles.
 #[derive(Clone, Debug, PartialEq)]
@@ -350,6 +351,11 @@ pub struct SimConfig {
     /// single-bit upsets. The default is [`FaultConfig::legacy`] — no
     /// injection, byte-identical to the seed simulator.
     pub fault: FaultConfig,
+    /// Cycle-attributed telemetry (`sim/telemetry`): interval
+    /// timelines, per-warp stall attribution and the Perfetto span
+    /// log. The default is [`TelemetryConfig::legacy`] — off, zero
+    /// hot-path cost, byte-identical metrics.
+    pub telemetry: TelemetryConfig,
     /// Engine used by `run` (fast-forward by default; the reference
     /// one-cycle path is kept for equivalence testing).
     pub engine: EngineMode,
@@ -377,6 +383,7 @@ impl SimConfig {
             memhier: MemHierConfig::legacy(),
             sched: SchedPolicy::RoundRobin,
             fault: FaultConfig::legacy(),
+            telemetry: TelemetryConfig::legacy(),
             engine: EngineMode::FastForward,
             trace: false,
             trace_cap: 1 << 16,
@@ -551,6 +558,17 @@ mod tests {
         c.memhier = MemHierConfig::vortex();
         assert!(c.memhier.mshr_entries > 0);
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn paper_defaults_to_legacy_telemetry_model() {
+        let c = SimConfig::paper();
+        assert_eq!(c.telemetry, TelemetryConfig::legacy(), "paper records no telemetry");
+        assert!(!c.telemetry.enabled());
+        let mut s = SimConfig::paper();
+        s.telemetry = TelemetryConfig::sampled(64);
+        assert!(s.telemetry.enabled());
+        s.validate().unwrap();
     }
 
     #[test]

@@ -32,6 +32,7 @@ use super::opc::Opc;
 use super::regfile::RegFile;
 use super::scheduler::Scheduler;
 use super::scoreboard::Scoreboard;
+use super::telemetry::{Cause, Telemetry, Track};
 use super::trace::TraceBuf;
 use super::warp::{Warp, WarpState};
 use super::wb::{InFlight, WbQueue};
@@ -161,6 +162,21 @@ enum IssueOutcome {
     Idle,
 }
 
+/// Telemetry [`Cause`] a non-issuing cycle's outcome charges — the
+/// timeline-bucket class of both an executed stalled cycle and every
+/// cycle of a fast-forwarded window that replays it.
+fn outcome_cause(o: IssueOutcome) -> Cause {
+    match o {
+        IssueOutcome::Issued => unreachable!("issuing cycles charge the timeline directly"),
+        IssueOutcome::StallScoreboard => Cause::Scoreboard,
+        IssueOutcome::StallOperand => Cause::Operand,
+        IssueOutcome::StallStructural => Cause::Structural,
+        IssueOutcome::StallPipeline => Cause::Pipeline,
+        IssueOutcome::StallBarrier => Cause::Barrier,
+        IssueOutcome::Idle => Cause::Idle,
+    }
+}
+
 /// Barrier bookkeeping: warps arrived so far per barrier id.
 #[derive(Default)]
 struct BarrierTable {
@@ -214,6 +230,11 @@ pub struct Core {
     /// Optional instruction trace (`cfg.trace`), bounded to
     /// `cfg.trace_cap` lines.
     pub trace: TraceBuf,
+    /// Cycle-attributed telemetry (`sim/telemetry`): interval
+    /// timeline, per-warp stall attribution and the Perfetto span
+    /// log. `None` under `TelemetryConfig::legacy()` — the hot path
+    /// pays one `Option` check and nothing else.
+    pub telemetry: Option<Box<Telemetry>>,
 }
 
 impl Core {
@@ -243,6 +264,10 @@ impl Core {
             faults,
             metrics: Metrics::default(),
             trace: TraceBuf::new(cfg.trace_cap),
+            telemetry: cfg
+                .telemetry
+                .enabled()
+                .then(|| Box::new(Telemetry::new(&cfg.telemetry, nw))),
             cfg,
         }
     }
@@ -275,6 +300,11 @@ impl Core {
         self.faults.reset();
         self.metrics = Metrics::default();
         self.trace.clear();
+        self.telemetry = self
+            .cfg
+            .telemetry
+            .enabled()
+            .then(|| Box::new(Telemetry::new(&self.cfg.telemetry, nw)));
     }
 
     /// True while any warp is runnable/blocked or a writeback is
@@ -305,6 +335,9 @@ impl Core {
         }
         self.metrics.cycles += 1;
         let now = self.metrics.cycles;
+        if let Some(t) = self.telemetry.as_deref_mut() {
+            t.begin_cycle();
+        }
 
         // ---- writeback ----
         while let Some(f) = self.inflight.pop_due(now) {
@@ -360,6 +393,7 @@ impl Core {
             any_active = true;
             if self.ready_at[w] > now {
                 saw_pipe_stall = true;
+                self.tele_note(w, Cause::Pipeline);
                 continue;
             }
             let pc = self.warps[w].pc;
@@ -367,6 +401,7 @@ impl Core {
             let srcs = instr.srcs();
             if !self.sb.can_issue(w, &srcs, instr.rd()) {
                 saw_sb_stall = true;
+                self.tele_note(w, Cause::Scoreboard);
                 continue;
             }
             // Operand collection (`sim/opc`): the instruction must get
@@ -378,6 +413,7 @@ impl Core {
             let (obase, ospan) = self.operand_span(w, &instr);
             if !self.opc.can_collect(obase, ospan, reads, now) {
                 saw_operand_stall = true;
+                self.tele_note(w, Cause::Operand);
                 continue;
             }
             let kind = FuKind::classify(&instr);
@@ -385,6 +421,7 @@ impl Core {
                 // Structural hazard: every unit of this kind is
                 // occupied — the scheduler skips this warp.
                 saw_struct_stall = true;
+                self.tele_note(w, Cause::Structural);
                 continue;
             }
             self.execute(w, pc, instr, kind, reads, obase, ospan, mem, shared, now)?;
@@ -427,7 +464,35 @@ impl Core {
             self.metrics.idle_cycles += 1;
         }
 
+        // ---- telemetry (`sim/telemetry`) ----
+        // Classify this executed cycle into its timeline bucket and
+        // charge each blocked warp one cycle of its recorded cause.
+        // `skip_to` replays exactly this classification over skipped
+        // windows, which is what keeps sampled timelines bit-identical
+        // across engines.
+        if let Some(t) = self.telemetry.as_deref_mut() {
+            for (w, warp) in self.warps.iter().enumerate() {
+                if matches!(warp.state, WarpState::Barrier { .. }) {
+                    t.note_blocked(w, Cause::Barrier);
+                }
+            }
+            match self.outcome {
+                IssueOutcome::Issued => t.timeline.charge_issue(now, issued as u64),
+                other => t.timeline.charge_stall(now, now + 1, outcome_cause(other)),
+            }
+            t.charge_blocked(1);
+        }
+
         Ok(self.busy())
+    }
+
+    /// Record a blocked-warp cause for this cycle (no-op with
+    /// telemetry off).
+    #[inline]
+    fn tele_note(&mut self, w: usize, cause: Cause) {
+        if let Some(t) = self.telemetry.as_deref_mut() {
+            t.note_blocked(w, cause);
+        }
     }
 
     /// True if the most recent cycle issued an instruction (fast-
@@ -535,6 +600,15 @@ impl Core {
             IssueOutcome::Idle => self.metrics.idle_cycles += skip,
             IssueOutcome::Issued => unreachable!("checked above"),
         }
+        // Telemetry replay: every cycle in the window repeats the last
+        // executed cycle's classification — the same buckets and the
+        // same per-warp causes the reference engine's one-cycle walk
+        // charges (the blocked sets cannot change between events).
+        let cause = outcome_cause(self.outcome);
+        if let Some(t) = self.telemetry.as_deref_mut() {
+            t.timeline.charge_stall(now + 1, target, cause);
+            t.charge_blocked(skip);
+        }
         self.metrics.cycles = target - 1;
     }
 
@@ -579,7 +653,14 @@ impl Core {
         // `reads`/`obase`/`ospan` come from the issue stage's
         // `can_collect` check, so the claim can never diverge from it.
         // No-op under the legacy free default.
-        let extra = self.opc.collect(obase, ospan, reads, now, &mut self.metrics);
+        let extra = self.opc.collect(
+            obase,
+            ospan,
+            reads,
+            now,
+            &mut self.metrics,
+            self.telemetry.as_deref_mut(),
+        );
 
         let mut out = [0u32; 32];
         let ret = fu::dispatch(self, w, pc, instr, mem, shared, now, &mut out)?;
@@ -593,6 +674,16 @@ impl Core {
         self.metrics.fu_busy[kind as usize] += extra + ret.occ;
         self.fu.occupy(kind, now, now + extra + ret.occ);
 
+        // Issue-time telemetry: everything here is recorded at issue
+        // from absolute-cycle state, so it is identical under both
+        // engines (issuing cycles are never fast-forwarded).
+        if let Some(t) = self.telemetry.as_deref_mut() {
+            t.note_issued(w);
+            t.timeline.charge_fu(now, now + extra + ret.occ, kind);
+            t.push_span(Track::Fu(kind), kind.name(), now, now + extra + ret.occ);
+            t.push_span(Track::Warp(w as u32), kind.name(), now, now + extra + ret.lat.max(1));
+        }
+
         // Retire bookkeeping. PC always advances (a warp parked at a
         // barrier resumes at the instruction after the vx_bar). The
         // writeback waits for the serialized operand reads and then
@@ -603,6 +694,10 @@ impl Core {
         if let Some(rd) = instr.rd() {
             self.sb.set_pending(w, rd);
             let done = self.opc.wb_slot(kind, now + extra + ret.lat, &mut self.metrics);
+            if let Some(t) = self.telemetry.as_deref_mut() {
+                // Result-bus wait, attributed to the issuing warp.
+                t.warp_wb_wait[w] += done - (now + extra + ret.lat);
+            }
             self.inflight.push(
                 done,
                 InFlight {

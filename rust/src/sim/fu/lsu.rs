@@ -93,6 +93,7 @@ fn mem_latency(
         now,
         shared,
         &mut core.metrics,
+        core.telemetry.as_deref_mut(),
     )
 }
 

@@ -47,6 +47,7 @@ pub use tags::TagArray;
 
 use super::config::{CacheConfig, Latencies, MemHierConfig};
 use super::metrics::Metrics;
+use super::telemetry::{Telemetry, Track};
 
 /// Collect the distinct `key(addr)` values of the active lanes into
 /// `out` (fixed scratch sized to the 32-lane mask — allocation-free).
@@ -140,7 +141,10 @@ impl CoreMem {
     /// coalesce the active lanes into distinct L1 lines, walk each line
     /// through L1 → MSHR → L2 → DRAM, and return the retire latency
     /// (worst line plus the uncoalesced replay charge). All counters
-    /// land in the issuing core's `Metrics`.
+    /// land in the issuing core's `Metrics`; with telemetry on, L2
+    /// bank and DRAM channel occupancy windows land in the issuing
+    /// core's timeline and miss fills in its span log (everything is
+    /// computed at issue, so both engines record identical state).
     #[allow(clippy::too_many_arguments)]
     pub fn warp_access(
         &mut self,
@@ -151,6 +155,7 @@ impl CoreMem {
         now: u64,
         shared: &mut SharedMem,
         m: &mut Metrics,
+        mut tele: Option<&mut Telemetry>,
     ) -> u64 {
         // Distinct lines via fixed scratch (NT <= 32): the issue hot
         // path stays allocation-free.
@@ -159,7 +164,8 @@ impl CoreMem {
         let n = distinct_keys(addrs, tmask, |a| a >> shift, &mut lines);
         let mut worst = 0u64;
         for &line in &lines[..n] {
-            worst = worst.max(self.line_access(lat, line, store, now, shared, m));
+            let l = self.line_access(lat, line, store, now, shared, m, tele.as_deref_mut());
+            worst = worst.max(l);
         }
         let replays = (n as u64).saturating_sub(1);
         m.mem_replays += replays;
@@ -168,6 +174,7 @@ impl CoreMem {
 
     /// One cache-line probe; returns the completion latency relative to
     /// `now`.
+    #[allow(clippy::too_many_arguments)]
     fn line_access(
         &mut self,
         lat: &Latencies,
@@ -176,6 +183,7 @@ impl CoreMem {
         now: u64,
         shared: &mut SharedMem,
         m: &mut Metrics,
+        tele: Option<&mut Telemetry>,
     ) -> u64 {
         if !self.hierarchy_enabled() {
             // Seed-identical flat model: hit or a fixed miss charge.
@@ -224,6 +232,27 @@ impl CoreMem {
             m.l2_writebacks += 1;
         }
         m.l2_bank_wait += out.bank_wait;
+        if let Some(t) = tele {
+            // Reconstruct the occupancy windows the L2/DRAM reserved
+            // for this request (their state is absolute-cycle, set at
+            // issue — so these windows are engine-identical). The L2
+            // bank is held from when the request wins it through the
+            // tag+data access, plus the writeback drain; a fill
+            // occupies its DRAM channel for `dram_busy` cycles ending
+            // at (or, with a piggybacked writeback, after) `done_at`.
+            let arrive = start + lat.dcache_hit as u64;
+            let bank_start = arrive + out.bank_wait;
+            let mut bank_hold = self.cfg.l2_hit as u64;
+            if out.writeback {
+                bank_hold += self.cfg.l2_wb as u64;
+            }
+            t.timeline.charge_l2(bank_start, bank_start + bank_hold);
+            if !out.hit {
+                let fill_start = out.done_at - self.cfg.dram_latency as u64;
+                t.timeline.charge_dram(fill_start, fill_start + out.dram_busy);
+                t.push_span(Track::Memory, "fill", now, out.done_at);
+            }
+        }
         self.mshr.complete(slot, line, out.done_at);
         out.done_at - now
     }
@@ -269,7 +298,7 @@ mod tests {
         now: u64,
     ) -> u64 {
         let lat = Latencies::default();
-        cm.warp_access(&lat, &[addr; 8], 0xFF, false, now, shared, m)
+        cm.warp_access(&lat, &[addr; 8], 0xFF, false, now, shared, m, None)
     }
 
     #[test]
@@ -339,7 +368,7 @@ mod tests {
         let lat = Latencies::default();
         // 8 lanes, 64 B apart: 8 distinct lines.
         let addrs: Vec<u32> = (0..8u32).map(|i| 0x1000 + i * 64).collect();
-        cm.warp_access(&lat, &addrs, 0xFF, false, 0, &mut shared, &mut m);
+        cm.warp_access(&lat, &addrs, 0xFF, false, 0, &mut shared, &mut m, None);
         assert_eq!(m.mem_replays, 7);
         assert_eq!(m.dcache_misses, 8);
     }

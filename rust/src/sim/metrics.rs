@@ -285,16 +285,20 @@ impl Metrics {
         }
         if self.l2_hits + self.l2_misses > 0 {
             s.push_str(&format!(
-                " L2hit={:.1}% mshr[merge={} stall={}] dram[fills={} busy={} wait={}] \
-                 bankconf={}",
+                " L2hit={:.1}% mshr[merge={} stall={}] dram[fills={} busy={} wait={}]",
                 self.l2_hit_rate() * 100.0,
                 self.mshr_merges,
                 self.mshr_stall_cycles,
                 self.dram_fills,
                 self.dram_busy_cycles,
                 self.dram_wait_cycles,
-                self.smem_bank_conflicts,
             ));
+        }
+        // Scratchpad bank conflicts gate on their own counter: shared
+        // memory never touches the L2, so a legacy-hierarchy run with a
+        // conflicted scratchpad kernel used to hide this entirely.
+        if self.smem_bank_conflicts > 0 {
+            s.push_str(&format!(" bankconf={}", self.smem_bank_conflicts));
         }
         s
     }
@@ -410,6 +414,18 @@ mod tests {
         assert_eq!(a.mshr_merges, 1);
         assert_eq!(a.smem_bank_conflicts, 7);
         assert_eq!(a.dram_busy_cycles, 40);
+    }
+
+    #[test]
+    fn bank_conflicts_surface_without_l2_traffic() {
+        // Scratchpad conflicts happen without any L2 traffic (shared
+        // memory bypasses the hierarchy); the summary must still show
+        // them.
+        let m = Metrics { cycles: 10, smem_bank_conflicts: 4, ..Default::default() };
+        let s = m.summary();
+        assert!(s.contains("bankconf=4"), "{s}");
+        assert!(!s.contains("L2hit"), "no L2 tail without L2 traffic: {s}");
+        assert!(!Metrics::default().summary().contains("bankconf"), "gated on the counter");
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub mod opc;
 pub mod regfile;
 pub mod scheduler;
 pub mod scoreboard;
+pub mod telemetry;
 pub mod trace;
 pub mod warp;
 pub mod wb;
@@ -49,6 +50,7 @@ pub use mem::{DCache, Memory};
 pub use memhier::SharedMem;
 pub use metrics::Metrics;
 pub use opc::Opc;
+pub use telemetry::{Cause, Span, Telemetry, TelemetryConfig, TelemetrySnapshot, Timeline, Track};
 pub use trace::TraceBuf;
 pub use warp::Warp;
 

@@ -60,6 +60,7 @@ pub use collector::CollectorPool;
 use crate::sim::config::OpcConfig;
 use crate::sim::fu::FuKind;
 use crate::sim::metrics::Metrics;
+use crate::sim::telemetry::{Telemetry, Track};
 
 /// Operand-collector + result-bus state of one core.
 pub struct Opc {
@@ -122,7 +123,9 @@ impl Opc {
     /// (beyond the free-collection baseline) to add to the
     /// instruction's latency; the same amount is charged to
     /// [`Metrics::stall_operand`]. Callers must have checked
-    /// [`Opc::can_collect`] this cycle.
+    /// [`Opc::can_collect`] this cycle. With telemetry on, the
+    /// collector hold window is recorded as a span (the claim happens
+    /// at issue, so it is engine-identical).
     pub fn collect(
         &mut self,
         base: usize,
@@ -130,6 +133,7 @@ impl Opc {
         reads: usize,
         now: u64,
         metrics: &mut Metrics,
+        tele: Option<&mut Telemetry>,
     ) -> u64 {
         let serial = if self.read_ports == 0 || reads == 0 {
             0
@@ -137,9 +141,13 @@ impl Opc {
             reads.div_ceil(self.read_ports) as u64
         };
         let hops = (span - 1) as u64;
-        self.pool.claim(now, now + (serial + hops).max(1));
+        let hold = (serial + hops).max(1);
+        self.pool.claim(now, now + hold);
+        if let Some(t) = tele {
+            t.push_span(Track::Collector, "collect", now, now + hold);
+        }
         if serial > 0 {
-            let hold = serial + hops;
+            // `hold == serial + hops` here (`serial >= 1`).
             for b in base..base + span {
                 self.banks[b] = now + hold;
                 metrics.opc_bank_busy[b] += hold;
@@ -188,7 +196,7 @@ mod tests {
         let mut o = opc(0, 0, 0);
         let mut m = Metrics::default();
         assert!(o.can_collect(0, 1, 2, 5));
-        assert_eq!(o.collect(0, 1, 2, 5, &mut m), 0, "free collection");
+        assert_eq!(o.collect(0, 1, 2, 5, &mut m, None), 0, "free collection");
         assert!(o.can_collect(0, 1, 2, 5), "still free: nothing was claimed");
         assert_eq!(o.wb_slot(FuKind::Alu, 9, &mut m), 9);
         assert_eq!(o.next_release(0), None);
@@ -202,7 +210,7 @@ mod tests {
         let mut o = opc(0, 1, 0);
         let mut m = Metrics::default();
         // 2 reads / 1 port -> 2 cycles: 1 extra, bank 0 held till 12.
-        assert_eq!(o.collect(0, 1, 2, 10, &mut m), 1);
+        assert_eq!(o.collect(0, 1, 2, 10, &mut m, None), 1);
         assert_eq!(m.stall_operand, 1);
         assert_eq!(m.opc_bank_busy[0], 2);
         assert!(!o.can_collect(0, 1, 1, 11), "bank 0 still busy");
@@ -215,7 +223,7 @@ mod tests {
     fn two_ports_read_two_operands_in_one_cycle() {
         let mut o = opc(0, 2, 0);
         let mut m = Metrics::default();
-        assert_eq!(o.collect(0, 1, 2, 10, &mut m), 0, "2 reads / 2 ports: no extra");
+        assert_eq!(o.collect(0, 1, 2, 10, &mut m, None), 0, "2 reads / 2 ports: no extra");
         assert_eq!(m.stall_operand, 0);
         assert_eq!(m.opc_bank_busy[0], 1, "bank held for the single read cycle");
     }
@@ -224,7 +232,7 @@ mod tests {
     fn zero_read_instructions_skip_the_banks() {
         let mut o = opc(1, 1, 0);
         let mut m = Metrics::default();
-        assert_eq!(o.collect(0, 1, 0, 10, &mut m), 0);
+        assert_eq!(o.collect(0, 1, 0, 10, &mut m, None), 0);
         assert_eq!(m.opc_bank_busy[0], 0, "no reads, no bank occupancy");
         assert!(!o.pool.available(10), "but the collector is still staged through");
         assert!(o.pool.available(11), "held one cycle");
@@ -236,7 +244,7 @@ mod tests {
         let mut m = Metrics::default();
         // 4-warp merged group, 2 reads: serial 2 + 3 hops = 5-cycle
         // hold on banks 0..4.
-        assert_eq!(o.collect(0, 4, 2, 10, &mut m), 1, "extra latency is the serial part");
+        assert_eq!(o.collect(0, 4, 2, 10, &mut m, None), 1, "extra latency is the serial part");
         for b in 0..4 {
             assert_eq!(m.opc_bank_busy[b], 5);
             assert!(!o.can_collect(b, 1, 1, 14), "bank {b} held through the walk");
@@ -249,7 +257,7 @@ mod tests {
     fn collector_exhaustion_blocks_and_releases() {
         let mut o = opc(1, 1, 0);
         let mut m = Metrics::default();
-        o.collect(0, 1, 2, 10, &mut m); // collector held till 12
+        o.collect(0, 1, 2, 10, &mut m, None); // collector held till 12
         assert!(!o.can_collect(1, 1, 1, 11), "no free collector for bank 1");
         assert!(o.can_collect(1, 1, 1, 12));
     }
@@ -267,7 +275,7 @@ mod tests {
     fn reset_clears_collectors_banks_and_bus() {
         let mut o = opc(1, 1, 1);
         let mut m = Metrics::default();
-        o.collect(0, 1, 2, 10, &mut m);
+        o.collect(0, 1, 2, 10, &mut m, None);
         o.wb_slot(FuKind::Alu, 100, &mut m);
         o.reset();
         assert!(o.can_collect(0, 1, 2, 0));

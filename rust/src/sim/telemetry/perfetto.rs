@@ -1,0 +1,128 @@
+//! Perfetto / Chrome `trace_event` exporter.
+//!
+//! Converts [`TelemetrySnapshot`] span logs into the JSON Array
+//! Format understood by `ui.perfetto.dev` and `chrome://tracing`:
+//! one complete-duration (`"ph":"X"`) event per span, with the core as
+//! the process (`pid`) and each track (warp issue lanes, FU holds,
+//! collector holds, memory fills) as a named thread (`tid`).
+//! Timestamps are simulated cycles reported in the trace's `ts`/`dur`
+//! microsecond fields — 1 cycle renders as 1 µs, which keeps the UI's
+//! zoom ruler meaningful.
+//!
+//! Hand-rolled and byte-deterministic, like every other JSON emitter
+//! in this crate (no serde in the dependency-free build): metadata
+//! events are ordered by `(pid, tid)` and span events follow in
+//! recorded (issue) order, so the same simulation always exports the
+//! same bytes — the CI `profile-smoke` job pins a fixture on this.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::{TelemetrySnapshot, Track};
+
+/// Minimal JSON string escaper (names here are ASCII labels, but stay
+/// defensive).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Export one or more core snapshots as a Chrome trace JSON document.
+pub fn export(snaps: &[TelemetrySnapshot]) -> String {
+    let mut events: Vec<String> = Vec::new();
+    for snap in snaps {
+        let pid = snap.core;
+        events.push(format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"args\":{{\"name\":{}}}}}",
+            json_str(&format!("core {pid}"))
+        ));
+        // One thread_name metadata event per track that has spans,
+        // ordered by tid for determinism.
+        let mut tracks: BTreeMap<u64, Track> = BTreeMap::new();
+        for s in &snap.spans {
+            tracks.insert(s.track.tid(), s.track);
+        }
+        for (tid, track) in &tracks {
+            events.push(format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\
+                 \"args\":{{\"name\":{}}}}}",
+                json_str(&track.label())
+            ));
+        }
+        for s in &snap.spans {
+            events.push(format!(
+                "{{\"name\":{},\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{pid},\"tid\":{}}}",
+                json_str(s.name),
+                s.start,
+                s.end - s.start,
+                s.track.tid()
+            ));
+        }
+    }
+    let mut out = String::from("{\"traceEvents\":[\n");
+    for (i, e) in events.iter().enumerate() {
+        out.push_str(e);
+        if i + 1 < events.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("],\"displayTimeUnit\":\"ns\"}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fu::FuKind;
+    use crate::sim::telemetry::{Telemetry, TelemetryConfig};
+
+    fn snap() -> TelemetrySnapshot {
+        let mut t = Telemetry::new(&TelemetryConfig::sampled(8), 2);
+        t.push_span(Track::Warp(1), "alu", 1, 5);
+        t.push_span(Track::Fu(FuKind::Alu), "alu", 1, 2);
+        t.push_span(Track::Memory, "fill", 10, 110);
+        t.snapshot(3)
+    }
+
+    #[test]
+    fn emits_metadata_then_spans() {
+        let json = export(&[snap()]);
+        assert!(json.starts_with("{\"traceEvents\":[\n"));
+        assert!(json.contains("\"name\":\"process_name\",\"ph\":\"M\",\"pid\":3"));
+        assert!(json.contains("\"args\":{\"name\":\"core 3\"}"));
+        assert!(json.contains("\"args\":{\"name\":\"warp 1\"}"));
+        assert!(json.contains("\"args\":{\"name\":\"fu alu\"}"));
+        assert!(json.contains("\"args\":{\"name\":\"memory fills\"}"));
+        let fill = "{\"name\":\"fill\",\"ph\":\"X\",\"ts\":10,\"dur\":100,\"pid\":3,\"tid\":310}";
+        assert!(json.contains(fill));
+        let alu = "{\"name\":\"alu\",\"ph\":\"X\",\"ts\":1,\"dur\":4,\"pid\":3,\"tid\":101}";
+        assert!(json.contains(alu));
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        assert_eq!(export(&[snap()]), export(&[snap()]));
+    }
+
+    #[test]
+    fn escapes_control_characters() {
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(json_str("\u{1}"), "\"\\u0001\"");
+    }
+}

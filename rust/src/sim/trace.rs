@@ -51,6 +51,19 @@ impl TraceBuf {
         self.lines.iter().map(String::as_str)
     }
 
+    /// Dump-ready lines: the retained window, preceded by an explicit
+    /// `... N earlier lines dropped` marker whenever the ring evicted
+    /// anything — so a truncated trace can never masquerade as the
+    /// full history.
+    pub fn render(&self) -> Vec<String> {
+        let mut out = Vec::with_capacity(self.lines.len() + 1);
+        if self.dropped > 0 {
+            out.push(format!("... {} earlier lines dropped", self.dropped));
+        }
+        out.extend(self.lines.iter().cloned());
+        out
+    }
+
     pub fn clear(&mut self) {
         self.lines.clear();
         self.dropped = 0;
@@ -81,6 +94,17 @@ mod tests {
         }
         assert_eq!(t.len(), 100);
         assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn render_marks_dropped_lines() {
+        let mut t = TraceBuf::new(2);
+        t.push("a".into());
+        assert_eq!(t.render(), ["a"], "no marker before any eviction");
+        t.push("b".into());
+        t.push("c".into());
+        t.push("d".into());
+        assert_eq!(t.render(), ["... 2 earlier lines dropped", "c", "d"]);
     }
 
     #[test]

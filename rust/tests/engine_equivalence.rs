@@ -15,16 +15,25 @@
 //! `vortex()` collectors/read-ports/result-buses under dual issue, and
 //! OPC+FU+memhier on two cores), and additionally pin `launch_batch`
 //! determinism and the GPU-level timeout fix.
+//!
+//! PR 7 extends the contract to telemetry: with
+//! `TelemetryConfig::sampled(..)` the per-core interval timelines,
+//! per-warp stall attributions and span logs must also be
+//! **bit-identical** across engines (the fast-forward bulk-charge and
+//! the reference one-cycle walk land in the same buckets) and across
+//! `--threads` in batch mode. Every config below asserts
+//! `LaunchResult::telemetry` equality — trivially for legacy configs
+//! (both sides empty), structurally for the sampled ones.
 
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
-use vortex_warp::coordinator::{launch_batch, BatchJob};
+use vortex_warp::coordinator::{launch_batch, launch_batch_isolated, BatchJob, BatchPolicy};
 use vortex_warp::isa::asm::regs::*;
 use vortex_warp::isa::{csr, Asm};
 use vortex_warp::kernels;
 use vortex_warp::sim::config::{CacheConfig, SchedPolicy};
 use vortex_warp::sim::{
     CoreError, EngineMode, FaultConfig, FaultTarget, FuConfig, Gpu, MemHierConfig, OpcConfig,
-    SimConfig, SimError,
+    SimConfig, SimError, TelemetryConfig,
 };
 
 fn reference(base: &SimConfig) -> SimConfig {
@@ -60,6 +69,13 @@ fn assert_equivalent_over_kernels(base: &SimConfig, what: &str) {
                 sol.name(),
                 slow.metrics.cycles,
                 fast.metrics.cycles
+            );
+            assert_eq!(
+                slow.telemetry,
+                fast.telemetry,
+                "{what}: {}[{}] telemetry snapshots not bit-identical",
+                b.name,
+                sol.name()
             );
         }
     }
@@ -197,6 +213,34 @@ fn metrics_bit_identical_with_opc_fu_pools_and_memory_hierarchy() {
     cfg.fu.issue_width = 2;
     cfg.opc = OpcConfig::vortex();
     assert_equivalent_over_kernels(&cfg, "opc+fu+memhier+2-core");
+}
+
+#[test]
+fn telemetry_bit_identical_on_paper_config_with_sampling() {
+    // Sampled-telemetry config 1 of 2: the paper machine with a
+    // 64-cycle timeline. The fast-forward engine bulk-charges skipped
+    // stall windows across bucket boundaries; the reference engine
+    // walks them one cycle at a time — the timelines, per-warp stall
+    // tables and span logs must come out bit-identical.
+    let mut cfg = SimConfig::paper();
+    cfg.telemetry = TelemetryConfig::sampled(64);
+    assert_equivalent_over_kernels(&cfg, "telemetry-64");
+}
+
+#[test]
+fn telemetry_bit_identical_with_everything_bounded_and_tiny_buckets() {
+    // Sampled-telemetry config 2 of 2: bounded FUs + OPC + full
+    // hierarchy on two cores, with a deliberately tiny 8-cycle bucket
+    // so nearly every skipped window straddles bucket boundaries, plus
+    // memory-fill spans, collector-hold spans and wb-port waits all
+    // live at once.
+    let mut cfg = hier(&SimConfig::paper());
+    cfg.num_cores = 2;
+    cfg.fu = FuConfig::vortex();
+    cfg.fu.issue_width = 2;
+    cfg.opc = OpcConfig::vortex();
+    cfg.telemetry = TelemetryConfig::sampled(8);
+    assert_equivalent_over_kernels(&cfg, "telemetry-8+opc+fu+memhier+2-core");
 }
 
 #[test]
@@ -369,5 +413,40 @@ fn launch_batch_is_deterministic_and_matches_sequential() {
         for (name, arr) in &seq.env.arrays {
             assert_eq!(a.env.get(name), arr.as_slice(), "{}: array `{name}`", job.label);
         }
+    }
+}
+
+#[test]
+fn batch_telemetry_is_identical_across_thread_counts() {
+    // Streaming telemetry through the batch coordinator must not
+    // depend on host parallelism: the same jobs at 1 and 3 worker
+    // threads produce bit-identical timelines and stall tables, and
+    // both match a sequential dispatch.
+    let mut cfg = SimConfig::paper();
+    cfg.telemetry = TelemetryConfig::sampled(32);
+    let jobs: Vec<BatchJob> = kernels::all()
+        .into_iter()
+        .take(3)
+        .flat_map(|b| {
+            [Solution::Hw, Solution::Sw].map(|sol| {
+                BatchJob::new(
+                    format!("{}[{}]", b.name, sol.name()),
+                    sol,
+                    b.kernel.clone(),
+                    cfg.clone(),
+                    b.inputs.clone(),
+                )
+            })
+        })
+        .collect();
+    let one = launch_batch_isolated(&jobs, &BatchPolicy { threads: 1, ..Default::default() });
+    let three = launch_batch_isolated(&jobs, &BatchPolicy { threads: 3, ..Default::default() });
+    for ((job, a), b) in jobs.iter().zip(&one).zip(&three) {
+        let a = a.result.as_ref().unwrap_or_else(|e| panic!("{}: {e}", job.label));
+        let b = b.result.as_ref().unwrap_or_else(|e| panic!("{}: {e}", job.label));
+        assert!(!a.telemetry.is_empty(), "{}: telemetry enabled", job.label);
+        assert_eq!(a.telemetry, b.telemetry, "{}: telemetry differs across threads", job.label);
+        let seq = dispatch(job.solution, &job.kernel, &job.cfg, &job.inputs).unwrap();
+        assert_eq!(a.telemetry, seq.telemetry, "{}: batch != sequential telemetry", job.label);
     }
 }

@@ -1,0 +1,155 @@
+//! Integration tests for `sim/telemetry` (PR 7): the cycle-attributed
+//! observability layer.
+//!
+//! Pins the three contracts the module documents:
+//!
+//! 1. **Zero cost when off**: under the default
+//!    `TelemetryConfig::legacy()` no snapshot is produced and —
+//!    crucially — turning sampling ON does not perturb timing: the
+//!    `Metrics` block is bit-identical with and without telemetry.
+//! 2. **Complete attribution**: with sampling on, the timeline
+//!    accounts every executed cycle exactly once (Σ bucket cycles =
+//!    `Metrics::cycles`) and every issued instruction (Σ bucket
+//!    instrs = `Metrics::instrs`), and the per-cause bucket sums equal
+//!    the corresponding aggregate stall counters.
+//! 3. **Exportability**: the Perfetto JSON from a real run is
+//!    well-formed and byte-deterministic, and `--trace` dumps carry
+//!    the `... N earlier lines dropped` marker.
+
+use vortex_warp::coordinator::dispatch::{dispatch, Solution};
+use vortex_warp::kernels;
+use vortex_warp::sim::telemetry::perfetto;
+use vortex_warp::sim::{Cause, SimConfig, TelemetryConfig};
+
+fn sampled(interval: u64) -> SimConfig {
+    let mut cfg = SimConfig::paper();
+    cfg.telemetry = TelemetryConfig::sampled(interval);
+    cfg
+}
+
+#[test]
+fn legacy_default_is_off_and_sampling_never_perturbs_metrics() {
+    for b in kernels::all() {
+        for sol in [Solution::Hw, Solution::Sw] {
+            let off = dispatch(sol, &b.kernel, &SimConfig::paper(), &b.inputs).unwrap();
+            assert!(
+                off.telemetry.is_empty(),
+                "{}[{}]: legacy config must produce no snapshots",
+                b.name,
+                sol.name()
+            );
+            let on = dispatch(sol, &b.kernel, &sampled(64), &b.inputs).unwrap();
+            assert!(!on.telemetry.is_empty(), "{}[{}]: sampling on", b.name, sol.name());
+            assert_eq!(
+                off.metrics,
+                on.metrics,
+                "{}[{}]: telemetry is an observer — metrics must be bit-identical",
+                b.name,
+                sol.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn timeline_accounts_every_cycle_and_instruction() {
+    for b in kernels::all() {
+        for sol in [Solution::Hw, Solution::Sw] {
+            let r = dispatch(sol, &b.kernel, &sampled(32), &b.inputs).unwrap();
+            assert_eq!(r.telemetry.len(), 1, "paper config is single-core");
+            let snap = &r.telemetry[0];
+            assert_eq!(
+                snap.timeline.cycles(),
+                r.metrics.cycles,
+                "{}[{}]: every executed cycle lands in exactly one bucket",
+                b.name,
+                sol.name()
+            );
+            assert_eq!(
+                snap.timeline.instrs(),
+                r.metrics.instrs,
+                "{}[{}]: every issued instruction is attributed",
+                b.name,
+                sol.name()
+            );
+            let per_warp: u64 = snap.warp_issued.iter().sum();
+            assert_eq!(
+                per_warp,
+                r.metrics.instrs,
+                "{}[{}]: per-warp issue counts sum to the total",
+                b.name,
+                sol.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn per_cause_bucket_sums_match_aggregate_stall_counters() {
+    // Under the paper config (legacy FU/OPC) the timeline's per-cycle
+    // classification maps 1:1 onto the aggregate counters — including
+    // `stall_operand`, which only grows extra per-instruction charges
+    // under a bounded OPC.
+    for b in kernels::all() {
+        let r = dispatch(Solution::Sw, &b.kernel, &sampled(16), &b.inputs).unwrap();
+        let snap = &r.telemetry[0];
+        let sum = |c: Cause| -> u64 {
+            snap.timeline.buckets.iter().map(|bk| bk.stalls[c as usize]).sum()
+        };
+        let m = &r.metrics;
+        assert_eq!(sum(Cause::Scoreboard), m.stall_scoreboard, "{}", b.name);
+        assert_eq!(sum(Cause::Barrier), m.stall_barrier, "{}", b.name);
+        assert_eq!(sum(Cause::Pipeline), m.stall_pipeline, "{}", b.name);
+        assert_eq!(sum(Cause::Structural), m.stall_structural, "{}", b.name);
+        assert_eq!(sum(Cause::Operand), m.stall_operand, "{}", b.name);
+        assert_eq!(sum(Cause::Idle), m.idle_cycles, "{}", b.name);
+    }
+}
+
+#[test]
+fn warp_stall_attribution_feeds_the_top_offender_report() {
+    let benches = kernels::all();
+    let b = &benches[0];
+    let r = dispatch(Solution::Sw, &b.kernel, &sampled(64), &b.inputs).unwrap();
+    let snap = &r.telemetry[0];
+    let total: u64 = (0..snap.warp_stalls.len()).map(|w| snap.warp_total_stall(w)).sum();
+    assert!(total > 0, "a real kernel stalls somewhere");
+    let timeline = snap.render_timeline();
+    assert!(timeline.contains("cycles"), "{timeline}");
+    assert!(timeline.contains("ipc"), "{timeline}");
+    let top = snap.render_top_warps(4);
+    assert!(top.contains("warp"), "{top}");
+    assert!(top.contains("stalled"), "{top}");
+}
+
+#[test]
+fn perfetto_export_from_a_real_run_is_wellformed_and_deterministic() {
+    let benches = kernels::all();
+    let b = &benches[0];
+    let run = || dispatch(Solution::Hw, &b.kernel, &sampled(64), &b.inputs).unwrap();
+    let json = perfetto::export(&run().telemetry);
+    assert!(json.starts_with("{\"traceEvents\":[\n"), "{json}");
+    assert!(json.ends_with("],\"displayTimeUnit\":\"ns\"}\n"), "{json}");
+    assert!(json.contains("\"ph\":\"M\""), "metadata events present");
+    assert!(json.contains("\"ph\":\"X\""), "span events present");
+    assert_eq!(json, perfetto::export(&run().telemetry), "byte-deterministic");
+}
+
+#[test]
+fn trace_dump_carries_the_dropped_marker() {
+    let benches = kernels::all();
+    let b = &benches[0];
+    let mut cfg = SimConfig::paper();
+    cfg.trace = true;
+    cfg.trace_cap = 4;
+    let r = dispatch(Solution::Hw, &b.kernel, &cfg, &b.inputs).unwrap();
+    assert_eq!(r.trace.len(), 5, "4 retained lines + the marker");
+    assert!(
+        r.trace[0].starts_with("... ") && r.trace[0].ends_with(" earlier lines dropped"),
+        "first line is the eviction marker: {:?}",
+        r.trace[0]
+    );
+    // And with tracing off, nothing is carried.
+    let quiet = dispatch(Solution::Hw, &b.kernel, &SimConfig::paper(), &b.inputs).unwrap();
+    assert!(quiet.trace.is_empty());
+}
