@@ -20,22 +20,34 @@ import urllib.error
 import urllib.request
 import zipfile
 
+# (json key, table label, speedup key within the block — None when the
+# scenario has no speedup notion, e.g. the ALU microbench).
 SCENARIOS = [
-    ("aggregate", "aggregate (paper kernels)"),
-    ("memhier", "memhier (gather + full hierarchy)"),
-    ("fu", "fu (bounded units)"),
-    ("opc", "opc (operand collector, dual issue)"),
-    ("telemetry", "telemetry (sampled interval 64)"),
+    ("aggregate", "aggregate (paper kernels)", "engine_speedup"),
+    ("memhier", "memhier (gather + full hierarchy)", "engine_speedup"),
+    ("fu", "fu (bounded units)", "engine_speedup"),
+    ("opc", "opc (operand collector, dual issue)", "engine_speedup"),
+    ("telemetry", "telemetry (sampled interval 64)", "engine_speedup"),
+    # Schema v6 (PR 8): sampled simulation reports its wall win against
+    # the detailed fast engine, and the raw ALU microbench reports
+    # throughput only.
+    ("sampling", "sampling (detailed windows + gaps)", "speedup_vs_detailed"),
+    ("micro", "micro (ALU-dense loop, raw Gpu)", None),
 ]
 
 
 def scenario_stats(report):
-    """name -> (fast_mips, engine_speedup) for every scenario present."""
+    """name -> (fast_mips, speedup | None) for every scenario present."""
     out = {}
-    for key, _ in SCENARIOS:
+    for key, _, speedup_key in SCENARIOS:
         block = report.get(key)
-        if isinstance(block, dict) and "fast_mips" in block:
-            out[key] = (block["fast_mips"], block.get("engine_speedup", 0.0))
+        if not isinstance(block, dict):
+            continue
+        mips = block.get("fast_mips", block.get("mips"))
+        if mips is None:
+            continue
+        speedup = block.get(speedup_key, 0.0) if speedup_key else None
+        out[key] = (mips, speedup)
     return out
 
 
@@ -126,25 +138,39 @@ def main():
 
     print("## Perf trajectory (`BENCH_perf.json`)")
     print()
+    headline = current.get("aggregate", {})
+    extra = ""
+    if "instrs_per_sec" in headline:
+        extra = f" · {headline['instrs_per_sec']:,.0f} instr/s aggregate"
     print(
         f"schema `{current.get('schema', '?')}` · "
         f"{len(current.get('rows', []))} tracked workloads · "
         f"{current.get('host_threads', '?')} host threads"
+        f"{extra}"
     )
     print()
-    print("| scenario | fast M instr/s | engine speedup | fast Δ vs main |")
+    print("| scenario | fast M instr/s | speedup | fast Δ vs main |")
     print("|---|---:|---:|---:|")
-    for key, label in SCENARIOS:
+    for key, label, _ in SCENARIOS:
         if key not in cur:
             continue
         mips, speedup = cur[key]
+        speedup_cell = "—" if speedup is None else f"{speedup:.2f}×"
         if key in base and base[key][0] > 0:
             pct = (mips - base[key][0]) / base[key][0] * 100.0
             delta = f"{pct:+.1f}%"
         else:
             delta = "—"
-        print(f"| {label} | {mips:.2f} | {speedup:.2f}× | {delta} |")
+        print(f"| {label} | {mips:.2f} | {speedup_cell} | {delta} |")
     print()
+    smp = current.get("sampling")
+    if isinstance(smp, dict) and "max_cycle_rel_err" in smp:
+        print(
+            f"sampled-vs-detailed cycle estimate: max relative error "
+            f"{smp['max_cycle_rel_err']:.3f} (hard-bounded at 0.25 by "
+            f"`tests/sampling_accuracy.rs`)"
+        )
+        print()
     if baseline is None:
         print(f"_no main baseline: {why}_")
     else:

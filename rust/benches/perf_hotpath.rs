@@ -24,7 +24,15 @@
 //!      `telemetry_rows`, plus a telemetry-off baseline of the same
 //!      kernels so `telemetry.sampling_overhead` tracks the cost of
 //!      turning sampling on (the off-by-default cost is pinned by the
-//!      main `rows` trajectory staying flat).
+//!      main `rows` trajectory staying flat);
+//!   8. a **sampled-simulation scenario** (PR 8): the same launches
+//!      with `SamplingConfig::sampled(128, 1024)` vs the detailed fast
+//!      engine — `sampling.speedup_vs_detailed` is the wall win,
+//!      `sampling.max_cycle_rel_err` the accuracy cost (hard-bounded
+//!      by `tests/sampling_accuracy.rs`);
+//!   9. an **ALU-dense microbench** (PR 8): a raw branch+ALU loop on
+//!      one warp — per-instruction simulator overhead with no memory
+//!      or collective traffic, pinning the vectorized lane loops.
 //!
 //! While measuring, the bench asserts the two engines return
 //! bit-identical `Metrics` — the equivalence invariant — and writes a
@@ -38,8 +46,13 @@ use std::time::Instant;
 use vortex_warp::bench_harness::perf::{PerfReport, PerfRow};
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
 use vortex_warp::coordinator::{launch_batch, BatchJob};
+use vortex_warp::isa::asm::regs::*;
+use vortex_warp::isa::Asm;
 use vortex_warp::kernels;
-use vortex_warp::sim::{EngineMode, FuConfig, MemHierConfig, OpcConfig, SimConfig, TelemetryConfig};
+use vortex_warp::sim::{
+    EngineMode, FuConfig, Gpu, MemHierConfig, OpcConfig, SamplingConfig, SimConfig,
+    TelemetryConfig,
+};
 
 fn best_of(iters: usize, mut f: impl FnMut() -> u64) -> (u128, u64) {
     let mut best_ns = u128::MAX;
@@ -258,6 +271,95 @@ fn main() {
         }
     }
 
+    // Sampled-simulation scenario (PR 8): the same launches with
+    // detailed windows + IPC-extrapolated functional gaps vs the
+    // detailed fast engine. Outputs stay exact (the accuracy test pins
+    // that); here we track the wall win and the cycle-estimate error.
+    let sampling_kernels = ["matmul", "reduce"];
+    let sampled_cfg = {
+        let mut c = SimConfig::paper();
+        c.sampling = SamplingConfig::sampled(128, 1024);
+        c
+    };
+    println!("\n=== sampled-simulation scenario (SamplingConfig::sampled(128, 1024)) ===");
+    for name in sampling_kernels {
+        let b = kernels::by_name(name).expect("sampling benchmark");
+        for sol in [Solution::Hw, Solution::Sw] {
+            let detailed = dispatch(sol, &b.kernel, &fast, &b.inputs).expect("detailed warm");
+            let sampled = dispatch(sol, &b.kernel, &sampled_cfg, &b.inputs).expect("sampled warm");
+            assert_eq!(
+                detailed.metrics.instrs,
+                sampled.metrics.instrs,
+                "{name}[{}]: instruction count must be exact under sampling",
+                sol.name()
+            );
+            let err = (sampled.metrics.cycles as f64 - detailed.metrics.cycles as f64).abs()
+                / detailed.metrics.cycles as f64;
+            report.sampling_max_rel_err = report.sampling_max_rel_err.max(err);
+
+            let (det_ns, _) = best_of(iters, || {
+                dispatch(sol, &b.kernel, &fast, &b.inputs).expect("detailed run").metrics.instrs
+            });
+            let (smp_ns, instrs) = best_of(iters, || {
+                dispatch(sol, &b.kernel, &sampled_cfg, &b.inputs)
+                    .expect("sampled run")
+                    .metrics
+                    .instrs
+            });
+            let row = PerfRow {
+                bench: b.name.to_string(),
+                solution: sol.name().to_string(),
+                instrs,
+                // Scenario semantics: reference = detailed, fast = sampled.
+                reference_ns: det_ns,
+                fast_ns: smp_ns,
+            };
+            println!(
+                "{:24} {:>10}  {:>10.2}  {:>10.2}  {:>7.2}x  cycle err {:.3}",
+                format!("{}[{}]", b.name, sol.name()),
+                row.instrs,
+                row.reference_mips(),
+                row.fast_mips(),
+                row.engine_speedup(),
+                err,
+            );
+            report.sampling_rows.push(row);
+        }
+    }
+
+    // ALU-dense microbench (PR 8): a raw branch+ALU loop on one warp —
+    // no memory traffic, no collectives, no divergence. This is the
+    // purest per-instruction overhead number the simulator has, so the
+    // vectorized lane loops show up here before anywhere else.
+    let micro_prog = {
+        let mut a = Asm::new();
+        a.li(T0, 0); // acc
+        a.li(T1, 50_000); // trip count
+        a.li(T2, 3);
+        let top = a.here();
+        a.add(T3, T0, T2);
+        a.add(T4, T3, T2);
+        a.add(T0, T4, T2);
+        a.addi(T0, T0, 1);
+        a.addi(T1, T1, -1);
+        a.bne(T1, ZERO, top);
+        a.ecall();
+        a.finish()
+    };
+    // Construct the Gpu once outside the timed closure — zeroing global
+    // memory and building cores is launch overhead, not the
+    // per-instruction cost this scenario tracks.
+    let mut micro_gpu = Gpu::new(&fast);
+    let mut run_micro = || {
+        micro_gpu.load_program(&micro_prog);
+        micro_gpu.run(200_000_000).expect("microbench run");
+        micro_gpu.cores[0].metrics.instrs
+    };
+    run_micro(); // warm
+    let (micro_ns, micro_instrs) = best_of(iters, run_micro);
+    report.micro_instrs = micro_instrs;
+    report.micro_ns = micro_ns;
+
     // Batched run: every (paper kernel x solution) job, repeated so
     // each host thread has work, through the scoped-thread batch
     // launcher (same composition as the tracked rows above).
@@ -316,6 +418,20 @@ fn main() {
         report.telemetry_fast_mips(),
         report.telemetry_engine_speedup(),
         report.telemetry_sampling_overhead(),
+    );
+    println!(
+        "sampled simulation: {:.2} M instr/s, {:.2}x vs detailed, max cycle err {:.3}",
+        report.sampling_fast_mips(),
+        report.sampling_speedup(),
+        report.sampling_max_rel_err,
+    );
+    println!(
+        "ALU microbench: {} instrs in {} ns -> {:.2} M instr/s \
+         (aggregate {:.0} instr/s absolute)",
+        report.micro_instrs,
+        report.micro_ns,
+        report.micro_mips(),
+        report.aggregate_instrs_per_sec(),
     );
 
     let out = std::env::var("BENCH_PERF_OUT").unwrap_or_else(|_| "BENCH_perf.json".into());

@@ -71,6 +71,22 @@ pub struct PerfReport {
     /// telemetry-off cost itself is pinned by `rows` staying on its
     /// historical trajectory (the `aggregate.engine_speedup` floor).
     pub telemetry_off_ns: u128,
+    /// Sampled-simulation scenario (PR 8): representative kernels with
+    /// `SamplingConfig` enabled. Row semantics differ from the other
+    /// scenarios: `reference_ns` is the **detailed** fast-engine run
+    /// and `fast_ns` is the **sampled** run of the same launch, so
+    /// `engine_speedup()` reads as sampled-vs-detailed wall speedup.
+    pub sampling_rows: Vec<PerfRow>,
+    /// Worst relative error of the sampled cycle estimate vs the
+    /// detailed cycle count across `sampling_rows` (informational; the
+    /// hard bound lives in `tests/sampling_accuracy.rs`).
+    pub sampling_max_rel_err: f64,
+    /// ALU-dense microbench (PR 8): retired warp-instructions and
+    /// best-of-N fast-engine wall time of a raw branch+ALU loop — the
+    /// purest view of per-instruction simulator overhead, pinning the
+    /// vectorized-lane-loop work independent of kernel composition.
+    pub micro_instrs: u64,
+    pub micro_ns: u128,
     /// Wall time of one `launch_batch` over every (bench × solution)
     /// job with the fast engine.
     pub batch_wall_ns: u128,
@@ -164,6 +180,31 @@ impl PerfReport {
         }
     }
 
+    /// Fast-engine throughput of the sampled-simulation scenario
+    /// (sampled runs).
+    pub fn sampling_fast_mips(&self) -> f64 {
+        scenario_fast_mips(&self.sampling_rows)
+    }
+
+    /// Wall-clock speedup of sampled simulation over the detailed fast
+    /// engine on the same launches.
+    pub fn sampling_speedup(&self) -> f64 {
+        scenario_engine_speedup(&self.sampling_rows)
+    }
+
+    /// Microbench throughput in M instr/s.
+    pub fn micro_mips(&self) -> f64 {
+        mips(self.micro_instrs, self.micro_ns)
+    }
+
+    /// Absolute aggregate throughput of the fast engine in
+    /// instructions per second (the v6 headline number — `fast_mips`
+    /// times 1e6, published separately so dashboards need no unit
+    /// conversion).
+    pub fn aggregate_instrs_per_sec(&self) -> f64 {
+        self.aggregate_fast_mips() * 1e6
+    }
+
     fn totals(&self, ns_of: impl Fn(&PerfRow) -> u128) -> (u64, u128) {
         let instrs = self.rows.iter().map(|r| r.instrs).sum();
         let ns = self.rows.iter().map(ns_of).sum();
@@ -191,7 +232,7 @@ impl PerfReport {
 
     pub fn to_json(&self) -> String {
         let mut s = String::new();
-        s.push_str("{\n  \"schema\": \"vortex_warp.perf.v5\",\n");
+        s.push_str("{\n  \"schema\": \"vortex_warp.perf.v6\",\n");
         s.push_str(&format!("  \"host_threads\": {},\n", self.host_threads));
         s.push_str("  \"rows\": [\n");
         Self::rows_json(&self.rows, &mut s);
@@ -230,14 +271,31 @@ impl PerfReport {
             self.telemetry_engine_speedup(),
             self.telemetry_sampling_overhead(),
         ));
+        s.push_str("  \"sampling_rows\": [\n");
+        Self::rows_json(&self.sampling_rows, &mut s);
+        s.push_str("  ],\n");
+        s.push_str(&format!(
+            "  \"sampling\": {{\"fast_mips\": {:.4}, \"speedup_vs_detailed\": {:.4}, \
+             \"max_cycle_rel_err\": {:.4}}},\n",
+            self.sampling_fast_mips(),
+            self.sampling_speedup(),
+            self.sampling_max_rel_err,
+        ));
+        s.push_str(&format!(
+            "  \"micro\": {{\"instrs\": {}, \"wall_ns\": {}, \"mips\": {:.4}}},\n",
+            self.micro_instrs,
+            self.micro_ns,
+            self.micro_mips(),
+        ));
         s.push_str(&format!(
             "  \"aggregate\": {{\"reference_mips\": {:.4}, \"fast_mips\": {:.4}, \
-             \"batch_mips\": {:.4}, \"engine_speedup\": {:.4}, \"batch_wall_ns\": {}, \
-             \"batch_instrs\": {}}}\n",
+             \"batch_mips\": {:.4}, \"engine_speedup\": {:.4}, \"instrs_per_sec\": {:.1}, \
+             \"batch_wall_ns\": {}, \"batch_instrs\": {}}}\n",
             self.aggregate_reference_mips(),
             self.aggregate_fast_mips(),
             self.aggregate_batch_mips(),
             self.engine_speedup(),
+            self.aggregate_instrs_per_sec(),
             self.batch_wall_ns,
             self.batch_instrs,
         ));
@@ -346,6 +404,17 @@ mod tests {
                 fast_ns: 300_000_000,
             }],
             telemetry_off_ns: 250_000_000,
+            sampling_rows: vec![PerfRow {
+                bench: "matmul".into(),
+                solution: "HW".into(),
+                instrs: 1_000_000,
+                // reference_ns = detailed fast run, fast_ns = sampled.
+                reference_ns: 400_000_000,
+                fast_ns: 100_000_000,
+            }],
+            sampling_max_rel_err: 0.05,
+            micro_instrs: 8_000_000,
+            micro_ns: 1_000_000_000,
             batch_wall_ns: 500_000_000,
             batch_instrs: 4_000_000,
             host_threads: 4,
@@ -402,9 +471,28 @@ mod tests {
     }
 
     #[test]
+    fn sampling_scenario_aggregates() {
+        let r = report();
+        // 1M instrs / 0.1 s sampled = 10 M instr/s; 0.4 s detailed -> 4x.
+        assert!((r.sampling_fast_mips() - 10.0).abs() < 1e-9);
+        assert!((r.sampling_speedup() - 4.0).abs() < 1e-9);
+        assert_eq!(PerfReport::default().sampling_speedup(), 0.0);
+    }
+
+    #[test]
+    fn micro_and_instrs_per_sec() {
+        let r = report();
+        // 8M instrs / 1 s = 8 M instr/s microbench.
+        assert!((r.micro_mips() - 8.0).abs() < 1e-9);
+        // instrs_per_sec is exactly fast_mips in absolute units.
+        assert!((r.aggregate_instrs_per_sec() - r.aggregate_fast_mips() * 1e6).abs() < 1e-6);
+        assert_eq!(PerfReport::default().micro_mips(), 0.0);
+    }
+
+    #[test]
     fn json_shape() {
         let j = report().to_json();
-        assert!(j.contains("\"schema\": \"vortex_warp.perf.v5\""));
+        assert!(j.contains("\"schema\": \"vortex_warp.perf.v6\""));
         assert!(j.contains("\"bench\": \"matmul\""));
         assert!(j.contains("\"aggregate\""));
         assert!(j.contains("\"memhier_rows\""));
@@ -420,6 +508,14 @@ mod tests {
             "\"telemetry\": {\"fast_mips\": 3.3333, \"engine_speedup\": 3.0000, \
              \"sampling_overhead\": 1.2000}"
         ));
+        assert!(j.contains("\"sampling_rows\""));
+        assert!(j.contains(
+            "\"sampling\": {\"fast_mips\": 10.0000, \"speedup_vs_detailed\": 4.0000, \
+             \"max_cycle_rel_err\": 0.0500}"
+        ));
+        assert!(j.contains("\"micro\": {\"instrs\": 8000000, \"wall_ns\": 1000000000, \
+             \"mips\": 8.0000}"));
+        assert!(j.contains("\"instrs_per_sec\": 4000000.0"));
         assert!(j.contains("\"engine_speedup\": 2.0000"));
         // Balanced braces/brackets (cheap well-formedness check).
         assert_eq!(j.matches('{').count(), j.matches('}').count());

@@ -304,6 +304,64 @@ pub enum EngineMode {
     Reference,
 }
 
+/// Sampled-simulation configuration (PR 8): [`crate::sim::Gpu::run`]
+/// alternates *detailed* windows (the full cycle-level model) with
+/// *functional fast-forward* gaps in which instructions execute
+/// architecturally (registers, memory, divergence, barriers — outputs
+/// stay exact) but charge no per-cycle timing; the gap's cycle cost is
+/// extrapolated from the IPC measured over the last detailed window.
+/// Cycle counts and stall metrics become estimates;
+/// `tests/sampling_accuracy.rs` pins the IPC error bound across the
+/// kernel × solution matrix.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SamplingConfig {
+    /// Detailed-window length in cycles. `0` = sampling off.
+    pub detail: u64,
+    /// Functional-gap target in cycles (converted to an instruction
+    /// budget at the detailed window's measured IPC). `0` = off.
+    pub gap: u64,
+}
+
+impl SamplingConfig {
+    /// Legacy-equivalent default: sampling off, every cycle simulated
+    /// in detail — byte-identical to the seed's behavior.
+    pub fn legacy() -> Self {
+        SamplingConfig { detail: 0, gap: 0 }
+    }
+
+    /// Sample: `detail` detailed cycles, then a functional gap worth
+    /// about `gap` cycles, repeating.
+    pub fn sampled(detail: u64, gap: u64) -> Self {
+        SamplingConfig { detail, gap }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.detail > 0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.detail == 0 && self.gap == 0 {
+            return Ok(());
+        }
+        if self.detail == 0 || self.gap == 0 {
+            return Err("sampling needs detail and gap both > 0 (or both 0 = off)".into());
+        }
+        if self.detail < 64 {
+            return Err(format!(
+                "sampling detail window {} too short: need >= 64 cycles for a usable IPC sample",
+                self.detail
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Default for SamplingConfig {
+    fn default() -> Self {
+        Self::legacy()
+    }
+}
+
 /// Warp scheduling policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SchedPolicy {
@@ -359,6 +417,11 @@ pub struct SimConfig {
     /// Engine used by `run` (fast-forward by default; the reference
     /// one-cycle path is kept for equivalence testing).
     pub engine: EngineMode,
+    /// Sampled simulation (PR 8): detailed windows alternating with
+    /// functionally-executed gaps whose cycle cost is extrapolated.
+    /// The default is [`SamplingConfig::legacy`] — off, every cycle
+    /// detailed, byte-identical outputs and metrics.
+    pub sampling: SamplingConfig,
     /// Capture a per-instruction trace (slow; tests/debug only).
     pub trace: bool,
     /// Max retained trace lines (ring buffer — oldest lines are
@@ -385,6 +448,7 @@ impl SimConfig {
             fault: FaultConfig::legacy(),
             telemetry: TelemetryConfig::legacy(),
             engine: EngineMode::FastForward,
+            sampling: SamplingConfig::legacy(),
             trace: false,
             trace_cap: 1 << 16,
         }
@@ -423,6 +487,26 @@ impl SimConfig {
         self.opc.validate()?;
         self.memhier.validate(&self.dcache)?;
         self.fault.validate()?;
+        self.sampling.validate()?;
+        if self.sampling.enabled() {
+            // Gapped execution skips the per-cycle walk those features
+            // observe (fault landing cycles, telemetry timelines,
+            // trace lines) and has no cross-core clock to keep multi-
+            // core L2/DRAM claims deterministic — reject up front
+            // rather than return silently-wrong observations.
+            if self.num_cores > 1 {
+                return Err("sampling supports a single core only".into());
+            }
+            if self.fault.enabled() {
+                return Err("sampling is incompatible with fault injection".into());
+            }
+            if self.telemetry.enabled() {
+                return Err("sampling is incompatible with telemetry".into());
+            }
+            if self.trace {
+                return Err("sampling is incompatible with instruction tracing".into());
+            }
+        }
         Ok(())
     }
 }
@@ -569,6 +653,45 @@ mod tests {
         s.telemetry = TelemetryConfig::sampled(64);
         assert!(s.telemetry.enabled());
         s.validate().unwrap();
+    }
+
+    #[test]
+    fn paper_defaults_to_legacy_sampling_model() {
+        let c = SimConfig::paper();
+        assert_eq!(c.sampling, SamplingConfig::legacy(), "paper simulates every cycle");
+        assert!(!c.sampling.enabled());
+        c.validate().unwrap();
+        let mut s = SimConfig::paper();
+        s.sampling = SamplingConfig::sampled(1_000, 10_000);
+        assert!(s.sampling.enabled());
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn sampling_validation_rejects_bad_and_incompatible_configs() {
+        let mut s = SamplingConfig::legacy();
+        s.detail = 1_000; // gap still 0
+        assert!(s.validate().is_err(), "detail without gap");
+        let s = SamplingConfig::sampled(16, 1_000);
+        assert!(s.validate().is_err(), "window too short to measure IPC");
+        assert!(SamplingConfig::sampled(64, 1).validate().is_ok());
+        // Incompatibilities are caught at the SimConfig level.
+        let mut c = SimConfig::paper();
+        c.sampling = SamplingConfig::sampled(1_000, 10_000);
+        c.num_cores = 2;
+        assert!(c.validate().is_err(), "multi-core");
+        let mut c = SimConfig::paper();
+        c.sampling = SamplingConfig::sampled(1_000, 10_000);
+        c.fault.count = 1;
+        assert!(c.validate().is_err(), "fault injection");
+        let mut c = SimConfig::paper();
+        c.sampling = SamplingConfig::sampled(1_000, 10_000);
+        c.telemetry = TelemetryConfig::sampled(64);
+        assert!(c.validate().is_err(), "telemetry");
+        let mut c = SimConfig::paper();
+        c.sampling = SamplingConfig::sampled(1_000, 10_000);
+        c.trace = true;
+        assert!(c.validate().is_err(), "tracing");
     }
 
     #[test]

@@ -34,7 +34,7 @@ use super::scheduler::Scheduler;
 use super::scoreboard::Scoreboard;
 use super::telemetry::{Cause, Telemetry, Track};
 use super::trace::TraceBuf;
-use super::warp::{Warp, WarpState};
+use super::warp::{flip_mask_bit, full_mask, Warp, WarpState};
 use super::wb::{InFlight, WbQueue};
 use crate::isa::{csr, Instr};
 
@@ -189,6 +189,19 @@ pub struct Core {
     pub cfg: SimConfig,
     pub core_id: u32,
     prog: Vec<Instr>,
+    /// Hot per-warp state in struct-of-arrays layout (PR 8): the issue
+    /// stage reads the PC, thread mask and run-state of every warp
+    /// every cycle, so each lives in its own contiguous array (with
+    /// `ready_at` / `spawn_epoch` below and the scoreboard's own
+    /// per-warp vector) — the ready-warp scan and the `next_event`
+    /// min-fold walk flat memory instead of chasing one struct per
+    /// warp.
+    pub warp_pc: Vec<u32>,
+    /// Active-thread mask per warp (bit i = lane i), width = NT.
+    pub warp_tmask: Vec<u32>,
+    pub warp_state: Vec<WarpState>,
+    /// Cold per-warp state: the IPDOM divergence stacks, touched only
+    /// by `vx_split`/`vx_join`.
     pub warps: Vec<Warp>,
     pub rf: RegFile,
     pub(crate) sb: Scoreboard,
@@ -246,7 +259,10 @@ impl Core {
         Core {
             core_id,
             prog: Vec::new(),
-            warps: (0..nw).map(|_| Warp::new(nt)).collect(),
+            warp_pc: vec![0; nw],
+            warp_tmask: vec![full_mask(nt); nw],
+            warp_state: vec![WarpState::Inactive; nw],
+            warps: (0..nw).map(|_| Warp::new()).collect(),
             sb: Scoreboard::new(nw),
             sched: Scheduler::new(cfg.sched, nw, nt),
             memsys: CoreMem::new(&cfg.dcache, &cfg.memhier),
@@ -281,22 +297,31 @@ impl Core {
     }
 
     /// Reset architectural + timing state (keeps the program).
+    ///
+    /// Everything resets *in place* (PR 8): every container keeps its
+    /// capacity, so back-to-back launches on a warmed core never touch
+    /// the allocator — `tests/alloc_audit.rs` pins this.
     pub fn reset(&mut self) {
-        let (nw, nt) = (self.cfg.nw, self.cfg.nt);
-        self.warps = (0..nw).map(|_| Warp::new(nt)).collect();
-        self.warps[0].pc = map::CODE_BASE;
-        self.warps[0].state = WarpState::Active;
-        self.rf = RegFile::new(nw, nt);
-        self.sb = Scoreboard::new(nw);
-        self.sched = Scheduler::new(self.cfg.sched, nw, nt);
+        let nt = self.cfg.nt;
+        self.warp_pc.fill(0);
+        self.warp_tmask.fill(full_mask(nt));
+        self.warp_state.fill(WarpState::Inactive);
+        for w in &mut self.warps {
+            w.stack.clear();
+        }
+        self.warp_pc[0] = map::CODE_BASE;
+        self.warp_state[0] = WarpState::Active;
+        self.rf.reset();
+        self.sb.reset();
+        self.sched.reset();
         self.memsys.reset();
         self.fu.reset();
         self.opc.reset();
         self.inflight.clear();
         self.outcome = IssueOutcome::Idle;
-        self.barriers = BarrierTable::default();
-        self.ready_at = vec![0; nw];
-        self.spawn_epoch = vec![0; nw];
+        self.barriers.active.clear();
+        self.ready_at.fill(0);
+        self.spawn_epoch.fill(0);
         self.faults.reset();
         self.metrics = Metrics::default();
         self.trace.clear();
@@ -304,14 +329,14 @@ impl Core {
             .cfg
             .telemetry
             .enabled()
-            .then(|| Box::new(Telemetry::new(&self.cfg.telemetry, nw)));
+            .then(|| Box::new(Telemetry::new(&self.cfg.telemetry, self.cfg.nw)));
     }
 
     /// True while any warp is runnable/blocked or a writeback is
     /// outstanding.
     pub fn busy(&self) -> bool {
         !self.inflight.is_empty()
-            || self.warps.iter().any(|w| !matches!(w.state, WarpState::Inactive))
+            || self.warp_state.iter().any(|s| !matches!(s, WarpState::Inactive))
     }
 
     fn fetch(&self, pc: u32) -> Result<Instr, SimError> {
@@ -376,10 +401,10 @@ impl Core {
                 break;
             }
             let w = (start + i) % nw;
-            if !self.warps[w].is_active() {
+            if self.warp_state[w] != WarpState::Active {
                 continue;
             }
-            if self.warps[w].tmask == 0 {
+            if self.warp_tmask[w] == 0 {
                 // Unreachable without injection: `Tmc`/`Pred` park
                 // empty-mask warps as Inactive. A flipped predicate bit
                 // can zero the mask of a running warp — detect it here
@@ -396,7 +421,7 @@ impl Core {
                 self.tele_note(w, Cause::Pipeline);
                 continue;
             }
-            let pc = self.warps[w].pc;
+            let pc = self.warp_pc[w];
             let instr = self.fetch(pc)?;
             let srcs = instr.srcs();
             if !self.sb.can_issue(w, &srcs, instr.rd()) {
@@ -453,10 +478,12 @@ impl Core {
         } else if any_active {
             self.outcome = IssueOutcome::Idle;
             self.metrics.idle_cycles += 1;
-        } else if self.warps.iter().any(|w| matches!(w.state, WarpState::Barrier { .. })) {
+        } else if self.warp_state.iter().any(|s| matches!(s, WarpState::Barrier { .. })) {
             self.outcome = IssueOutcome::StallBarrier;
             self.metrics.stall_barrier += 1;
-            if self.inflight.is_empty() && !self.warps.iter().any(|w| w.is_active()) {
+            if self.inflight.is_empty()
+                && !self.warp_state.iter().any(|s| matches!(s, WarpState::Active))
+            {
                 return Err(SimError::Deadlock { cycle: now });
             }
         } else {
@@ -471,8 +498,8 @@ impl Core {
         // windows, which is what keeps sampled timelines bit-identical
         // across engines.
         if let Some(t) = self.telemetry.as_deref_mut() {
-            for (w, warp) in self.warps.iter().enumerate() {
-                if matches!(warp.state, WarpState::Barrier { .. }) {
+            for (w, s) in self.warp_state.iter().enumerate() {
+                if matches!(s, WarpState::Barrier { .. }) {
                     t.note_blocked(w, Cause::Barrier);
                 }
             }
@@ -519,8 +546,8 @@ impl Core {
     pub fn next_event(&self) -> Option<u64> {
         let now = self.metrics.cycles;
         let mut next = self.inflight.next_done().unwrap_or(u64::MAX);
-        for (w, warp) in self.warps.iter().enumerate() {
-            if warp.is_active() && self.ready_at[w] > now && self.ready_at[w] < next {
+        for (w, &s) in self.warp_state.iter().enumerate() {
+            if s == WarpState::Active && self.ready_at[w] > now && self.ready_at[w] < next {
                 next = self.ready_at[w];
             }
         }
@@ -550,7 +577,7 @@ impl Core {
                 self.rf.flip_bit(w, reg, lane, ev.bit);
             }
             FaultTarget::PredBit => {
-                self.warps[w].flip_mask_bit(ev.bit, self.cfg.nt);
+                self.warp_tmask[w] = flip_mask_bit(self.warp_tmask[w], ev.bit, self.cfg.nt);
             }
             FaultTarget::SmemWord => {
                 mem.flip_shared_bit(ev.loc, ev.bit);
@@ -619,6 +646,81 @@ impl Core {
     // silently diverge.
 
     // ------------------------------------------------------------------
+    // Sampled simulation (PR 8): functional fast-forward between
+    // detailed windows. `Gpu::run_sampled` drives these.
+    // ------------------------------------------------------------------
+
+    /// Retire every outstanding writeback immediately, regardless of
+    /// its due cycle (spawn-epoch discards still apply). Called before
+    /// a functional fast-forward gap so register state is
+    /// architecturally complete when instructions start executing
+    /// without the timing pipeline.
+    pub fn drain_writebacks(&mut self) {
+        while let Some(f) = self.inflight.pop_due(u64::MAX) {
+            if f.epoch != self.spawn_epoch[f.warp as usize] {
+                continue;
+            }
+            self.rf.write_masked(f.warp as usize, f.rd, f.mask, &f.vals);
+            self.sb.clear(f.warp as usize, f.rd);
+        }
+    }
+
+    /// Execute ONE instruction functionally: next active warp in
+    /// scheduler order, fetch → dispatch → immediate writeback, no
+    /// scoreboard/operand/structural checks and no cycle charged.
+    /// Architectural state (registers, memory, divergence stacks,
+    /// barriers, warp spawns) changes exactly as the detailed path
+    /// would; timing state touched by dispatch (FU metrics, `ready_at`
+    /// penalties, cache contents) is approximate by design. Returns
+    /// `false` when no warp is Active (halted, or all parked at
+    /// barriers — the caller falls back to detailed stepping, which
+    /// raises the deadlock error if one is due).
+    ///
+    /// Caller contract (`Gpu::run_sampled`): `drain_writebacks` ran
+    /// since the last detailed cycle, so operand reads see retired
+    /// values and stale scoreboard bits cannot linger into the next
+    /// detailed window.
+    pub fn step_functional(
+        &mut self,
+        mem: &mut Memory,
+        shared: &mut SharedMem,
+    ) -> Result<bool, SimError> {
+        let nw = self.cfg.nw;
+        let now = self.metrics.cycles;
+        let start = self.sched.start(nw);
+        for i in 0..nw {
+            let w = (start + i) % nw;
+            if self.warp_state[w] != WarpState::Active {
+                continue;
+            }
+            let tmask = self.warp_tmask[w];
+            if tmask == 0 {
+                return Err(SimError::CorruptState {
+                    cycle: now,
+                    what: format!("active warp {w} has an empty thread mask"),
+                });
+            }
+            let pc = self.warp_pc[w];
+            let instr = self.fetch(pc)?;
+            let lanes = tmask.count_ones() as u64;
+            let mut out = [0u32; 32];
+            let ret = fu::dispatch(self, w, pc, instr, mem, shared, now, &mut out)?;
+            self.metrics.instrs += 1;
+            self.metrics.thread_instrs += lanes;
+            self.warp_pc[w] = ret.next_pc;
+            if let Some(rd) = instr.rd() {
+                // Immediate retirement under the pre-dispatch mask —
+                // the same mask the detailed path snapshots into its
+                // in-flight entry.
+                self.rf.write_masked(w, rd, tmask, &out);
+            }
+            self.sched.issued(w, nw);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    // ------------------------------------------------------------------
     // Issue-side glue: trace, FU dispatch + occupancy, retire
     // bookkeeping. Instruction semantics live in `sim/fu`.
     // ------------------------------------------------------------------
@@ -637,7 +739,7 @@ impl Core {
         shared: &mut SharedMem,
         now: u64,
     ) -> Result<(), SimError> {
-        let tmask = self.warps[w].tmask;
+        let tmask = self.warp_tmask[w];
         let lanes = tmask.count_ones() as u64;
 
         if self.cfg.trace {
@@ -690,7 +792,7 @@ impl Core {
         // for a slot on its FU kind's result bus.
         self.metrics.instrs += 1;
         self.metrics.thread_instrs += lanes;
-        self.warps[w].pc = ret.next_pc;
+        self.warp_pc[w] = ret.next_pc;
         if let Some(rd) = instr.rd() {
             self.sb.set_pending(w, rd);
             let done = self.opc.wb_slot(kind, now + extra + ret.lat, &mut self.metrics);
@@ -743,7 +845,7 @@ impl Core {
             csr::CSR_THREAD_ID => lane as u32,
             csr::CSR_WARP_ID => w as u32,
             csr::CSR_CORE_ID => self.core_id,
-            csr::CSR_THREAD_MASK => self.warps[w].tmask,
+            csr::CSR_THREAD_MASK => self.warp_tmask[w],
             csr::CSR_NUM_THREADS => self.cfg.nt as u32,
             csr::CSR_NUM_WARPS => self.cfg.nw as u32,
             csr::CSR_NUM_CORES => self.cfg.num_cores as u32,
@@ -783,12 +885,12 @@ impl Core {
             // Release everyone.
             for i in 0..self.cfg.nw {
                 if arrived & (1 << i) != 0 && i != w {
-                    self.warps[i].state = WarpState::Active;
+                    self.warp_state[i] = WarpState::Active;
                 }
             }
             self.barriers.active.retain(|(i, _, _)| *i != id);
         } else {
-            self.warps[w].state = WarpState::Barrier { id };
+            self.warp_state[w] = WarpState::Barrier { id };
         }
     }
 

@@ -24,40 +24,39 @@ use crate::isa::{ShflMode, VoteMode};
 ///   (0 means "all lanes", the common `FULL_MASK` idiom).
 ///
 /// Returns the scalar result broadcast to every active lane.
+///
+/// All four modes reduce the lane values to one bitmask in a single
+/// branchless fixed-slice pass and finish with mask algebra (PR 8) —
+/// the per-lane conditionals the seed used became boolean-to-bit
+/// selects the compiler can autovectorize.
 pub fn vote(mode: VoteMode, vals: &[u32], active: u32, members: u32) -> u32 {
     let seg_size = vals.len();
     let members = if members == 0 { u32::MAX } else { members };
     let part = active & members & mask_of(seg_size);
     match mode {
-        VoteMode::All => {
-            let ok = (0..seg_size).all(|i| part & (1 << i) == 0 || vals[i] != 0);
-            ok as u32
-        }
-        VoteMode::Any => {
-            let ok = (0..seg_size).any(|i| part & (1 << i) != 0 && vals[i] != 0);
-            ok as u32
+        VoteMode::All | VoteMode::Any | VoteMode::Ballot => {
+            // Bit i set iff lane i's predicate is non-zero.
+            let mut nz = 0u32;
+            for (i, &v) in vals.iter().enumerate() {
+                nz |= ((v != 0) as u32) << i;
+            }
+            match mode {
+                VoteMode::All => (part & !nz == 0) as u32, // vacuously true when empty
+                VoteMode::Any => (part & nz != 0) as u32,
+                _ => part & nz, // Ballot
+            }
         }
         VoteMode::Uni => {
-            let mut first: Option<u32> = None;
-            let mut uni = true;
-            for i in 0..seg_size {
-                if part & (1 << i) != 0 {
-                    match first {
-                        None => first = Some(vals[i]),
-                        Some(v) => uni &= v == vals[i],
-                    }
-                }
+            if part == 0 {
+                return 1; // vacuously uniform
             }
-            uni as u32
-        }
-        VoteMode::Ballot => {
-            let mut b = 0u32;
-            for i in 0..seg_size {
-                if part & (1 << i) != 0 && vals[i] != 0 {
-                    b |= 1 << i;
-                }
+            let first = vals[part.trailing_zeros() as usize];
+            // Bit i set iff lane i agrees with the first participant.
+            let mut eq = 0u32;
+            for (i, &v) in vals.iter().enumerate() {
+                eq |= ((v == first) as u32) << i;
             }
-            b
+            (part & !eq == 0) as u32
         }
     }
 }
@@ -118,23 +117,62 @@ pub fn shfl_src(
 /// `out[..vals.len()]` — the allocation-free form the simulator's issue
 /// hot path uses. `out` must not alias `vals` (distinct borrows enforce
 /// this in safe code).
+///
+/// The mode match is hoisted out of the lane loop (PR 8): each arm is
+/// a tight fixed-slice loop whose out-of-range fallback (destination
+/// keeps its own value) is an index select, not a branch on
+/// [`shfl_src`]'s `Option`. `shfl_src` stays the single source of
+/// truth for the source-lane rule; the `shfl_into_matches_shfl_src`
+/// test pins the two together exhaustively.
 pub fn shfl_into(mode: ShflMode, vals: &[u32], delta: u32, clamp: u32, out: &mut [u32]) {
     let seg = vals.len();
+    if seg == 0 {
+        return;
+    }
     debug_assert!(out.len() >= seg);
-    for (lane, dst) in out[..seg].iter_mut().enumerate() {
+    let c = if clamp == 0 { seg - 1 } else { (clamp as usize).min(seg - 1) };
+    let d = delta as usize;
+    let out = &mut out[..seg];
+    match mode {
+        ShflMode::Up => {
+            for (lane, dst) in out.iter_mut().enumerate() {
+                *dst = vals[if lane >= d { lane - d } else { lane }];
+            }
+        }
+        ShflMode::Down => {
+            for (lane, dst) in out.iter_mut().enumerate() {
+                let s = lane + d;
+                *dst = vals[if s <= c { s } else { lane }];
+            }
+        }
+        ShflMode::Bfly => {
+            for (lane, dst) in out.iter_mut().enumerate() {
+                let s = lane ^ d;
+                *dst = vals[if s <= c { s } else { lane }];
+            }
+        }
+        ShflMode::Idx => {
+            for (lane, dst) in out.iter_mut().enumerate() {
+                *dst = vals[if d <= c { d } else { lane }];
+            }
+        }
+    }
+}
+
+/// Evaluate a shuffle over one segment: returns per-lane results.
+/// (Allocating reference form for tests, the KIR interpreter and
+/// reference implementations — evaluates [`shfl_src`] per lane, so it
+/// cross-checks the hoisted [`shfl_into`] loops rather than sharing
+/// them.)
+pub fn shfl(mode: ShflMode, vals: &[u32], delta: u32, clamp: u32) -> Vec<u32> {
+    let seg = vals.len();
+    let mut out = vec![0u32; seg];
+    for (lane, dst) in out.iter_mut().enumerate() {
         *dst = match shfl_src(mode, lane, delta, clamp, seg) {
             Some(s) => vals[s],
             None => vals[lane],
         };
     }
-}
-
-/// Evaluate a shuffle over one segment: returns per-lane results.
-/// (Allocating convenience wrapper over [`shfl_into`] for tests,
-/// the KIR interpreter, and reference implementations.)
-pub fn shfl(mode: ShflMode, vals: &[u32], delta: u32, clamp: u32) -> Vec<u32> {
-    let mut out = vec![0u32; vals.len()];
-    shfl_into(mode, vals, delta, clamp, &mut out);
     out
 }
 
@@ -195,8 +233,12 @@ mod tests {
         assert_eq!(twice, v);
     }
 
+    /// `shfl` evaluates `shfl_src` per lane; `shfl_into` is the
+    /// hoisted loop — this pins the two to each other over the full
+    /// mode × delta × clamp grid, so the source-lane rule has exactly
+    /// one definition.
     #[test]
-    fn shfl_into_matches_allocating_shfl() {
+    fn shfl_into_matches_shfl_src() {
         let v = [10u32, 11, 12, 13, 14, 15, 16, 17];
         for mode in [ShflMode::Up, ShflMode::Down, ShflMode::Bfly, ShflMode::Idx] {
             for delta in 0..8u32 {

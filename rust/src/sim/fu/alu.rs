@@ -3,7 +3,7 @@
 //! instruction every cycle (`occ = 1`).
 
 use super::Retire;
-use crate::isa::Instr;
+use crate::isa::{AluOp, Instr};
 use crate::sim::core::Core;
 
 pub(crate) fn execute(
@@ -21,16 +21,13 @@ pub(crate) fn execute(
         Instr::Alu { op, rs1, rs2, .. } => {
             core.rf.read_all(w, rs1, &mut a);
             core.rf.read_all(w, rs2, &mut b);
-            for l in 0..nt {
-                out[l] = op.eval(a[l], b[l]);
-            }
+            eval_lanes(op, &a[..nt], &b[..nt], &mut out[..nt]);
             core.metrics.alu_ops += 1;
         }
         Instr::AluImm { op, rs1, imm, .. } => {
             core.rf.read_all(w, rs1, &mut a);
-            for l in 0..nt {
-                out[l] = op.eval(a[l], imm as u32);
-            }
+            b[..nt].fill(imm as u32);
+            eval_lanes(op, &a[..nt], &b[..nt], &mut out[..nt]);
             core.metrics.alu_ops += 1;
         }
         Instr::Lui { imm, .. } => {
@@ -54,4 +51,61 @@ pub(crate) fn execute(
         other => unreachable!("non-ALU instruction dispatched to the ALU: {other:?}"),
     }
     Retire { next_pc: pc.wrapping_add(4), lat: core.cfg.lat.alu as u64, occ: 1 }
+}
+
+/// Lane-wise ALU map with the op match hoisted out of the lane loop
+/// (PR 8): each arm monomorphizes [`lanewise`] with the op a
+/// compile-time constant, so `AluOp::eval`'s inner match folds away
+/// and every arm becomes a tight two-input loop over fixed-width
+/// slices the compiler can autovectorize. Semantics still come from
+/// [`AluOp::eval`] — nothing is duplicated that could drift.
+#[inline]
+pub(crate) fn eval_lanes(op: AluOp, a: &[u32], b: &[u32], out: &mut [u32]) {
+    macro_rules! hoist {
+        ($($v:ident),+) => {
+            match op {
+                $(AluOp::$v => lanewise(a, b, out, |x, y| AluOp::$v.eval(x, y)),)+
+            }
+        };
+    }
+    hoist!(Add, Sub, Sll, Slt, Sltu, Xor, Srl, Sra, Or, And)
+}
+
+#[inline]
+fn lanewise(a: &[u32], b: &[u32], out: &mut [u32], f: impl Fn(u32, u32) -> u32) {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = f(x, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The hoisted lane loop must agree with the scalar `AluOp::eval`
+    /// for every op over a grid of awkward operand values.
+    #[test]
+    fn eval_lanes_matches_scalar_eval_for_every_op() {
+        let ops = [
+            AluOp::Add,
+            AluOp::Sub,
+            AluOp::Sll,
+            AluOp::Slt,
+            AluOp::Sltu,
+            AluOp::Xor,
+            AluOp::Srl,
+            AluOp::Sra,
+            AluOp::Or,
+            AluOp::And,
+        ];
+        let a = [0u32, 1, u32::MAX, 0x8000_0000, 31, 32, 0xDEAD_BEEF, 7];
+        let b = [0u32, 31, 32, u32::MAX, 0x8000_0000, 1, 33, 0xFFFF_FF85];
+        for op in ops {
+            let mut got = [0u32; 8];
+            eval_lanes(op, &a, &b, &mut got);
+            for l in 0..8 {
+                assert_eq!(got[l], op.eval(a[l], b[l]), "{op:?} lane {l}");
+            }
+        }
+    }
 }

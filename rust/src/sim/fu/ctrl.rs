@@ -7,7 +7,7 @@
 use super::Retire;
 use crate::isa::Instr;
 use crate::sim::core::{Core, SimError, CTRL_PENALTY};
-use crate::sim::warp::{full_mask, WarpState};
+use crate::sim::warp::{first_lane, full_mask, WarpState};
 
 pub(crate) fn execute(
     core: &mut Core,
@@ -18,7 +18,7 @@ pub(crate) fn execute(
     out: &mut [u32; 32],
 ) -> Result<Retire, SimError> {
     let nt = core.cfg.nt;
-    let tmask = core.warps[w].tmask;
+    let tmask = core.warp_tmask[w];
     let mut a = [0u32; 32];
     let mut b = [0u32; 32];
     let mut next_pc = pc.wrapping_add(4);
@@ -26,7 +26,7 @@ pub(crate) fn execute(
         Instr::Branch { op, rs1, rs2, imm } => {
             core.rf.read_all(w, rs1, &mut a);
             core.rf.read_all(w, rs2, &mut b);
-            let first = core.warps[w].first_lane();
+            let first = first_lane(tmask);
             let taken = op.taken(a[first], b[first]);
             // Branches must be warp-uniform over active lanes;
             // divergence is the compiler's job (vx_split/vx_join).
@@ -49,24 +49,24 @@ pub(crate) fn execute(
         }
         Instr::Jalr { rs1, imm, .. } => {
             core.rf.read_all(w, rs1, &mut a);
-            let first = core.warps[w].first_lane();
+            let first = first_lane(tmask);
             out[..nt].fill(pc.wrapping_add(4));
             next_pc = a[first].wrapping_add(imm as u32) & !1;
             core.ready_at[w] = now + CTRL_PENALTY;
             core.metrics.control_ops += 1;
         }
         Instr::Ecall => {
-            core.warps[w].state = WarpState::Inactive;
+            core.warp_state[w] = WarpState::Inactive;
             core.metrics.control_ops += 1;
         }
         Instr::Tmc { rs1 } => {
             core.rf.read_all(w, rs1, &mut a);
-            let first = core.warps[w].first_lane();
+            let first = first_lane(tmask);
             let m = a[first] & full_mask(nt);
             if m == 0 {
-                core.warps[w].state = WarpState::Inactive;
+                core.warp_state[w] = WarpState::Inactive;
             } else {
-                core.warps[w].tmask = m;
+                core.warp_tmask[w] = m;
             }
             core.ready_at[w] = now + CTRL_PENALTY;
             core.metrics.control_ops += 1;
@@ -74,13 +74,13 @@ pub(crate) fn execute(
         Instr::Wspawn { rs1, rs2 } => {
             core.rf.read_all(w, rs1, &mut a);
             core.rf.read_all(w, rs2, &mut b);
-            let first = core.warps[w].first_lane();
+            let first = first_lane(tmask);
             let count = (a[first] as usize).min(core.cfg.nw);
             let target = b[first];
             for i in 1..count {
-                core.warps[i].pc = target;
-                core.warps[i].tmask = full_mask(nt);
-                core.warps[i].state = WarpState::Active;
+                core.warp_pc[i] = target;
+                core.warp_tmask[i] = full_mask(nt);
+                core.warp_state[i] = WarpState::Active;
                 core.warps[i].stack.clear();
                 if i != w {
                     // Respawn hygiene (PR-3 bugfix): a warp re-spawned
@@ -108,25 +108,24 @@ pub(crate) fn execute(
                     taken |= 1 << l;
                 }
             }
-            let warp = &mut core.warps[w];
-            warp.pc = pc; // split() records else_pc = pc + 4
-            let token = warp.split(taken);
+            let (token, mask) = core.warps[w].split(pc, tmask, taken);
+            core.warp_tmask[w] = mask;
             out[..nt].fill(token);
             next_pc = pc.wrapping_add(4);
             core.ready_at[w] = now + CTRL_PENALTY;
             core.metrics.control_ops += 1;
         }
         Instr::Join { .. } => {
-            let warp = &mut core.warps[w];
-            warp.pc = pc;
-            next_pc = warp.join();
+            let (next, mask) = core.warps[w].join(pc);
+            core.warp_tmask[w] = mask;
+            next_pc = next;
             core.ready_at[w] = now + CTRL_PENALTY;
             core.metrics.control_ops += 1;
         }
         Instr::Bar { rs1, rs2 } => {
             core.rf.read_all(w, rs1, &mut a);
             core.rf.read_all(w, rs2, &mut b);
-            let first = core.warps[w].first_lane();
+            let first = first_lane(tmask);
             let id = a[first];
             let required = b[first].max(1);
             core.metrics.barriers_hit += 1;
@@ -142,9 +141,9 @@ pub(crate) fn execute(
                 }
             }
             if m == 0 {
-                core.warps[w].state = WarpState::Inactive;
+                core.warp_state[w] = WarpState::Inactive;
             } else {
-                core.warps[w].tmask = m;
+                core.warp_tmask[w] = m;
             }
             core.metrics.control_ops += 1;
         }

@@ -23,7 +23,7 @@ pub(crate) fn execute(
     out: &mut [u32; 32],
 ) -> Result<Retire, SimError> {
     let nt = core.cfg.nt;
-    let tmask = core.warps[w].tmask;
+    let tmask = core.warp_tmask[w];
     let mut a = [0u32; 32];
     let mut b = [0u32; 32];
     let mut addrs = [0u32; 32];

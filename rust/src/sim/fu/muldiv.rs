@@ -21,9 +21,7 @@ pub(crate) fn execute(
         Instr::Mul { op, rs1, rs2, .. } => {
             core.rf.read_all(w, rs1, &mut a);
             core.rf.read_all(w, rs2, &mut b);
-            for l in 0..nt {
-                out[l] = op.eval(a[l], b[l]);
-            }
+            eval_lanes(op, &a[..nt], &b[..nt], &mut out[..nt]);
             core.metrics.mul_ops += 1;
             op
         }
@@ -32,4 +30,56 @@ pub(crate) fn execute(
     let iterative = matches!(op, MulOp::Div | MulOp::Divu | MulOp::Rem | MulOp::Remu);
     let lat = if iterative { core.cfg.lat.div as u64 } else { core.cfg.lat.mul as u64 };
     Retire { next_pc: pc.wrapping_add(4), lat, occ: if iterative { lat } else { 1 } }
+}
+
+/// Lane-wise RV32M map with the op match hoisted out of the lane loop
+/// (PR 8) — same shape as `fu::alu::eval_lanes`: each arm is a tight
+/// fixed-slice loop with the op a compile-time constant, semantics
+/// sourced from [`MulOp::eval`] (div-by-zero/overflow fixups
+/// included).
+#[inline]
+pub(crate) fn eval_lanes(op: MulOp, a: &[u32], b: &[u32], out: &mut [u32]) {
+    macro_rules! hoist {
+        ($($v:ident),+) => {
+            match op {
+                $(MulOp::$v => {
+                    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                        *o = MulOp::$v.eval(x, y);
+                    }
+                })+
+            }
+        };
+    }
+    hoist!(Mul, Mulh, Mulhsu, Mulhu, Div, Divu, Rem, Remu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The hoisted lane loop must agree with the scalar `MulOp::eval`
+    /// for every op, including the RV32M div-by-zero and signed-
+    /// overflow fixup cases.
+    #[test]
+    fn eval_lanes_matches_scalar_eval_for_every_op() {
+        let ops = [
+            MulOp::Mul,
+            MulOp::Mulh,
+            MulOp::Mulhsu,
+            MulOp::Mulhu,
+            MulOp::Div,
+            MulOp::Divu,
+            MulOp::Rem,
+            MulOp::Remu,
+        ];
+        let a = [0u32, 1, u32::MAX, 0x8000_0000, 0x8000_0000, 7, 0xDEAD_BEEF, 100];
+        let b = [0u32, 0, u32::MAX, u32::MAX, 0, 3, 0xCAFE, 0];
+        for op in ops {
+            let mut got = [0u32; 8];
+            eval_lanes(op, &a, &b, &mut got);
+            for l in 0..8 {
+                assert_eq!(got[l], op.eval(a[l], b[l]), "{op:?} lane {l}");
+            }
+        }
+    }
 }

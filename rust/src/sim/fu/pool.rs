@@ -1,9 +1,9 @@
 //! Per-kind functional-unit pools with absolute-cycle occupancy.
 //!
-//! Each bounded kind owns a small vector of `busy_until` timestamps —
+//! Each bounded kind owns a [`BusyPool`] of `busy_until` timestamps —
 //! one per unit. A unit is free to accept an instruction at cycle
 //! `now` when `busy_until <= now`; issuing writes the new release
-//! time. An empty vector models *unlimited* units (the
+//! time. An empty pool models *unlimited* units (the
 //! legacy-equivalent default): no state is kept, no structural hazard
 //! can occur, and `next_release` contributes no events — timing is
 //! bit-identical to the seed's execute stage.
@@ -14,22 +14,23 @@
 
 use super::FuKind;
 use crate::sim::config::FuConfig;
+use crate::sim::pool::BusyPool;
 
 /// Unit pools for all [`FuKind`]s of one core.
 pub struct FuPool {
-    /// `busy_until` per unit, indexed by `FuKind as usize`; an empty
-    /// vector means unlimited units of that kind.
-    units: [Vec<u64>; FuKind::COUNT],
+    /// One pool per kind, indexed by `FuKind as usize`; an empty pool
+    /// means unlimited units of that kind.
+    units: [BusyPool; FuKind::COUNT],
 }
 
 impl FuPool {
     pub fn new(cfg: &FuConfig) -> Self {
         FuPool {
             units: [
-                vec![0; cfg.alu],
-                vec![0; cfg.muldiv],
-                vec![0; cfg.lsu],
-                vec![0; cfg.wcu],
+                BusyPool::new(cfg.alu),
+                BusyPool::new(cfg.muldiv),
+                BusyPool::new(cfg.lsu),
+                BusyPool::new(cfg.wcu),
             ],
         }
     }
@@ -37,17 +38,14 @@ impl FuPool {
     /// Release every unit (kernel-launch reset).
     pub fn reset(&mut self) {
         for pool in &mut self.units {
-            for u in pool.iter_mut() {
-                *u = 0;
-            }
+            pool.reset();
         }
     }
 
     /// True when an instruction of `kind` can issue at cycle `now`.
     #[inline]
     pub fn available(&self, kind: FuKind, now: u64) -> bool {
-        let pool = &self.units[kind as usize];
-        pool.is_empty() || pool.iter().any(|&u| u <= now)
+        self.units[kind as usize].available(now)
     }
 
     /// Occupy one free unit of `kind` until cycle `until` (exclusive:
@@ -57,28 +55,13 @@ impl FuPool {
     /// operand reads upstream (`sim/opc`): the unit is claimed at
     /// issue and held through the whole issue-to-release window.
     pub fn occupy(&mut self, kind: FuKind, now: u64, until: u64) {
-        let pool = &mut self.units[kind as usize];
-        if pool.is_empty() {
-            return;
-        }
-        match pool.iter_mut().find(|u| **u <= now) {
-            Some(u) => *u = until,
-            None => debug_assert!(false, "occupy({kind:?}) without a free unit"),
-        }
+        self.units[kind as usize].acquire(now, until);
     }
 
     /// Earliest cycle strictly after `now` at which any occupied unit
     /// frees — the event a structurally-stalled warp waits for.
     pub fn next_release(&self, now: u64) -> Option<u64> {
-        let mut next = u64::MAX;
-        for pool in &self.units {
-            for &u in pool {
-                if u > now && u < next {
-                    next = u;
-                }
-            }
-        }
-        (next != u64::MAX).then_some(next)
+        self.units.iter().filter_map(|pool| pool.next_release(now)).min()
     }
 }
 

@@ -10,6 +10,7 @@ use super::Retire;
 use crate::isa::Instr;
 use crate::sim::core::{Core, SimError, TILE_PENALTY};
 use crate::sim::exec::warp_ops;
+use crate::sim::warp::first_lane;
 
 pub(crate) fn execute(
     core: &mut Core,
@@ -19,7 +20,7 @@ pub(crate) fn execute(
     now: u64,
     out: &mut [u32; 32],
 ) -> Result<Retire, SimError> {
-    let tmask = core.warps[w].tmask;
+    let tmask = core.warp_tmask[w];
     let mut a = [0u32; 32];
     let mut b = [0u32; 32];
     let (lat, occ) = match instr {
@@ -28,7 +29,7 @@ pub(crate) fn execute(
             core.pending_collective_reg = rs1;
             core.rf.read_all(w, rs1, &mut a);
             core.rf.read_all(w, mreg, &mut b);
-            let first = core.warps[w].first_lane();
+            let first = first_lane(tmask);
             let members = b[first];
             let lat =
                 collective(core, w, tmask, &a, members, out, |vals, act, mem_m, dst| {
@@ -42,7 +43,7 @@ pub(crate) fn execute(
             core.pending_collective_reg = rs1;
             core.rf.read_all(w, rs1, &mut a);
             core.rf.read_all(w, creg, &mut b);
-            let first = core.warps[w].first_lane();
+            let first = first_lane(tmask);
             let clamp = b[first];
             let lat = collective(core, w, tmask, &a, 0, out, |vals, _act, _m, dst| {
                 warp_ops::shfl_into(mode, vals, delta as u32, clamp, dst);
@@ -54,7 +55,7 @@ pub(crate) fn execute(
             core.require_warp_hw(pc, "vx_tile")?;
             core.rf.read_all(w, rs1, &mut a);
             core.rf.read_all(w, rs2, &mut b);
-            let first = core.warps[w].first_lane();
+            let first = first_lane(tmask);
             let (mask, size) = (a[first], b[first]);
             core.sched
                 .set_tile(mask, size)
@@ -149,7 +150,7 @@ fn collective(
                 };
                 vals[mw * nt + l] = v;
             }
-            let m = if warp_idx == w { tmask } else { core.warps[warp_idx].tmask };
+            let m = if warp_idx == w { tmask } else { core.warp_tmask[warp_idx] };
             act |= (m & warp_ops::mask_of(nt)) << (mw * nt);
         }
         f(&vals[..total], act, members, &mut res[..total]);

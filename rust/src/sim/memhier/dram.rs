@@ -6,9 +6,11 @@
 //! no per-cycle stepping, which keeps the stage compatible with the
 //! fast-forward engine's skip windows.
 
+use crate::sim::pool::BusyPool;
+
 pub struct Dram {
-    /// Busy-until cycle per channel.
-    channels: Vec<u64>,
+    /// Busy-until cycle per channel (`sim/pool`, indexed mode).
+    channels: BusyPool,
     latency: u64,
 }
 
@@ -25,7 +27,7 @@ pub struct Fill {
 
 impl Dram {
     pub fn new(channels: usize, latency: u32) -> Self {
-        Dram { channels: vec![0; channels.max(1)], latency: latency as u64 }
+        Dram { channels: BusyPool::new(channels.max(1)), latency: latency as u64 }
     }
 
     /// Schedule a line fill requested at cycle `at`. `extra` is
@@ -34,15 +36,15 @@ impl Dram {
     /// Picks the earliest-free channel, lowest index on ties —
     /// deterministic, so both engines see identical schedules.
     pub fn fill(&mut self, at: u64, extra: u64) -> Fill {
-        let c = (0..self.channels.len()).min_by_key(|&i| self.channels[i]).unwrap();
-        let start = at.max(self.channels[c]);
+        let c = self.channels.earliest_slot();
+        let start = at.max(self.channels.until(c));
         let done_at = start + self.latency;
-        self.channels[c] = done_at + extra;
+        self.channels.occupy_slot(c, done_at + extra);
         Fill { done_at, busy: self.latency + extra, wait: start - at }
     }
 
     pub fn reset(&mut self) {
-        self.channels.fill(0);
+        self.channels.reset();
     }
 }
 

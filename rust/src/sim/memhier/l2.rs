@@ -13,12 +13,13 @@
 use super::dram::Dram;
 use super::tags::TagArray;
 use crate::sim::config::MemHierConfig;
+use crate::sim::pool::BusyPool;
 
 pub struct L2 {
     tags: TagArray,
     line_shift: u32,
-    /// Busy-until cycle per bank.
-    banks: Vec<u64>,
+    /// Busy-until cycle per bank (`sim/pool`, indexed mode).
+    banks: BusyPool,
     /// Fills still arriving from DRAM: (line, completion cycle). Tags
     /// install eagerly, so a request that tag-hits a line whose fill
     /// is still in flight must not complete before the data exists on
@@ -49,7 +50,7 @@ impl L2 {
         L2 {
             tags: TagArray::new(&cfg.l2),
             line_shift: cfg.l2.line.trailing_zeros(),
-            banks: vec![0; cfg.l2_banks.max(1)],
+            banks: BusyPool::new(cfg.l2_banks.max(1)),
             pending: Vec::new(),
             hit_lat: cfg.l2_hit as u64,
             wb_lat: cfg.l2_wb as u64,
@@ -67,7 +68,7 @@ impl L2 {
     pub fn access(&mut self, addr: u32, store: bool, at: u64, dram: &mut Dram) -> L2Outcome {
         let line = addr >> self.line_shift;
         let bank = self.bank_of(addr);
-        let start = at.max(self.banks[bank]);
+        let start = at.max(self.banks.until(bank));
         let bank_wait = start - at;
         let (hit, writeback) = self.tags.access_line(line, store);
         // The bank is held for the tag+data access; a dirty victim
@@ -92,13 +93,13 @@ impl L2 {
                 done_at = done_at.max(d);
             }
         }
-        self.banks[bank] = bank_busy;
+        self.banks.occupy_slot(bank, bank_busy);
         L2Outcome { done_at, hit, writeback, bank_wait, dram_busy, dram_wait }
     }
 
     pub fn reset(&mut self) {
         self.tags.reset();
-        self.banks.fill(0);
+        self.banks.reset();
         self.pending.clear();
     }
 }

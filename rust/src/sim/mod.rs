@@ -29,6 +29,7 @@ pub mod mem;
 pub mod memhier;
 pub mod metrics;
 pub mod opc;
+pub mod pool;
 pub mod regfile;
 pub mod scheduler;
 pub mod scoreboard;
@@ -43,13 +44,16 @@ pub mod exec {
 }
 
 pub use self::core::{Core, CoreError, SimError};
-pub use config::{EngineMode, FuConfig, Latencies, MemHierConfig, OpcConfig, SimConfig};
+pub use config::{
+    EngineMode, FuConfig, Latencies, MemHierConfig, OpcConfig, SamplingConfig, SimConfig,
+};
 pub use fault::{FaultConfig, FaultEvent, FaultPlan, FaultTarget};
 pub use fu::{FuKind, FuPool};
 pub use mem::{DCache, Memory};
 pub use memhier::SharedMem;
 pub use metrics::Metrics;
 pub use opc::Opc;
+pub use pool::BusyPool;
 pub use telemetry::{Cause, Span, Telemetry, TelemetryConfig, TelemetrySnapshot, Timeline, Track};
 pub use trace::TraceBuf;
 pub use warp::Warp;
@@ -94,6 +98,7 @@ pub struct Gpu {
     /// spin past the cap after core 0 finishes.
     pub cycles: u64,
     engine: config::EngineMode,
+    sampling: config::SamplingConfig,
 }
 
 impl Gpu {
@@ -101,7 +106,7 @@ impl Gpu {
         let mem = Memory::new();
         let memsys = SharedMem::new(&cfg.memhier);
         let cores = (0..cfg.num_cores).map(|cid| Core::new(cfg.clone(), cid as u32)).collect();
-        Gpu { cores, mem, memsys, cycles: 0, engine: cfg.engine }
+        Gpu { cores, mem, memsys, cycles: 0, engine: cfg.engine, sampling: cfg.sampling.clone() }
     }
 
     /// Load a program (shared by all cores) at [`map::CODE_BASE`].
@@ -143,8 +148,13 @@ impl Gpu {
     }
 
     /// Run to completion (all warps halted) with a cycle cap, honoring
-    /// the configured engine.
+    /// the configured engine. With [`SamplingConfig`] enabled the run
+    /// goes through the sampled loop instead (detailed windows +
+    /// functionally-executed gaps; outputs exact, cycles estimated).
     pub fn run(&mut self, max_cycles: u64) -> Result<(), CoreError> {
+        if self.sampling.enabled() {
+            return self.run_sampled(max_cycles);
+        }
         match self.engine {
             config::EngineMode::Reference => self.run_reference(max_cycles),
             config::EngineMode::FastForward => self.run_fast(max_cycles),
@@ -206,5 +216,66 @@ impl Gpu {
             }
         }
         Ok(())
+    }
+
+    /// Sampled engine (PR 8): alternate *detailed* windows of
+    /// `sampling.detail` cycles (reference stepping — the full timing
+    /// model) with *functional* gaps in which instructions execute
+    /// architecturally and the elapsed cycles are extrapolated from
+    /// the last window's measured IPC. Outputs (registers, memory) are
+    /// exact; `Metrics::cycles` and the stall counters become
+    /// estimates. Single-core only (enforced by
+    /// `SimConfig::validate`). A window that issues nothing (a long
+    /// stall) yields no IPC sample, so detailed stepping simply
+    /// continues until one does.
+    pub fn run_sampled(&mut self, max_cycles: u64) -> Result<(), CoreError> {
+        let (detail, gap) = (self.sampling.detail, self.sampling.gap);
+        loop {
+            // ---- detailed window ----
+            let window_end = self.cycles + detail;
+            let i0 = self.cores[0].metrics.instrs;
+            let c0 = self.cores[0].metrics.cycles;
+            loop {
+                if !self.step()? {
+                    return Ok(());
+                }
+                if self.cycles >= max_cycles {
+                    return Err(self.attribute(SimError::Timeout { cycles: max_cycles }));
+                }
+                if self.cycles >= window_end {
+                    break;
+                }
+            }
+            let di = self.cores[0].metrics.instrs - i0;
+            let dc = self.cores[0].metrics.cycles - c0;
+            if di == 0 {
+                continue; // no IPC sample — keep stepping detailed
+            }
+
+            // ---- functional gap ----
+            // Instruction budget ~ `gap` cycles at the window's IPC.
+            let target = (gap * di).div_ceil(dc);
+            let mut executed = 0u64;
+            {
+                let core = &mut self.cores[0];
+                core.drain_writebacks();
+                while executed < target {
+                    match core.step_functional(&mut self.mem, &mut self.memsys) {
+                        Ok(true) => executed += 1,
+                        Ok(false) => break, // halted or all at barriers
+                        Err(err) => return Err(CoreError { core: core.core_id, err }),
+                    }
+                }
+            }
+            if executed > 0 {
+                // Charge the gap at the window's cycles-per-instruction.
+                let charge = (executed * dc).div_ceil(di).max(1);
+                self.cores[0].metrics.cycles += charge;
+                self.cycles += charge;
+                if self.cycles >= max_cycles {
+                    return Err(self.attribute(SimError::Timeout { cycles: max_cycles }));
+                }
+            }
+        }
     }
 }

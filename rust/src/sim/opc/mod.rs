@@ -7,14 +7,14 @@
 //! This module adds the two bounded structures that make the claim
 //! honest, both sitting on the existing per-warp-bank [`RegFile`]:
 //!
-//! * **Collector units** ([`collector`]): every issued instruction
-//!   stages through one collector while its operands are read. Warp
-//!   `w`'s operands come only from bank `w` (selected through the
-//!   multiplexer §III replaces); with `read_ports` ports per bank,
-//!   `k` same-cycle reads to one bank serialize over
-//!   `ceil(k / read_ports)` cycles. The serialized cycles beyond the
-//!   first are charged to [`Metrics::stall_operand`] and added to the
-//!   instruction's latency; the bank's occupancy lands in the per-bank
+//! * **Collector units**: every issued instruction stages through one
+//!   collector while its operands are read. Warp `w`'s operands come
+//!   only from bank `w` (selected through the multiplexer §III
+//!   replaces); with `read_ports` ports per bank, `k` same-cycle reads
+//!   to one bank serialize over `ceil(k / read_ports)` cycles. The
+//!   serialized cycles beyond the first are charged to
+//!   [`Metrics::stall_operand`] and added to the instruction's
+//!   latency; the bank's occupancy lands in the per-bank
 //!   [`Metrics::opc_bank_busy`] counters. A merged-warp collective
 //!   (`vx_tile` group spanning several hardware warps) gathers foreign
 //!   operands through the register-bank **crossbar** (§III), holding
@@ -29,6 +29,11 @@
 //!   writeback ports. Completing results reserve a port slot at issue
 //!   (in order); overflow slips to later cycles and the wait is
 //!   charged to [`Metrics::stall_wb_port`].
+//!
+//! Since PR 8 both the collector pool and the per-bank occupancy
+//! vector are [`BusyPool`]s (`sim/pool`) — the one shared `busy_until`
+//! implementation — used in anonymous mode (any free collector) and
+//! indexed mode (banks addressed by warp id) respectively.
 //!
 //! ## Legacy equivalence and fast-forward compatibility
 //!
@@ -52,24 +57,24 @@
 //! [`Metrics::opc_bank_busy`]: crate::sim::Metrics::opc_bank_busy
 
 pub mod bus;
-pub mod collector;
 
 pub use bus::ResultBus;
-pub use collector::CollectorPool;
 
 use crate::sim::config::OpcConfig;
 use crate::sim::fu::FuKind;
 use crate::sim::metrics::Metrics;
+use crate::sim::pool::BusyPool;
 use crate::sim::telemetry::{Telemetry, Track};
 
 /// Operand-collector + result-bus state of one core.
 pub struct Opc {
-    pool: CollectorPool,
+    /// Collector units (anonymous mode; empty = unlimited).
+    pool: BusyPool,
     /// Register-file read ports per warp bank (0 = unlimited).
     read_ports: usize,
-    /// `busy_until` per register bank (bank `w` = warp `w`'s bank);
+    /// Busy-until per register bank (bank `w` = warp `w`'s bank);
     /// empty when reads are unlimited.
-    banks: Vec<u64>,
+    banks: BusyPool,
     bus: ResultBus,
 }
 
@@ -78,9 +83,9 @@ impl Opc {
     /// ([`RegFile::banks`](crate::sim::regfile::RegFile::banks)).
     pub fn new(cfg: &OpcConfig, banks: usize) -> Self {
         Opc {
-            pool: CollectorPool::new(cfg.collectors),
+            pool: BusyPool::new(cfg.collectors),
             read_ports: cfg.read_ports,
-            banks: if cfg.read_ports == 0 { Vec::new() } else { vec![0; banks] },
+            banks: BusyPool::new(if cfg.read_ports == 0 { 0 } else { banks }),
             bus: ResultBus::new(cfg.wb_ports),
         }
     }
@@ -88,9 +93,7 @@ impl Opc {
     /// Release everything (kernel-launch reset).
     pub fn reset(&mut self) {
         self.pool.reset();
-        for b in &mut self.banks {
-            *b = 0;
-        }
+        self.banks.reset();
         self.bus.reset();
     }
 
@@ -104,13 +107,11 @@ impl Opc {
             return false;
         }
         if reads > 0 && !self.banks.is_empty() {
-            // Slice strictly (like `collect`'s claim below): a span
+            // Strict range (like `collect`'s occupation below): a span
             // outside the bank array is a geometry bug and must fail
             // loudly here, not approve the issue and crash at claim.
-            for &b in &self.banks[base..base + span] {
-                if b > now {
-                    return false;
-                }
+            if !self.banks.range_free(base, span, now) {
+                return false;
             }
         }
         true
@@ -142,14 +143,14 @@ impl Opc {
         };
         let hops = (span - 1) as u64;
         let hold = (serial + hops).max(1);
-        self.pool.claim(now, now + hold);
+        self.pool.acquire(now, now + hold);
         if let Some(t) = tele {
             t.push_span(Track::Collector, "collect", now, now + hold);
         }
         if serial > 0 {
             // `hold == serial + hops` here (`serial >= 1`).
             for b in base..base + span {
-                self.banks[b] = now + hold;
+                self.banks.occupy_slot(b, now + hold);
                 metrics.opc_bank_busy[b] += hold;
             }
             // The first read cycle is the seed's free collection; the
@@ -173,13 +174,7 @@ impl Opc {
     /// register bank frees — the events an operand-stalled warp waits
     /// for (bus waits ride the writeback heap instead).
     pub fn next_release(&self, now: u64) -> Option<u64> {
-        let mut next = self.pool.next_release(now).unwrap_or(u64::MAX);
-        for &b in &self.banks {
-            if b > now && b < next {
-                next = b;
-            }
-        }
-        (next != u64::MAX).then_some(next)
+        [self.pool.next_release(now), self.banks.next_release(now)].into_iter().flatten().min()
     }
 }
 

@@ -1,0 +1,270 @@
+//! `sim/pool` — the one absolute-cycle `busy_until` occupancy
+//! primitive (PR 8).
+//!
+//! Before this pass, four subsystems each hand-rolled the same
+//! structure: `fu/pool.rs` (unit pools), `opc/collector.rs` (collector
+//! units), the OPC per-bank vector, and `memhier`'s L2 banks and DRAM
+//! channels. All shared one invariant set — a slot is free at cycle
+//! `now` iff `busy_until <= now`, state mutates only at issue, and the
+//! earliest release strictly after `now` is the event the fast-forward
+//! engine jumps to — but each copy re-implemented the scan, the claim,
+//! and the `next_release` min-fold. [`BusyPool`] is now the single
+//! implementation; every former call site is a thin wrapper over it,
+//! so the free/claim/event semantics cannot drift apart.
+//!
+//! Two usage modes share the same storage:
+//!
+//! * **Anonymous slots** (`available` / `acquire`): the caller wants
+//!   *any* free slot — functional units, collector units. An **empty
+//!   pool models unlimited slots**: always available, claims are
+//!   no-ops, no events. This is every `legacy()` config's
+//!   byte-identical default.
+//! * **Indexed slots** (`until` / `range_free` / `occupy_slot` /
+//!   `earliest_slot`): the caller addresses slots by identity —
+//!   register banks, L2 banks, DRAM channels. Indexing is strict
+//!   (out-of-range panics): a span outside the pool is a geometry bug
+//!   and must fail loudly at the check, not approve an issue and
+//!   corrupt state later.
+//!
+//! Everything is absolute-cycle and mutates at issue, so
+//! [`BusyPool::next_release`] folds into `Core::next_event` and the
+//! fast-forward engine skips stall windows while staying bit-identical
+//! to the reference engine (`tests/engine_equivalence.rs`).
+
+/// A pool of `busy_until` timestamps, one per slot (see module docs).
+#[derive(Clone)]
+pub struct BusyPool {
+    /// Absolute cycle at which each slot frees; a slot accepts new
+    /// work at cycle `now` when `busy_until <= now`.
+    slots: Vec<u64>,
+}
+
+impl BusyPool {
+    /// `count == 0` models unlimited anonymous slots (no state, no
+    /// backpressure, no events). Indexed users that need "at least one
+    /// slot" clamp at the call site (`count.max(1)`).
+    pub fn new(count: usize) -> Self {
+        BusyPool { slots: vec![0; count] }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Free every slot (kernel-launch reset). Keeps capacity — resets
+    /// stay allocation-free.
+    pub fn reset(&mut self) {
+        self.slots.fill(0);
+    }
+
+    // ---- anonymous mode -------------------------------------------
+
+    /// True when some slot can accept work at cycle `now` (always true
+    /// for an unlimited pool).
+    #[inline]
+    pub fn available(&self, now: u64) -> bool {
+        self.slots.is_empty() || self.slots.iter().any(|&u| u <= now)
+    }
+
+    /// Claim the first free slot (lowest index) until cycle `until`
+    /// (exclusive: the slot accepts again at `until`). Returns the
+    /// claimed index; `None` for an unlimited pool (no-op). Callers
+    /// must have checked [`BusyPool::available`] this cycle — claiming
+    /// with no free slot is a caller bug (debug-asserted).
+    pub fn acquire(&mut self, now: u64, until: u64) -> Option<usize> {
+        if self.slots.is_empty() {
+            return None;
+        }
+        match self.slots.iter().position(|&u| u <= now) {
+            Some(i) => {
+                self.slots[i] = until;
+                Some(i)
+            }
+            None => {
+                debug_assert!(false, "acquire without a free slot");
+                None
+            }
+        }
+    }
+
+    // ---- indexed mode ---------------------------------------------
+
+    /// Raw busy-until cycle of slot `i` (strict: out-of-range panics).
+    #[inline]
+    pub fn until(&self, i: usize) -> u64 {
+        self.slots[i]
+    }
+
+    /// True when every slot in `base..base + span` is free at `now`.
+    /// Strict slicing: a span outside the pool panics here rather than
+    /// approving the issue and crashing at occupation.
+    #[inline]
+    pub fn range_free(&self, base: usize, span: usize, now: u64) -> bool {
+        self.slots[base..base + span].iter().all(|&u| u <= now)
+    }
+
+    /// Occupy slot `i` until cycle `until` (strict indexing).
+    #[inline]
+    pub fn occupy_slot(&mut self, i: usize, until: u64) {
+        self.slots[i] = until;
+    }
+
+    /// Index of the earliest-free slot, lowest index on ties —
+    /// deterministic, so both engines see identical schedules. Panics
+    /// on an empty pool (indexed users clamp `count >= 1`).
+    #[inline]
+    pub fn earliest_slot(&self) -> usize {
+        (0..self.slots.len()).min_by_key(|&i| self.slots[i]).expect("earliest_slot on empty pool")
+    }
+
+    // ---- events ---------------------------------------------------
+
+    /// Earliest cycle strictly after `now` at which any occupied slot
+    /// frees — the event a stalled warp waits for. `None` when nothing
+    /// is outstanding (past releases are not events).
+    pub fn next_release(&self, now: u64) -> Option<u64> {
+        let mut next = u64::MAX;
+        for &u in &self.slots {
+            if u > now && u < next {
+                next = u;
+            }
+        }
+        (next != u64::MAX).then_some(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic LCG (same constants as `sim/wb`'s schedule test)
+    /// — property tests stay reproducible without a rand dependency.
+    struct Lcg(u64);
+    impl Lcg {
+        fn next(&mut self, bound: u64) -> u64 {
+            self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (self.0 >> 33) % bound
+        }
+    }
+
+    #[test]
+    fn unlimited_pool_is_always_available_and_eventless() {
+        let mut p = BusyPool::new(0);
+        assert!(p.available(0));
+        assert_eq!(p.acquire(0, 1_000), None, "claims are no-ops");
+        assert!(p.available(0));
+        assert_eq!(p.next_release(0), None);
+    }
+
+    #[test]
+    fn bounded_slot_blocks_until_release() {
+        let mut p = BusyPool::new(1);
+        assert!(p.available(10));
+        assert_eq!(p.acquire(10, 60), Some(0));
+        assert!(!p.available(10));
+        assert!(!p.available(59));
+        assert!(p.available(60), "release cycle accepts again");
+        assert_eq!(p.next_release(10), Some(60));
+        assert_eq!(p.next_release(60), None, "past releases are not events");
+    }
+
+    #[test]
+    fn acquire_prefers_the_lowest_free_index() {
+        let mut p = BusyPool::new(3);
+        assert_eq!(p.acquire(5, 6), Some(0));
+        assert_eq!(p.acquire(5, 9), Some(1));
+        assert_eq!(p.acquire(5, 7), Some(2));
+        assert!(!p.available(5));
+        assert_eq!(p.next_release(5), Some(6), "earliest release is the event");
+        assert_eq!(p.acquire(6, 8), Some(0), "freed slot is reused first");
+    }
+
+    #[test]
+    fn indexed_occupancy_and_range_checks() {
+        let mut p = BusyPool::new(4);
+        p.occupy_slot(1, 15);
+        assert_eq!(p.until(1), 15);
+        assert!(!p.range_free(0, 2, 10), "slot 1 busy through 14");
+        assert!(p.range_free(0, 2, 15), "frees at its release cycle");
+        assert!(p.range_free(2, 2, 0), "untouched slots are free");
+        assert_eq!(p.next_release(0), Some(15));
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_span_panics_at_the_check() {
+        let p = BusyPool::new(2);
+        p.range_free(1, 2, 0);
+    }
+
+    #[test]
+    fn earliest_slot_breaks_ties_toward_low_indices() {
+        let mut p = BusyPool::new(3);
+        assert_eq!(p.earliest_slot(), 0, "all-free tie -> slot 0");
+        p.occupy_slot(0, 100);
+        p.occupy_slot(1, 40);
+        assert_eq!(p.earliest_slot(), 2, "still-free slot wins");
+        p.occupy_slot(2, 40);
+        assert_eq!(p.earliest_slot(), 1, "equal busy-until tie -> lowest index");
+    }
+
+    #[test]
+    fn reset_frees_everything_without_reallocating() {
+        let mut p = BusyPool::new(2);
+        p.acquire(0, 100);
+        let cap = p.slots.capacity();
+        p.reset();
+        assert!(p.available(0));
+        assert_eq!(p.next_release(0), None);
+        assert_eq!(p.slots.capacity(), cap);
+    }
+
+    /// Property: an acquired slot is never handed out again before its
+    /// release cycle (no double-booking), across a random schedule.
+    #[test]
+    fn property_acquire_never_double_books() {
+        let mut p = BusyPool::new(4);
+        let mut rng = Lcg(20260808);
+        // Shadow model: our own copy of each slot's release time.
+        let mut shadow = [0u64; 4];
+        let mut now = 0u64;
+        for _ in 0..2000 {
+            now += rng.next(3);
+            let hold = 1 + rng.next(10);
+            if p.available(now) {
+                let i = p.acquire(now, now + hold).expect("available implies acquire");
+                assert!(shadow[i] <= now, "slot {i} double-booked at {now}");
+                shadow[i] = now + hold;
+            } else {
+                assert!(shadow.iter().all(|&u| u > now), "full pool but shadow has a free slot");
+            }
+        }
+    }
+
+    /// Property: `next_release(now)` equals the minimum outstanding
+    /// release strictly after `now`, at every step of a random
+    /// schedule.
+    #[test]
+    fn property_next_release_is_min_outstanding() {
+        let mut p = BusyPool::new(3);
+        let mut rng = Lcg(987654321);
+        let mut shadow = [0u64; 3];
+        let mut now = 0u64;
+        for _ in 0..2000 {
+            now += rng.next(4);
+            if p.available(now) && rng.next(2) == 0 {
+                let hold = 1 + rng.next(12);
+                let i = p.acquire(now, now + hold).unwrap();
+                shadow[i] = now + hold;
+            }
+            let want = shadow.iter().copied().filter(|&u| u > now).min();
+            assert_eq!(p.next_release(now), want, "at cycle {now}");
+        }
+    }
+}

@@ -38,6 +38,13 @@ impl RegFile {
         self.nw
     }
 
+    /// Zero every register in place (kernel-launch reset; keeps the
+    /// storage, so back-to-back launches never reallocate).
+    pub fn reset(&mut self) {
+        self.data.fill(0);
+        self.cross_bank_reads = 0;
+    }
+
     #[inline]
     fn idx(&self, warp: usize, reg: u8, lane: usize) -> usize {
         (warp * 32 + reg as usize) * self.nt + lane
@@ -94,17 +101,20 @@ impl RegFile {
         self.data[i] ^= 1 << (bit & 31);
     }
 
-    /// Write lanes selected by `mask`.
+    /// Write lanes selected by `mask`. The mask is applied as a
+    /// branchless bit-select over the lane slice (PR 8), so the
+    /// writeback hot path autovectorizes instead of branching per
+    /// lane; inactive lanes keep their old value exactly as before.
     #[inline]
     pub fn write_masked(&mut self, warp: usize, reg: u8, mask: u32, vals: &[u32]) {
         if reg == 0 {
             return;
         }
         let base = self.idx(warp, reg, 0);
-        for lane in 0..self.nt {
-            if mask & (1 << lane) != 0 {
-                self.data[base + lane] = vals[lane];
-            }
+        let dst = &mut self.data[base..base + self.nt];
+        for (lane, (d, &v)) in dst.iter_mut().zip(vals).enumerate() {
+            let sel = ((mask >> lane) & 1).wrapping_neg(); // all-ones when active
+            *d = (*d & !sel) | (v & sel);
         }
     }
 }

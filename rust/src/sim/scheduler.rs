@@ -107,6 +107,14 @@ impl Scheduler {
         self.rr = (w + 1) % nw;
     }
 
+    /// Back to the post-construction state (kernel-launch reset):
+    /// cursors at warp 0, tile table at the warp-scoped default.
+    pub fn reset(&mut self) {
+        self.rr = 0;
+        self.last = 0;
+        self.tile = TileConfig::warp_default(self.nt);
+    }
+
     /// Apply `vx_tile`. Returns an error string for invalid configs
     /// (raised as [`crate::sim::SimError::IllegalInstr`] by the core).
     pub fn set_tile(&mut self, group_mask: u32, size: u32) -> Result<(), String> {

@@ -12,6 +12,11 @@ impl Scoreboard {
         Scoreboard { pending: vec![0; nw] }
     }
 
+    /// Drop every pending bit in place (kernel-launch reset).
+    pub fn reset(&mut self) {
+        self.pending.fill(0);
+    }
+
     /// True if `reg` has an in-flight writer.
     #[inline]
     pub fn busy(&self, warp: usize, reg: u8) -> bool {

@@ -1,5 +1,16 @@
-//! Per-warp architectural state: PC, thread mask, the IPDOM divergence
-//! stack driven by `vx_split`/`vx_join`, and barrier/halt status.
+//! Per-warp architectural state: the IPDOM divergence stack driven by
+//! `vx_split`/`vx_join`, plus warp run-state and thread-mask helpers.
+//!
+//! PR 8 moved the *hot* per-warp fields — PC, thread mask, run-state —
+//! out of [`Warp`] into parallel struct-of-arrays vectors on the core
+//! (`Core::warp_pc` / `Core::warp_tmask` / `Core::warp_state`): the
+//! issue stage reads all three for every warp every cycle, and the
+//! SoA layout lets the ready-warp scan and `next_event` min-fold walk
+//! contiguous memory instead of chasing one struct per warp. What
+//! remains here is the *cold* state (the divergence stack, touched
+//! only by split/join) and the mask/stack semantics, parameterized on
+//! the caller-owned PC and mask so the behavior could not drift in
+//! the move.
 
 /// Reconvergence-stack entry pushed by `vx_split`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -28,86 +39,82 @@ pub enum WarpState {
     Barrier { id: u32 },
 }
 
-/// One hardware warp.
-#[derive(Clone, Debug)]
+/// Cold per-warp state: the IPDOM reconvergence stack. The hot fields
+/// (PC, thread mask, run-state) live in the core's SoA vectors.
+#[derive(Clone, Debug, Default)]
 pub struct Warp {
-    pub pc: u32,
-    /// Active-thread mask (bit i = lane i), width = NT.
-    pub tmask: u32,
-    pub state: WarpState,
     pub stack: Vec<IpdomEntry>,
 }
 
 impl Warp {
-    pub fn new(nt: usize) -> Self {
-        Warp { pc: 0, tmask: full_mask(nt), state: WarpState::Inactive, stack: Vec::new() }
+    pub fn new() -> Self {
+        Warp { stack: Vec::new() }
     }
 
-    pub fn is_active(&self) -> bool {
-        self.state == WarpState::Active
-    }
-
-    /// Index of the first active lane (warp-uniform operand reads use
-    /// it, mirroring Vortex's "thread 0 of the warp" convention).
-    pub fn first_lane(&self) -> usize {
-        debug_assert!(self.tmask != 0);
-        self.tmask.trailing_zeros() as usize
-    }
-
-    /// Flip one lane bit of the thread mask — the fault-injection hook
-    /// (`sim/fault`). The result stays within the machine's lane width;
-    /// a flip CAN zero the mask of a running warp, which the core
-    /// detects as `SimError::CorruptState` at the next issue attempt.
-    pub fn flip_mask_bit(&mut self, bit: u32, nt: usize) {
-        self.tmask = (self.tmask ^ (1 << (bit as usize % nt))) & full_mask(nt);
-    }
-
-    /// Apply `vx_split` with the given per-lane taken mask. Always
-    /// pushes an entry (degenerate when non-divergent) and returns the
-    /// token (stack depth before push). Execution continues on the
-    /// then-mask unless it is empty, in which case the else side runs
-    /// first and the entry records nothing to defer.
-    pub fn split(&mut self, taken: u32) -> u32 {
-        let then_mask = self.tmask & taken;
-        let else_mask = self.tmask & !taken;
+    /// Apply `vx_split` with the given per-lane taken mask, at the
+    /// split's own `pc`, over the current thread mask `tmask`. Always
+    /// pushes an entry (degenerate when non-divergent) and returns
+    /// `(token, new_tmask)` — the token is the stack depth before the
+    /// push. Execution continues on the then-mask unless it is empty,
+    /// in which case the else side runs first and the entry records
+    /// nothing to defer.
+    pub fn split(&mut self, pc: u32, tmask: u32, taken: u32) -> (u32, u32) {
+        let then_mask = tmask & taken;
+        let else_mask = tmask & !taken;
         let token = self.stack.len() as u32;
         if then_mask == 0 {
             // Nothing takes the then side: run else immediately, no
             // deferral.
             self.stack.push(IpdomEntry {
-                orig_mask: self.tmask,
+                orig_mask: tmask,
                 else_mask: 0,
                 else_pc: 0,
                 else_taken: true,
             });
-            // tmask unchanged (= else_mask).
+            (token, tmask) // mask unchanged (= else_mask)
         } else {
             self.stack.push(IpdomEntry {
-                orig_mask: self.tmask,
+                orig_mask: tmask,
                 else_mask,
-                else_pc: self.pc.wrapping_add(4),
+                else_pc: pc.wrapping_add(4),
                 else_taken: else_mask == 0,
             });
-            self.tmask = then_mask;
+            (token, then_mask)
         }
-        token
     }
 
-    /// Apply `vx_join`. Returns the next PC (either the deferred else
-    /// path or fall-through after reconvergence).
-    pub fn join(&mut self) -> u32 {
+    /// Apply `vx_join` at the join's own `pc`. Returns
+    /// `(next_pc, new_tmask)` — either the deferred else path or
+    /// fall-through after reconvergence.
+    pub fn join(&mut self, pc: u32) -> (u32, u32) {
         let top = self.stack.last_mut().expect("vx_join with empty IPDOM stack");
         if !top.else_taken && top.else_mask != 0 {
             top.else_taken = true;
-            self.tmask = top.else_mask;
+            let mask = top.else_mask;
             top.else_mask = 0;
-            top.else_pc
+            (top.else_pc, mask)
         } else {
             let e = self.stack.pop().unwrap();
-            self.tmask = e.orig_mask;
-            self.pc.wrapping_add(4)
+            (pc.wrapping_add(4), e.orig_mask)
         }
     }
+}
+
+/// Index of the first active lane of `tmask` (warp-uniform operand
+/// reads use it, mirroring Vortex's "thread 0 of the warp" convention).
+#[inline]
+pub fn first_lane(tmask: u32) -> usize {
+    debug_assert!(tmask != 0);
+    tmask.trailing_zeros() as usize
+}
+
+/// Flip one lane bit of a thread mask — the fault-injection hook
+/// (`sim/fault`). The result stays within the machine's lane width; a
+/// flip CAN zero the mask of a running warp, which the core detects as
+/// `SimError::CorruptState` at the next issue attempt.
+#[inline]
+pub fn flip_mask_bit(tmask: u32, bit: u32, nt: usize) -> u32 {
+    (tmask ^ (1 << (bit as usize % nt))) & full_mask(nt)
 }
 
 /// All-ones mask of width `nt`.
@@ -123,11 +130,29 @@ pub fn full_mask(nt: usize) -> u32 {
 mod tests {
     use super::*;
 
-    fn active_warp(nt: usize) -> Warp {
-        let mut w = Warp::new(nt);
-        w.state = WarpState::Active;
-        w.pc = 0x1000;
-        w
+    /// Caller-side harness standing in for the core's SoA fields: the
+    /// split/join methods take and return the hot PC/mask state.
+    struct W {
+        warp: Warp,
+        pc: u32,
+        tmask: u32,
+    }
+
+    impl W {
+        fn split(&mut self, taken: u32) -> u32 {
+            let (token, mask) = self.warp.split(self.pc, self.tmask, taken);
+            self.tmask = mask;
+            token
+        }
+        fn join(&mut self) -> u32 {
+            let (next, mask) = self.warp.join(self.pc);
+            self.tmask = mask;
+            next
+        }
+    }
+
+    fn active_warp(nt: usize) -> W {
+        W { warp: Warp::new(), pc: 0x1000, tmask: full_mask(nt) }
     }
 
     #[test]
@@ -146,7 +171,7 @@ mod tests {
         let next = w.join();
         assert_eq!(next, 0x1014);
         assert_eq!(w.tmask, 0xFF);
-        assert!(w.stack.is_empty());
+        assert!(w.warp.stack.is_empty());
     }
 
     #[test]
@@ -157,7 +182,7 @@ mod tests {
         let next = w.join();
         assert_eq!(next, w.pc.wrapping_add(4));
         assert_eq!(w.tmask, 0xFF);
-        assert!(w.stack.is_empty());
+        assert!(w.warp.stack.is_empty());
     }
 
     #[test]
@@ -167,7 +192,7 @@ mod tests {
         assert_eq!(w.tmask, 0xFF, "else side keeps running");
         let next = w.join();
         assert_eq!(next, w.pc.wrapping_add(4));
-        assert!(w.stack.is_empty());
+        assert!(w.warp.stack.is_empty());
     }
 
     #[test]
@@ -193,18 +218,22 @@ mod tests {
 
     #[test]
     fn flip_mask_bit_toggles_within_lane_width() {
-        let mut w = active_warp(8);
-        w.flip_mask_bit(2, 8);
-        assert_eq!(w.tmask, 0xFB);
-        w.flip_mask_bit(2, 8);
-        assert_eq!(w.tmask, 0xFF, "flip is an involution");
-        w.flip_mask_bit(10, 8);
-        assert_eq!(w.tmask, 0xFB, "lane index wraps mod nt");
+        let mut m = full_mask(8);
+        m = flip_mask_bit(m, 2, 8);
+        assert_eq!(m, 0xFB);
+        m = flip_mask_bit(m, 2, 8);
+        assert_eq!(m, 0xFF, "flip is an involution");
+        m = flip_mask_bit(m, 10, 8);
+        assert_eq!(m, 0xFB, "lane index wraps mod nt");
         // A single-lane warp can be zeroed outright.
-        let mut w = active_warp(1);
-        w.tmask = 1;
-        w.flip_mask_bit(0, 1);
-        assert_eq!(w.tmask, 0, "flip can empty a running warp's mask");
+        assert_eq!(flip_mask_bit(1, 0, 1), 0, "flip can empty a running warp's mask");
+    }
+
+    #[test]
+    fn first_lane_is_the_lowest_set_bit() {
+        assert_eq!(first_lane(0b1), 0);
+        assert_eq!(first_lane(0b1100), 2);
+        assert_eq!(first_lane(1 << 31), 31);
     }
 
     #[test]

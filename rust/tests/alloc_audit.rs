@@ -1,0 +1,124 @@
+//! Hot-path allocation audit (PR 8).
+//!
+//! The detailed simulation loop must perform **zero heap allocations**
+//! once warmed up: `Core::reset` resets every container in place, the
+//! writeback queue recycles slab slots, divergence stacks and
+//! MSHR/L2 pending lists keep their capacity across launches, and the
+//! lane loops work in fixed stack arrays. This test pins that with a
+//! counting global allocator: for every kernel × solution × engine it
+//! runs a launch once to warm the `Gpu`, re-stages the same launch on
+//! the same `Gpu`, and asserts the second `run()` never touches the
+//! allocator.
+//!
+//! Everything lives in ONE `#[test]` so no sibling test thread can
+//! allocate while the tracker is armed.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use vortex_warp::coordinator::dispatch::Solution;
+use vortex_warp::kernels;
+use vortex_warp::prt::{codegen_scalar, codegen_simt, transform, LaunchImage};
+use vortex_warp::sim::{map, EngineMode, Gpu, SimConfig};
+
+/// Pass-through allocator that counts alloc/realloc calls while armed.
+struct Counting;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(p, l, n)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: Counting = Counting;
+
+/// Stage a compiled image onto a gpu exactly like `coordinator::launch`
+/// does: parameter arrays + the argument mailbox, then the program.
+fn stage(gpu: &mut Gpu, img: &LaunchImage, inputs: &vortex_warp::prt::interp::Env) {
+    for (i, &(name, base, len)) in img.params.iter().enumerate() {
+        gpu.mem.write_u32(map::KARG_BASE + 4 * i as u32, base).unwrap();
+        let data = inputs.arrays.get(name);
+        for j in 0..len {
+            let v = data.and_then(|d| d.get(j)).copied().unwrap_or(0);
+            gpu.mem.write_u32(base + 4 * j as u32, v as u32).unwrap();
+        }
+    }
+    gpu.load_program(&img.prog);
+}
+
+#[test]
+fn warmed_up_run_is_allocation_free() {
+    for engine in [EngineMode::FastForward, EngineMode::Reference] {
+        for b in kernels::all() {
+            for sol in [Solution::Hw, Solution::Sw] {
+                let mut cfg = SimConfig::paper();
+                cfg.engine = engine;
+                cfg.warp_hw = sol == Solution::Hw;
+                let img = match sol {
+                    Solution::Hw => {
+                        codegen_simt(&b.kernel, cfg.nt as u32, cfg.nw as u32).unwrap()
+                    }
+                    Solution::Sw => {
+                        let scalar = transform(&b.kernel).unwrap();
+                        codegen_scalar(&scalar, cfg.nt as u32, cfg.nw as u32).unwrap()
+                    }
+                };
+
+                let mut gpu = Gpu::new(&cfg);
+                // Launch 1: warm-up. Containers grow to their
+                // steady-state capacity here.
+                stage(&mut gpu, &img, &b.inputs);
+                gpu.run(200_000_000)
+                    .unwrap_or_else(|e| panic!("{}[{}] warm-up: {e}", b.name, sol.name()));
+                let warm = gpu.cores[0].metrics.clone();
+
+                // Launch 2: identical re-stage on the warmed gpu — the
+                // run itself must never touch the allocator.
+                stage(&mut gpu, &img, &b.inputs);
+                ALLOCS.store(0, Ordering::SeqCst);
+                ARMED.store(true, Ordering::SeqCst);
+                let res = gpu.run(200_000_000);
+                ARMED.store(false, Ordering::SeqCst);
+                let n = ALLOCS.load(Ordering::SeqCst);
+                res.unwrap_or_else(|e| panic!("{}[{}] audited run: {e}", b.name, sol.name()));
+                assert_eq!(
+                    n,
+                    0,
+                    "{}[{}] {engine:?}: warmed-up run hit the allocator {n} times",
+                    b.name,
+                    sol.name()
+                );
+                // And the warmed run must be the same simulation.
+                assert_eq!(
+                    gpu.cores[0].metrics,
+                    warm,
+                    "{}[{}] {engine:?}: re-run metrics drifted",
+                    b.name,
+                    sol.name()
+                );
+            }
+        }
+    }
+}
