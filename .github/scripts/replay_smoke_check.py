@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Gate for the PR-9 trace record/replay smoke run.
+
+Usage:
+    replay_smoke_check.py FIXTURE TRACE_A TRACE_B REPLAY_INPUT_OUT
+
+Checks, in order:
+
+1. **Recorder byte-determinism** — TRACE_A and TRACE_B, recorded from
+   two independent runs of the same kernel x config, are byte-identical.
+   The trace format is specified byte-deterministic (fixed field order,
+   little-endian, no padding); two runs of the deterministic simulator
+   must serialize to the same bytes.
+2. **Header well-formedness** — the blob starts with the `VXTR` magic,
+   version 1, and a plausible nt/nw geometry. (Full structural
+   validation happens in Rust when the replay step decodes the blob;
+   this is a cheap first-line check with a readable error.)
+3. **Fixture** — the recorded bytes match the committed FIXTURE
+   (sha256 + base64 payload), so a silent change to the trace format or
+   to the recorded timing content cannot land without a reviewed
+   fixture update. A fixture containing ``{"bootstrap": true}`` passes
+   with a notice and prints the block to commit (first-run semantics,
+   same as the fault-campaign and profile-smoke fixtures).
+
+Finally the replay input blob is written to REPLAY_INPUT_OUT: the
+committed fixture bytes when pinned, else the freshly recorded bytes
+(bootstrap mode). CI then replays that file under both engines and
+byte-compares the dumped Metrics.
+"""
+
+import base64
+import hashlib
+import json
+import struct
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"REPLAY-SMOKE GATE: {msg}", file=sys.stderr)
+    raise SystemExit(1)
+
+
+def check_header(path: str, blob: bytes) -> None:
+    if len(blob) < 16:
+        fail(f"{path}: {len(blob)} bytes is too short for a trace header")
+    magic, version, nt, nw = struct.unpack_from("<4sIII", blob, 0)
+    if magic != b"VXTR":
+        fail(f"{path}: bad magic {magic!r} (expected b'VXTR')")
+    if version != 1:
+        fail(f"{path}: unsupported trace version {version}")
+    if not (1 <= nt <= 32 and 1 <= nw <= 64):
+        fail(f"{path}: implausible geometry nt={nt} nw={nw}")
+    print(f"{path}: VXTR v{version}, nt={nt} nw={nw}, {len(blob)} bytes")
+
+
+def main(argv: list[str]) -> None:
+    if len(argv) != 5:
+        fail(f"usage: {argv[0]} FIXTURE TRACE_A TRACE_B REPLAY_INPUT_OUT")
+    fixture_path, a_path, b_path, out_path = argv[1:]
+
+    blob_a = open(a_path, "rb").read()
+    blob_b = open(b_path, "rb").read()
+    if blob_a != blob_b:
+        fail(
+            f"{a_path} differs from {b_path} — two recordings of the same "
+            "kernel x config must be byte-identical (the recorder observes "
+            "a deterministic simulation through a byte-deterministic format)"
+        )
+    print("two independent recordings byte-identical: OK")
+
+    check_header(a_path, blob_a)
+
+    fixture = json.load(open(fixture_path))
+    if fixture.get("bootstrap"):
+        print("fixture is in bootstrap mode — commit this to pin the trace:")
+        print(
+            json.dumps(
+                {
+                    "sha256": hashlib.sha256(blob_a).hexdigest(),
+                    "bytes": len(blob_a),
+                    "data": base64.b64encode(blob_a).decode(),
+                },
+                indent=2,
+                sort_keys=True,
+            )
+        )
+        open(out_path, "wb").write(blob_a)
+        print(f"{out_path}: replaying the freshly recorded trace (bootstrap)")
+        return
+
+    pinned = base64.b64decode(fixture["data"])
+    if hashlib.sha256(pinned).hexdigest() != fixture.get("sha256"):
+        fail(f"{fixture_path}: data does not match its own sha256 (corrupt fixture)")
+    if blob_a != pinned:
+        fail(
+            "recorded trace drifted from the committed fixture "
+            f"({len(blob_a)} vs {len(pinned)} bytes, sha256 "
+            f"{hashlib.sha256(blob_a).hexdigest()[:12]}… vs "
+            f"{fixture['sha256'][:12]}…).\n"
+            "If the change is intended (e.g. a timing-model or format "
+            "change), regenerate rust/tests/fixtures/replay_smoke_trace.json "
+            "in the same PR: set it to {\"bootstrap\": true}, run this job, "
+            "and commit the printed block."
+        )
+    print("recorded trace matches committed fixture: OK")
+    open(out_path, "wb").write(pinned)
+    print(f"{out_path}: replaying the committed fixture trace")
+
+
+if __name__ == "__main__":
+    main(sys.argv)

@@ -32,7 +32,15 @@
 //!      by `tests/sampling_accuracy.rs`);
 //!   9. an **ALU-dense microbench** (PR 8): a raw branch+ALU loop on
 //!      one warp — per-instruction simulator overhead with no memory
-//!      or collective traffic, pinning the vectorized lane loops.
+//!      or collective traffic, pinning the vectorized lane loops;
+//!  10. a **trace-replay scenario** (PR 9): the ALU microbench and
+//!      representative kernels recorded once (`sim/tracefmt`) and
+//!      replayed through the full timing model with **no functional
+//!      execution** — `replay.speedup_vs_execute` /
+//!      `aggregate.replay_speedup` is the wall win of skipping fetch,
+//!      register traffic and lane-loop evaluation on the hot path
+//!      (the ISSUE-9 ≥2× acceptance metric), with replayed `Metrics`
+//!      asserted bit-identical to the execute-at-issue run.
 //!
 //! While measuring, the bench asserts the two engines return
 //! bit-identical `Metrics` — the equivalence invariant — and writes a
@@ -45,13 +53,13 @@
 use std::time::Instant;
 use vortex_warp::bench_harness::perf::{PerfReport, PerfRow};
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
-use vortex_warp::coordinator::{launch_batch, BatchJob};
+use vortex_warp::coordinator::{launch_batch, replay_trace, BatchJob};
 use vortex_warp::isa::asm::regs::*;
 use vortex_warp::isa::Asm;
 use vortex_warp::kernels;
 use vortex_warp::sim::{
     EngineMode, FuConfig, Gpu, MemHierConfig, OpcConfig, SamplingConfig, SimConfig,
-    TelemetryConfig,
+    TelemetryConfig, TraceConfig,
 };
 
 fn best_of(iters: usize, mut f: impl FnMut() -> u64) -> (u128, u64) {
@@ -360,6 +368,97 @@ fn main() {
     report.micro_instrs = micro_instrs;
     report.micro_ns = micro_ns;
 
+    // Trace-replay scenario (PR 9): record once, replay through the
+    // timing model with no functional execution. The ALU microbench is
+    // the headline workload (`reference_ns` reuses the execute timing
+    // just measured; the replay side rewinds the loaded trace in place,
+    // so neither side pays per-iteration allocation), plus two paper
+    // kernels through the coordinator path for composition breadth
+    // (their replay cost includes the per-run trace clone).
+    println!("\n=== trace-replay scenario (sim/tracefmt, no functional execution) ===");
+    let rec_cfg = {
+        let mut c = fast.clone();
+        c.record = TraceConfig::recording();
+        c
+    };
+    let (micro_trace, micro_exec_metrics) = {
+        let mut gpu = Gpu::new(&rec_cfg);
+        gpu.load_program(&micro_prog);
+        gpu.run(200_000_000).expect("record run");
+        assert_eq!(gpu.cores[0].metrics.instrs, micro_instrs, "recording is pure observation");
+        (gpu.cores[0].take_recorded().expect("recorded trace"), gpu.cores[0].metrics.clone())
+    };
+    let mut replay_gpu = Gpu::new(&fast);
+    replay_gpu.load_trace(micro_trace);
+    replay_gpu.run(200_000_000).expect("replay warm");
+    assert_eq!(
+        replay_gpu.cores[0].metrics, micro_exec_metrics,
+        "replay metrics must be bit-identical to execute-at-issue"
+    );
+    let run_replay = || {
+        replay_gpu.cores[0].reset();
+        replay_gpu.memsys.reset();
+        replay_gpu.cycles = 0;
+        replay_gpu.run(200_000_000).expect("replay run");
+        replay_gpu.cores[0].metrics.instrs
+    };
+    let (replay_ns, replay_instrs) = best_of(iters, run_replay);
+    assert_eq!(replay_instrs, micro_instrs);
+    let row = PerfRow {
+        bench: "alu_micro".to_string(),
+        solution: "HW".to_string(),
+        instrs: micro_instrs,
+        // Scenario semantics: reference = execute-at-issue, fast = replay.
+        reference_ns: micro_ns,
+        fast_ns: replay_ns,
+    };
+    println!(
+        "{:24} {:>10}  {:>10.2}  {:>10.2}  {:>7.2}x",
+        "alu_micro[HW]",
+        row.instrs,
+        row.reference_mips(),
+        row.fast_mips(),
+        row.engine_speedup(),
+    );
+    report.replay_rows.push(row);
+    for name in ["reduce", "matmul"] {
+        let b = kernels::by_name(name).expect("replay benchmark");
+        for sol in [Solution::Hw, Solution::Sw] {
+            let rec = dispatch(sol, &b.kernel, &rec_cfg, &b.inputs).expect("record run");
+            let trace = rec.recorded.expect("recorded trace");
+            let warm = replay_trace(&fast, trace.clone()).expect("replay warm");
+            assert_eq!(
+                warm.metrics,
+                rec.metrics,
+                "{name}[{}]: replay metrics diverged from execute-at-issue",
+                sol.name()
+            );
+            let (exec_ns, exec_instrs) = best_of(iters, || {
+                dispatch(sol, &b.kernel, &fast, &b.inputs).expect("exec run").metrics.instrs
+            });
+            let (rep_ns, rep_instrs) = best_of(iters, || {
+                replay_trace(&fast, trace.clone()).expect("replay run").metrics.instrs
+            });
+            assert_eq!(exec_instrs, rep_instrs);
+            let row = PerfRow {
+                bench: b.name.to_string(),
+                solution: sol.name().to_string(),
+                instrs: rep_instrs,
+                reference_ns: exec_ns,
+                fast_ns: rep_ns,
+            };
+            println!(
+                "{:24} {:>10}  {:>10.2}  {:>10.2}  {:>7.2}x",
+                format!("{}[{}]", b.name, sol.name()),
+                row.instrs,
+                row.reference_mips(),
+                row.fast_mips(),
+                row.engine_speedup(),
+            );
+            report.replay_rows.push(row);
+        }
+    }
+
     // Batched run: every (paper kernel x solution) job, repeated so
     // each host thread has work, through the scoped-thread batch
     // launcher (same composition as the tracked rows above).
@@ -432,6 +531,11 @@ fn main() {
         report.micro_ns,
         report.micro_mips(),
         report.aggregate_instrs_per_sec(),
+    );
+    println!(
+        "trace replay: {:.2} M instr/s, {:.2}x vs execute-at-issue",
+        report.replay_fast_mips(),
+        report.replay_speedup(),
     );
 
     let out = std::env::var("BENCH_PERF_OUT").unwrap_or_else(|_| "BENCH_perf.json".into());

@@ -87,6 +87,13 @@ pub struct PerfReport {
     /// vectorized-lane-loop work independent of kernel composition.
     pub micro_instrs: u64,
     pub micro_ns: u128,
+    /// Trace-replay scenario (PR 9): ALU-dense workloads recorded once
+    /// and replayed through the timing model with no functional
+    /// execution. Row semantics differ from the engine scenarios:
+    /// `reference_ns` is the **execute-at-issue** run and `fast_ns` is
+    /// the **replay** of its recorded trace (same engine, same config),
+    /// so `engine_speedup()` reads as replay-vs-execute wall speedup.
+    pub replay_rows: Vec<PerfRow>,
     /// Wall time of one `launch_batch` over every (bench × solution)
     /// job with the fast engine.
     pub batch_wall_ns: u128,
@@ -197,6 +204,17 @@ impl PerfReport {
         mips(self.micro_instrs, self.micro_ns)
     }
 
+    /// Replay-scenario throughput (replay runs), M instr/s.
+    pub fn replay_fast_mips(&self) -> f64 {
+        scenario_fast_mips(&self.replay_rows)
+    }
+
+    /// Wall-clock speedup of trace replay over execute-at-issue on the
+    /// same launches (the ISSUE-9 ≥2× acceptance metric).
+    pub fn replay_speedup(&self) -> f64 {
+        scenario_engine_speedup(&self.replay_rows)
+    }
+
     /// Absolute aggregate throughput of the fast engine in
     /// instructions per second (the v6 headline number — `fast_mips`
     /// times 1e6, published separately so dashboards need no unit
@@ -232,7 +250,7 @@ impl PerfReport {
 
     pub fn to_json(&self) -> String {
         let mut s = String::new();
-        s.push_str("{\n  \"schema\": \"vortex_warp.perf.v6\",\n");
+        s.push_str("{\n  \"schema\": \"vortex_warp.perf.v7\",\n");
         s.push_str(&format!("  \"host_threads\": {},\n", self.host_threads));
         s.push_str("  \"rows\": [\n");
         Self::rows_json(&self.rows, &mut s);
@@ -287,14 +305,23 @@ impl PerfReport {
             self.micro_ns,
             self.micro_mips(),
         ));
+        s.push_str("  \"replay_rows\": [\n");
+        Self::rows_json(&self.replay_rows, &mut s);
+        s.push_str("  ],\n");
+        s.push_str(&format!(
+            "  \"replay\": {{\"fast_mips\": {:.4}, \"speedup_vs_execute\": {:.4}}},\n",
+            self.replay_fast_mips(),
+            self.replay_speedup(),
+        ));
         s.push_str(&format!(
             "  \"aggregate\": {{\"reference_mips\": {:.4}, \"fast_mips\": {:.4}, \
-             \"batch_mips\": {:.4}, \"engine_speedup\": {:.4}, \"instrs_per_sec\": {:.1}, \
-             \"batch_wall_ns\": {}, \"batch_instrs\": {}}}\n",
+             \"batch_mips\": {:.4}, \"engine_speedup\": {:.4}, \"replay_speedup\": {:.4}, \
+             \"instrs_per_sec\": {:.1}, \"batch_wall_ns\": {}, \"batch_instrs\": {}}}\n",
             self.aggregate_reference_mips(),
             self.aggregate_fast_mips(),
             self.aggregate_batch_mips(),
             self.engine_speedup(),
+            self.replay_speedup(),
             self.aggregate_instrs_per_sec(),
             self.batch_wall_ns,
             self.batch_instrs,
@@ -415,6 +442,14 @@ mod tests {
             sampling_max_rel_err: 0.05,
             micro_instrs: 8_000_000,
             micro_ns: 1_000_000_000,
+            replay_rows: vec![PerfRow {
+                bench: "alu_micro".into(),
+                solution: "HW".into(),
+                instrs: 2_000_000,
+                // reference_ns = execute-at-issue run, fast_ns = replay.
+                reference_ns: 600_000_000,
+                fast_ns: 200_000_000,
+            }],
             batch_wall_ns: 500_000_000,
             batch_instrs: 4_000_000,
             host_threads: 4,
@@ -490,9 +525,18 @@ mod tests {
     }
 
     #[test]
+    fn replay_scenario_aggregates() {
+        let r = report();
+        // 2M instrs / 0.2 s replay = 10 M instr/s; 0.6 s execute -> 3x.
+        assert!((r.replay_fast_mips() - 10.0).abs() < 1e-9);
+        assert!((r.replay_speedup() - 3.0).abs() < 1e-9);
+        assert_eq!(PerfReport::default().replay_speedup(), 0.0);
+    }
+
+    #[test]
     fn json_shape() {
         let j = report().to_json();
-        assert!(j.contains("\"schema\": \"vortex_warp.perf.v6\""));
+        assert!(j.contains("\"schema\": \"vortex_warp.perf.v7\""));
         assert!(j.contains("\"bench\": \"matmul\""));
         assert!(j.contains("\"aggregate\""));
         assert!(j.contains("\"memhier_rows\""));
@@ -515,6 +559,10 @@ mod tests {
         ));
         assert!(j.contains("\"micro\": {\"instrs\": 8000000, \"wall_ns\": 1000000000, \
              \"mips\": 8.0000}"));
+        assert!(j.contains("\"replay_rows\""));
+        assert!(j.contains("\"bench\": \"alu_micro\""));
+        assert!(j.contains("\"replay\": {\"fast_mips\": 10.0000, \"speedup_vs_execute\": 3.0000}"));
+        assert!(j.contains("\"replay_speedup\": 3.0000"));
         assert!(j.contains("\"instrs_per_sec\": 4000000.0"));
         assert!(j.contains("\"engine_speedup\": 2.0000"));
         // Balanced braces/brackets (cheap well-formedness check).

@@ -30,7 +30,9 @@ use crate::prt::codegen::{codegen_scalar, codegen_simt, LaunchImage};
 use crate::prt::interp::Env;
 use crate::prt::kir::{Kernel, ParamDir};
 use crate::prt::transform;
-use crate::sim::{map, CoreError, Gpu, Metrics, SimConfig, SimError, TelemetrySnapshot};
+use crate::sim::{
+    map, CoreError, Gpu, KernelTrace, Metrics, SimConfig, SimError, TelemetrySnapshot,
+};
 
 /// Launch failure.
 #[derive(Debug, Clone, PartialEq)]
@@ -78,6 +80,11 @@ pub struct LaunchResult {
     /// order, including the `... N earlier lines dropped` marker when
     /// the ring evicted; empty when tracing is off.
     pub trace: Vec<String>,
+    /// Machine trace recorded by this launch (`cfg.record`,
+    /// `sim/tracefmt`); `None` unless recording was enabled. Feed it
+    /// to [`replay_trace`] to re-run the timing model without
+    /// functional execution.
+    pub recorded: Option<KernelTrace>,
 }
 
 /// Run a compiled kernel image on a GPU with the given inputs, under
@@ -152,7 +159,75 @@ pub fn launch_budgeted(
             trace.extend(c.trace.render());
         }
     }
-    Ok(LaunchResult { env, metrics, telemetry, trace })
+    let recorded = gpu.cores[0].take_recorded();
+    Ok(LaunchResult { env, metrics, telemetry, trace, recorded })
+}
+
+/// Replay a recorded kernel trace (`sim/tracefmt`) through the full
+/// timing model — scheduler, scoreboard, operand collectors, FU pools,
+/// memory hierarchy, telemetry, both engines — with no functional
+/// execution, under the default [`MAX_CYCLES`] budget. `Metrics` come
+/// back bit-identical to the execute-at-issue launch that recorded the
+/// trace (`tests/trace_replay.rs` pins this). Replay runs no program
+/// and touches no data, so the result's `Env` is empty.
+pub fn replay_trace(cfg: &SimConfig, trace: KernelTrace) -> Result<LaunchResult, LaunchError> {
+    replay_trace_budgeted(cfg, trace, MAX_CYCLES)
+}
+
+/// [`replay_trace`] with an explicit cycle budget.
+pub fn replay_trace_budgeted(
+    cfg: &SimConfig,
+    trace: KernelTrace,
+    max_cycles: u64,
+) -> Result<LaunchResult, LaunchError> {
+    // Replay shares recording's restrictions (single core, no faults,
+    // no sampling) and additionally cannot itself record — there is no
+    // functional execution to observe.
+    if cfg.num_cores != 1 {
+        return Err(LaunchError::BadInput("replay supports a single core only".into()));
+    }
+    if cfg.fault.enabled() {
+        return Err(LaunchError::BadInput("replay is incompatible with fault injection".into()));
+    }
+    if cfg.sampling.enabled() {
+        return Err(LaunchError::BadInput(
+            "replay is incompatible with sampled simulation".into(),
+        ));
+    }
+    if cfg.record.enabled() {
+        return Err(LaunchError::BadInput("replay cannot re-record; disable cfg.record".into()));
+    }
+    if (trace.nt, trace.nw) != (cfg.nt, cfg.nw) {
+        return Err(LaunchError::BadInput(format!(
+            "trace geometry nt={} nw={} does not match config nt={} nw={}",
+            trace.nt, trace.nw, cfg.nt, cfg.nw
+        )));
+    }
+
+    let mut gpu = Gpu::new(cfg);
+    gpu.load_trace(trace);
+    gpu.run(max_cycles)?;
+
+    let metrics = gpu.cores[0].metrics.clone();
+    let telemetry = gpu
+        .cores
+        .iter()
+        .enumerate()
+        .filter_map(|(i, c)| c.telemetry.as_ref().map(|t| t.snapshot(i)))
+        .collect();
+    let mut trace_lines = Vec::new();
+    for c in &gpu.cores {
+        if !c.trace.is_empty() || c.trace.dropped() > 0 {
+            trace_lines.extend(c.trace.render());
+        }
+    }
+    Ok(LaunchResult {
+        env: Env::default(),
+        metrics,
+        telemetry,
+        trace: trace_lines,
+        recorded: None,
+    })
 }
 
 /// The HW solution: SIMT codegen, extended hardware.

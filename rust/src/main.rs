@@ -9,6 +9,8 @@
 //!   campaign --bench <name> ...     fault-injection campaign (PR 6)
 //!   profile --bench <name> ...      sampled telemetry views (PR 7)
 //!   batch   --bench <name> ...      streamed isolated batch (PR 7)
+//!   record  --bench <name> --out P  record a machine trace (PR 9)
+//!   replay  --in P                  replay a trace, no functional exec (PR 9)
 //!
 //! All machine-shaping commands also accept `--engine fast|reference`
 //! and `--inject seed=..,count=..[,window=..][,targets=reg+pred+...]`.
@@ -20,12 +22,14 @@ use vortex_warp::bench_harness::{fig5, tables};
 use vortex_warp::coordinator::campaign::{run_campaign_with, CampaignSpec};
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
 use vortex_warp::coordinator::sink::{launch_batch_streamed, JsonlSink, NullSink};
-use vortex_warp::coordinator::{BatchJob, BatchPolicy};
+use vortex_warp::coordinator::{replay_trace, BatchJob, BatchPolicy};
 use vortex_warp::kernels;
 use vortex_warp::prt::kir::ParamDir;
 use vortex_warp::runtime::Runtime;
 use vortex_warp::sim::telemetry::perfetto;
-use vortex_warp::sim::{EngineMode, FaultConfig, FaultTarget, SimConfig, TelemetryConfig};
+use vortex_warp::sim::{
+    EngineMode, FaultConfig, FaultTarget, KernelTrace, SimConfig, TelemetryConfig, TraceConfig,
+};
 
 fn usage() -> ! {
     eprintln!(
@@ -75,6 +79,18 @@ fn usage() -> ! {
              JSON report to stdout (or PATH), summary to stderr;\n\
              --jsonl streams one verdict object per line as launches\n\
              retire\n\
+           record --bench <name> --out PATH [--solution hw|sw]\n\
+               [machine flags as for `run`]\n\
+             run one kernel with the machine-trace recorder on and\n\
+             write the `sim/tracefmt` binary trace to PATH (compact,\n\
+             versioned, byte-deterministic; distinct from the human\n\
+             debug log behind --trace/--trace-cap)\n\
+           replay --in PATH [--metrics-out PATH]\n\
+               [machine flags as for `run`]\n\
+             replay a recorded trace through the full timing model\n\
+             with no functional execution; Metrics are bit-identical\n\
+             to the recording run (--metrics-out writes them for\n\
+             byte-compare in CI); --nt/--nw must match the recording\n\
            list                         list benchmarks\n\
          \n\
          shared machine flags:\n\
@@ -520,6 +536,62 @@ fn main() {
                 report.budget,
                 parts.join(" ")
             );
+        }
+        Some("record") => {
+            let name = flag_value(&args, "--bench").unwrap_or_else(|| usage());
+            let out = flag_value(&args, "--out").unwrap_or_else(|| usage());
+            let sol = flag_value(&args, "--solution")
+                .map(|s| Solution::parse(&s).expect("--solution hw|sw"))
+                .unwrap_or(Solution::Hw);
+            let mut cfg = config_from(&args);
+            cfg.record = TraceConfig::recording();
+            // Re-validate: the recorder's own gate (single core, no
+            // faults, no sampling) only engages once `record` is set.
+            cfg.validate().unwrap_or_else(|e| {
+                eprintln!("invalid configuration for recording: {e}");
+                std::process::exit(2);
+            });
+            let b = kernels::by_name(&name).unwrap_or_else(|| {
+                eprintln!("unknown benchmark `{name}` (try `vortex-warp list`)");
+                std::process::exit(2);
+            });
+            let r = dispatch(sol, &b.kernel, &cfg, &b.inputs).unwrap_or_else(|e| {
+                eprintln!("launch failed: {e}");
+                std::process::exit(1);
+            });
+            b.check(&r.env).expect("output mismatch vs native reference");
+            let trace = r.recorded.expect("recording was enabled but produced no trace");
+            let bytes = trace.encode();
+            std::fs::write(&out, &bytes).unwrap_or_else(|e| {
+                eprintln!("cannot write {out}: {e}");
+                std::process::exit(1);
+            });
+            println!("{} [{}] {}", b.name, sol.name(), r.metrics.summary());
+            eprintln!("trace written to {out} ({} bytes, {} records)", bytes.len(), trace.len());
+        }
+        Some("replay") => {
+            let input = flag_value(&args, "--in").unwrap_or_else(|| usage());
+            let cfg = config_from(&args);
+            let bytes = std::fs::read(&input).unwrap_or_else(|e| {
+                eprintln!("cannot read {input}: {e}");
+                std::process::exit(2);
+            });
+            let trace = KernelTrace::decode(&bytes).unwrap_or_else(|e| {
+                eprintln!("cannot parse {input}: {e}");
+                std::process::exit(1);
+            });
+            let r = replay_trace(&cfg, trace).unwrap_or_else(|e| {
+                eprintln!("replay failed: {e}");
+                std::process::exit(1);
+            });
+            println!("replay [{input}] {}", r.metrics.summary());
+            if let Some(path) = flag_value(&args, "--metrics-out") {
+                std::fs::write(&path, format!("{:?}\n", r.metrics)).unwrap_or_else(|e| {
+                    eprintln!("cannot write {path}: {e}");
+                    std::process::exit(1);
+                });
+                eprintln!("metrics written to {path}");
+            }
         }
         Some("list") => {
             for b in kernels::all() {

@@ -362,6 +362,44 @@ impl Default for SamplingConfig {
     }
 }
 
+/// Trace-recording configuration (PR 9): with `record` on, the
+/// execute-at-issue interpreter appends one `sim/tracefmt` record per
+/// issued instruction — decoded operands, resolved FU kind,
+/// control/tmask outcomes, per-lane memory addresses — which
+/// `Core::take_recorded` hands back as a replayable
+/// [`crate::sim::tracefmt::KernelTrace`]. The recorder only *observes*
+/// the issue stage, so timing, outputs and `Metrics` stay
+/// byte-identical with recording on. Not to be confused with the
+/// [`SimConfig::trace`] debug ring (`sim/ringlog`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Record issued instructions into a replayable kernel trace.
+    pub record: bool,
+}
+
+impl TraceConfig {
+    /// Legacy-equivalent default: no recording — byte-identical to the
+    /// seed's behavior.
+    pub fn legacy() -> Self {
+        TraceConfig { record: false }
+    }
+
+    /// Record this launch's instruction streams.
+    pub fn recording() -> Self {
+        TraceConfig { record: true }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.record
+    }
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self::legacy()
+    }
+}
+
 /// Warp scheduling policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SchedPolicy {
@@ -422,9 +460,14 @@ pub struct SimConfig {
     /// The default is [`SamplingConfig::legacy`] — off, every cycle
     /// detailed, byte-identical outputs and metrics.
     pub sampling: SamplingConfig,
-    /// Capture a per-instruction trace (slow; tests/debug only).
+    /// Trace recording (PR 9): dump a replayable `sim/tracefmt`
+    /// instruction stream from the execute-at-issue interpreter. The
+    /// default is [`TraceConfig::legacy`] — off, byte-identical.
+    pub record: TraceConfig,
+    /// Capture a per-instruction *debug* log (`sim/ringlog`; slow,
+    /// tests/debug only). Unrelated to `record`.
     pub trace: bool,
-    /// Max retained trace lines (ring buffer — oldest lines are
+    /// Max retained debug-log lines (ring buffer — oldest lines are
     /// evicted once full). `0` = unbounded.
     pub trace_cap: usize,
 }
@@ -449,6 +492,7 @@ impl SimConfig {
             telemetry: TelemetryConfig::legacy(),
             engine: EngineMode::FastForward,
             sampling: SamplingConfig::legacy(),
+            record: TraceConfig::legacy(),
             trace: false,
             trace_cap: 1 << 16,
         }
@@ -505,6 +549,21 @@ impl SimConfig {
             }
             if self.trace {
                 return Err("sampling is incompatible with instruction tracing".into());
+            }
+        }
+        if self.record.enabled() {
+            // The recorder mirrors the single-core execute-at-issue
+            // walk; functional gaps would leave holes in the stream,
+            // and fault injection perturbs functional state in ways a
+            // replay could not reproduce.
+            if self.num_cores > 1 {
+                return Err("trace recording supports a single core only".into());
+            }
+            if self.fault.enabled() {
+                return Err("trace recording is incompatible with fault injection".into());
+            }
+            if self.sampling.enabled() {
+                return Err("trace recording is incompatible with sampled simulation".into());
             }
         }
         Ok(())
@@ -692,6 +751,34 @@ mod tests {
         c.sampling = SamplingConfig::sampled(1_000, 10_000);
         c.trace = true;
         assert!(c.validate().is_err(), "tracing");
+    }
+
+    #[test]
+    fn paper_defaults_to_legacy_record_model() {
+        let c = SimConfig::paper();
+        assert_eq!(c.record, TraceConfig::legacy(), "paper records no machine trace");
+        assert!(!c.record.enabled());
+        c.validate().unwrap();
+        let mut r = SimConfig::paper();
+        r.record = TraceConfig::recording();
+        assert!(r.record.enabled());
+        r.validate().unwrap();
+    }
+
+    #[test]
+    fn record_validation_rejects_incompatible_configs() {
+        let mut c = SimConfig::paper();
+        c.record = TraceConfig::recording();
+        c.num_cores = 2;
+        assert!(c.validate().is_err(), "multi-core");
+        let mut c = SimConfig::paper();
+        c.record = TraceConfig::recording();
+        c.fault.count = 1;
+        assert!(c.validate().is_err(), "fault injection");
+        let mut c = SimConfig::paper();
+        c.record = TraceConfig::recording();
+        c.sampling = SamplingConfig::sampled(1_000, 10_000);
+        assert!(c.validate().is_err(), "sampled simulation");
     }
 
     #[test]

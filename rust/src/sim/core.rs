@@ -30,11 +30,12 @@ use super::memhier::{CoreMem, SharedMem};
 use super::metrics::Metrics;
 use super::opc::Opc;
 use super::regfile::RegFile;
+use super::ringlog::TraceBuf;
 use super::scheduler::Scheduler;
 use super::scoreboard::Scoreboard;
 use super::telemetry::{Cause, Telemetry, Track};
-use super::trace::TraceBuf;
-use super::warp::{flip_mask_bit, full_mask, Warp, WarpState};
+use super::tracefmt::{Effect, KernelTrace, MemAccess, OpClass, TraceRecord};
+use super::warp::{first_lane, flip_mask_bit, full_mask, Warp, WarpState};
 use super::wb::{InFlight, WbQueue};
 use crate::isa::{csr, Instr};
 
@@ -184,6 +185,26 @@ struct BarrierTable {
     active: Vec<(u32, u32, u32)>,
 }
 
+/// Replay-frontend state (PR 9): a loaded `sim/tracefmt` trace plus
+/// one cursor per warp into its record streams. While `Some`, the
+/// issue stage feeds the timing model from the trace instead of
+/// fetching and executing instructions.
+struct Replay {
+    trace: KernelTrace,
+    cursor: Vec<usize>,
+}
+
+/// Pre-dispatch recorder capture (`cfg.record`): operand-derived facts
+/// the post-dispatch observation cannot recover — register values may
+/// have changed, and `vx_wspawn`/`vx_bar` mutate *other* warps' state.
+struct RecPre {
+    mem: Option<MemAccess>,
+    effect: Effect,
+    /// `Metrics::crossbar_hops` before dispatch (the delta is this
+    /// record's merged-collective hop charge).
+    hops0: u64,
+}
+
 /// One simulated core.
 pub struct Core {
     pub cfg: SimConfig,
@@ -239,6 +260,15 @@ pub struct Core {
     /// This core's slice of the fault-injection plan (`sim/fault`);
     /// empty under `FaultConfig::legacy()`.
     faults: CoreFaults,
+    /// Machine-trace recorder (`cfg.record`, `sim/tracefmt`): per-warp
+    /// record streams appended by `execute`. Pure observation — the
+    /// timing model never reads it, so metrics stay byte-identical
+    /// with recording on.
+    recorder: Option<Box<KernelTrace>>,
+    /// Replay frontend (PR 9): when loaded via [`Core::load_trace`],
+    /// the issue stage replays recorded instruction streams through
+    /// the full timing model with no functional execution.
+    replay: Option<Box<Replay>>,
     pub metrics: Metrics,
     /// Optional instruction trace (`cfg.trace`), bounded to
     /// `cfg.trace_cap` lines.
@@ -278,6 +308,8 @@ impl Core {
             scratch_vals: vec![0; nw * nt],
             scratch_res: vec![0; nw * nt],
             faults,
+            recorder: cfg.record.enabled().then(|| Box::new(KernelTrace::new(nt, nw))),
+            replay: None,
             metrics: Metrics::default(),
             trace: TraceBuf::new(cfg.trace_cap),
             telemetry: cfg
@@ -293,7 +325,31 @@ impl Core {
     /// spawns the rest with `vx_wspawn`).
     pub fn load_program(&mut self, prog: &[Instr]) {
         self.prog = prog.to_vec();
+        self.replay = None;
         self.reset();
+    }
+
+    /// Load a recorded kernel trace (`sim/tracefmt`) for replay and
+    /// reset. Subsequent stepping feeds the timing model from the
+    /// trace: no instructions are fetched or executed and no register
+    /// data is written. The trace must have been recorded under the
+    /// same machine geometry (the coordinator's `replay_trace` checks
+    /// this up front and reports a friendly error).
+    pub fn load_trace(&mut self, trace: KernelTrace) {
+        assert_eq!(
+            (trace.nt, trace.nw),
+            (self.cfg.nt, self.cfg.nw),
+            "trace geometry must match the config (caller validates)"
+        );
+        self.prog.clear();
+        self.replay = Some(Box::new(Replay { cursor: vec![0; trace.nw], trace }));
+        self.reset();
+    }
+
+    /// Hand back the trace recorded by the most recent launch (once).
+    /// `None` when `cfg.record` is off or the trace was already taken.
+    pub fn take_recorded(&mut self) -> Option<KernelTrace> {
+        self.recorder.take().map(|b| *b)
     }
 
     /// Reset architectural + timing state (keeps the program).
@@ -323,6 +379,17 @@ impl Core {
         self.ready_at.fill(0);
         self.spawn_epoch.fill(0);
         self.faults.reset();
+        // Rewind replay cursors / recorded streams in place (a warmed
+        // replay core re-runs its trace without touching the
+        // allocator — what makes replay-vs-execute timing honest).
+        if let Some(r) = self.replay.as_deref_mut() {
+            r.cursor.fill(0);
+        }
+        if let Some(rec) = self.recorder.as_deref_mut() {
+            for stream in &mut rec.warps {
+                stream.clear();
+            }
+        }
         self.metrics = Metrics::default();
         self.trace.clear();
         self.telemetry = self
@@ -365,6 +432,7 @@ impl Core {
         }
 
         // ---- writeback ----
+        let replaying = self.replay.is_some();
         while let Some(f) = self.inflight.pop_due(now) {
             if f.epoch != self.spawn_epoch[f.warp as usize] {
                 // Issued by a previous life of a since-respawned warp:
@@ -372,7 +440,11 @@ impl Core {
                 // must not clobber the new warp's registers.
                 continue;
             }
-            self.rf.write_masked(f.warp as usize, f.rd, f.mask, &f.vals);
+            if !replaying {
+                // Replay carries no values — retirement only releases
+                // the scoreboard; the register file is never written.
+                self.rf.write_masked(f.warp as usize, f.rd, f.mask, &f.vals);
+            }
             self.sb.clear(f.warp as usize, f.rd);
         }
 
@@ -419,6 +491,47 @@ impl Core {
             if self.ready_at[w] > now {
                 saw_pipe_stall = true;
                 self.tele_note(w, Cause::Pipeline);
+                continue;
+            }
+            if replaying {
+                // ---- replay frontend (`sim/tracefmt`, PR 9) ----
+                // Same hazard walk as the execute path below, fed from
+                // the warp's next trace record instead of a fetched
+                // instruction. Every check runs in the same order and
+                // charges the same stall/telemetry cause, so replayed
+                // `Metrics` are bit-identical.
+                let Some(rec) = self.replay_next(w) else {
+                    // An Active warp with an exhausted stream cannot
+                    // happen on a faithful trace: every warp's stream
+                    // ends with the instruction that halts or parks it.
+                    return Err(SimError::CorruptState {
+                        cycle: now,
+                        what: format!("replay trace exhausted for active warp {w}"),
+                    });
+                };
+                debug_assert_eq!(rec.pc, self.warp_pc[w], "replay stream out of sync");
+                if !self.sb.can_issue(w, &rec.srcs, rec.rd) {
+                    saw_sb_stall = true;
+                    self.tele_note(w, Cause::Scoreboard);
+                    continue;
+                }
+                let reads = rec.srcs.iter().flatten().count();
+                let (obase, ospan) = (rec.obase as usize, rec.ospan as usize);
+                if !self.opc.can_collect(obase, ospan, reads, now) {
+                    saw_operand_stall = true;
+                    self.tele_note(w, Cause::Operand);
+                    continue;
+                }
+                if !self.fu.available(rec.kind, now) {
+                    saw_struct_stall = true;
+                    self.tele_note(w, Cause::Structural);
+                    continue;
+                }
+                self.replay_execute(w, &rec, reads, obase, ospan, shared, now);
+                self.replay_advance(w);
+                self.ready_at[w] = self.ready_at[w].max(now + FETCH_SPACING);
+                self.sched.issued(w, nw);
+                issued += 1;
                 continue;
             }
             let pc = self.warp_pc[w];
@@ -749,6 +862,11 @@ impl Core {
             ));
         }
 
+        // Trace recorder (`cfg.record`): capture the operand-derived
+        // facts dispatch is about to consume/overwrite; the rest of
+        // the record is observed after dispatch (`record_post`).
+        let pre = self.recorder.is_some().then(|| self.record_pre(w, &instr, tmask));
+
         // Operand collection (`sim/opc`): claim a collector unit and
         // occupy the register bank(s) for the serialized reads; the
         // cycles beyond the first read delay this instruction.
@@ -766,6 +884,10 @@ impl Core {
 
         let mut out = [0u32; 32];
         let ret = fu::dispatch(self, w, pc, instr, mem, shared, now, &mut out)?;
+
+        if let Some(pre) = pre {
+            self.record_post(w, pc, &instr, kind, obase, ospan, tmask, &ret, pre, now);
+        }
 
         // Functional-unit accounting + occupancy (no-op occupancy
         // under unlimited pools). Operand serialization pushes the
@@ -826,6 +948,278 @@ impl Core {
             return fu::wcu::group_span(self.sched.tile.size, self.cfg.nt, self.cfg.nw, w);
         }
         (w, 1)
+    }
+
+    // ------------------------------------------------------------------
+    // Trace recorder (`cfg.record`) + replay frontend (PR 9,
+    // `sim/tracefmt`). The recorder observes the execute-at-issue walk;
+    // the replay path re-runs the timing half of `execute` from the
+    // recorded stream with no functional work.
+    // ------------------------------------------------------------------
+
+    /// Pre-dispatch recorder capture: per-lane memory addresses and
+    /// the barrier/wspawn operands, read the same way the dispatch
+    /// modules are about to read them (`sim/fu/{lsu,ctrl}.rs`) — these
+    /// cannot be recovered after dispatch mutates register and
+    /// warp state.
+    fn record_pre(&self, w: usize, instr: &Instr, tmask: u32) -> RecPre {
+        let nt = self.cfg.nt;
+        let mut a = [0u32; 32];
+        let mut mem_access = None;
+        let mut effect = Effect::None;
+        match *instr {
+            Instr::Load { rs1, imm, .. } | Instr::Store { rs1, imm, .. } => {
+                self.rf.read_all(w, rs1, &mut a);
+                let mut addrs = [0u32; 32];
+                for l in 0..nt {
+                    addrs[l] = a[l].wrapping_add(imm as u32);
+                }
+                mem_access = Some(MemAccess { addrs });
+            }
+            Instr::Bar { rs1, rs2 } => {
+                let mut b = [0u32; 32];
+                self.rf.read_all(w, rs1, &mut a);
+                self.rf.read_all(w, rs2, &mut b);
+                let first = first_lane(tmask);
+                effect = Effect::Barrier { id: a[first], required: b[first].max(1) };
+            }
+            Instr::Wspawn { rs1, rs2 } => {
+                let mut b = [0u32; 32];
+                self.rf.read_all(w, rs1, &mut a);
+                self.rf.read_all(w, rs2, &mut b);
+                let first = first_lane(tmask);
+                let count = (a[first] as usize).min(self.cfg.nw) as u32;
+                effect = Effect::Spawn { count, pc: b[first] };
+            }
+            _ => {}
+        }
+        RecPre { mem: mem_access, effect, hops0: self.metrics.crossbar_hops }
+    }
+
+    /// Post-dispatch record assembly: everything else is observable
+    /// from the retire info and the state dispatch left behind —
+    /// `next_pc`, latency/occupancy, the `ready_at` penalty, the
+    /// crossbar-hop delta, and the halt/tmask effect (any mask change
+    /// folds into one `SetTmask`, so split/join/tmc/pred replay
+    /// without the IPDOM stack).
+    #[allow(clippy::too_many_arguments)]
+    fn record_post(
+        &mut self,
+        w: usize,
+        pc: u32,
+        instr: &Instr,
+        kind: FuKind,
+        obase: usize,
+        ospan: usize,
+        tmask: u32,
+        ret: &fu::Retire,
+        pre: RecPre,
+        now: u64,
+    ) {
+        let effect = match pre.effect {
+            Effect::None => {
+                if self.warp_state[w] == WarpState::Inactive {
+                    Effect::Halt
+                } else if self.warp_tmask[w] != tmask {
+                    Effect::SetTmask(self.warp_tmask[w])
+                } else {
+                    Effect::None
+                }
+            }
+            e => e,
+        };
+        let rec = TraceRecord {
+            pc,
+            next_pc: ret.next_pc,
+            tmask,
+            kind,
+            class: OpClass::of(instr),
+            rd: instr.rd(),
+            srcs: instr.srcs(),
+            obase: obase as u8,
+            ospan: ospan as u8,
+            // Pre-dispatch `ready_at[w] <= now` (the warp issued), so
+            // any excess is the penalty this dispatch charged.
+            penalty: self.ready_at[w].saturating_sub(now) as u8,
+            lat: ret.lat as u32,
+            occ: ret.occ as u32,
+            hops: (self.metrics.crossbar_hops - pre.hops0) as u32,
+            effect,
+            mem: pre.mem,
+        };
+        if let Some(trace) = self.recorder.as_deref_mut() {
+            trace.warps[w].push(rec);
+        }
+    }
+
+    /// Peek warp `w`'s next trace record (replay mode only).
+    #[inline]
+    fn replay_next(&self, w: usize) -> Option<TraceRecord> {
+        let r = self.replay.as_deref()?;
+        r.trace.warps[w].get(r.cursor[w]).copied()
+    }
+
+    #[inline]
+    fn replay_advance(&mut self, w: usize) {
+        if let Some(r) = self.replay.as_deref_mut() {
+            r.cursor[w] += 1;
+        }
+    }
+
+    /// Issue one replayed record: the exact timing walk of
+    /// [`Core::execute`] minus all functional work — no dispatch, no
+    /// register-file data writes, no functional memory access. Memory
+    /// latency is recomputed through `sim/memhier` from the recorded
+    /// lane addresses (it depends on timing state and must mutate it);
+    /// every other charge comes from the record. Each counter and
+    /// telemetry charge lines up 1:1 with the execute-at-issue path,
+    /// which is what keeps replayed `Metrics` bit-identical
+    /// (`tests/trace_replay.rs`).
+    fn replay_execute(
+        &mut self,
+        w: usize,
+        rec: &TraceRecord,
+        reads: usize,
+        obase: usize,
+        ospan: usize,
+        shared: &mut SharedMem,
+        now: u64,
+    ) {
+        let tmask = rec.tmask;
+        let lanes = tmask.count_ones() as u64;
+        debug_assert_eq!(tmask, self.warp_tmask[w], "replayed thread mask out of sync");
+
+        if self.cfg.trace {
+            self.trace.push(format!(
+                "[{now:6}] c{cid} w{w} pc={pc:#06x} tmask={tmask:08b} replay {kind}",
+                cid = self.core_id,
+                pc = rec.pc,
+                kind = rec.kind.name(),
+            ));
+        }
+
+        let extra = self.opc.collect(
+            obase,
+            ospan,
+            reads,
+            now,
+            &mut self.metrics,
+            self.telemetry.as_deref_mut(),
+        );
+
+        // Timing-relevant dispatch effects, replayed from the record.
+        let (lat, occ) = match &rec.mem {
+            Some(m) => {
+                let store = rec.class == OpClass::Store;
+                let lat =
+                    self.replay_mem_latency(store, &m.addrs[..self.cfg.nt], tmask, now, shared);
+                (lat, lat)
+            }
+            None => (rec.lat as u64, rec.occ as u64),
+        };
+        rec.class.apply(&mut self.metrics);
+        self.metrics.crossbar_hops += rec.hops as u64;
+        if rec.penalty > 0 {
+            self.ready_at[w] = now + rec.penalty as u64;
+        }
+        self.apply_effect(w, rec.effect);
+
+        self.metrics.fu_issued[rec.kind as usize] += 1;
+        self.metrics.fu_busy[rec.kind as usize] += extra + occ;
+        self.fu.occupy(rec.kind, now, now + extra + occ);
+
+        if let Some(t) = self.telemetry.as_deref_mut() {
+            t.note_issued(w);
+            t.timeline.charge_fu(now, now + extra + occ, rec.kind);
+            t.push_span(Track::Fu(rec.kind), rec.kind.name(), now, now + extra + occ);
+            t.push_span(Track::Warp(w as u32), rec.kind.name(), now, now + extra + lat.max(1));
+        }
+
+        self.metrics.instrs += 1;
+        self.metrics.thread_instrs += lanes;
+        self.warp_pc[w] = rec.next_pc;
+        if let Some(rd) = rec.rd {
+            self.sb.set_pending(w, rd);
+            let done = self.opc.wb_slot(rec.kind, now + extra + lat, &mut self.metrics);
+            if let Some(t) = self.telemetry.as_deref_mut() {
+                t.warp_wb_wait[w] += done - (now + extra + lat);
+            }
+            self.inflight.push(
+                done,
+                InFlight {
+                    warp: w as u32,
+                    rd,
+                    mask: tmask,
+                    // No values in replay — writeback only releases
+                    // the scoreboard.
+                    vals: [0; 32],
+                    epoch: self.spawn_epoch[w],
+                },
+            );
+        }
+    }
+
+    /// Apply a record's warp-level side effect — the replay twin of
+    /// the control paths in `sim/fu/{ctrl,wcu}.rs`.
+    fn apply_effect(&mut self, w: usize, effect: Effect) {
+        match effect {
+            Effect::None => {}
+            Effect::SetTmask(m) => self.warp_tmask[w] = m,
+            Effect::Halt => self.warp_state[w] = WarpState::Inactive,
+            Effect::Barrier { id, required } => self.arrive_barrier(w, id, required),
+            Effect::Spawn { count, pc } => {
+                let nt = self.cfg.nt;
+                // Decode validates the count; clamp anyway so a
+                // hand-built trace cannot index out of range.
+                let count = (count as usize).min(self.cfg.nw);
+                for i in 1..count {
+                    self.warp_pc[i] = pc;
+                    self.warp_tmask[i] = full_mask(nt);
+                    self.warp_state[i] = WarpState::Active;
+                    self.warps[i].stack.clear();
+                    if i != w {
+                        // Respawn hygiene — mirrors `ctrl.rs` Wspawn.
+                        self.ready_at[i] = 0;
+                        self.sb.clear_warp(i);
+                        self.clear_barrier_arrivals(i);
+                        self.spawn_epoch[i] = self.spawn_epoch[i].wrapping_add(1);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Recompute a replayed memory access's latency through
+    /// `sim/memhier` — the mirror of `fu::lsu::mem_latency`. Latency
+    /// depends on timing state (cache tags, MSHRs, DRAM channels) and
+    /// mutates it, so it can never ride in the trace; replaying the
+    /// recorded addresses through the same walk is what keeps the
+    /// memory-system counters bit-identical.
+    fn replay_mem_latency(
+        &mut self,
+        store: bool,
+        addrs: &[u32],
+        tmask: u32,
+        now: u64,
+        shared: &mut SharedMem,
+    ) -> u64 {
+        if tmask == 0 {
+            return self.cfg.lat.alu as u64;
+        }
+        let first = tmask.trailing_zeros() as usize;
+        if Memory::is_shared(addrs[first]) {
+            return self.memsys.smem_access(&self.cfg.lat, addrs, tmask, &mut self.metrics);
+        }
+        self.memsys.warp_access(
+            &self.cfg.lat,
+            addrs,
+            tmask,
+            store,
+            now,
+            shared,
+            &mut self.metrics,
+            self.telemetry.as_deref_mut(),
+        )
     }
 
     pub(crate) fn require_warp_hw(&self, pc: u32, what: &str) -> Result<(), SimError> {

@@ -1,7 +1,22 @@
-//! Bounded instruction-trace buffer (PR-3 satellite).
+//! Bounded *debug* instruction-log ring (PR-3 satellite; renamed from
+//! `sim/trace.rs` in PR 9).
 //!
-//! `cfg.trace` used to append every executed instruction to an
-//! unbounded `Vec<String>`, so long traced runs grew memory without
+//! Two unrelated "trace" concepts live in this simulator — keep them
+//! straight:
+//!
+//! * **This module** ([`TraceBuf`]) is a human-readable debug log:
+//!   `cfg.trace` pushes one formatted line per executed instruction
+//!   into a ring bounded by `SimConfig::trace_cap` (CLI
+//!   `--trace --trace-cap N`). It is for eyeballing where a run ended
+//!   up, nothing machine-readable.
+//! * **`sim/tracefmt`** (PR 9) is the *machine* trace format: a
+//!   compact, versioned, byte-deterministic serialization of a
+//!   kernel's decoded per-warp instruction streams, recorded by the
+//!   execute-at-issue interpreter (CLI `record`) and replayed through
+//!   the timing model without functional execution (CLI `replay`).
+//!
+//! History: `cfg.trace` used to append every executed instruction to
+//! an unbounded `Vec<String>`, so long traced runs grew memory without
 //! limit. [`TraceBuf`] is a ring buffer capped at
 //! `SimConfig::trace_cap` lines: once full, the oldest line is dropped
 //! for each new one (and counted), keeping the most recent window —

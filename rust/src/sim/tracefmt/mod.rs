@@ -1,0 +1,667 @@
+//! `sim/tracefmt` — the machine trace record/replay format (PR 9).
+//!
+//! Accel-sim-style trace-driven simulation decouples *functional*
+//! execution from *timing*: the execute-at-issue interpreter records a
+//! kernel once, and the timing model replays the recorded stream many
+//! times without ever evaluating an instruction — no `AluOp::eval`, no
+//! register-file data writes, no functional memory access. This is
+//! both the scenario-diversity unlock (recorded traces become
+//! regression workloads independent of the eight built-in kernels) and
+//! a raw-speed win: the interpreter leaves the timing hot path
+//! entirely.
+//!
+//! Not to be confused with `sim/ringlog` — the bounded human-readable
+//! debug log behind `cfg.trace` / `--trace-cap`. This module is the
+//! *machine* format behind the `record` / `replay` CLI subcommands.
+//!
+//! ## What a record carries
+//!
+//! One [`TraceRecord`] per issued instruction, per warp, in issue
+//! order: the decoded operand shape (destination + source registers,
+//! operand-collector bank span), the resolved [`FuKind`], the
+//! instruction-mix class ([`OpClass`] — which `Metrics` counter it
+//! bumps), the control outcome (next PC, pipeline penalty, thread-mask
+//! / barrier / spawn / halt [`Effect`]), the per-lane memory addresses
+//! for loads/stores, and the config-deterministic latency/occupancy.
+//! Memory latencies are deliberately NOT trusted from the trace: they
+//! depend on timing state (cache tags, MSHRs, DRAM channels), so
+//! replay recomputes them through `sim/memhier` from the recorded
+//! addresses — which is exactly what keeps replayed `Metrics`
+//! bit-identical to execute-at-issue.
+//!
+//! ## Wire format (version 1, all little-endian)
+//!
+//! ```text
+//! magic  "VXTR" | version u32 | nt u32 | nw u32
+//! per warp 0..nw: count u32, then `count` records:
+//!   pc u32 | next_pc u32 | tmask u32
+//!   kind u8 | class u8 | rd u8 (0xFF = none) | srcs 3×u8 (0xFF = none)
+//!   obase u8 | ospan u8 | penalty u8
+//!   lat u32 | occ u32 | hops u32
+//!   effect u8 [+ payload: 1=SetTmask m:u32, 3=Barrier id,req:u32×2,
+//!                          4=Spawn count,pc:u32×2]
+//!   mem u8 (0|1) [+ nt×u32 lane addresses]
+//! ```
+//!
+//! Encoding is byte-deterministic: the same kernel × config records
+//! the same bytes, byte for byte (pinned in `tests/trace_replay.rs`).
+//! Decoding never panics: every field is bounds-checked against the
+//! header geometry and a corrupt or truncated stream surfaces as a
+//! [`TraceError`] (mapped to `LaunchError::BadInput` by the
+//! coordinator).
+
+use crate::isa::Instr;
+use crate::sim::fu::FuKind;
+use crate::sim::metrics::Metrics;
+use crate::sim::warp::full_mask;
+
+/// File magic: "VXTR" (VorteX TRace).
+pub const MAGIC: [u8; 4] = *b"VXTR";
+/// Format version; bumped on any wire-layout change.
+pub const VERSION: u32 = 1;
+
+/// Smallest possible record (no effect payload, no memory addresses):
+/// 3×u32 + 9×u8 + 3×u32 + effect tag + mem tag. Used to sanity-bound
+/// per-warp counts before reserving memory for a corrupt stream.
+const MIN_RECORD: usize = 12 + 9 + 12 + 1 + 1;
+
+/// Non-panicking decode error. `Display` gives the operator-facing
+/// message (`vortex-warp replay` / CI surface it via `BadInput`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceError {
+    BadMagic,
+    BadVersion(u32),
+    /// Stream ended mid-field, or trailing bytes follow the last warp.
+    Truncated,
+    /// A field failed validation against the header geometry.
+    BadField(&'static str),
+}
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceError::BadMagic => write!(f, "not a VXTR trace (bad magic)"),
+            TraceError::BadVersion(v) => {
+                write!(f, "unsupported trace version {v} (this build reads {VERSION})")
+            }
+            TraceError::Truncated => write!(f, "trace truncated or has trailing garbage"),
+            TraceError::BadField(what) => write!(f, "corrupt trace field: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+/// Instruction-mix class: which `Metrics` counter(s) this instruction
+/// retires into. Resolved at record time from the decoded instruction
+/// so replay never needs the ISA.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpClass {
+    Alu = 0,
+    Mul = 1,
+    Load = 2,
+    Store = 3,
+    Control = 4,
+    /// `vx_vote` / `vx_shfl`.
+    Collective = 5,
+    /// `vx_tile`: counts as a collective AND a control op.
+    CollectiveCtrl = 6,
+    /// `vx_bar`: counts as a control op AND a barrier hit.
+    Barrier = 7,
+}
+
+impl OpClass {
+    /// Mirror of the per-FU dispatch modules' instruction-mix counter
+    /// bumps (`sim/fu/{alu,muldiv,lsu,ctrl,wcu}.rs`). Exhaustive so a
+    /// new instruction family must pick its class here or fail to
+    /// compile.
+    pub fn of(i: &Instr) -> OpClass {
+        match i {
+            Instr::Alu { .. }
+            | Instr::AluImm { .. }
+            | Instr::Lui { .. }
+            | Instr::Auipc { .. }
+            | Instr::CsrRead { .. } => OpClass::Alu,
+            Instr::Mul { .. } => OpClass::Mul,
+            Instr::Load { .. } => OpClass::Load,
+            Instr::Store { .. } => OpClass::Store,
+            Instr::Fence
+            | Instr::Branch { .. }
+            | Instr::Jal { .. }
+            | Instr::Jalr { .. }
+            | Instr::Ecall
+            | Instr::Tmc { .. }
+            | Instr::Wspawn { .. }
+            | Instr::Split { .. }
+            | Instr::Join { .. }
+            | Instr::Pred { .. } => OpClass::Control,
+            Instr::Bar { .. } => OpClass::Barrier,
+            Instr::Vote { .. } | Instr::Shfl { .. } => OpClass::Collective,
+            Instr::Tile { .. } => OpClass::CollectiveCtrl,
+        }
+    }
+
+    /// Charge this instruction's retirement into the mix counters —
+    /// the replay-side twin of the dispatch modules' increments.
+    pub fn apply(self, m: &mut Metrics) {
+        match self {
+            OpClass::Alu => m.alu_ops += 1,
+            OpClass::Mul => m.mul_ops += 1,
+            OpClass::Load => m.loads += 1,
+            OpClass::Store => m.stores += 1,
+            OpClass::Control => m.control_ops += 1,
+            OpClass::Collective => m.warp_collectives += 1,
+            OpClass::CollectiveCtrl => {
+                m.warp_collectives += 1;
+                m.control_ops += 1;
+            }
+            OpClass::Barrier => {
+                m.control_ops += 1;
+                m.barriers_hit += 1;
+            }
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<OpClass> {
+        Some(match v {
+            0 => OpClass::Alu,
+            1 => OpClass::Mul,
+            2 => OpClass::Load,
+            3 => OpClass::Store,
+            4 => OpClass::Control,
+            5 => OpClass::Collective,
+            6 => OpClass::CollectiveCtrl,
+            7 => OpClass::Barrier,
+            _ => return None,
+        })
+    }
+}
+
+fn fu_kind_from_u8(v: u8) -> Option<FuKind> {
+    Some(match v {
+        0 => FuKind::Alu,
+        1 => FuKind::MulDiv,
+        2 => FuKind::Lsu,
+        3 => FuKind::Wcu,
+        _ => return None,
+    })
+}
+
+/// Warp-level side effect of an instruction, resolved at record time.
+/// Replay applies it verbatim instead of re-executing control flow —
+/// divergence stacks, predicate registers and barrier operand reads
+/// are all baked into the stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Effect {
+    /// No warp-state change (the common case).
+    None,
+    /// Thread mask changed (tmc/pred/split/join outcome).
+    SetTmask(u32),
+    /// Warp went inactive (ecall, or tmc/pred with an empty mask).
+    Halt,
+    /// Arrived at barrier `id` needing `required` warps.
+    Barrier { id: u32, required: u32 },
+    /// `vx_wspawn`: warps `1..count` (re)start at `pc`.
+    Spawn { count: u32, pc: u32 },
+}
+
+/// Per-lane addresses of one warp memory access (lanes `0..nt` live;
+/// the wire form stores exactly `nt` words). Store-vs-load comes from
+/// the record's [`OpClass`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemAccess {
+    pub addrs: [u32; 32],
+}
+
+/// One issued instruction, as the timing model needs it. `Copy` on
+/// purpose: the replay frontend hands records around by value so the
+/// hot path never chases the trace through a borrow.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceRecord {
+    pub pc: u32,
+    pub next_pc: u32,
+    /// Thread mask at issue (drives `thread_instrs` and the writeback
+    /// mask).
+    pub tmask: u32,
+    pub kind: FuKind,
+    pub class: OpClass,
+    /// Destination register (`None` = no writeback).
+    pub rd: Option<u8>,
+    /// Source registers, as `Instr::srcs` reports them (scoreboard
+    /// hazard checks + operand-read count).
+    pub srcs: [Option<u8>; 3],
+    /// Operand-collector bank span (`Core::operand_span` at issue —
+    /// merged collectives span every member warp's bank).
+    pub obase: u8,
+    pub ospan: u8,
+    /// Pipeline-refill penalty charged to the issuing warp's
+    /// `ready_at` (taken branches, split/join, tmc, vx_tile).
+    pub penalty: u8,
+    /// Writeback latency — authoritative for non-memory instructions
+    /// (config-deterministic); recomputed through `sim/memhier` for
+    /// loads/stores.
+    pub lat: u32,
+    /// Functional-unit occupancy — same caveat as `lat`.
+    pub occ: u32,
+    /// Crossbar hops a merged collective charged.
+    pub hops: u32,
+    pub effect: Effect,
+    /// Present iff `class` is `Load`/`Store`.
+    pub mem: Option<MemAccess>,
+}
+
+/// A recorded kernel: one issue-ordered record stream per hardware
+/// warp, plus the machine geometry it was recorded under (replay
+/// refuses a mismatched config).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KernelTrace {
+    pub nt: usize,
+    pub nw: usize,
+    pub warps: Vec<Vec<TraceRecord>>,
+}
+
+impl KernelTrace {
+    pub fn new(nt: usize, nw: usize) -> Self {
+        KernelTrace { nt, nw, warps: vec![Vec::new(); nw] }
+    }
+
+    /// Total records across all warps.
+    pub fn len(&self) -> usize {
+        self.warps.iter().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.warps.iter().all(Vec::is_empty)
+    }
+
+    /// Serialize to the version-1 wire form (byte-deterministic).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.len() * (MIN_RECORD + 8));
+        out.extend_from_slice(&MAGIC);
+        put_u32(&mut out, VERSION);
+        put_u32(&mut out, self.nt as u32);
+        put_u32(&mut out, self.nw as u32);
+        for stream in &self.warps {
+            put_u32(&mut out, stream.len() as u32);
+            for r in stream {
+                put_u32(&mut out, r.pc);
+                put_u32(&mut out, r.next_pc);
+                put_u32(&mut out, r.tmask);
+                out.push(r.kind as u8);
+                out.push(r.class as u8);
+                out.push(r.rd.unwrap_or(0xFF));
+                for s in r.srcs {
+                    out.push(s.unwrap_or(0xFF));
+                }
+                out.push(r.obase);
+                out.push(r.ospan);
+                out.push(r.penalty);
+                put_u32(&mut out, r.lat);
+                put_u32(&mut out, r.occ);
+                put_u32(&mut out, r.hops);
+                match r.effect {
+                    Effect::None => out.push(0),
+                    Effect::SetTmask(m) => {
+                        out.push(1);
+                        put_u32(&mut out, m);
+                    }
+                    Effect::Halt => out.push(2),
+                    Effect::Barrier { id, required } => {
+                        out.push(3);
+                        put_u32(&mut out, id);
+                        put_u32(&mut out, required);
+                    }
+                    Effect::Spawn { count, pc } => {
+                        out.push(4);
+                        put_u32(&mut out, count);
+                        put_u32(&mut out, pc);
+                    }
+                }
+                match &r.mem {
+                    None => out.push(0),
+                    Some(m) => {
+                        out.push(1);
+                        for &a in &m.addrs[..self.nt] {
+                            put_u32(&mut out, a);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Parse and validate a version-1 stream. Never panics: corrupt
+    /// input of any shape comes back as a [`TraceError`].
+    pub fn decode(bytes: &[u8]) -> Result<KernelTrace, TraceError> {
+        let mut c = Cursor { bytes, pos: 0 };
+        if c.take(4)? != MAGIC {
+            return Err(TraceError::BadMagic);
+        }
+        let version = c.u32()?;
+        if version != VERSION {
+            return Err(TraceError::BadVersion(version));
+        }
+        let nt = c.u32()? as usize;
+        let nw = c.u32()? as usize;
+        if nt == 0 || nt > 32 || !nt.is_power_of_two() {
+            return Err(TraceError::BadField("nt"));
+        }
+        if nw == 0 || nw > 32 || !nw.is_power_of_two() {
+            return Err(TraceError::BadField("nw"));
+        }
+        let full = full_mask(nt);
+        let mut warps = Vec::with_capacity(nw);
+        for _ in 0..nw {
+            let count = c.u32()? as usize;
+            // A corrupt count cannot reserve more memory than the
+            // remaining bytes could possibly encode.
+            if count > c.remaining() / MIN_RECORD {
+                return Err(TraceError::Truncated);
+            }
+            let mut stream = Vec::with_capacity(count);
+            for _ in 0..count {
+                stream.push(decode_record(&mut c, nt, nw, full)?);
+            }
+            warps.push(stream);
+        }
+        if c.remaining() != 0 {
+            return Err(TraceError::Truncated);
+        }
+        Ok(KernelTrace { nt, nw, warps })
+    }
+}
+
+fn decode_record(
+    c: &mut Cursor<'_>,
+    nt: usize,
+    nw: usize,
+    full: u32,
+) -> Result<TraceRecord, TraceError> {
+    let pc = c.u32()?;
+    let next_pc = c.u32()?;
+    let tmask = c.u32()?;
+    if tmask == 0 || tmask & !full != 0 {
+        return Err(TraceError::BadField("tmask"));
+    }
+    let kind = fu_kind_from_u8(c.u8()?).ok_or(TraceError::BadField("fu kind"))?;
+    let class = OpClass::from_u8(c.u8()?).ok_or(TraceError::BadField("op class"))?;
+    let rd = decode_reg(c.u8()?).map_err(|()| TraceError::BadField("rd"))?;
+    let mut srcs = [None; 3];
+    for s in &mut srcs {
+        *s = decode_reg(c.u8()?).map_err(|()| TraceError::BadField("src reg"))?;
+    }
+    let obase = c.u8()?;
+    let ospan = c.u8()?;
+    if (obase as usize) >= nw || ospan == 0 || obase as usize + ospan as usize > nw {
+        return Err(TraceError::BadField("operand span"));
+    }
+    let penalty = c.u8()?;
+    let lat = c.u32()?;
+    let occ = c.u32()?;
+    let hops = c.u32()?;
+    let effect = match c.u8()? {
+        0 => Effect::None,
+        1 => {
+            let m = c.u32()?;
+            if m == 0 || m & !full != 0 {
+                return Err(TraceError::BadField("effect tmask"));
+            }
+            Effect::SetTmask(m)
+        }
+        2 => Effect::Halt,
+        3 => {
+            let id = c.u32()?;
+            let required = c.u32()?;
+            if required == 0 {
+                return Err(TraceError::BadField("barrier required"));
+            }
+            Effect::Barrier { id, required }
+        }
+        4 => {
+            let count = c.u32()?;
+            let pc = c.u32()?;
+            if count as usize > nw {
+                return Err(TraceError::BadField("spawn count"));
+            }
+            Effect::Spawn { count, pc }
+        }
+        _ => return Err(TraceError::BadField("effect tag")),
+    };
+    let is_mem = matches!(class, OpClass::Load | OpClass::Store);
+    let mem = match c.u8()? {
+        0 => None,
+        1 => {
+            let mut addrs = [0u32; 32];
+            for a in addrs.iter_mut().take(nt) {
+                *a = c.u32()?;
+            }
+            Some(MemAccess { addrs })
+        }
+        _ => return Err(TraceError::BadField("mem tag")),
+    };
+    if is_mem != mem.is_some() {
+        return Err(TraceError::BadField("mem presence vs op class"));
+    }
+    Ok(TraceRecord {
+        pc,
+        next_pc,
+        tmask,
+        kind,
+        class,
+        rd,
+        srcs,
+        obase,
+        ospan,
+        penalty,
+        lat,
+        occ,
+        hops,
+        effect,
+        mem,
+    })
+}
+
+/// Wire register: 0xFF = none; otherwise a nonzero architectural
+/// register (`Instr::rd`/`srcs` filter x0, so a recorded 0 is corrupt).
+fn decode_reg(v: u8) -> Result<Option<u8>, ()> {
+    match v {
+        0xFF => Ok(None),
+        1..=31 => Ok(Some(v)),
+        _ => Err(()),
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], TraceError> {
+        if self.remaining() < n {
+            return Err(TraceError::Truncated);
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, TraceError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, TraceError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_record(mem: bool) -> TraceRecord {
+        TraceRecord {
+            pc: 0x1000,
+            next_pc: 0x1004,
+            tmask: 0xFF,
+            kind: if mem { FuKind::Lsu } else { FuKind::Alu },
+            class: if mem { OpClass::Load } else { OpClass::Alu },
+            rd: Some(5),
+            srcs: [Some(6), Some(7), None],
+            obase: 1,
+            ospan: 1,
+            penalty: 0,
+            lat: 4,
+            occ: if mem { 4 } else { 1 },
+            hops: 0,
+            effect: Effect::None,
+            mem: mem.then_some(MemAccess { addrs: [0x1000_0000; 32] }),
+        }
+    }
+
+    fn sample_trace() -> KernelTrace {
+        let mut t = KernelTrace::new(8, 4);
+        t.warps[0].push(sample_record(false));
+        t.warps[0].push(TraceRecord {
+            effect: Effect::Barrier { id: 0, required: 2 },
+            class: OpClass::Barrier,
+            rd: None,
+            ..sample_record(false)
+        });
+        t.warps[1].push(sample_record(true));
+        t.warps[3].push(TraceRecord {
+            effect: Effect::Spawn { count: 4, pc: 0x1010 },
+            ..sample_record(false)
+        });
+        t
+    }
+
+    #[test]
+    fn round_trip_is_lossless_and_deterministic() {
+        let t = sample_trace();
+        let bytes = t.encode();
+        assert_eq!(bytes, t.encode(), "encoding is deterministic");
+        let back = KernelTrace::decode(&bytes).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.encode(), bytes, "re-encoding is byte-identical");
+        assert_eq!(t.len(), 4);
+        assert!(!t.is_empty());
+        assert!(KernelTrace::new(8, 4).is_empty());
+    }
+
+    #[test]
+    fn every_truncation_errors_without_panicking() {
+        let bytes = sample_trace().encode();
+        for cut in 0..bytes.len() {
+            let err = KernelTrace::decode(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, TraceError::Truncated | TraceError::BadMagic),
+                "cut at {cut}: {err:?}"
+            );
+        }
+        // Trailing garbage is rejected too.
+        let mut long = bytes.clone();
+        long.push(0);
+        assert_eq!(KernelTrace::decode(&long).unwrap_err(), TraceError::Truncated);
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        let mut bytes = sample_trace().encode();
+        bytes[0] = b'X';
+        assert_eq!(KernelTrace::decode(&bytes).unwrap_err(), TraceError::BadMagic);
+        let mut bytes = sample_trace().encode();
+        bytes[4] = 99;
+        assert_eq!(KernelTrace::decode(&bytes).unwrap_err(), TraceError::BadVersion(99));
+    }
+
+    #[test]
+    fn corrupt_fields_are_rejected_by_name() {
+        // Byte 16 is warp 0's count (u32); byte 20 starts record 0:
+        // pc(4) next_pc(4) tmask(4) kind(1) class(1)...
+        let bytes = sample_trace().encode();
+        let mut b = bytes.clone();
+        b[20 + 12] = 9; // kind
+        assert_eq!(KernelTrace::decode(&b).unwrap_err(), TraceError::BadField("fu kind"));
+        let mut b = bytes.clone();
+        b[20 + 13] = 8; // class
+        assert_eq!(KernelTrace::decode(&b).unwrap_err(), TraceError::BadField("op class"));
+        let mut b = bytes.clone();
+        b[20 + 8] = 0; // tmask low byte -> 0
+        assert_eq!(KernelTrace::decode(&b).unwrap_err(), TraceError::BadField("tmask"));
+        let mut b = bytes.clone();
+        b[20 + 14] = 0; // rd = x0
+        assert_eq!(KernelTrace::decode(&b).unwrap_err(), TraceError::BadField("rd"));
+        // An absurd per-warp count cannot over-reserve.
+        let mut b = bytes;
+        b[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(KernelTrace::decode(&b).unwrap_err(), TraceError::Truncated);
+    }
+
+    #[test]
+    fn geometry_is_validated() {
+        let t = KernelTrace::new(8, 4);
+        let mut b = t.encode();
+        b[8..12].copy_from_slice(&33u32.to_le_bytes()); // nt
+        assert_eq!(KernelTrace::decode(&b).unwrap_err(), TraceError::BadField("nt"));
+        let mut b = t.encode();
+        b[12..16].copy_from_slice(&3u32.to_le_bytes()); // nw not pow2
+        assert_eq!(KernelTrace::decode(&b).unwrap_err(), TraceError::BadField("nw"));
+    }
+
+    #[test]
+    fn op_class_apply_matches_dispatch_counters() {
+        let mut m = Metrics::default();
+        OpClass::Alu.apply(&mut m);
+        OpClass::Mul.apply(&mut m);
+        OpClass::Load.apply(&mut m);
+        OpClass::Store.apply(&mut m);
+        OpClass::Control.apply(&mut m);
+        OpClass::Collective.apply(&mut m);
+        OpClass::CollectiveCtrl.apply(&mut m);
+        OpClass::Barrier.apply(&mut m);
+        assert_eq!(m.alu_ops, 1);
+        assert_eq!(m.mul_ops, 1);
+        assert_eq!(m.loads, 1);
+        assert_eq!(m.stores, 1);
+        assert_eq!(m.control_ops, 3, "tile and bar also count as control");
+        assert_eq!(m.warp_collectives, 2, "vote/shfl and tile");
+        assert_eq!(m.barriers_hit, 1);
+    }
+
+    #[test]
+    fn op_class_of_matches_fu_classification() {
+        use crate::isa::inst::BranchOp;
+        use crate::isa::{AluOp, MulOp, ShflMode, VoteMode, Width};
+        let cases: Vec<(Instr, OpClass)> = vec![
+            (Instr::Alu { op: AluOp::Add, rd: 1, rs1: 2, rs2: 3 }, OpClass::Alu),
+            (Instr::CsrRead { rd: 1, csr: 0xC00 }, OpClass::Alu),
+            (Instr::Fence, OpClass::Control),
+            (Instr::Mul { op: MulOp::Div, rd: 1, rs1: 2, rs2: 3 }, OpClass::Mul),
+            (Instr::Load { width: Width::Word, rd: 1, rs1: 2, imm: 0 }, OpClass::Load),
+            (Instr::Store { width: Width::Word, rs1: 1, rs2: 2, imm: 0 }, OpClass::Store),
+            (Instr::Branch { op: BranchOp::Beq, rs1: 1, rs2: 2, imm: 8 }, OpClass::Control),
+            (Instr::Ecall, OpClass::Control),
+            (Instr::Bar { rs1: 1, rs2: 2 }, OpClass::Barrier),
+            (Instr::Vote { mode: VoteMode::Any, rd: 1, rs1: 2, mreg: 0 }, OpClass::Collective),
+            (
+                Instr::Shfl { mode: ShflMode::Down, rd: 1, rs1: 2, delta: 1, creg: 0 },
+                OpClass::Collective,
+            ),
+            (Instr::Tile { rs1: 1, rs2: 2 }, OpClass::CollectiveCtrl),
+        ];
+        for (i, class) in cases {
+            assert_eq!(OpClass::of(&i), class, "{i:?}");
+        }
+    }
+}

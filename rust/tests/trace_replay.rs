@@ -1,0 +1,213 @@
+//! Record/replay contract (PR 9, `sim/tracefmt`).
+//!
+//! Three pinned properties over the kernel × solution matrix:
+//!
+//! 1. **Recording is pure observation**: a launch with `cfg.record`
+//!    enabled produces outputs and `Metrics` bit-identical to the same
+//!    launch without it.
+//! 2. **The format round-trips byte-deterministically**:
+//!    encode → decode → re-encode reproduces the exact bytes, and
+//!    recording the same launch twice produces the exact bytes.
+//! 3. **Replay is bit-identical**: feeding the recorded trace back
+//!    through the timing model with no functional execution produces
+//!    `Metrics` equal to the execute-at-issue run, under both engines.
+//!
+//! Plus the error paths: corrupt or truncated traces must come back as
+//! `TraceError`s / `LaunchError::BadInput` — never a panic.
+
+use vortex_warp::coordinator::dispatch::{dispatch, Solution};
+use vortex_warp::coordinator::{replay_trace, LaunchError};
+use vortex_warp::kernels;
+use vortex_warp::sim::tracefmt::TraceError;
+use vortex_warp::sim::{
+    EngineMode, FaultConfig, KernelTrace, SamplingConfig, SimConfig, TraceConfig,
+};
+
+fn recording(base: &SimConfig) -> SimConfig {
+    let mut cfg = base.clone();
+    cfg.record = TraceConfig::recording();
+    cfg.validate().expect("recording config");
+    cfg
+}
+
+#[test]
+fn recording_is_pure_observation() {
+    let base = SimConfig::paper();
+    let rec_cfg = recording(&base);
+    for b in kernels::all() {
+        for sol in [Solution::Hw, Solution::Sw] {
+            let plain = dispatch(sol, &b.kernel, &base, &b.inputs)
+                .unwrap_or_else(|e| panic!("{}[{}] plain: {e}", b.name, sol.name()));
+            let rec = dispatch(sol, &b.kernel, &rec_cfg, &b.inputs)
+                .unwrap_or_else(|e| panic!("{}[{}] recording: {e}", b.name, sol.name()));
+            assert!(plain.recorded.is_none(), "{}: no trace without cfg.record", b.name);
+            assert!(rec.recorded.is_some(), "{}: cfg.record must yield a trace", b.name);
+            assert_eq!(
+                plain.metrics,
+                rec.metrics,
+                "{}[{}] recording perturbed the metrics",
+                b.name,
+                sol.name()
+            );
+            for name in &b.outputs {
+                assert_eq!(
+                    plain.env.get(name),
+                    rec.env.get(name),
+                    "{}[{}] recording perturbed output `{name}`",
+                    b.name,
+                    sol.name()
+                );
+            }
+            let trace = rec.recorded.unwrap();
+            assert_eq!(
+                trace.len() as u64,
+                rec.metrics.instrs,
+                "{}[{}] one record per issued instruction",
+                b.name,
+                sol.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn format_roundtrips_and_is_byte_deterministic() {
+    let rec_cfg = recording(&SimConfig::paper());
+    for b in kernels::all() {
+        for sol in [Solution::Hw, Solution::Sw] {
+            let run = || {
+                dispatch(sol, &b.kernel, &rec_cfg, &b.inputs)
+                    .unwrap_or_else(|e| panic!("{}[{}]: {e}", b.name, sol.name()))
+                    .recorded
+                    .unwrap()
+            };
+            let trace = run();
+            let bytes = trace.encode();
+            // Decode reproduces the structure; re-encode the bytes.
+            let decoded = KernelTrace::decode(&bytes)
+                .unwrap_or_else(|e| panic!("{}[{}] decode: {e}", b.name, sol.name()));
+            assert_eq!(decoded, trace, "{}[{}] decode(encode(t)) != t", b.name, sol.name());
+            assert_eq!(
+                decoded.encode(),
+                bytes,
+                "{}[{}] re-encode is not byte-identical",
+                b.name,
+                sol.name()
+            );
+            // Recording the same launch twice is byte-deterministic.
+            assert_eq!(
+                run().encode(),
+                bytes,
+                "{}[{}] recording is not byte-deterministic",
+                b.name,
+                sol.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn replay_metrics_bit_identical_on_both_engines() {
+    let base = SimConfig::paper();
+    let rec_cfg = recording(&base);
+    for b in kernels::all() {
+        for sol in [Solution::Hw, Solution::Sw] {
+            let rec = dispatch(sol, &b.kernel, &rec_cfg, &b.inputs)
+                .unwrap_or_else(|e| panic!("{}[{}]: {e}", b.name, sol.name()));
+            let trace = rec.recorded.unwrap();
+            for engine in [EngineMode::FastForward, EngineMode::Reference] {
+                let cfg = SimConfig { engine, ..base.clone() };
+                let rep = replay_trace(&cfg, trace.clone()).unwrap_or_else(|e| {
+                    panic!("{}[{}] replay ({engine:?}): {e}", b.name, sol.name())
+                });
+                assert_eq!(
+                    rep.metrics,
+                    rec.metrics,
+                    "{}[{}] replay metrics not bit-identical ({engine:?}; \
+                     replay cycles={} execute cycles={})",
+                    b.name,
+                    sol.name(),
+                    rep.metrics.cycles,
+                    rec.metrics.cycles
+                );
+                assert!(rep.env.arrays.is_empty(), "replay runs no program, carries no data");
+            }
+        }
+    }
+}
+
+#[test]
+fn corrupt_and_truncated_traces_error_without_panicking() {
+    // A real recorded trace as the corruption substrate.
+    let benches = kernels::all();
+    let b = &benches[0];
+    let rec_cfg = recording(&SimConfig::paper());
+    let bytes =
+        dispatch(Solution::Hw, &b.kernel, &rec_cfg, &b.inputs).unwrap().recorded.unwrap().encode();
+
+    // Every strict prefix must fail cleanly (no panic, no Ok).
+    for cut in 0..bytes.len() {
+        assert!(
+            KernelTrace::decode(&bytes[..cut]).is_err(),
+            "decode of a {cut}-byte prefix of a {}-byte trace must fail",
+            bytes.len()
+        );
+    }
+    // Trailing garbage is rejected, not ignored.
+    let mut padded = bytes.clone();
+    padded.push(0);
+    assert_eq!(KernelTrace::decode(&padded), Err(TraceError::Truncated));
+
+    // Wrong magic and wrong version are told apart from truncation.
+    let mut wrong_magic = bytes.clone();
+    wrong_magic[0] ^= 0xFF;
+    assert_eq!(KernelTrace::decode(&wrong_magic), Err(TraceError::BadMagic));
+    let mut wrong_version = bytes.clone();
+    wrong_version[4] = 0xEE;
+    assert!(matches!(KernelTrace::decode(&wrong_version), Err(TraceError::BadVersion(_))));
+
+    // A record-count field inflated past the remaining bytes must be
+    // caught by the pre-allocation guard, not OOM or panic.
+    let mut inflated = bytes.clone();
+    inflated[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(KernelTrace::decode(&inflated).is_err());
+}
+
+#[test]
+fn replay_rejects_incompatible_configs_as_bad_input() {
+    let benches = kernels::all();
+    let b = &benches[0];
+    let base = SimConfig::paper();
+    let trace = dispatch(Solution::Hw, &b.kernel, &recording(&base), &b.inputs)
+        .unwrap()
+        .recorded
+        .unwrap();
+
+    let expect_bad = |cfg: &SimConfig, what: &str| {
+        match replay_trace(cfg, trace.clone()) {
+            Err(LaunchError::BadInput(_)) => {}
+            other => panic!("{what}: expected BadInput, got {other:?}"),
+        }
+    };
+
+    let mut multi = base.clone();
+    multi.num_cores = 2;
+    expect_bad(&multi, "multi-core");
+
+    let mut faulty = base.clone();
+    faulty.fault = FaultConfig { count: 1, ..FaultConfig::legacy() };
+    expect_bad(&faulty, "fault injection");
+
+    let mut sampled = base.clone();
+    sampled.sampling = SamplingConfig::sampled(64, 64);
+    expect_bad(&sampled, "sampling");
+
+    expect_bad(&recording(&base), "re-recording");
+
+    let mut mismatched = base.clone();
+    mismatched.nw = if base.nw == 4 { 8 } else { 4 };
+    expect_bad(&mismatched, "geometry mismatch");
+
+    // And the happy path still works after all those rejections.
+    assert!(replay_trace(&base, trace).is_ok());
+}
