@@ -175,6 +175,19 @@ def main():
             f"`tests/sampling_accuracy.rs`)"
         )
         print()
+    # Schema v8 (PR 10): the service sweep reports launches/s and the
+    # compiled-kernel cache win, not M instr/s, so it gets its own line
+    # below the throughput table.
+    svc = current.get("service")
+    if isinstance(svc, dict) and svc.get("launches"):
+        print(
+            f"service queue: {svc['launches_per_sec']:,.1f} launches/s over "
+            f"{svc['launches']} launches · cache hit rate "
+            f"{svc['cache_hit_rate'] * 100:.1f}% · "
+            f"{svc['cache_speedup']:.2f}× vs cache-off · "
+            f"{svc['steals']} steals"
+        )
+        print()
     if baseline is None:
         print(f"_no main baseline: {why}_")
     else:

@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Validate the serve-smoke CI job (PR 10).
+
+Usage: serve_smoke_check.py <requests.jsonl> <out_a> <out_b> <stats_a> <stats_b>
+
+Two `vortex-warp serve` runs over the committed request fixture must:
+  * emit one result line per submitted launch (repeat expands in place,
+    malformed lines still produce their in-band error line);
+  * number result lines 0..n-1 in submission order;
+  * be deterministic across runs once the host-timing field (wall_ns)
+    is stripped — cycles, instrs, IPC and error text are all pinned;
+  * report a compiled-kernel cache hit rate > 0 in --stats (the fixture
+    repeats each kernel, so a cold cache would be a regression).
+"""
+
+import json
+import sys
+
+# The fixture carries exactly these two rejected lines: one that is not
+# JSON at all and one naming an unknown kernel.
+EXPECTED_BAD = 2
+
+
+def expected_launches(path):
+    total = 0
+    for raw in open(path):
+        raw = raw.strip()
+        if not raw:
+            continue
+        try:
+            total += json.loads(raw).get("repeat", 1)
+        except json.JSONDecodeError:
+            total += 1  # malformed lines still yield one error line
+    return total
+
+
+def normalized(path):
+    out = []
+    for raw in open(path):
+        obj = json.loads(raw)
+        obj.pop("wall_ns", None)  # host timing, legitimately varies
+        out.append(json.dumps(obj, sort_keys=True))
+    return out
+
+
+def main():
+    req_path, out_a, out_b, stats_a, stats_b = sys.argv[1:6]
+    want = expected_launches(req_path)
+
+    lines_a, lines_b = normalized(out_a), normalized(out_b)
+    if len(lines_a) != want or len(lines_b) != want:
+        raise SystemExit(
+            f"expected {want} result lines, got {len(lines_a)} / {len(lines_b)}"
+        )
+    for i, line in enumerate(lines_a):
+        idx = json.loads(line)["index"]
+        if idx != i:
+            raise SystemExit(f"result line {i} carries index {idx} (order broken)")
+    if lines_a != lines_b:
+        for i, (a, b) in enumerate(zip(lines_a, lines_b)):
+            if a != b:
+                raise SystemExit(
+                    f"run A and run B diverge at line {i}:\n  A: {a}\n  B: {b}"
+                )
+        raise SystemExit("run A and run B diverge")
+    print(f"{want} result lines, deterministic across runs: OK")
+
+    oks = sum(1 for line in lines_a if json.loads(line)["ok"])
+    if oks != want - EXPECTED_BAD:
+        raise SystemExit(f"expected {want - EXPECTED_BAD} ok lines, got {oks}")
+    print(f"{oks} ok, {want - oks} in-band errors (stream survived): OK")
+
+    sa, sb = json.load(open(stats_a)), json.load(open(stats_b))
+    for name, s in (("A", sa), ("B", sb)):
+        if s["launches"] != want:
+            raise SystemExit(f"stats {name}: launches {s['launches']} != {want}")
+        # One cache lookup per kernel launch; racing cold-key compiles
+        # may shift the hit/miss split but never the total.
+        if s["cache_hits"] + s["cache_misses"] != want:
+            raise SystemExit(f"stats {name}: cache lookups != launches: {s}")
+        if not s["cache_hit_rate"] > 0.0:
+            raise SystemExit(f"stats {name}: cache hit rate must be > 0: {s}")
+    print(
+        f"cache hit rate {sa['cache_hit_rate']:.4f} "
+        f"({sa['cache_hits']} hits / {sa['cache_misses']} misses), "
+        f"{sa['launches_per_sec']:.1f} launches/s, {sa['steals']} steals: OK"
+    )
+
+
+if __name__ == "__main__":
+    main()

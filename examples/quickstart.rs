@@ -3,7 +3,8 @@
 //!
 //! Usage: cargo run --release --example quickstart
 
-use vortex_warp::coordinator::{run_hw, run_sw};
+use vortex_warp::coordinator::dispatch::Solution;
+use vortex_warp::coordinator::LaunchRequest;
 use vortex_warp::prt::interp::Env;
 use vortex_warp::prt::kir::Expr as E;
 use vortex_warp::prt::kir::*;
@@ -37,10 +38,19 @@ fn main() {
 
     let inputs = Env::default().with("in", (0..n as i32).map(|i| i * 3).collect());
 
-    // HW solution: Table I instructions on the extended core.
-    let hw = run_hw(&kernel, &SimConfig::paper(), &inputs).expect("HW run");
+    // HW solution: Table I instructions on the extended core. The
+    // request builder defaults to `SimConfig::paper()` and each
+    // solution forces its own `warp_hw` setting.
+    let hw = LaunchRequest::new(Solution::Hw, &kernel)
+        .inputs(&inputs)
+        .launch()
+        .expect("HW run");
     // SW solution: PR transformation on the baseline core.
-    let sw = run_sw(&kernel, &SimConfig::baseline(), &inputs).expect("SW run");
+    let sw = LaunchRequest::new(Solution::Sw, &kernel)
+        .config(&SimConfig::baseline())
+        .inputs(&inputs)
+        .launch()
+        .expect("SW run");
 
     assert_eq!(hw.env.get("out"), sw.env.get("out"), "solutions agree");
     println!("out[0..8]  = {:?}", &hw.env.get("out")[..8]);

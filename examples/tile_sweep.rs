@@ -10,7 +10,7 @@
 //! Usage: cargo run --release --example tile_sweep
 
 use vortex_warp::coordinator::dispatch::Solution;
-use vortex_warp::coordinator::{launch_batch, BatchJob};
+use vortex_warp::coordinator::{launch_batch, LaunchRequest};
 use vortex_warp::prt::interp::Env;
 use vortex_warp::prt::kir::Expr as E;
 use vortex_warp::prt::kir::*;
@@ -56,16 +56,13 @@ fn main() {
         "crossbar hops",
     ]);
     let tiles = [4u32, 8, 16, 32];
-    let jobs: Vec<BatchJob> = tiles
+    let jobs: Vec<LaunchRequest> = tiles
         .iter()
         .map(|&tile| {
-            BatchJob::new(
-                format!("tile{tile}"),
-                Solution::Hw,
-                kernel(tile),
-                base.clone(),
-                inputs.clone(),
-            )
+            LaunchRequest::new(Solution::Hw, &kernel(tile))
+                .label(format!("tile{tile}"))
+                .config(&base)
+                .inputs(&inputs)
         })
         .collect();
     for (&tile, r) in tiles.iter().zip(launch_batch(&jobs)) {

@@ -10,7 +10,7 @@
 //! Run: cargo bench --bench ablations
 
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
-use vortex_warp::coordinator::run_hw;
+use vortex_warp::coordinator::LaunchRequest;
 use vortex_warp::kernels;
 use vortex_warp::prt::interp::Env;
 use vortex_warp::prt::kir::Expr as E;
@@ -43,10 +43,11 @@ fn main() {
     println!("=== ablation 1: crossbar vs serialized mux (merged collectives) ===");
     {
         let k = merged_collective_kernel();
-        let with = run_hw(&k, &SimConfig::paper(), &inputs).expect("crossbar");
+        let with = LaunchRequest::new(Solution::Hw, &k).inputs(&inputs).launch().expect("crossbar");
         let mut cfg = SimConfig::paper();
         cfg.crossbar = false;
-        let without = run_hw(&k, &cfg, &inputs).expect("mux");
+        let without =
+            LaunchRequest::new(Solution::Hw, &k).config(&cfg).inputs(&inputs).launch().expect("mux");
         let mut t = TextTable::new(vec!["design", "IPC", "cycles", "crossbar hops"]);
         t.row(vec![
             "crossbar (paper)".into(),

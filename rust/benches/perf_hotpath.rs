@@ -40,7 +40,14 @@
 //!      `aggregate.replay_speedup` is the wall win of skipping fetch,
 //!      register traffic and lane-loop evaluation on the hot path
 //!      (the ISSUE-9 ≥2× acceptance metric), with replayed `Metrics`
-//!      asserted bit-identical to the execute-at-issue run.
+//!      asserted bit-identical to the execute-at-issue run;
+//!  11. a **service scenario** (PR 10): a multi-thousand-launch sweep
+//!      of a compile-heavy kernel through the persistent work-stealing
+//!      `coordinator::queue::WorkQueue`, cache-off vs cache-on —
+//!      `service.launches_per_sec` is the sustained request rate,
+//!      `service.cache_speedup` the wall win of the compiled-kernel
+//!      cache (the ISSUE-10 ≥1.3× acceptance metric), with cache-on
+//!      `Metrics` asserted byte-identical to cache-off.
 //!
 //! While measuring, the bench asserts the two engines return
 //! bit-identical `Metrics` — the equivalence invariant — and writes a
@@ -53,10 +60,13 @@
 use std::time::Instant;
 use vortex_warp::bench_harness::perf::{PerfReport, PerfRow};
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
-use vortex_warp::coordinator::{launch_batch, replay_trace, BatchJob};
+use vortex_warp::coordinator::queue::{QueueConfig, WorkQueue};
+use vortex_warp::coordinator::{launch_batch, LaunchRequest};
 use vortex_warp::isa::asm::regs::*;
 use vortex_warp::isa::Asm;
 use vortex_warp::kernels;
+use vortex_warp::prt::interp::Env;
+use vortex_warp::prt::kir::{Expr as E, Kernel, ParamDir, Stmt};
 use vortex_warp::sim::{
     EngineMode, FuConfig, Gpu, MemHierConfig, OpcConfig, SamplingConfig, SimConfig,
     TelemetryConfig, TraceConfig,
@@ -71,6 +81,26 @@ fn best_of(iters: usize, mut f: impl FnMut() -> u64) -> (u128, u64) {
         best_ns = best_ns.min(t0.elapsed().as_nanos());
     }
     (best_ns, instrs)
+}
+
+/// The service-scenario sweep kernel: compile-heavy, run-light. The
+/// zero-trip `For` carries a few hundred dead statements that every
+/// cache miss must lower through `codegen_simt`/`codegen_scalar` (and,
+/// on the SW path, the PR transformation) while the machine skips the
+/// body at run time after one compare-and-branch.
+fn service_sweep_kernel() -> Kernel {
+    let mut dead = Vec::new();
+    for _ in 0..350 {
+        dead.push(Stmt::Assign("x", E::add(E::l("x"), E::mul(E::l("x"), E::c(3)))));
+    }
+    Kernel::new("svc_sweep", 1, 32, 8)
+        .param("src", 32, ParamDir::In)
+        .param("dst", 32, ParamDir::Out)
+        .body(vec![
+            Stmt::Assign("x", E::load("src", E::ThreadIdx)),
+            Stmt::For("i", E::c(0), E::c(0), dead),
+            Stmt::Store("dst", E::ThreadIdx, E::l("x")),
+        ])
 }
 
 /// Measure one special-config scenario (named kernels × both
@@ -426,7 +456,10 @@ fn main() {
         for sol in [Solution::Hw, Solution::Sw] {
             let rec = dispatch(sol, &b.kernel, &rec_cfg, &b.inputs).expect("record run");
             let trace = rec.recorded.expect("recorded trace");
-            let warm = replay_trace(&fast, trace.clone()).expect("replay warm");
+            let warm = LaunchRequest::replay(trace.clone())
+                .config(&fast)
+                .launch()
+                .expect("replay warm");
             assert_eq!(
                 warm.metrics,
                 rec.metrics,
@@ -437,7 +470,12 @@ fn main() {
                 dispatch(sol, &b.kernel, &fast, &b.inputs).expect("exec run").metrics.instrs
             });
             let (rep_ns, rep_instrs) = best_of(iters, || {
-                replay_trace(&fast, trace.clone()).expect("replay run").metrics.instrs
+                LaunchRequest::replay(trace.clone())
+                    .config(&fast)
+                    .launch()
+                    .expect("replay run")
+                    .metrics
+                    .instrs
             });
             assert_eq!(exec_instrs, rep_instrs);
             let row = PerfRow {
@@ -466,13 +504,12 @@ fn main() {
     for _ in 0..batch_repeats {
         for b in kernels::paper() {
             for sol in [Solution::Hw, Solution::Sw] {
-                jobs.push(BatchJob::new(
-                    format!("{}[{}]", b.name, sol.name()),
-                    sol,
-                    b.kernel.clone(),
-                    fast.clone(),
-                    b.inputs.clone(),
-                ));
+                jobs.push(
+                    LaunchRequest::new(sol, &b.kernel)
+                        .label(format!("{}[{}]", b.name, sol.name()))
+                        .config(&fast)
+                        .inputs(&b.inputs),
+                );
             }
         }
     }
@@ -482,6 +519,58 @@ fn main() {
     report.batch_wall_ns = t0.elapsed().as_nanos();
     report.batch_instrs =
         results.iter().map(|r| r.as_ref().expect("batch run").metrics.instrs).sum();
+
+    // Service scenario (PR 10): a multi-thousand-launch sweep through
+    // the persistent work-stealing queue, cache-off vs cache-on. The
+    // sweep kernel is compile-heavy and run-light — a large dead
+    // (zero-trip) loop body that codegen must lower every time the
+    // cache misses but the machine never executes — so the measured
+    // gap is the compiled-kernel cache, not simulator throughput.
+    let svc_launches = if smoke { 600 } else { 4000 };
+    let svc_kernel = service_sweep_kernel();
+    let svc_inputs = Env::default().with("src", vec![7; 32]);
+    let svc_requests: Vec<LaunchRequest> = (0..svc_launches)
+        .map(|i| {
+            let sol = if i % 2 == 0 { Solution::Hw } else { Solution::Sw };
+            LaunchRequest::new(sol, &svc_kernel)
+                .label(format!("svc#{i}"))
+                .config(&fast)
+                .inputs(&svc_inputs)
+        })
+        .collect();
+    println!("\n=== service scenario (WorkQueue, {} launches) ===", svc_launches);
+    let run_sweep = |cache: bool| {
+        let mut q = WorkQueue::new(QueueConfig { threads: 0, cache });
+        let t0 = Instant::now();
+        for req in &svc_requests {
+            q.submit(req.clone());
+        }
+        q.drain();
+        let wall = t0.elapsed().as_nanos();
+        let (reports, summary) = q.shutdown();
+        assert_eq!(reports.len(), svc_launches);
+        for r in &reports {
+            r.result.as_ref().expect("service sweep launch");
+        }
+        (wall, reports, summary)
+    };
+    run_sweep(true); // warm the allocator + thread spawn path
+    let (svc_uncached_ns, cold_reports, _) = run_sweep(false);
+    let (svc_wall_ns, warm_reports, svc_summary) = run_sweep(true);
+    for (c, w) in cold_reports.iter().zip(&warm_reports) {
+        let (cm, wm) = (
+            &c.result.as_ref().expect("cold").metrics,
+            &w.result.as_ref().expect("warm").metrics,
+        );
+        assert_eq!(cm, wm, "cache must not change metrics ({})", c.label);
+    }
+    report.service_launches = svc_launches as u64;
+    report.service_wall_ns = svc_wall_ns;
+    report.service_uncached_wall_ns = svc_uncached_ns;
+    report.service_cache_hits = svc_summary.cache.hits;
+    report.service_cache_misses = svc_summary.cache.misses;
+    report.service_steals = svc_summary.steals;
+    println!("{}", svc_summary.render());
 
     println!(
         "\naggregate (single thread): reference {:.2} M instr/s, fast-forward {:.2} M instr/s \
@@ -536,6 +625,12 @@ fn main() {
         "trace replay: {:.2} M instr/s, {:.2}x vs execute-at-issue",
         report.replay_fast_mips(),
         report.replay_speedup(),
+    );
+    println!(
+        "service queue: {:.1} launches/s, cache hit rate {:.1}%, {:.2}x vs cache-off",
+        report.service_launches_per_sec(),
+        report.service_cache_hit_rate() * 100.0,
+        report.service_cache_speedup(),
     );
 
     let out = std::env::var("BENCH_PERF_OUT").unwrap_or_else(|_| "BENCH_perf.json".into());

@@ -4,7 +4,8 @@
 //!
 //! Run: cargo bench --bench tab2_tile_sweep
 
-use vortex_warp::coordinator::run_hw;
+use vortex_warp::coordinator::dispatch::Solution;
+use vortex_warp::coordinator::LaunchRequest;
 use vortex_warp::prt::interp::Env;
 use vortex_warp::prt::kir::Expr as E;
 use vortex_warp::prt::kir::*;
@@ -52,7 +53,11 @@ fn main() {
     ]);
     for tile in [4u32, 8, 16, 32] {
         let cfg_row = TileConfig::for_size(32, tile).unwrap();
-        let r = run_hw(&tiled_kernel(tile), &base, &inputs).expect("run");
+        let r = LaunchRequest::new(Solution::Hw, &tiled_kernel(tile))
+            .config(&base)
+            .inputs(&inputs)
+            .launch()
+            .expect("run");
         t.row(vec![
             format!("{} groups - {} threads", 32 / tile, tile),
             format!("{:08b}", cfg_row.group_mask),

@@ -99,6 +99,20 @@ pub struct PerfReport {
     pub batch_wall_ns: u128,
     /// Total simulated instructions of that batch.
     pub batch_instrs: u64,
+    /// Service scenario (PR 10): a multi-thousand-launch sweep of a
+    /// compile-heavy kernel through the persistent work-stealing
+    /// `coordinator::queue::WorkQueue`. `service_wall_ns` is the
+    /// cache-on wall, `service_uncached_wall_ns` the same sweep with
+    /// the compiled-kernel cache disabled; their ratio is the ISSUE-10
+    /// ≥1.3× `cache_speedup` acceptance metric.
+    pub service_launches: u64,
+    pub service_wall_ns: u128,
+    pub service_uncached_wall_ns: u128,
+    pub service_cache_hits: u64,
+    pub service_cache_misses: u64,
+    /// Jobs a queue worker took from a sibling's deque during the
+    /// cache-on sweep (informational; proves the stealing path runs).
+    pub service_steals: u64,
     pub host_threads: usize,
 }
 
@@ -215,6 +229,37 @@ impl PerfReport {
         scenario_engine_speedup(&self.replay_rows)
     }
 
+    /// Sustained request rate of the cache-on service sweep
+    /// (launches retired per wall second).
+    pub fn service_launches_per_sec(&self) -> f64 {
+        if self.service_wall_ns == 0 {
+            0.0
+        } else {
+            self.service_launches as f64 / (self.service_wall_ns as f64 / 1e9)
+        }
+    }
+
+    /// Fraction of service-sweep compiles answered from the
+    /// compiled-kernel cache (0 when the sweep did not run).
+    pub fn service_cache_hit_rate(&self) -> f64 {
+        let total = self.service_cache_hits + self.service_cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.service_cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Wall-clock speedup of the cache-on sweep over cache-off on the
+    /// same requests (the ISSUE-10 ≥1.3× acceptance metric).
+    pub fn service_cache_speedup(&self) -> f64 {
+        if self.service_wall_ns == 0 {
+            0.0
+        } else {
+            self.service_uncached_wall_ns as f64 / self.service_wall_ns as f64
+        }
+    }
+
     /// Absolute aggregate throughput of the fast engine in
     /// instructions per second (the v6 headline number — `fast_mips`
     /// times 1e6, published separately so dashboards need no unit
@@ -250,7 +295,7 @@ impl PerfReport {
 
     pub fn to_json(&self) -> String {
         let mut s = String::new();
-        s.push_str("{\n  \"schema\": \"vortex_warp.perf.v7\",\n");
+        s.push_str("{\n  \"schema\": \"vortex_warp.perf.v8\",\n");
         s.push_str(&format!("  \"host_threads\": {},\n", self.host_threads));
         s.push_str("  \"rows\": [\n");
         Self::rows_json(&self.rows, &mut s);
@@ -314,15 +359,31 @@ impl PerfReport {
             self.replay_speedup(),
         ));
         s.push_str(&format!(
+            "  \"service\": {{\"launches\": {}, \"wall_ns\": {}, \"uncached_wall_ns\": {}, \
+             \"launches_per_sec\": {:.1}, \"cache_hits\": {}, \"cache_misses\": {}, \
+             \"cache_hit_rate\": {:.4}, \"cache_speedup\": {:.4}, \"steals\": {}}},\n",
+            self.service_launches,
+            self.service_wall_ns,
+            self.service_uncached_wall_ns,
+            self.service_launches_per_sec(),
+            self.service_cache_hits,
+            self.service_cache_misses,
+            self.service_cache_hit_rate(),
+            self.service_cache_speedup(),
+            self.service_steals,
+        ));
+        s.push_str(&format!(
             "  \"aggregate\": {{\"reference_mips\": {:.4}, \"fast_mips\": {:.4}, \
              \"batch_mips\": {:.4}, \"engine_speedup\": {:.4}, \"replay_speedup\": {:.4}, \
-             \"instrs_per_sec\": {:.1}, \"batch_wall_ns\": {}, \"batch_instrs\": {}}}\n",
+             \"instrs_per_sec\": {:.1}, \"launches_per_sec\": {:.1}, \"batch_wall_ns\": {}, \
+             \"batch_instrs\": {}}}\n",
             self.aggregate_reference_mips(),
             self.aggregate_fast_mips(),
             self.aggregate_batch_mips(),
             self.engine_speedup(),
             self.replay_speedup(),
             self.aggregate_instrs_per_sec(),
+            self.service_launches_per_sec(),
             self.batch_wall_ns,
             self.batch_instrs,
         ));
@@ -452,6 +513,13 @@ mod tests {
             }],
             batch_wall_ns: 500_000_000,
             batch_instrs: 4_000_000,
+            service_launches: 1000,
+            // Cache-on 0.5 s vs cache-off 2 s -> 2000 launches/s, 4x.
+            service_wall_ns: 500_000_000,
+            service_uncached_wall_ns: 2_000_000_000,
+            service_cache_hits: 996,
+            service_cache_misses: 4,
+            service_steals: 12,
             host_threads: 4,
         }
     }
@@ -534,9 +602,24 @@ mod tests {
     }
 
     #[test]
+    fn service_scenario_aggregates() {
+        let r = report();
+        // 1000 launches / 0.5 s = 2000 launches/s.
+        assert!((r.service_launches_per_sec() - 2000.0).abs() < 1e-9);
+        // 996 hits of 1000 compiles -> 0.996 hit rate.
+        assert!((r.service_cache_hit_rate() - 0.996).abs() < 1e-9);
+        // 2 s uncached vs 0.5 s cached -> 4x.
+        assert!((r.service_cache_speedup() - 4.0).abs() < 1e-9);
+        let d = PerfReport::default();
+        assert_eq!(d.service_launches_per_sec(), 0.0);
+        assert_eq!(d.service_cache_hit_rate(), 0.0);
+        assert_eq!(d.service_cache_speedup(), 0.0);
+    }
+
+    #[test]
     fn json_shape() {
         let j = report().to_json();
-        assert!(j.contains("\"schema\": \"vortex_warp.perf.v7\""));
+        assert!(j.contains("\"schema\": \"vortex_warp.perf.v8\""));
         assert!(j.contains("\"bench\": \"matmul\""));
         assert!(j.contains("\"aggregate\""));
         assert!(j.contains("\"memhier_rows\""));
@@ -563,6 +646,13 @@ mod tests {
         assert!(j.contains("\"bench\": \"alu_micro\""));
         assert!(j.contains("\"replay\": {\"fast_mips\": 10.0000, \"speedup_vs_execute\": 3.0000}"));
         assert!(j.contains("\"replay_speedup\": 3.0000"));
+        assert!(j.contains(
+            "\"service\": {\"launches\": 1000, \"wall_ns\": 500000000, \
+             \"uncached_wall_ns\": 2000000000, \"launches_per_sec\": 2000.0, \
+             \"cache_hits\": 996, \"cache_misses\": 4, \"cache_hit_rate\": 0.9960, \
+             \"cache_speedup\": 4.0000, \"steals\": 12}"
+        ));
+        assert!(j.contains("\"launches_per_sec\": 2000.0,"));
         assert!(j.contains("\"instrs_per_sec\": 4000000.0"));
         assert!(j.contains("\"engine_speedup\": 2.0000"));
         // Balanced braces/brackets (cheap well-formedness check).

@@ -1,0 +1,197 @@
+//! Compiled-kernel cache: memoizes PRT transform + codegen into shared
+//! [`LaunchImage`]s so a multi-thousand-launch sweep pays the compile
+//! cost once per distinct (kernel, solution, geometry).
+//!
+//! The key is (kernel name, solution, NT, NW, structural fingerprint).
+//! The fingerprint — a hash of the whole KIR tree, computed once in
+//! [`LaunchRequest::new`](super::LaunchRequest::new) — is what makes
+//! name collisions safe: the `tile_sweep` example launches four
+//! kernels that all answer to `"tile_sweep"` but carry different tile
+//! sizes, and each gets its own image. NT/NW are in the key because
+//! both codegen paths specialize on the machine geometry.
+//!
+//! Codegen in this crate is deterministic, so whether an image came
+//! from the cache or a fresh compile is unobservable in the
+//! simulation: metrics are byte-identical cache-on vs cache-off
+//! (`tests/service.rs` pins this across kernels × solutions ×
+//! engines). Compile *errors* are never cached — they are cheap to
+//! reproduce and caching them would mask the (deterministic) message.
+
+use super::dispatch::Solution;
+use super::{compile, LaunchError};
+use crate::prt::codegen::LaunchImage;
+use crate::prt::kir::Kernel;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct CacheKey {
+    name: &'static str,
+    solution: Solution,
+    nt: u32,
+    nw: u32,
+    fingerprint: u64,
+}
+
+/// Hit/miss counters frozen at a point in time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Hits over total lookups; 0.0 for an untouched cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A thread-safe compiled-kernel cache, shared by reference across
+/// batch workers / queue workers.
+pub struct KernelCache {
+    map: Mutex<HashMap<CacheKey, Arc<LaunchImage>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for KernelCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KernelCache {
+    pub fn new() -> Self {
+        KernelCache {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The compiled image for (kernel, solution, geometry), compiling
+    /// on first use. Compilation runs OUTSIDE the map lock so a slow
+    /// compile never blocks hits on other keys; if two workers race on
+    /// the same cold key both compile and the first insert wins —
+    /// codegen is deterministic, so the images are interchangeable.
+    pub fn image(
+        &self,
+        solution: Solution,
+        kernel: &Kernel,
+        nt: u32,
+        nw: u32,
+        fingerprint: u64,
+    ) -> Result<Arc<LaunchImage>, LaunchError> {
+        let key = CacheKey { name: kernel.name, solution, nt, nw, fingerprint };
+        if let Some(img) = self.map.lock().expect("kernel cache lock").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(img.clone());
+        }
+        let img = Arc::new(compile(solution, kernel, nt, nw)?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok(self
+            .map
+            .lock()
+            .expect("kernel cache lock")
+            .entry(key)
+            .or_insert(img)
+            .clone())
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Distinct images currently held.
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("kernel cache lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{kernel_fingerprint, LaunchRequest};
+    use super::*;
+    use crate::prt::interp::Env;
+    use crate::prt::kir::{Expr as E, Kernel, ParamDir, Stmt};
+
+    fn store_kernel(name: &'static str, value: i32) -> Kernel {
+        Kernel::new(name, 1, 32, 8)
+            .param("out", 32, ParamDir::Out)
+            .body(vec![Stmt::Store("out", E::ThreadIdx, E::c(value))])
+    }
+
+    #[test]
+    fn second_lookup_hits_and_shares_the_image() {
+        let cache = KernelCache::new();
+        let k = store_kernel("s", 3);
+        let fp = kernel_fingerprint(&k);
+        let a = cache.image(Solution::Hw, &k, 32, 8, fp).unwrap();
+        let b = cache.image(Solution::Hw, &k, 32, 8, fp).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "hit returns the same image");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn key_separates_solutions_geometry_and_structure() {
+        let cache = KernelCache::new();
+        let k = store_kernel("s", 3);
+        let fp = kernel_fingerprint(&k);
+        cache.image(Solution::Hw, &k, 32, 8, fp).unwrap();
+        cache.image(Solution::Sw, &k, 32, 8, fp).unwrap();
+        cache.image(Solution::Hw, &k, 16, 8, fp).unwrap();
+        // Same name, different structure — the tile_sweep shape.
+        let k2 = store_kernel("s", 4);
+        cache.image(Solution::Hw, &k2, 32, 8, kernel_fingerprint(&k2)).unwrap();
+        assert_eq!(cache.len(), 4, "four distinct keys, four images");
+        assert_eq!(cache.stats().hits, 0);
+    }
+
+    #[test]
+    fn errors_are_not_cached() {
+        let cache = KernelCache::new();
+        // Storing to an array that is neither a parameter nor shared
+        // fails codegen deterministically ("unknown array").
+        let bad = Kernel::new("bad", 1, 32, 8)
+            .param("out", 32, ParamDir::Out)
+            .body(vec![Stmt::Store("nope", E::ThreadIdx, E::c(1))]);
+        let fp = kernel_fingerprint(&bad);
+        assert!(cache.image(Solution::Hw, &bad, 32, 8, fp).is_err());
+        assert!(cache.image(Solution::Hw, &bad, 32, 8, fp).is_err());
+        assert_eq!(cache.len(), 0);
+        // Both attempts counted as misses, neither cached.
+        assert_eq!(cache.stats().misses, 0, "failed compiles count nothing");
+    }
+
+    #[test]
+    fn cached_launch_is_byte_identical_to_uncached() {
+        let k = store_kernel("ident", 9);
+        let req =
+            LaunchRequest::new(Solution::Hw, &k).inputs(&Env::default());
+        let plain = super::super::launch(&req).unwrap();
+        let cache = KernelCache::new();
+        let warm = super::super::launch_with(&req, Some(&cache)).unwrap();
+        let hot = super::super::launch_with(&req, Some(&cache)).unwrap();
+        assert_eq!(plain.metrics, warm.metrics);
+        assert_eq!(plain.metrics, hot.metrics);
+        assert_eq!(plain.env.get("out"), hot.env.get("out"));
+        assert_eq!(cache.stats().hits, 1);
+    }
+}

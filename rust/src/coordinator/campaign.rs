@@ -23,10 +23,9 @@
 //! classified strictly in index order. `tests/fault.rs` and the CI
 //! `fault-campaign` job pin this.
 
-use super::dispatch::{dispatch_budgeted, Solution};
+use super::dispatch::Solution;
 use super::{
-    launch_batch_isolated, BatchJob, BatchPolicy, IsolationPolicy, LaunchError, LaunchResult,
-    MAX_CYCLES,
+    launch_batch_isolated, BatchPolicy, LaunchError, LaunchRequest, LaunchResult, MAX_CYCLES,
 };
 use crate::prt::interp::Env;
 use crate::prt::kir::{Kernel, ParamDir};
@@ -259,13 +258,11 @@ pub fn run_campaign_with(
     // Golden run: the clean reference every verdict compares against.
     let clean_cfg = SimConfig { fault: FaultConfig::legacy(), ..spec.base.clone() };
     let golden_budget = if spec.budget > 0 { spec.budget } else { MAX_CYCLES };
-    let golden = dispatch_budgeted(
-        spec.solution,
-        &spec.kernel,
-        &clean_cfg,
-        &spec.inputs,
-        golden_budget,
-    )?;
+    let golden = LaunchRequest::new(spec.solution, &spec.kernel)
+        .config(&clean_cfg)
+        .inputs(&spec.inputs)
+        .budget(golden_budget)
+        .launch()?;
     let budget = if spec.budget > 0 {
         spec.budget
     } else {
@@ -277,26 +274,22 @@ pub fn run_campaign_with(
         histogram.insert(k.into(), 0);
     }
     let mut verdicts = Vec::with_capacity(spec.launches);
-    let policy = BatchPolicy {
-        threads: spec.threads,
-        isolation: IsolationPolicy { max_cycles: budget, retries: spec.retries },
-    };
+    let policy = BatchPolicy { threads: spec.threads, cache: true };
 
     let mut start = 0usize;
     while start < spec.launches {
         let end = (start + CHUNK).min(spec.launches);
-        let jobs: Vec<BatchJob> = (start..end)
+        let jobs: Vec<LaunchRequest> = (start..end)
             .map(|i| {
                 let fault =
                     FaultConfig { seed: derive_seed(spec.inject.seed, i as u64), ..spec.inject.clone() };
                 let cfg = SimConfig { fault, ..spec.base.clone() };
-                BatchJob::new(
-                    format!("{}#{i}", spec.label),
-                    spec.solution,
-                    spec.kernel.clone(),
-                    cfg,
-                    spec.inputs.clone(),
-                )
+                LaunchRequest::new(spec.solution, &spec.kernel)
+                    .label(format!("{}#{i}", spec.label))
+                    .config(&cfg)
+                    .inputs(&spec.inputs)
+                    .budget(budget)
+                    .retries(spec.retries)
             })
             .collect();
         let reports = launch_batch_isolated(&jobs, &policy);

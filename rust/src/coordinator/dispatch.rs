@@ -3,13 +3,13 @@
 //! hardware and software implementations based on application
 //! requirements and area constraints" — §VI).
 
-use super::{run_hw, run_sw, run_hw_budgeted, run_sw_budgeted, LaunchError, LaunchResult};
+use super::{LaunchError, LaunchRequest, LaunchResult};
 use crate::prt::interp::Env;
 use crate::prt::kir::Kernel;
 use crate::sim::SimConfig;
 
 /// Which implementation of warp-level features to use.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Solution {
     /// Table I ISA extensions on the modified core.
     Hw,
@@ -37,45 +37,17 @@ impl Solution {
 /// Run a kernel under the chosen solution with the matching hardware
 /// configuration derived from `base` (HW forces the extension on, SW
 /// runs on the baseline).
+///
+/// This is a convenience shim over [`LaunchRequest`] kept for the many
+/// one-shot call sites (benches, examples) that don't need a label,
+/// budget, or retry policy.
 pub fn dispatch(
     sol: Solution,
     k: &Kernel,
     base: &SimConfig,
     inputs: &Env,
 ) -> Result<LaunchResult, LaunchError> {
-    match sol {
-        Solution::Hw => {
-            let cfg = SimConfig { warp_hw: true, ..base.clone() };
-            run_hw(k, &cfg, inputs)
-        }
-        Solution::Sw => {
-            let cfg = SimConfig { warp_hw: false, ..base.clone() };
-            run_sw(k, &cfg, inputs)
-        }
-    }
-}
-
-/// [`dispatch`] with an explicit per-launch cycle budget — the
-/// watchdog entry point used by `launch_isolated`. The struct-update
-/// derivation keeps everything else from `base`, including any
-/// fault-injection plan (`base.fault`).
-pub fn dispatch_budgeted(
-    sol: Solution,
-    k: &Kernel,
-    base: &SimConfig,
-    inputs: &Env,
-    max_cycles: u64,
-) -> Result<LaunchResult, LaunchError> {
-    match sol {
-        Solution::Hw => {
-            let cfg = SimConfig { warp_hw: true, ..base.clone() };
-            run_hw_budgeted(k, &cfg, inputs, max_cycles)
-        }
-        Solution::Sw => {
-            let cfg = SimConfig { warp_hw: false, ..base.clone() };
-            run_sw_budgeted(k, &cfg, inputs, max_cycles)
-        }
-    }
+    LaunchRequest::new(sol, k).config(base).inputs(inputs).launch()
 }
 
 #[cfg(test)]

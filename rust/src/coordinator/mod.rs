@@ -3,27 +3,41 @@
 //! A launch mirrors the Vortex runtime flow: allocate parameter arrays
 //! in device global memory, write their base addresses into the
 //! kernel-argument mailbox, load the program, run the core(s) to
-//! completion, and read results back. [`launch`] does exactly that for
-//! a [`LaunchImage`]; [`run_hw`] / [`run_sw`] are the two solution
-//! paths of the paper (HW: SIMT codegen on the extended core; SW: PR
-//! transformation + scalar codegen on the baseline core).
+//! completion, and read results back. Every way of running a kernel —
+//! one-shot, batched, queued, campaign, replay — goes through one
+//! description: a [`LaunchRequest`] names the workload (solution +
+//! kernel, or a recorded trace), the machine ([`SimConfig`]), the
+//! inputs, and the per-launch [`LaunchOptions`] (cycle budget +
+//! bounded retry).
 //!
-//! ## Hardened batch path (PR 6)
+//! ## Hardened execution (PR 6)
 //!
-//! The ROADMAP's sim-as-a-service north star needs a coordinator that
-//! survives millions of launches: one bad config or hung kernel must
-//! not take down the batch. [`launch_isolated`] runs a single launch
-//! under `catch_unwind` panic isolation with a per-launch cycle-budget
-//! watchdog ([`IsolationPolicy::max_cycles`]) and bounded retry —
-//! retries apply ONLY to nondeterministic-looking failures (panics and
-//! watchdog timeouts), never to deterministic `SimError`s, which would
-//! just fail the same way again. [`launch_batch_isolated`] fans jobs
-//! across host threads and returns one [`LaunchReport`] per job, in
-//! job order, regardless of sibling failures. The fault-injection
-//! campaign driver ([`campaign`]) builds on exactly this path.
+//! [`launch_isolated`] runs a request under `catch_unwind` panic
+//! isolation with a per-attempt cycle-budget watchdog
+//! ([`LaunchOptions::max_cycles`]) and bounded retry — retries apply
+//! ONLY to nondeterministic-looking failures (panics and watchdog
+//! timeouts), never to deterministic `SimError`s, which would just
+//! fail the same way again. [`launch_batch_isolated`] fans requests
+//! across host threads and returns one [`LaunchReport`] per request,
+//! in request order, regardless of sibling failures. The
+//! fault-injection campaign driver ([`campaign`]) builds on exactly
+//! this path.
+//!
+//! ## Service shape (PR 10)
+//!
+//! [`cache`] memoizes compiled [`LaunchImage`]s so a multi-thousand
+//! launch sweep pays PRT transform + codegen once per distinct
+//! (kernel, solution, geometry); [`queue`] is a persistent
+//! work-stealing job queue that accepts requests over time and retires
+//! results in submission order through the [`sink::MetricsSink`] path;
+//! [`serve`] turns the queue into a JSON-lines request/response
+//! service (`vortex-warp serve --jsonl`).
 
+pub mod cache;
 pub mod campaign;
 pub mod dispatch;
+pub mod queue;
+pub mod serve;
 pub mod sink;
 
 use crate::prt::codegen::{codegen_scalar, codegen_simt, LaunchImage};
@@ -33,6 +47,9 @@ use crate::prt::transform;
 use crate::sim::{
     map, CoreError, Gpu, KernelTrace, Metrics, SimConfig, SimError, TelemetrySnapshot,
 };
+use cache::KernelCache;
+use dispatch::Solution;
+use std::hash::{Hash, Hasher};
 
 /// Launch failure.
 #[derive(Debug, Clone, PartialEq)]
@@ -82,25 +99,230 @@ pub struct LaunchResult {
     pub trace: Vec<String>,
     /// Machine trace recorded by this launch (`cfg.record`,
     /// `sim/tracefmt`); `None` unless recording was enabled. Feed it
-    /// to [`replay_trace`] to re-run the timing model without
+    /// to [`LaunchRequest::replay`] to re-run the timing model without
     /// functional execution.
     pub recorded: Option<KernelTrace>,
 }
 
-/// Run a compiled kernel image on a GPU with the given inputs, under
-/// the default [`MAX_CYCLES`] budget.
-pub fn launch(
-    cfg: &SimConfig,
-    img: &LaunchImage,
-    inputs: &Env,
-) -> Result<LaunchResult, LaunchError> {
-    launch_budgeted(cfg, img, inputs, MAX_CYCLES)
+/// Per-launch hardening knobs carried by every [`LaunchRequest`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaunchOptions {
+    /// Watchdog: cycle budget per attempt. A kernel still running at
+    /// the budget surfaces as `SimError::Timeout`.
+    pub max_cycles: u64,
+    /// Extra attempts after a panic or watchdog timeout (so total
+    /// attempts = `retries + 1`). Only honored by the isolated paths
+    /// ([`launch_isolated`], batches, the queue). Deterministic
+    /// `SimError`s are NEVER retried — they would fail identically
+    /// again.
+    pub retries: u32,
 }
 
-/// [`launch`] with an explicit cycle budget — the watchdog primitive:
-/// a hung kernel surfaces as `SimError::Timeout { cycles: max_cycles }`
-/// instead of burning the default 200M-cycle budget.
-pub fn launch_budgeted(
+impl Default for LaunchOptions {
+    fn default() -> Self {
+        LaunchOptions { max_cycles: MAX_CYCLES, retries: 0 }
+    }
+}
+
+/// What a [`LaunchRequest`] runs.
+#[derive(Clone, Debug)]
+pub enum Workload {
+    /// A KIR kernel under the chosen solution (HW forces the warp
+    /// extension on; SW runs the PR transformation on the baseline).
+    Kernel {
+        solution: Solution,
+        kernel: Kernel,
+        /// Structural fingerprint of `kernel`, computed once at
+        /// request-build time; the [`cache`] keys on it so two
+        /// same-named but structurally different kernels never share
+        /// an image.
+        fingerprint: u64,
+    },
+    /// A recorded machine trace (`sim/tracefmt`) replayed through the
+    /// full timing model with no functional execution.
+    Replay(KernelTrace),
+}
+
+/// One fully-described launch: the single entry point every execution
+/// path (one-shot, batch, queue, campaign, serve, replay) consumes.
+///
+/// ```ignore
+/// let r = LaunchRequest::new(Solution::Hw, &kernel)
+///     .config(&SimConfig::paper())
+///     .inputs(&env)
+///     .budget(1_000_000)
+///     .launch()?;
+/// ```
+#[derive(Clone, Debug)]
+pub struct LaunchRequest {
+    /// Free-form label reported back by benches/sweeps/sinks.
+    pub label: String,
+    pub workload: Workload,
+    /// Base config; the solution derives the matched hardware from it
+    /// (HW forces the extension on, SW runs the baseline). Everything
+    /// else — fault plan, telemetry, engine — carries through.
+    pub cfg: SimConfig,
+    pub inputs: Env,
+    pub options: LaunchOptions,
+}
+
+/// Structural fingerprint of a kernel via the derived `Hash` impls.
+/// `DefaultHasher` is keyed deterministically within a process and
+/// across processes on the same std, which is all the in-memory cache
+/// needs (the fingerprint is never persisted).
+fn kernel_fingerprint(k: &Kernel) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    k.hash(&mut h);
+    h.finish()
+}
+
+impl LaunchRequest {
+    /// A kernel launch under `solution`, with the paper config, empty
+    /// inputs, and default options; the label defaults to
+    /// `"<kernel>[<SOL>]"`. The kernel's cache fingerprint is computed
+    /// here, once, so cached launches never re-hash the body.
+    pub fn new(solution: Solution, kernel: &Kernel) -> Self {
+        LaunchRequest {
+            label: format!("{}[{}]", kernel.name, solution.name()),
+            workload: Workload::Kernel {
+                solution,
+                kernel: kernel.clone(),
+                fingerprint: kernel_fingerprint(kernel),
+            },
+            cfg: SimConfig::paper(),
+            inputs: Env::default(),
+            options: LaunchOptions::default(),
+        }
+    }
+
+    /// A trace replay: the recorded stream drives the timing model —
+    /// scheduler, scoreboard, operand collectors, FU pools, memory
+    /// hierarchy, telemetry, both engines — with no functional
+    /// execution. `Metrics` come back bit-identical to the
+    /// execute-at-issue launch that recorded the trace
+    /// (`tests/trace_replay.rs` pins this). Replay runs no program and
+    /// touches no data, so the result's `Env` is empty.
+    pub fn replay(trace: KernelTrace) -> Self {
+        LaunchRequest {
+            label: "replay".into(),
+            workload: Workload::Replay(trace),
+            cfg: SimConfig::paper(),
+            inputs: Env::default(),
+            options: LaunchOptions::default(),
+        }
+    }
+
+    pub fn label(mut self, label: impl Into<String>) -> Self {
+        self.label = label.into();
+        self
+    }
+
+    pub fn config(mut self, cfg: &SimConfig) -> Self {
+        self.cfg = cfg.clone();
+        self
+    }
+
+    pub fn inputs(mut self, inputs: &Env) -> Self {
+        self.inputs = inputs.clone();
+        self
+    }
+
+    /// Set the per-attempt cycle budget (default [`MAX_CYCLES`]).
+    pub fn budget(mut self, max_cycles: u64) -> Self {
+        self.options.max_cycles = max_cycles;
+        self
+    }
+
+    /// Set the bounded-retry count for the isolated paths (default 0).
+    pub fn retries(mut self, retries: u32) -> Self {
+        self.options.retries = retries;
+        self
+    }
+
+    /// Run this request on the current thread; panics propagate. See
+    /// [`launch`].
+    pub fn launch(&self) -> Result<LaunchResult, LaunchError> {
+        launch(self)
+    }
+
+    /// Run this request under panic isolation + watchdog + bounded
+    /// retry. See [`launch_isolated`].
+    pub fn launch_isolated(&self) -> LaunchReport {
+        launch_isolated(self)
+    }
+
+    /// The machine the request actually runs on: the solution shapes
+    /// `warp_hw`, everything else carries through from [`Self::cfg`].
+    pub fn effective_config(&self) -> SimConfig {
+        match &self.workload {
+            Workload::Kernel { solution: Solution::Hw, .. } => {
+                SimConfig { warp_hw: true, ..self.cfg.clone() }
+            }
+            Workload::Kernel { solution: Solution::Sw, .. } => {
+                SimConfig { warp_hw: false, ..self.cfg.clone() }
+            }
+            Workload::Replay(_) => self.cfg.clone(),
+        }
+    }
+}
+
+/// Compile a kernel for one solution: HW = SIMT codegen for the
+/// extended core; SW = PR transformation + scalar codegen for the
+/// baseline core. This is the work the [`cache`] memoizes.
+pub(crate) fn compile(
+    solution: Solution,
+    k: &Kernel,
+    nt: u32,
+    nw: u32,
+) -> Result<LaunchImage, LaunchError> {
+    match solution {
+        Solution::Hw => codegen_simt(k, nt, nw).map_err(LaunchError::Codegen),
+        Solution::Sw => {
+            let scalar = transform(k).map_err(LaunchError::Codegen)?;
+            codegen_scalar(&scalar, nt, nw).map_err(LaunchError::Codegen)
+        }
+    }
+}
+
+/// Run a request on the current thread. Equivalent to
+/// [`launch_with`] without a kernel cache.
+pub fn launch(req: &LaunchRequest) -> Result<LaunchResult, LaunchError> {
+    launch_with(req, None)
+}
+
+/// [`launch`] with an optional compiled-kernel [`cache`]: on a hit the
+/// PRT transform + codegen are skipped entirely and the shared
+/// [`LaunchImage`] is staged directly. Codegen is deterministic, so
+/// metrics are byte-identical cache-on vs cache-off
+/// (`tests/service.rs` pins this).
+pub fn launch_with(
+    req: &LaunchRequest,
+    cache: Option<&KernelCache>,
+) -> Result<LaunchResult, LaunchError> {
+    match &req.workload {
+        Workload::Kernel { solution, kernel, fingerprint } => {
+            let cfg = req.effective_config();
+            validate_inputs(kernel, &req.inputs)?;
+            let (nt, nw) = (cfg.nt as u32, cfg.nw as u32);
+            match cache {
+                Some(c) => {
+                    let img = c.image(*solution, kernel, nt, nw, *fingerprint)?;
+                    launch_image(&cfg, &img, &req.inputs, req.options.max_cycles)
+                }
+                None => {
+                    let img = compile(*solution, kernel, nt, nw)?;
+                    launch_image(&cfg, &img, &req.inputs, req.options.max_cycles)
+                }
+            }
+        }
+        Workload::Replay(trace) => replay_image(&req.cfg, trace, req.options.max_cycles),
+    }
+}
+
+/// Run a compiled kernel image on a GPU with the given inputs — the
+/// staging/run/read-back primitive under every kernel launch. A hung
+/// kernel surfaces as `SimError::Timeout { cycles: max_cycles }`.
+pub fn launch_image(
     cfg: &SimConfig,
     img: &LaunchImage,
     inputs: &Env,
@@ -163,21 +385,10 @@ pub fn launch_budgeted(
     Ok(LaunchResult { env, metrics, telemetry, trace, recorded })
 }
 
-/// Replay a recorded kernel trace (`sim/tracefmt`) through the full
-/// timing model — scheduler, scoreboard, operand collectors, FU pools,
-/// memory hierarchy, telemetry, both engines — with no functional
-/// execution, under the default [`MAX_CYCLES`] budget. `Metrics` come
-/// back bit-identical to the execute-at-issue launch that recorded the
-/// trace (`tests/trace_replay.rs` pins this). Replay runs no program
-/// and touches no data, so the result's `Env` is empty.
-pub fn replay_trace(cfg: &SimConfig, trace: KernelTrace) -> Result<LaunchResult, LaunchError> {
-    replay_trace_budgeted(cfg, trace, MAX_CYCLES)
-}
-
-/// [`replay_trace`] with an explicit cycle budget.
-pub fn replay_trace_budgeted(
+/// Replay a recorded kernel trace through the timing model.
+fn replay_image(
     cfg: &SimConfig,
-    trace: KernelTrace,
+    trace: &KernelTrace,
     max_cycles: u64,
 ) -> Result<LaunchResult, LaunchError> {
     // Replay shares recording's restrictions (single core, no faults,
@@ -205,7 +416,7 @@ pub fn replay_trace_budgeted(
     }
 
     let mut gpu = Gpu::new(cfg);
-    gpu.load_trace(trace);
+    gpu.load_trace(trace.clone());
     gpu.run(max_cycles)?;
 
     let metrics = gpu.cores[0].metrics.clone();
@@ -230,98 +441,14 @@ pub fn replay_trace_budgeted(
     })
 }
 
-/// The HW solution: SIMT codegen, extended hardware.
-pub fn run_hw(k: &Kernel, cfg: &SimConfig, inputs: &Env) -> Result<LaunchResult, LaunchError> {
-    run_hw_budgeted(k, cfg, inputs, MAX_CYCLES)
-}
-
-/// [`run_hw`] with an explicit cycle budget.
-pub fn run_hw_budgeted(
-    k: &Kernel,
-    cfg: &SimConfig,
-    inputs: &Env,
-    max_cycles: u64,
-) -> Result<LaunchResult, LaunchError> {
-    if !cfg.warp_hw {
-        return Err(LaunchError::BadInput(
-            "run_hw needs a SimConfig with warp_hw enabled".into(),
-        ));
-    }
-    validate_inputs(k, inputs)?;
-    let img =
-        codegen_simt(k, cfg.nt as u32, cfg.nw as u32).map_err(LaunchError::Codegen)?;
-    launch_budgeted(cfg, &img, inputs, max_cycles)
-}
-
-/// The SW solution: PR transformation + scalar codegen; runs on the
-/// baseline core (works on the extended one too, using no extension
-/// instructions).
-pub fn run_sw(k: &Kernel, cfg: &SimConfig, inputs: &Env) -> Result<LaunchResult, LaunchError> {
-    run_sw_budgeted(k, cfg, inputs, MAX_CYCLES)
-}
-
-/// [`run_sw`] with an explicit cycle budget.
-pub fn run_sw_budgeted(
-    k: &Kernel,
-    cfg: &SimConfig,
-    inputs: &Env,
-    max_cycles: u64,
-) -> Result<LaunchResult, LaunchError> {
-    validate_inputs(k, inputs)?;
-    let scalar = transform(k).map_err(LaunchError::Codegen)?;
-    let img =
-        codegen_scalar(&scalar, cfg.nt as u32, cfg.nw as u32).map_err(LaunchError::Codegen)?;
-    launch_budgeted(cfg, &img, inputs, max_cycles)
-}
-
-/// One independent launch for [`launch_batch`].
-pub struct BatchJob {
-    /// Free-form label reported back by benches/sweeps.
-    pub label: String,
-    pub solution: dispatch::Solution,
-    pub kernel: Kernel,
-    /// Base config; `dispatch` derives the solution-matched hardware
-    /// from it (HW forces the extension on, SW runs the baseline).
-    pub cfg: SimConfig,
-    pub inputs: Env,
-}
-
-impl BatchJob {
-    pub fn new(
-        label: impl Into<String>,
-        solution: dispatch::Solution,
-        kernel: Kernel,
-        cfg: SimConfig,
-        inputs: Env,
-    ) -> Self {
-        BatchJob { label: label.into(), solution, kernel, cfg, inputs }
-    }
-}
-
-/// Per-launch hardening knobs for [`launch_isolated`].
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct IsolationPolicy {
-    /// Watchdog: cycle budget per attempt. A kernel still running at
-    /// the budget surfaces as `SimError::Timeout`.
-    pub max_cycles: u64,
-    /// Extra attempts after a panic or watchdog timeout (so total
-    /// attempts = `retries + 1`). Deterministic `SimError`s are NEVER
-    /// retried — they would fail identically again.
-    pub retries: u32,
-}
-
-impl Default for IsolationPolicy {
-    fn default() -> Self {
-        IsolationPolicy { max_cycles: MAX_CYCLES, retries: 0 }
-    }
-}
-
 /// Outcome of one isolated launch: what happened, and how many
 /// attempts it took.
 #[derive(Debug)]
 pub struct LaunchReport {
     pub label: String,
-    /// Attempts consumed (1 unless a retryable failure was retried).
+    /// Attempts consumed (1 unless a retryable failure was retried;
+    /// 0 only for requests rejected before any attempt, e.g. a
+    /// malformed `serve` line).
     pub attempts: u32,
     pub result: Result<LaunchResult, LaunchError>,
 }
@@ -348,66 +475,74 @@ fn retryable(r: &Result<LaunchResult, LaunchError>) -> bool {
     )
 }
 
-/// Run one launch under panic isolation with a cycle-budget watchdog
-/// and bounded retry. Never panics and never aborts siblings: every
-/// outcome — including a `panic!` anywhere in codegen or the simulator
-/// — comes back as a [`LaunchReport`].
-pub fn launch_isolated(job: &BatchJob, policy: &IsolationPolicy) -> LaunchReport {
+/// Run one request under panic isolation with a cycle-budget watchdog
+/// and bounded retry ([`LaunchOptions`]). Never panics and never
+/// aborts siblings: every outcome — including a `panic!` anywhere in
+/// codegen or the simulator — comes back as a [`LaunchReport`].
+pub fn launch_isolated(req: &LaunchRequest) -> LaunchReport {
+    launch_isolated_with(req, None)
+}
+
+/// [`launch_isolated`] with an optional compiled-kernel cache — the
+/// worker primitive under batches and the [`queue`].
+pub fn launch_isolated_with(req: &LaunchRequest, cache: Option<&KernelCache>) -> LaunchReport {
     let mut attempts = 0u32;
     loop {
         attempts += 1;
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            dispatch::dispatch_budgeted(
-                job.solution,
-                &job.kernel,
-                &job.cfg,
-                &job.inputs,
-                policy.max_cycles,
-            )
+            launch_with(req, cache)
         }));
         let result = match caught {
             Ok(r) => r,
             Err(p) => Err(LaunchError::Panic(panic_message(p.as_ref()))),
         };
-        if !retryable(&result) || attempts > policy.retries {
-            return LaunchReport { label: job.label.clone(), attempts, result };
+        if !retryable(&result) || attempts > req.options.retries {
+            return LaunchReport { label: req.label.clone(), attempts, result };
         }
     }
 }
 
 /// Thread-fanout knobs for [`launch_batch_isolated`].
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     /// Worker threads; `0` = all available host parallelism.
     pub threads: usize,
-    pub isolation: IsolationPolicy,
+    /// Share one compiled-kernel [`cache`] across the batch (on by
+    /// default; metrics are byte-identical either way).
+    pub cache: bool,
 }
 
-/// Run a batch of independent launches across host threads, each under
-/// [`launch_isolated`].
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { threads: 0, cache: true }
+    }
+}
+
+/// Run a batch of independent requests across host threads, each under
+/// [`launch_isolated`] with its own [`LaunchOptions`].
 ///
 /// Each launch owns its own `Gpu` (cores + memory), so jobs share
-/// nothing and the report vector — returned in job order — is
+/// nothing and the report vector — returned in request order — is
 /// deterministic regardless of thread count or scheduling. Workers are
 /// plain `std::thread::scope` threads (no external dependencies) that
-/// pull the next job index from a shared atomic counter, so uneven job
-/// costs stay load-balanced. A poisoned job (panic, timeout, any
-/// error) fills its own slot and leaves every sibling untouched.
+/// pull the next request index from a shared atomic counter, so uneven
+/// job costs stay load-balanced. A poisoned request (panic, timeout,
+/// any error) fills its own slot and leaves every sibling untouched.
 ///
 /// This is [`sink::launch_batch_streamed`] with the records discarded;
 /// pass a [`sink::MetricsSink`] there to stream per-launch metrics as
 /// launches retire.
-pub fn launch_batch_isolated(jobs: &[BatchJob], policy: &BatchPolicy) -> Vec<LaunchReport> {
-    sink::launch_batch_streamed(jobs, policy, &mut sink::NullSink).0
+pub fn launch_batch_isolated(reqs: &[LaunchRequest], policy: &BatchPolicy) -> Vec<LaunchReport> {
+    sink::launch_batch_streamed(reqs, policy, &mut sink::NullSink).0
 }
 
-/// Run a batch of independent launches across host threads, returning
-/// per-launch `Result`s in job order. Delegates to
+/// Run a batch of independent requests across host threads, returning
+/// per-launch `Result`s in request order. Delegates to
 /// [`launch_batch_isolated`] under the default policy, so one poisoned
 /// launch (even a panicking one) never suppresses the other N-1
 /// results — it simply yields its own `Err`.
-pub fn launch_batch(jobs: &[BatchJob]) -> Vec<Result<LaunchResult, LaunchError>> {
-    launch_batch_isolated(jobs, &BatchPolicy::default())
+pub fn launch_batch(reqs: &[LaunchRequest]) -> Vec<Result<LaunchResult, LaunchError>> {
+    launch_batch_isolated(reqs, &BatchPolicy::default())
         .into_iter()
         .map(|r| r.result)
         .collect()
@@ -462,8 +597,12 @@ mod tests {
     fn hw_and_sw_paths_agree_on_copy() {
         let k = copy_kernel();
         let inputs = Env::default().with("src", (0..64).collect());
-        let hw = run_hw(&k, &SimConfig::paper(), &inputs).unwrap();
-        let sw = run_sw(&k, &SimConfig::baseline(), &inputs).unwrap();
+        let hw = LaunchRequest::new(Solution::Hw, &k).inputs(&inputs).launch().unwrap();
+        let sw = LaunchRequest::new(Solution::Sw, &k)
+            .config(&SimConfig::baseline())
+            .inputs(&inputs)
+            .launch()
+            .unwrap();
         let want: Vec<i32> = (0..64).map(|x| x * 2).collect();
         assert_eq!(hw.env.get("dst"), want);
         assert_eq!(sw.env.get("dst"), want);
@@ -471,30 +610,22 @@ mod tests {
     }
 
     #[test]
-    fn launch_batch_matches_sequential_dispatch() {
-        use dispatch::Solution;
+    fn launch_batch_matches_sequential_launch() {
         let k = copy_kernel();
         let inputs = Env::default().with("src", (0..64).collect());
-        let jobs: Vec<BatchJob> = (0..4)
+        let reqs: Vec<LaunchRequest> = (0..4)
             .map(|i| {
                 let sol = if i % 2 == 0 { Solution::Hw } else { Solution::Sw };
-                BatchJob::new(
-                    format!("job{i}"),
-                    sol,
-                    k.clone(),
-                    SimConfig::paper(),
-                    inputs.clone(),
-                )
+                LaunchRequest::new(sol, &k).label(format!("job{i}")).inputs(&inputs)
             })
             .collect();
-        let batch = launch_batch(&jobs);
-        assert_eq!(batch.len(), jobs.len());
-        for (job, got) in jobs.iter().zip(&batch) {
+        let batch = launch_batch(&reqs);
+        assert_eq!(batch.len(), reqs.len());
+        for (req, got) in reqs.iter().zip(&batch) {
             let got = got.as_ref().unwrap();
-            let want =
-                dispatch::dispatch(job.solution, &job.kernel, &job.cfg, &job.inputs).unwrap();
-            assert_eq!(got.metrics, want.metrics, "{}", job.label);
-            assert_eq!(got.env.get("dst"), want.env.get("dst"), "{}", job.label);
+            let want = req.launch().unwrap();
+            assert_eq!(got.metrics, want.metrics, "{}", req.label);
+            assert_eq!(got.env.get("dst"), want.env.get("dst"), "{}", req.label);
         }
         assert!(launch_batch(&[]).is_empty());
     }
@@ -529,14 +660,42 @@ mod tests {
     #[test]
     fn missing_input_rejected() {
         let k = copy_kernel();
-        let err = run_hw(&k, &SimConfig::paper(), &Env::default()).unwrap_err();
+        let err = LaunchRequest::new(Solution::Hw, &k).launch().unwrap_err();
         assert!(matches!(err, LaunchError::BadInput(_)));
     }
 
     #[test]
-    fn hw_on_baseline_config_rejected() {
+    fn solution_shapes_the_machine() {
+        // The solution owns `warp_hw`: an HW request on a baseline
+        // config still runs the extension (and vice versa), so call
+        // sites never have to pre-derive the matched config.
         let k = copy_kernel();
-        let inputs = Env::default().with("src", vec![0; 64]);
-        assert!(run_hw(&k, &SimConfig::baseline(), &inputs).is_err());
+        let inputs = Env::default().with("src", (0..64).collect());
+        let hw = LaunchRequest::new(Solution::Hw, &k).config(&SimConfig::baseline());
+        assert!(hw.effective_config().warp_hw);
+        let want: Vec<i32> = (0..64).map(|x| x * 2).collect();
+        assert_eq!(hw.inputs(&inputs).launch().unwrap().env.get("dst"), want);
+        let sw = LaunchRequest::new(Solution::Sw, &k).config(&SimConfig::paper());
+        assert!(!sw.effective_config().warp_hw);
+    }
+
+    #[test]
+    fn fingerprints_track_structure_not_names() {
+        let a = copy_kernel();
+        let b = copy_kernel();
+        let fp = |r: &LaunchRequest| match r.workload {
+            Workload::Kernel { fingerprint, .. } => fingerprint,
+            _ => unreachable!(),
+        };
+        let ra = LaunchRequest::new(Solution::Hw, &a);
+        let rb = LaunchRequest::new(Solution::Hw, &b);
+        assert_eq!(fp(&ra), fp(&rb), "identical structure, identical fingerprint");
+        // Same name, different body (the tile_sweep example does this).
+        let c = Kernel::new("copy", 2, 32, 8)
+            .param("src", 64, ParamDir::In)
+            .param("dst", 64, ParamDir::Out)
+            .body(vec![Stmt::Store("dst", E::ThreadIdx, E::c(7))]);
+        let rc = LaunchRequest::new(Solution::Hw, &c);
+        assert_ne!(fp(&ra), fp(&rc), "same name, different body must differ");
     }
 }

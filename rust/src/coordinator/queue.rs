@@ -1,0 +1,427 @@
+//! `coordinator/queue` — a persistent work-stealing job queue (PR 10).
+//!
+//! [`launch_batch_isolated`](super::launch_batch_isolated) is a
+//! one-shot fan-out: it needs the whole request list up front and
+//! tears its workers down when the list drains. A *service* accepts
+//! requests over time, so [`WorkQueue`] keeps a pool of workers alive
+//! across submissions: each worker owns a deque (new requests are
+//! dealt round-robin, or pinned with [`WorkQueue::submit_pinned`]),
+//! pops its own work LIFO-free from the front, and **steals from the
+//! back** of a sibling's deque when its own runs dry — the classic
+//! Chase–Lev shape built from std-only parts (a `Mutex<VecDeque>` per
+//! worker; contention is measured in launches, not nanoseconds, so a
+//! lock-free deque would be over-engineering here).
+//!
+//! Every launch runs under the same isolation contract as the batch
+//! path ([`launch_isolated_with`]): panics and watchdog timeouts are
+//! caught per-request, retried per its [`LaunchOptions`], and can
+//! never take down a worker. Results retire through the shared
+//! [`ReorderBuf`](super::sink) into the queue's [`MetricsSink`] in
+//! strict submission order, so JSONL output stays deterministic no
+//! matter which worker ran what — this is what `vortex-warp serve`
+//! (see [`serve`](super::serve)) is built on. A compiled-kernel
+//! [`KernelCache`] is shared across workers unless disabled.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::cache::{CacheStats, KernelCache};
+use super::sink::{BatchSummary, MetricsSink, NullSink, ReorderBuf};
+use super::{launch_isolated_with, LaunchError, LaunchReport, LaunchRequest};
+
+/// Queue-shaping knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct QueueConfig {
+    /// Worker threads; `0` = all available host parallelism.
+    pub threads: usize,
+    /// Share one compiled-kernel cache across workers (on by default;
+    /// metrics are byte-identical either way).
+    pub cache: bool,
+}
+
+impl Default for QueueConfig {
+    fn default() -> Self {
+        QueueConfig { threads: 0, cache: true }
+    }
+}
+
+struct Job {
+    index: usize,
+    req: LaunchRequest,
+}
+
+/// Everything the workers share.
+struct Shared {
+    /// One deque per worker: owner pops the front, thieves steal the
+    /// back.
+    deques: Vec<Mutex<VecDeque<Job>>>,
+    /// Parked-worker wakeup. The guarded data is trivial; the deques
+    /// carry the actual state. Waits are timeboxed so a missed wakeup
+    /// costs milliseconds, not liveness.
+    work: Condvar,
+    work_lock: Mutex<()>,
+    shutting_down: AtomicBool,
+    /// Submitted but not yet retired.
+    inflight: AtomicUsize,
+    /// Signalled (with `state`'s mutex) each time a job retires, so
+    /// [`WorkQueue::drain`] can sleep instead of spin.
+    done: Condvar,
+    state: Mutex<QueueState>,
+    cache: Option<KernelCache>,
+    steals: AtomicU64,
+}
+
+struct QueueState {
+    buf: ReorderBuf,
+    sink: Box<dyn MetricsSink>,
+}
+
+/// End-of-life accounting for a queue: the familiar batch summary plus
+/// the service-side counters.
+#[derive(Clone, Copy, Debug)]
+pub struct QueueSummary {
+    pub batch: BatchSummary,
+    /// Jobs a worker took from a sibling's deque.
+    pub steals: u64,
+    pub cache: CacheStats,
+}
+
+impl QueueSummary {
+    /// One JSON object (one line, stable key order) — the `--stats`
+    /// output of `vortex-warp serve`.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"launches\":{},\"ok\":{},\"wall_ns\":{},\"threads\":{},\
+             \"launches_per_sec\":{:.1},\"steals\":{},\"cache_hits\":{},\
+             \"cache_misses\":{},\"cache_hit_rate\":{:.4}}}",
+            self.batch.launches,
+            self.batch.ok,
+            self.batch.wall.as_nanos(),
+            self.batch.threads,
+            self.batch.launches_per_sec(),
+            self.steals,
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.hit_rate(),
+        )
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "{}; {} steals; cache {} hits / {} misses ({:.0}% hit rate)",
+            self.batch.render(),
+            self.steals,
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.hit_rate() * 100.0,
+        )
+    }
+}
+
+/// A persistent work-stealing launch queue. See the module docs.
+pub struct WorkQueue {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Next submission index (= retire order).
+    next_index: usize,
+    /// Round-robin cursor for unpinned submissions.
+    rr: usize,
+    start: Instant,
+}
+
+fn worker_loop(shared: &Shared, me: usize) {
+    loop {
+        // Own deque first (front)…
+        let mut job = shared.deques[me].lock().expect("queue deque lock").pop_front();
+        // …then steal from a sibling's back.
+        if job.is_none() {
+            for k in 1..shared.deques.len() {
+                let victim = (me + k) % shared.deques.len();
+                job = shared.deques[victim].lock().expect("queue deque lock").pop_back();
+                if job.is_some() {
+                    shared.steals.fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+            }
+        }
+        match job {
+            Some(job) => {
+                let t0 = Instant::now();
+                let report = launch_isolated_with(&job.req, shared.cache.as_ref());
+                let wall = t0.elapsed();
+                {
+                    let mut st = shared.state.lock().expect("queue state lock");
+                    let st = &mut *st;
+                    st.buf.retire(job.index, report, wall, &mut *st.sink);
+                }
+                shared.inflight.fetch_sub(1, Ordering::AcqRel);
+                shared.done.notify_all();
+            }
+            None => {
+                if shared.shutting_down.load(Ordering::Acquire) {
+                    // A shutdown flag can only be set after the last
+                    // submit (both need `&mut`/owned self), so an empty
+                    // sweep here means empty forever.
+                    return;
+                }
+                let guard = shared.work_lock.lock().expect("queue work lock");
+                let _ = shared
+                    .work
+                    .wait_timeout(guard, Duration::from_millis(5))
+                    .expect("queue work lock");
+            }
+        }
+    }
+}
+
+impl WorkQueue {
+    /// A queue that discards records ([`NullSink`]); use
+    /// [`Self::with_sink`] to stream them.
+    pub fn new(cfg: QueueConfig) -> Self {
+        Self::with_sink(cfg, Box::new(NullSink))
+    }
+
+    /// A queue whose retired launches stream to `sink` in strict
+    /// submission order.
+    pub fn with_sink(cfg: QueueConfig, sink: Box<dyn MetricsSink>) -> Self {
+        let workers = if cfg.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            cfg.threads
+        };
+        let shared = Arc::new(Shared {
+            deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            work: Condvar::new(),
+            work_lock: Mutex::new(()),
+            shutting_down: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            done: Condvar::new(),
+            state: Mutex::new(QueueState { buf: ReorderBuf::new(0), sink }),
+            cache: cfg.cache.then(KernelCache::new),
+            steals: AtomicU64::new(0),
+        });
+        let handles = (0..workers)
+            .map(|me| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared, me))
+            })
+            .collect();
+        WorkQueue { shared, workers: handles, next_index: 0, rr: 0, start: Instant::now() }
+    }
+
+    /// Worker threads alive in the pool.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a request; returns its submission index (= position in
+    /// the retire order and in [`Self::shutdown`]'s report vector).
+    pub fn submit(&mut self, req: LaunchRequest) -> usize {
+        let worker = self.rr;
+        self.rr = (self.rr + 1) % self.shared.deques.len();
+        self.submit_pinned(req, worker)
+    }
+
+    /// Submit to a specific worker's deque (it still participates in
+    /// stealing, so pinning is a locality hint, not an assignment).
+    pub fn submit_pinned(&mut self, req: LaunchRequest, worker: usize) -> usize {
+        let index = self.next_index;
+        self.next_index += 1;
+        self.shared.inflight.fetch_add(1, Ordering::AcqRel);
+        self.shared.deques[worker % self.shared.deques.len()]
+            .lock()
+            .expect("queue deque lock")
+            .push_back(Job { index, req });
+        self.shared.work.notify_all();
+        index
+    }
+
+    /// Retire a request that failed before it could run (e.g. a
+    /// malformed `serve` line): it consumes a submission index so the
+    /// output stream stays strictly ordered, reports `attempts: 0`,
+    /// and never touches a worker.
+    pub fn submit_error(&mut self, label: impl Into<String>, message: impl Into<String>) -> usize {
+        let index = self.next_index;
+        self.next_index += 1;
+        let report = LaunchReport {
+            label: label.into(),
+            attempts: 0,
+            result: Err(LaunchError::BadInput(message.into())),
+        };
+        let mut st = self.shared.state.lock().expect("queue state lock");
+        let st = &mut *st;
+        st.buf.retire(index, report, Duration::ZERO, &mut *st.sink);
+        drop(st);
+        self.shared.done.notify_all();
+        index
+    }
+
+    /// Submitted but not yet retired.
+    pub fn inflight(&self) -> usize {
+        self.shared.inflight.load(Ordering::Acquire)
+    }
+
+    /// Block until every submitted request has retired. The queue
+    /// stays usable afterwards — this is a checkpoint, not a shutdown.
+    pub fn drain(&self) {
+        let mut st = self.shared.state.lock().expect("queue state lock");
+        while self.shared.inflight.load(Ordering::Acquire) > 0 {
+            let (g, _) = self
+                .shared
+                .done
+                .wait_timeout(st, Duration::from_millis(5))
+                .expect("queue state lock");
+            st = g;
+        }
+        drop(st);
+    }
+
+    /// Graceful shutdown: wait for the queue to drain, stop the
+    /// workers, and hand back every report in submission order plus
+    /// the queue's summary.
+    pub fn shutdown(mut self) -> (Vec<LaunchReport>, QueueSummary) {
+        self.drain();
+        self.shared.shutting_down.store(true, Ordering::Release);
+        self.shared.work.notify_all();
+        for h in self.workers.drain(..) {
+            h.join().expect("queue worker cannot panic");
+        }
+        let wall = self.start.elapsed();
+        let threads = self.shared.deques.len();
+        let steals = self.shared.steals.load(Ordering::Relaxed);
+        let cache = self.shared.cache.as_ref().map(|c| c.stats()).unwrap_or_default();
+        let shared = Arc::try_unwrap(self.shared)
+            .ok()
+            .expect("workers joined; queue holds the last Arc");
+        let state = shared.state.into_inner().expect("queue state lock");
+        debug_assert_eq!(state.buf.retired(), self.next_index, "all submissions retired");
+        let summary = QueueSummary {
+            batch: BatchSummary {
+                launches: self.next_index,
+                ok: state.buf.ok(),
+                wall,
+                busy: state.buf.busy(),
+                threads,
+            },
+            steals,
+            cache,
+        };
+        (state.buf.into_reports(), summary)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dispatch::Solution;
+    use super::*;
+    use crate::prt::interp::Env;
+    use crate::prt::kir::{Expr as E, Kernel, ParamDir, Stmt};
+
+    fn store_kernel(value: i32) -> Kernel {
+        Kernel::new("qstore", 1, 32, 8)
+            .param("out", 32, ParamDir::Out)
+            .body(vec![Stmt::Store("out", E::ThreadIdx, E::c(value))])
+    }
+
+    #[test]
+    fn queue_runs_jobs_and_retires_in_submission_order() {
+        let mut q = WorkQueue::new(QueueConfig { threads: 3, cache: true });
+        for i in 0..12 {
+            let sol = if i % 2 == 0 { Solution::Hw } else { Solution::Sw };
+            q.submit(LaunchRequest::new(sol, &store_kernel(i)).label(format!("j{i}")));
+        }
+        let (reports, summary) = q.shutdown();
+        assert_eq!(reports.len(), 12);
+        for (i, r) in reports.iter().enumerate() {
+            assert_eq!(r.label, format!("j{i}"), "submission order preserved");
+            let out = r.result.as_ref().unwrap().env.get("out");
+            assert!(out.iter().all(|&v| v == i as i32));
+        }
+        assert_eq!(summary.batch.launches, 12);
+        assert_eq!(summary.batch.ok, 12);
+        assert_eq!(summary.batch.threads, 3);
+    }
+
+    #[test]
+    fn drain_is_a_checkpoint_not_a_shutdown() {
+        let mut q = WorkQueue::new(QueueConfig { threads: 2, cache: true });
+        q.submit(LaunchRequest::new(Solution::Hw, &store_kernel(1)));
+        q.drain();
+        assert_eq!(q.inflight(), 0);
+        // Still accepts work after a drain.
+        q.submit(LaunchRequest::new(Solution::Sw, &store_kernel(2)));
+        let (reports, summary) = q.shutdown();
+        assert_eq!(reports.len(), 2);
+        assert!(reports.iter().all(|r| r.result.is_ok()));
+        assert_eq!(summary.batch.launches, 2);
+    }
+
+    #[test]
+    fn pinning_everything_to_one_worker_forces_steals() {
+        let mut q = WorkQueue::new(QueueConfig { threads: 4, cache: true });
+        // A kernel heavy enough (per-thread loop) that worker 0 cannot
+        // drain its pile before the idle siblings wake from their 5ms
+        // park and steal.
+        let k = Kernel::new("qloop", 1, 32, 8)
+            .param("out", 32, ParamDir::Out)
+            .body(vec![
+                Stmt::Assign("acc", E::c(0)),
+                Stmt::For(
+                    "i",
+                    E::c(0),
+                    E::c(2000),
+                    vec![Stmt::Assign("acc", E::add(E::l("acc"), E::c(1)))],
+                ),
+                Stmt::Store("out", E::ThreadIdx, E::l("acc")),
+            ]);
+        for i in 0..32 {
+            q.submit_pinned(LaunchRequest::new(Solution::Hw, &k).label(format!("p{i}")), 0);
+        }
+        let (reports, summary) = q.shutdown();
+        assert_eq!(reports.len(), 32);
+        for r in &reports {
+            let out = r.result.as_ref().unwrap().env.get("out");
+            assert!(out.iter().all(|&v| v == 2000), "{}", r.label);
+        }
+        // With 32 identical heavy jobs piled on worker 0 and 3 idle
+        // siblings, at least one steal is effectively certain; zero
+        // steals would mean the stealing path is dead.
+        assert!(summary.steals > 0, "idle workers must steal: {}", summary.render());
+        // One distinct (kernel, solution, geometry) key. Concurrent
+        // workers may race the cold key (both compile, first insert
+        // wins), so misses is at least — not exactly — one.
+        assert!(summary.cache.misses >= 1);
+        assert_eq!(summary.cache.hits + summary.cache.misses, 32);
+    }
+
+    #[test]
+    fn submit_error_holds_its_place_in_the_stream() {
+        let mut q = WorkQueue::new(QueueConfig { threads: 2, cache: false });
+        q.submit(LaunchRequest::new(Solution::Hw, &store_kernel(1)).label("a"));
+        q.submit_error("bad-line", "unknown kernel `nope`");
+        q.submit(LaunchRequest::new(Solution::Sw, &store_kernel(2)).label("c"));
+        let (reports, summary) = q.shutdown();
+        assert_eq!(reports.len(), 3);
+        assert_eq!(reports[0].label, "a");
+        assert_eq!(reports[1].label, "bad-line");
+        assert_eq!(reports[1].attempts, 0);
+        assert!(matches!(reports[1].result, Err(LaunchError::BadInput(_))));
+        assert_eq!(reports[2].label, "c");
+        assert_eq!(summary.batch.ok, 2);
+        assert_eq!(summary.cache.hits + summary.cache.misses, 0, "cache disabled");
+    }
+
+    #[test]
+    fn empty_queue_shuts_down_cleanly() {
+        let q = WorkQueue::new(QueueConfig::default());
+        let (reports, summary) = q.shutdown();
+        assert!(reports.is_empty());
+        assert_eq!(summary.batch.launches, 0);
+        assert_eq!(summary.batch.launches_per_sec(), 0.0);
+        let json = summary.to_json();
+        assert!(json.starts_with("{\"launches\":0,"), "{json}");
+        assert!(json.contains("\"cache_hit_rate\":0.0000"), "{json}");
+    }
+}

@@ -1,0 +1,439 @@
+//! `coordinator/serve` — the request side of the JSON-lines protocol
+//! (PR 10).
+//!
+//! PR 7 gave batches a machine-readable *result* stream (`--jsonl`,
+//! [`JsonlSink`]); this module closes the loop with a *request*
+//! stream: one JSON object per input line describes a launch, and the
+//! service answers with exactly one result line per request, in
+//! request order — `vortex-warp serve --jsonl` is `cat requests |
+//! simulate | results`. Under the hood every line becomes a
+//! [`LaunchRequest`] on a [`WorkQueue`], so requests run on a
+//! work-stealing worker pool with a shared compiled-kernel cache while
+//! the reorder buffer keeps the output deterministic.
+//!
+//! ## Request schema (one object per line)
+//!
+//! ```json
+//! {"kernel":"reduce","solution":"hw","label":"r0","repeat":2,
+//!  "nt":32,"nw":8,"cores":1,"engine":"fast","budget":1000000,
+//!  "retries":1}
+//! ```
+//!
+//! `kernel` (required) names a built-in benchmark
+//! ([`crate::kernels::by_name`]) and brings its deterministic inputs;
+//! everything else is optional: `solution` defaults to `hw`, `repeat`
+//! (fan the request out N times) to 1, and the machine fields default
+//! to the server's base config (set by the CLI's machine flags).
+//! Unknown keys are rejected — a typo'd `"budgets"` silently ignored
+//! would be worse than an error line.
+//!
+//! A malformed line never kills the stream: it consumes its submission
+//! index and comes back as `{"index":..,"ok":false,"error":..}` in
+//! order, like any other failed launch (`tests/service.rs` pins
+//! this).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, Write};
+use std::sync::{Arc, Mutex};
+
+use super::dispatch::Solution;
+use super::queue::{QueueConfig, QueueSummary, WorkQueue};
+use super::sink::JsonlSink;
+use super::{LaunchReport, LaunchRequest};
+use crate::kernels;
+use crate::sim::{EngineMode, SimConfig};
+
+/// Server-side knobs for [`serve`].
+pub struct ServeOptions {
+    /// Base machine config; per-request fields override geometry and
+    /// engine, everything else carries through.
+    pub base: SimConfig,
+    /// Worker threads; `0` = all available host parallelism.
+    pub threads: usize,
+    /// Share the compiled-kernel cache across requests (default on).
+    pub cache: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { base: SimConfig::paper(), threads: 0, cache: true }
+    }
+}
+
+/// A scalar JSON value as found in a flat request object.
+#[derive(Debug, Clone, PartialEq)]
+enum JsonValue {
+    Str(String),
+    Int(i64),
+    Bool(bool),
+}
+
+/// Parse one flat JSON object (`{"k":v,...}`, string/integer/bool
+/// values only — the request schema needs nothing deeper). Hand-rolled
+/// like every other JSON edge in this crate: serde is not vendored.
+fn parse_flat_object(line: &str) -> Result<BTreeMap<String, JsonValue>, String> {
+    let mut chars = line.chars().peekable();
+    let mut out = BTreeMap::new();
+
+    fn skip_ws(chars: &mut std::iter::Peekable<std::str::Chars>) {
+        while matches!(chars.peek(), Some(' ' | '\t' | '\r' | '\n')) {
+            chars.next();
+        }
+    }
+
+    fn parse_string(chars: &mut std::iter::Peekable<std::str::Chars>) -> Result<String, String> {
+        if chars.next() != Some('"') {
+            return Err("expected string".into());
+        }
+        let mut s = String::new();
+        loop {
+            match chars.next() {
+                None => return Err("unterminated string".into()),
+                Some('"') => return Ok(s),
+                Some('\\') => match chars.next() {
+                    Some('"') => s.push('"'),
+                    Some('\\') => s.push('\\'),
+                    Some('/') => s.push('/'),
+                    Some('n') => s.push('\n'),
+                    Some('r') => s.push('\r'),
+                    Some('t') => s.push('\t'),
+                    Some('u') => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let d = chars
+                                .next()
+                                .and_then(|c| c.to_digit(16))
+                                .ok_or("bad \\u escape")?;
+                            code = code * 16 + d;
+                        }
+                        s.push(char::from_u32(code).ok_or("bad \\u codepoint")?);
+                    }
+                    other => return Err(format!("bad escape {other:?}")),
+                },
+                Some(c) => s.push(c),
+            }
+        }
+    }
+
+    skip_ws(&mut chars);
+    if chars.next() != Some('{') {
+        return Err("expected `{`".into());
+    }
+    skip_ws(&mut chars);
+    if chars.peek() == Some(&'}') {
+        chars.next();
+        skip_ws(&mut chars);
+        if chars.next().is_some() {
+            return Err("trailing characters after `}`".into());
+        }
+        return Ok(out);
+    }
+    loop {
+        skip_ws(&mut chars);
+        let key = parse_string(&mut chars).map_err(|e| format!("key: {e}"))?;
+        skip_ws(&mut chars);
+        if chars.next() != Some(':') {
+            return Err(format!("expected `:` after key `{key}`"));
+        }
+        skip_ws(&mut chars);
+        let value = match chars.peek() {
+            Some('"') => JsonValue::Str(parse_string(&mut chars)?),
+            Some('t') | Some('f') => {
+                let mut word = String::new();
+                while matches!(chars.peek(), Some(c) if c.is_ascii_alphabetic()) {
+                    word.push(chars.next().unwrap());
+                }
+                match word.as_str() {
+                    "true" => JsonValue::Bool(true),
+                    "false" => JsonValue::Bool(false),
+                    other => return Err(format!("bad literal `{other}`")),
+                }
+            }
+            Some(c) if c.is_ascii_digit() || *c == '-' => {
+                let mut num = String::new();
+                if chars.peek() == Some(&'-') {
+                    num.push(chars.next().unwrap());
+                }
+                while matches!(chars.peek(), Some(c) if c.is_ascii_digit()) {
+                    num.push(chars.next().unwrap());
+                }
+                JsonValue::Int(
+                    num.parse::<i64>().map_err(|_| format!("bad integer `{num}`"))?,
+                )
+            }
+            other => return Err(format!("unsupported value start {other:?} for key `{key}`")),
+        };
+        if out.insert(key.clone(), value).is_some() {
+            return Err(format!("duplicate key `{key}`"));
+        }
+        skip_ws(&mut chars);
+        match chars.next() {
+            Some(',') => continue,
+            Some('}') => break,
+            other => return Err(format!("expected `,` or `}}`, got {other:?}")),
+        }
+    }
+    skip_ws(&mut chars);
+    if chars.next().is_some() {
+        return Err("trailing characters after `}`".into());
+    }
+    Ok(out)
+}
+
+/// One parsed request: a launch request plus its fan-out count.
+struct ParsedRequest {
+    req: LaunchRequest,
+    repeat: usize,
+}
+
+fn positive(v: &JsonValue, key: &str) -> Result<usize, String> {
+    match v {
+        JsonValue::Int(i) if *i > 0 => Ok(*i as usize),
+        _ => Err(format!("`{key}` must be a positive integer, got {v:?}")),
+    }
+}
+
+/// Turn one request object into a [`LaunchRequest`] against `base`.
+fn build_request(
+    fields: &BTreeMap<String, JsonValue>,
+    base: &SimConfig,
+) -> Result<ParsedRequest, String> {
+    let mut cfg = base.clone();
+    let mut solution = Solution::Hw;
+    let mut label: Option<String> = None;
+    let mut repeat = 1usize;
+    let mut budget: Option<u64> = None;
+    let mut retries: Option<u32> = None;
+    let mut kernel_name: Option<String> = None;
+
+    for (key, value) in fields {
+        match key.as_str() {
+            "kernel" => match value {
+                JsonValue::Str(s) => kernel_name = Some(s.clone()),
+                _ => return Err("`kernel` must be a string".into()),
+            },
+            "solution" => match value {
+                JsonValue::Str(s) => {
+                    solution = Solution::parse(s)
+                        .ok_or_else(|| format!("unknown solution `{s}` (hw|sw)"))?;
+                }
+                _ => return Err("`solution` must be a string".into()),
+            },
+            "label" => match value {
+                JsonValue::Str(s) => label = Some(s.clone()),
+                _ => return Err("`label` must be a string".into()),
+            },
+            "repeat" => repeat = positive(value, "repeat")?,
+            "nt" => cfg.nt = positive(value, "nt")?,
+            "nw" => cfg.nw = positive(value, "nw")?,
+            "cores" => cfg.num_cores = positive(value, "cores")?,
+            "engine" => match value {
+                JsonValue::Str(s) => {
+                    cfg.engine = match s.as_str() {
+                        "fast" => EngineMode::FastForward,
+                        "reference" => EngineMode::Reference,
+                        other => return Err(format!("unknown engine `{other}`")),
+                    };
+                }
+                _ => return Err("`engine` must be a string".into()),
+            },
+            "budget" => budget = Some(positive(value, "budget")? as u64),
+            "retries" => match value {
+                JsonValue::Int(i) if *i >= 0 => retries = Some(*i as u32),
+                _ => return Err("`retries` must be a non-negative integer".into()),
+            },
+            other => return Err(format!("unknown request field `{other}`")),
+        }
+    }
+
+    let name = kernel_name.ok_or("missing required field `kernel`")?;
+    let bench = kernels::by_name(&name)
+        .ok_or_else(|| format!("unknown kernel `{name}` (see `vortex-warp list`)"))?;
+    cfg.validate().map_err(|e| format!("config: {e}"))?;
+
+    let mut req = LaunchRequest::new(solution, &bench.kernel)
+        .config(&cfg)
+        .inputs(&bench.inputs);
+    if let Some(label) = label {
+        req = req.label(label);
+    }
+    if let Some(budget) = budget {
+        req = req.budget(budget);
+    }
+    if let Some(retries) = retries {
+        req = req.retries(retries);
+    }
+    Ok(ParsedRequest { req, repeat })
+}
+
+/// A cloneable writer handle so the [`JsonlSink`] (owned by the queue)
+/// and the server (which flushes after shutdown) can share one output.
+struct SharedWriter<W: Write>(Arc<Mutex<W>>);
+
+impl<W: Write> Clone for SharedWriter<W> {
+    fn clone(&self) -> Self {
+        SharedWriter(Arc::clone(&self.0))
+    }
+}
+
+impl<W: Write> Write for SharedWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().expect("serve writer lock").write(buf)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.0.lock().expect("serve writer lock").flush()
+    }
+}
+
+/// Run the JSON-lines service: read request objects from `input` (one
+/// per line; blank lines skipped), execute them on a work-stealing
+/// [`WorkQueue`] against `opts.base`, and stream one result line per
+/// request to `output` in request order (the [`JsonlSink`] format).
+/// Returns every report plus the queue summary once `input` hits EOF
+/// and the queue drains.
+///
+/// Errors returned are I/O errors on `input` only; malformed request
+/// lines become in-band `"ok":false` result lines and the stream keeps
+/// going.
+pub fn serve<R: BufRead, W: Write + Send + 'static>(
+    input: R,
+    output: W,
+    opts: &ServeOptions,
+) -> std::io::Result<(Vec<LaunchReport>, QueueSummary)> {
+    let writer = SharedWriter(Arc::new(Mutex::new(output)));
+    let sink = JsonlSink::new(writer.clone());
+    let mut queue = WorkQueue::with_sink(
+        QueueConfig { threads: opts.threads, cache: opts.cache },
+        Box::new(sink),
+    );
+    for line in input.lines() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        match parse_flat_object(trimmed).and_then(|f| build_request(&f, &opts.base)) {
+            Ok(parsed) => {
+                for i in 0..parsed.repeat {
+                    let req = if parsed.repeat > 1 {
+                        parsed.req.clone().label(format!("{}#{i}", parsed.req.label))
+                    } else {
+                        parsed.req.clone()
+                    };
+                    queue.submit(req);
+                }
+            }
+            Err(e) => {
+                queue.submit_error("request-error", format!("request: {e}"));
+            }
+        }
+    }
+    let (reports, summary) = queue.shutdown();
+    let mut writer = writer;
+    writer.flush()?;
+    Ok((reports, summary))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    #[test]
+    fn flat_object_parser_handles_the_request_shapes() {
+        let f = parse_flat_object(
+            r#"{"kernel":"reduce","repeat":3,"nt":16,"deep":true,"label":"a b"}"#,
+        )
+        .unwrap();
+        assert_eq!(f["kernel"], JsonValue::Str("reduce".into()));
+        assert_eq!(f["repeat"], JsonValue::Int(3));
+        assert_eq!(f["deep"], JsonValue::Bool(true));
+        assert_eq!(f["label"], JsonValue::Str("a b".into()));
+        assert!(parse_flat_object("{}").unwrap().is_empty());
+        assert!(parse_flat_object(r#"{"a":"A\n"}"#).unwrap()["a"] == JsonValue::Str("A\n".into()));
+
+        for bad in [
+            "",
+            "[1]",
+            "{\"a\":}",
+            "{\"a\":1,}",
+            "{\"a\":1}x",
+            "{\"a\":1,\"a\":2}",
+            "{\"a\":1.5}",
+            "{'a':1}",
+        ] {
+            assert!(parse_flat_object(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn unknown_fields_and_kernels_are_rejected() {
+        let base = SimConfig::paper();
+        let f = parse_flat_object(r#"{"kernel":"reduce","budgets":5}"#).unwrap();
+        let e = build_request(&f, &base).unwrap_err();
+        assert!(e.contains("unknown request field `budgets`"), "{e}");
+        let f = parse_flat_object(r#"{"kernel":"nope"}"#).unwrap();
+        assert!(build_request(&f, &base).unwrap_err().contains("unknown kernel"));
+        let f = parse_flat_object(r#"{"solution":"hw"}"#).unwrap();
+        assert!(build_request(&f, &base).unwrap_err().contains("missing required field"));
+    }
+
+    #[test]
+    fn serve_streams_results_and_survives_malformed_lines() {
+        let requests = "\
+            {\"kernel\":\"reduce\",\"solution\":\"hw\",\"label\":\"r-hw\"}\n\
+            this is not json\n\
+            \n\
+            {\"kernel\":\"reduce\",\"solution\":\"sw\",\"label\":\"r-sw\"}\n";
+        let out: Vec<u8> = Vec::new();
+        let shared = Arc::new(Mutex::new(out));
+        struct Tee(Arc<Mutex<Vec<u8>>>);
+        impl Write for Tee {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().write(buf)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let (reports, summary) = serve(
+            BufReader::new(requests.as_bytes()),
+            Tee(Arc::clone(&shared)),
+            &ServeOptions { threads: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(reports.len(), 3, "blank line skipped, bad line kept");
+        assert!(reports[0].result.is_ok());
+        assert!(reports[1].result.is_err());
+        assert!(reports[2].result.is_ok());
+        assert_eq!(summary.batch.launches, 3);
+        assert_eq!(summary.batch.ok, 2);
+
+        let bytes = shared.lock().unwrap().clone();
+        let text = String::from_utf8(bytes).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("{\"index\":0,\"label\":\"r-hw\""), "{}", lines[0]);
+        assert!(lines[1].contains("\"ok\":false"), "{}", lines[1]);
+        assert!(lines[1].contains("request:"), "{}", lines[1]);
+        assert!(lines[2].starts_with("{\"index\":2,\"label\":\"r-sw\""), "{}", lines[2]);
+    }
+
+    #[test]
+    fn repeat_fans_out_with_distinct_labels() {
+        let requests = "{\"kernel\":\"vote\",\"repeat\":3,\"label\":\"v\"}\n";
+        let (reports, summary) = serve(
+            BufReader::new(requests.as_bytes()),
+            Vec::new(),
+            &ServeOptions { threads: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(reports.len(), 3);
+        let labels: Vec<&str> = reports.iter().map(|r| r.label.as_str()).collect();
+        assert_eq!(labels, ["v#0", "v#1", "v#2"]);
+        assert!(reports.iter().all(|r| r.result.is_ok()));
+        // Three identical launches share one compiled image.
+        assert!(summary.cache.hits >= 1, "{}", summary.render());
+    }
+}

@@ -4,16 +4,20 @@
 //! `on_verdict` callback so a million-launch campaign never buffers
 //! more than a chunk. This module generalizes that pattern for the
 //! batch coordinator: a [`MetricsSink`] receives one [`LaunchRecord`]
-//! per launch **as launches retire**, in strict job-index order, so a
-//! consumer (a JSON-lines file, a live dashboard, a test probe) sees a
-//! deterministic stream regardless of thread count or scheduling.
+//! per launch **as launches retire**, in strict request-index order,
+//! so a consumer (a JSON-lines file, a live dashboard, a test probe)
+//! sees a deterministic stream regardless of thread count or
+//! scheduling.
 //!
 //! [`launch_batch_streamed`] is the engine;
 //! [`launch_batch_isolated`](super::launch_batch_isolated) is now a
 //! thin wrapper over it with a [`NullSink`]. [`JsonlSink`] emits the
 //! machine-readable protocol (one JSON object per line, documented in
 //! the README), and [`BatchSummary`] reports batch throughput
-//! (launches/sec) and host-thread utilization.
+//! (launches/sec) and host-thread utilization. The reorder buffer that
+//! enforces the ordering guarantee ([`ReorderBuf`]) is shared with the
+//! persistent [`queue`](super::queue), which retires through the same
+//! path.
 
 use std::collections::BTreeMap;
 use std::io::Write;
@@ -21,13 +25,15 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use super::{launch_isolated, BatchJob, BatchPolicy, LaunchError, LaunchReport, LaunchResult};
+use super::cache::KernelCache;
+use super::{launch_isolated_with, BatchPolicy, LaunchError, LaunchReport, LaunchRequest,
+    LaunchResult};
 
 /// One retired launch, as seen by a [`MetricsSink`]: identity, cost,
 /// and outcome. Borrowed — records are delivered before the report is
 /// handed back to the caller.
 pub struct LaunchRecord<'a> {
-    /// Job index in the batch (records arrive in this order).
+    /// Request index in the batch (records arrive in this order).
     pub index: usize,
     pub label: &'a str,
     /// Attempts consumed by the isolation layer (1 = first try).
@@ -142,24 +148,37 @@ pub struct BatchSummary {
 }
 
 impl BatchSummary {
+    /// Launch throughput; always finite. An empty batch or a
+    /// sub-tick wall time (both reachable — a zero-job batch retires
+    /// before the clock moves) reports 0.0 instead of NaN/inf, which
+    /// would poison the JSON summary path.
     pub fn launches_per_sec(&self) -> f64 {
         let s = self.wall.as_secs_f64();
-        if s == 0.0 {
-            0.0
+        if self.launches == 0 || !s.is_finite() || s <= 0.0 {
+            return 0.0;
+        }
+        let rate = self.launches as f64 / s;
+        if rate.is_finite() {
+            rate
         } else {
-            self.launches as f64 / s
+            0.0
         }
     }
 
     /// Fraction of the batch's thread-seconds spent inside launches
     /// (0..=1): `busy / (wall * threads)`. Low utilization with many
     /// threads means the batch is too small or too skewed to fan out.
+    /// Guarded like [`Self::launches_per_sec`] — never NaN/inf.
     pub fn host_utilization(&self) -> f64 {
         let cap = self.wall.as_secs_f64() * self.threads as f64;
-        if cap == 0.0 {
-            0.0
+        if !cap.is_finite() || cap <= 0.0 {
+            return 0.0;
+        }
+        let u = self.busy.as_secs_f64() / cap;
+        if u.is_finite() {
+            u.min(1.0)
         } else {
-            (self.busy.as_secs_f64() / cap).min(1.0)
+            0.0
         }
     }
 
@@ -177,27 +196,48 @@ impl BatchSummary {
     }
 }
 
-/// Reorder buffer shared by the workers: retired launches park in
-/// `pending` until they form a contiguous prefix, which is flushed to
-/// the sink in strict index order and then moved into `results`.
-struct StreamState<'a> {
+/// Reorder buffer shared by batch and queue workers: retired launches
+/// park in `pending` until they form a contiguous prefix, which is
+/// flushed to the sink in strict index order and then moved into
+/// `results`. The capacity is a hint — the queue retires indices it
+/// hasn't pre-sized for, and `retire` grows to fit.
+pub(crate) struct ReorderBuf {
     next: usize,
     pending: BTreeMap<usize, (LaunchReport, Duration)>,
     results: Vec<Option<LaunchReport>>,
     busy: Duration,
     ok: usize,
-    sink: &'a mut dyn MetricsSink,
 }
 
-impl StreamState<'_> {
-    fn retire(&mut self, index: usize, report: LaunchReport, wall: Duration) {
+impl ReorderBuf {
+    pub(crate) fn new(capacity: usize) -> Self {
+        ReorderBuf {
+            next: 0,
+            pending: BTreeMap::new(),
+            results: (0..capacity).map(|_| None).collect(),
+            busy: Duration::ZERO,
+            ok: 0,
+        }
+    }
+
+    pub(crate) fn retire(
+        &mut self,
+        index: usize,
+        report: LaunchReport,
+        wall: Duration,
+        sink: &mut dyn MetricsSink,
+    ) {
         self.busy += wall;
+        if index >= self.results.len() {
+            self.results.resize_with(index + 1, || None);
+        }
         self.pending.insert(index, (report, wall));
-        while let Some((report, wall)) = self.pending.remove(&self.next) {
+        while self.next < self.results.len() {
+            let Some((report, wall)) = self.pending.remove(&self.next) else { break };
             if report.result.is_ok() {
                 self.ok += 1;
             }
-            self.sink.on_launch(&LaunchRecord {
+            sink.on_launch(&LaunchRecord {
                 index: self.next,
                 label: &report.label,
                 attempts: report.attempts,
@@ -208,13 +248,35 @@ impl StreamState<'_> {
             self.next += 1;
         }
     }
+
+    /// Launches flushed to the sink so far (= length of the retired
+    /// contiguous prefix).
+    pub(crate) fn retired(&self) -> usize {
+        self.next
+    }
+
+    pub(crate) fn ok(&self) -> usize {
+        self.ok
+    }
+
+    pub(crate) fn busy(&self) -> Duration {
+        self.busy
+    }
+
+    pub(crate) fn into_reports(self) -> Vec<LaunchReport> {
+        self.results
+            .into_iter()
+            .map(|r| r.expect("every retired slot is filled"))
+            .collect()
+    }
 }
 
 /// [`launch_batch_isolated`](super::launch_batch_isolated) with a
-/// streaming sink: fan jobs across host threads (each launch under
-/// panic isolation + watchdog), deliver one [`LaunchRecord`] per
-/// launch to `sink` in job-index order as launches retire, and return
-/// the full report vector (job order) plus a [`BatchSummary`].
+/// streaming sink: fan requests across host threads (each launch under
+/// panic isolation + watchdog, sharing one compiled-kernel cache when
+/// `policy.cache` is set), deliver one [`LaunchRecord`] per launch to
+/// `sink` in request-index order as launches retire, and return the
+/// full report vector (request order) plus a [`BatchSummary`].
 ///
 /// Ordering guarantee: the sink sees index 0, then 1, ... — a launch
 /// finishing out of order parks in a reorder buffer until its turn.
@@ -222,12 +284,12 @@ impl StreamState<'_> {
 /// deterministic and makes batch output byte-identical across
 /// `--threads` settings (modulo wall times).
 pub fn launch_batch_streamed(
-    jobs: &[BatchJob],
+    reqs: &[LaunchRequest],
     policy: &BatchPolicy,
     sink: &mut dyn MetricsSink,
 ) -> (Vec<LaunchReport>, BatchSummary) {
     let start = Instant::now();
-    if jobs.is_empty() {
+    if reqs.is_empty() {
         let summary = BatchSummary {
             launches: 0,
             ok: 0,
@@ -242,26 +304,26 @@ pub fn launch_batch_streamed(
     } else {
         policy.threads
     }
-    .min(jobs.len());
+    .min(reqs.len());
+    let cache = if policy.cache { Some(KernelCache::new()) } else { None };
     let next_job = AtomicUsize::new(0);
-    let state = Mutex::new(StreamState {
-        next: 0,
-        pending: BTreeMap::new(),
-        results: (0..jobs.len()).map(|_| None).collect(),
-        busy: Duration::ZERO,
-        ok: 0,
-        sink,
-    });
+    struct Shared<'a> {
+        buf: ReorderBuf,
+        sink: &'a mut dyn MetricsSink,
+    }
+    let state = Mutex::new(Shared { buf: ReorderBuf::new(reqs.len()), sink });
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..workers)
             .map(|_| {
                 s.spawn(|| loop {
                     let i = next_job.fetch_add(1, Ordering::Relaxed);
-                    let Some(job) = jobs.get(i) else { break };
+                    let Some(req) = reqs.get(i) else { break };
                     let t0 = Instant::now();
-                    let report = launch_isolated(job, &policy.isolation);
+                    let report = launch_isolated_with(req, cache.as_ref());
                     let wall = t0.elapsed();
-                    state.lock().expect("stream state lock").retire(i, report, wall);
+                    let mut st = state.lock().expect("stream state lock");
+                    let st = &mut *st;
+                    st.buf.retire(i, report, wall, &mut *st.sink);
                 })
             })
             .collect();
@@ -272,20 +334,15 @@ pub fn launch_batch_streamed(
         }
     });
     let state = state.into_inner().expect("stream state lock");
-    debug_assert_eq!(state.next, jobs.len(), "every record flushed in order");
+    debug_assert_eq!(state.buf.retired(), reqs.len(), "every record flushed in order");
     let summary = BatchSummary {
-        launches: jobs.len(),
-        ok: state.ok,
+        launches: reqs.len(),
+        ok: state.buf.ok(),
         wall: start.elapsed(),
-        busy: state.busy,
+        busy: state.buf.busy(),
         threads: workers,
     };
-    let results = state
-        .results
-        .into_iter()
-        .map(|r| r.expect("every batch slot is filled by its worker"))
-        .collect();
-    (results, summary)
+    (state.buf.into_reports(), summary)
 }
 
 #[cfg(test)]
@@ -294,7 +351,6 @@ mod tests {
     use crate::coordinator::dispatch::Solution;
     use crate::prt::interp::Env;
     use crate::prt::kir::{BinOp, Expr as E, Kernel, ParamDir, Stmt};
-    use crate::sim::SimConfig;
 
     fn copy_kernel() -> Kernel {
         Kernel::new("copy", 2, 32, 8)
@@ -311,13 +367,13 @@ mod tests {
             )])
     }
 
-    fn jobs(n: usize) -> Vec<BatchJob> {
+    fn requests(n: usize) -> Vec<LaunchRequest> {
         let k = copy_kernel();
         let inputs = Env::default().with("src", (0..64).collect());
         (0..n)
             .map(|i| {
                 let sol = if i % 2 == 0 { Solution::Hw } else { Solution::Sw };
-                BatchJob::new(format!("job{i}"), sol, k.clone(), SimConfig::paper(), inputs.clone())
+                LaunchRequest::new(sol, &k).label(format!("job{i}")).inputs(&inputs)
             })
             .collect()
     }
@@ -335,11 +391,11 @@ mod tests {
 
     #[test]
     fn stream_arrives_in_index_order_across_threads() {
-        let jobs = jobs(6);
+        let reqs = requests(6);
         for threads in [1, 3] {
             let mut probe = Probe { seen: Vec::new() };
             let policy = BatchPolicy { threads, ..Default::default() };
-            let (reports, summary) = launch_batch_streamed(&jobs, &policy, &mut probe);
+            let (reports, summary) = launch_batch_streamed(&reqs, &policy, &mut probe);
             assert_eq!(reports.len(), 6);
             let order: Vec<usize> = probe.seen.iter().map(|(i, ..)| *i).collect();
             assert_eq!(order, vec![0, 1, 2, 3, 4, 5], "strict index order at {threads} threads");
@@ -365,10 +421,10 @@ mod tests {
 
     #[test]
     fn jsonl_sink_emits_one_parseable_line_per_launch() {
-        let jobs = jobs(3);
+        let reqs = requests(3);
         let mut sink = JsonlSink::new(Vec::new());
         let policy = BatchPolicy { threads: 2, ..Default::default() };
-        launch_batch_streamed(&jobs, &policy, &mut sink);
+        launch_batch_streamed(&reqs, &policy, &mut sink);
         assert!(sink.error().is_none());
         let out = String::from_utf8(sink.into_inner()).unwrap();
         let lines: Vec<&str> = out.lines().collect();
@@ -415,5 +471,21 @@ mod tests {
         let r = s.render();
         assert!(r.contains("10 launches (9 ok)"), "{r}");
         assert!(r.contains("2 host threads"), "{r}");
+    }
+
+    #[test]
+    fn summary_rates_guard_zero_wall_and_empty_batches() {
+        // Zero wall with nonzero launches: a degenerate-but-reachable
+        // shape (sub-tick clock); must not emit inf into JSON.
+        let s = BatchSummary {
+            launches: 4,
+            ok: 4,
+            wall: Duration::ZERO,
+            busy: Duration::ZERO,
+            threads: 0,
+        };
+        assert_eq!(s.launches_per_sec(), 0.0);
+        assert_eq!(s.host_utilization(), 0.0);
+        assert!(s.render().contains("0.0 launches/s"), "{}", s.render());
     }
 }

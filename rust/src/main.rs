@@ -11,9 +11,13 @@
 //!   batch   --bench <name> ...      streamed isolated batch (PR 7)
 //!   record  --bench <name> --out P  record a machine trace (PR 9)
 //!   replay  --in P                  replay a trace, no functional exec (PR 9)
+//!   serve   [--in P] [--out P]      JSON-lines launch service (PR 10)
 //!
-//! All machine-shaping commands also accept `--engine fast|reference`
-//! and `--inject seed=..,count=..[,window=..][,targets=reg+pred+...]`.
+//! All machine-shaping commands share one flag parser
+//! ([`machine_args`]): `--nt/--nw/--cores/--memhier/--fu/--opc/
+//! --engine/--inject` shape the simulated machine, and
+//! `--threads/--budget/--retries` shape the host-side execution. Every
+//! launch the CLI performs is a `LaunchRequest`.
 
 use std::io::Write as _;
 
@@ -21,8 +25,9 @@ use vortex_warp::area::report::{fig6_layout, table4};
 use vortex_warp::bench_harness::{fig5, tables};
 use vortex_warp::coordinator::campaign::{run_campaign_with, CampaignSpec};
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
+use vortex_warp::coordinator::serve::{serve, ServeOptions};
 use vortex_warp::coordinator::sink::{launch_batch_streamed, JsonlSink, NullSink};
-use vortex_warp::coordinator::{replay_trace, BatchJob, BatchPolicy};
+use vortex_warp::coordinator::{BatchPolicy, LaunchRequest};
 use vortex_warp::kernels;
 use vortex_warp::prt::kir::ParamDir;
 use vortex_warp::runtime::Runtime;
@@ -91,12 +96,28 @@ fn usage() -> ! {
              with no functional execution; Metrics are bit-identical\n\
              to the recording run (--metrics-out writes them for\n\
              byte-compare in CI); --nt/--nw must match the recording\n\
+           serve [--in PATH] [--out PATH] [--stats PATH] [--no-cache]\n\
+               [--jsonl] [machine flags as for `run`]\n\
+             JSON-lines launch service: one request object per input\n\
+             line (default stdin) -> one result line (default stdout),\n\
+             in request order. Requests run on a persistent\n\
+             work-stealing worker pool with a shared compiled-kernel\n\
+             cache (--no-cache disables it). Request schema:\n\
+             {\"kernel\":NAME[,\"solution\":\"hw|sw\"][,\"label\":L]\n\
+              [,\"repeat\":N][,\"nt\":N][,\"nw\":N][,\"cores\":N]\n\
+              [,\"engine\":\"fast|reference\"][,\"budget\":C]\n\
+              [,\"retries\":N]}. Malformed lines yield in-band error\n\
+             lines and never kill the stream; --stats writes the\n\
+             throughput/steal/cache-hit summary as one JSON object\n\
            list                         list benchmarks\n\
          \n\
-         shared machine flags:\n\
+         shared machine flags (one parser for every command above):\n\
            --engine fast|reference      simulation engine (default fast)\n\
            --inject seed=S,count=K[,window=W][,targets=reg+pred+smem+l1tag]\n\
-             arm deterministic fault injection for this run"
+             arm deterministic fault injection for this run\n\
+           --threads N                  host worker threads (0 = all)\n\
+           --budget CYCLES              per-launch watchdog budget\n\
+           --retries N                  bounded retry for panics/timeouts"
     );
     std::process::exit(2);
 }
@@ -214,6 +235,45 @@ fn config_from(args: &[String]) -> SimConfig {
     cfg
 }
 
+/// The one machine/host argument parser shared by every launching
+/// subcommand (`run`/`batch`/`campaign`/`record`/`replay`/`profile`/
+/// `serve`): the simulated machine from [`config_from`] plus the
+/// host-side execution knobs that map onto `LaunchRequest` options.
+struct MachineArgs {
+    cfg: SimConfig,
+    /// `--threads`: host worker threads (0 = all available).
+    threads: usize,
+    /// `--budget`: per-launch watchdog cycle budget, if given.
+    budget: Option<u64>,
+    /// `--retries`: bounded retry for panics/timeouts.
+    retries: u32,
+}
+
+fn machine_args(args: &[String]) -> MachineArgs {
+    MachineArgs {
+        cfg: config_from(args),
+        threads: flag_value(args, "--threads")
+            .map(|n| n.parse().expect("--threads"))
+            .unwrap_or(0),
+        budget: flag_value(args, "--budget").map(|n| n.parse().expect("--budget")),
+        retries: flag_value(args, "--retries")
+            .map(|n| n.parse().expect("--retries"))
+            .unwrap_or(0),
+    }
+}
+
+/// Build the `LaunchRequest` for one benchmark under the parsed args.
+fn request_for(sol: Solution, b: &kernels::Benchmark, m: &MachineArgs) -> LaunchRequest {
+    let mut req = LaunchRequest::new(sol, &b.kernel)
+        .config(&m.cfg)
+        .inputs(&b.inputs)
+        .retries(m.retries);
+    if let Some(budget) = m.budget {
+        req = req.budget(budget);
+    }
+    req
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
@@ -239,16 +299,16 @@ fn main() {
             let sol = flag_value(&args, "--solution")
                 .map(|s| Solution::parse(&s).expect("--solution hw|sw"))
                 .unwrap_or(Solution::Hw);
-            let cfg = config_from(&args);
+            let m = machine_args(&args);
             let b = kernels::by_name(&name).unwrap_or_else(|| {
                 eprintln!("unknown benchmark `{name}` (try `vortex-warp list`)");
                 std::process::exit(2);
             });
-            let r = dispatch(sol, &b.kernel, &cfg, &b.inputs).unwrap_or_else(|e| {
+            let r = request_for(sol, &b, &m).launch().unwrap_or_else(|e| {
                 eprintln!("launch failed: {e}");
                 std::process::exit(1);
             });
-            if cfg.fault.enabled() {
+            if m.cfg.fault.enabled() {
                 // Under injection a corrupted output is a legitimate
                 // observation (SDC), not a harness failure.
                 let verdict = if b.check(&r.env).is_ok() { "OK" } else { "CORRUPTED" };
@@ -268,16 +328,16 @@ fn main() {
             let sol = flag_value(&args, "--solution")
                 .map(|s| Solution::parse(&s).expect("--solution hw|sw"))
                 .unwrap_or(Solution::Hw);
-            let mut cfg = config_from(&args);
+            let mut m = machine_args(&args);
             let interval = flag_value(&args, "--interval")
                 .map(|n| n.parse().expect("--interval"))
                 .unwrap_or(64);
-            cfg.telemetry = TelemetryConfig::sampled(interval);
+            m.cfg.telemetry = TelemetryConfig::sampled(interval);
             let b = kernels::by_name(&name).unwrap_or_else(|| {
                 eprintln!("unknown benchmark `{name}` (try `vortex-warp list`)");
                 std::process::exit(2);
             });
-            let r = dispatch(sol, &b.kernel, &cfg, &b.inputs).unwrap_or_else(|e| {
+            let r = request_for(sol, &b, &m).launch().unwrap_or_else(|e| {
                 eprintln!("launch failed: {e}");
                 std::process::exit(1);
             });
@@ -313,7 +373,7 @@ fn main() {
                 eprintln!("unknown benchmark `{name}` (try `vortex-warp list`)");
                 std::process::exit(2);
             });
-            let cfg = config_from(&args);
+            let m = machine_args(&args);
             let sols: Vec<Solution> = match flag_value(&args, "--solution").as_deref() {
                 None | Some("both") => vec![Solution::Hw, Solution::Sw],
                 Some(s) => vec![Solution::parse(s).expect("--solution hw|sw|both")],
@@ -324,21 +384,13 @@ fn main() {
             let mut jobs = Vec::with_capacity(repeat * sols.len());
             for i in 0..repeat {
                 for &sol in &sols {
-                    jobs.push(BatchJob::new(
-                        format!("{name}[{}]#{i}", sol.name()),
-                        sol,
-                        b.kernel.clone(),
-                        cfg.clone(),
-                        b.inputs.clone(),
-                    ));
+                    jobs.push(
+                        request_for(sol, &b, &m).label(format!("{name}[{}]#{i}", sol.name())),
+                    );
                 }
             }
-            let policy = BatchPolicy {
-                threads: flag_value(&args, "--threads")
-                    .map(|n| n.parse().expect("--threads"))
-                    .unwrap_or(0),
-                ..Default::default()
-            };
+            let policy =
+                BatchPolicy { threads: m.threads, cache: !has_flag(&args, "--no-cache") };
             let jsonl_path = flag_value(&args, "--jsonl");
             let (reports, summary) = match &jsonl_path {
                 Some(path) => {
@@ -438,7 +490,8 @@ fn main() {
                 eprintln!("unknown benchmark `{name}` (try `vortex-warp list`)");
                 std::process::exit(2);
             });
-            let mut base = config_from(&args);
+            let m = machine_args(&args);
+            let mut base = m.cfg.clone();
             // The campaign owns injection; a stray --inject on the
             // base config would be ignored anyway, so keep it clean.
             base.fault = FaultConfig::legacy();
@@ -465,15 +518,9 @@ fn main() {
                 launches: flag_value(&args, "--launches")
                     .map(|n| n.parse().expect("--launches"))
                     .unwrap_or(100),
-                threads: flag_value(&args, "--threads")
-                    .map(|n| n.parse().expect("--threads"))
-                    .unwrap_or(0),
-                budget: flag_value(&args, "--budget")
-                    .map(|n| n.parse().expect("--budget"))
-                    .unwrap_or(0),
-                retries: flag_value(&args, "--retries")
-                    .map(|n| n.parse().expect("--retries"))
-                    .unwrap_or(0),
+                threads: m.threads,
+                budget: m.budget.unwrap_or(0),
+                retries: m.retries,
             };
             let stream = has_flag(&args, "--stream");
             let jsonl_path = flag_value(&args, "--jsonl");
@@ -543,11 +590,11 @@ fn main() {
             let sol = flag_value(&args, "--solution")
                 .map(|s| Solution::parse(&s).expect("--solution hw|sw"))
                 .unwrap_or(Solution::Hw);
-            let mut cfg = config_from(&args);
-            cfg.record = TraceConfig::recording();
+            let mut m = machine_args(&args);
+            m.cfg.record = TraceConfig::recording();
             // Re-validate: the recorder's own gate (single core, no
             // faults, no sampling) only engages once `record` is set.
-            cfg.validate().unwrap_or_else(|e| {
+            m.cfg.validate().unwrap_or_else(|e| {
                 eprintln!("invalid configuration for recording: {e}");
                 std::process::exit(2);
             });
@@ -555,7 +602,7 @@ fn main() {
                 eprintln!("unknown benchmark `{name}` (try `vortex-warp list`)");
                 std::process::exit(2);
             });
-            let r = dispatch(sol, &b.kernel, &cfg, &b.inputs).unwrap_or_else(|e| {
+            let r = request_for(sol, &b, &m).launch().unwrap_or_else(|e| {
                 eprintln!("launch failed: {e}");
                 std::process::exit(1);
             });
@@ -571,7 +618,7 @@ fn main() {
         }
         Some("replay") => {
             let input = flag_value(&args, "--in").unwrap_or_else(|| usage());
-            let cfg = config_from(&args);
+            let m = machine_args(&args);
             let bytes = std::fs::read(&input).unwrap_or_else(|e| {
                 eprintln!("cannot read {input}: {e}");
                 std::process::exit(2);
@@ -580,7 +627,11 @@ fn main() {
                 eprintln!("cannot parse {input}: {e}");
                 std::process::exit(1);
             });
-            let r = replay_trace(&cfg, trace).unwrap_or_else(|e| {
+            let mut req = LaunchRequest::replay(trace).config(&m.cfg).label(input.clone());
+            if let Some(budget) = m.budget {
+                req = req.budget(budget);
+            }
+            let r = req.launch().unwrap_or_else(|e| {
                 eprintln!("replay failed: {e}");
                 std::process::exit(1);
             });
@@ -591,6 +642,54 @@ fn main() {
                     std::process::exit(1);
                 });
                 eprintln!("metrics written to {path}");
+            }
+        }
+        Some("serve") => {
+            // --jsonl is accepted for symmetry with batch/campaign,
+            // but JSON-lines is the only protocol anyway.
+            let m = machine_args(&args);
+            let opts = ServeOptions {
+                base: m.cfg,
+                threads: m.threads,
+                cache: !has_flag(&args, "--no-cache"),
+            };
+            let input: Box<dyn std::io::BufRead> = match flag_value(&args, "--in") {
+                Some(path) => {
+                    let f = std::fs::File::open(&path).unwrap_or_else(|e| {
+                        eprintln!("cannot open {path}: {e}");
+                        std::process::exit(2);
+                    });
+                    Box::new(std::io::BufReader::new(f))
+                }
+                None => Box::new(std::io::BufReader::new(std::io::stdin())),
+            };
+            let output: Box<dyn std::io::Write + Send> = match flag_value(&args, "--out") {
+                Some(path) => {
+                    let f = std::fs::File::create(&path).unwrap_or_else(|e| {
+                        eprintln!("cannot create {path}: {e}");
+                        std::process::exit(2);
+                    });
+                    Box::new(std::io::BufWriter::new(f))
+                }
+                None => Box::new(std::io::stdout()),
+            };
+            let (reports, summary) = serve(input, output, &opts).unwrap_or_else(|e| {
+                eprintln!("serve: {e}");
+                std::process::exit(1);
+            });
+            let failures = reports.iter().filter(|r| r.result.is_err()).count();
+            eprintln!("{}", summary.render());
+            if failures > 0 {
+                // Failures travel in-band as `"ok":false` result
+                // lines; the service itself completed.
+                eprintln!("{failures} request(s) failed (see result stream)");
+            }
+            if let Some(path) = flag_value(&args, "--stats") {
+                std::fs::write(&path, format!("{}\n", summary.to_json())).unwrap_or_else(|e| {
+                    eprintln!("cannot write {path}: {e}");
+                    std::process::exit(1);
+                });
+                eprintln!("stats written to {path}");
             }
         }
         Some("list") => {

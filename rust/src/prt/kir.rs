@@ -117,7 +117,7 @@ impl WarpFn {
 }
 
 /// Expressions. All values are `i32`.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq, Hash)]
 pub enum Expr {
     Const(i32),
     /// Thread-local scalar.
@@ -192,7 +192,7 @@ impl Expr {
 }
 
 /// Statements.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq, Hash)]
 pub enum Stmt {
     /// `local = expr` (declares on first assignment).
     Assign(&'static str, Expr),
@@ -238,7 +238,7 @@ impl Stmt {
 }
 
 /// Array parameter direction (for launch plumbing and validation).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ParamDir {
     In,
     Out,
@@ -246,7 +246,7 @@ pub enum ParamDir {
 }
 
 /// An array parameter: name + element count + direction.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Hash)]
 pub struct ArrayParam {
     pub name: &'static str,
     pub len: usize,
@@ -254,14 +254,14 @@ pub struct ArrayParam {
 }
 
 /// A shared-memory array declaration (per block).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Hash)]
 pub struct SharedDecl {
     pub name: &'static str,
     pub len: usize,
 }
 
 /// A KIR kernel.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Hash)]
 pub struct Kernel {
     pub name: &'static str,
     /// Software threads per block.

@@ -333,7 +333,7 @@ impl Core {
     /// reset. Subsequent stepping feeds the timing model from the
     /// trace: no instructions are fetched or executed and no register
     /// data is written. The trace must have been recorded under the
-    /// same machine geometry (the coordinator's `replay_trace` checks
+    /// same machine geometry (the coordinator's replay launch checks
     /// this up front and reports a friendly error).
     pub fn load_trace(&mut self, trace: KernelTrace) {
         assert_eq!(

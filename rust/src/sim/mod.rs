@@ -124,7 +124,7 @@ impl Gpu {
     /// Load a recorded kernel trace (`sim/tracefmt`) for replay on
     /// core 0. Replay is single-core by construction (recording is
     /// too — `SimConfig::validate` rejects `num_cores > 1`); the
-    /// coordinator's `replay_trace` validates geometry before calling
+    /// coordinator's replay launch path validates geometry before calling
     /// this.
     pub fn load_trace(&mut self, trace: KernelTrace) {
         self.cores[0].load_trace(trace);

@@ -26,7 +26,7 @@
 //! (both sides empty), structurally for the sampled ones.
 
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
-use vortex_warp::coordinator::{launch_batch, launch_batch_isolated, BatchJob, BatchPolicy};
+use vortex_warp::coordinator::{launch_batch, launch_batch_isolated, BatchPolicy, LaunchRequest};
 use vortex_warp::isa::asm::regs::*;
 use vortex_warp::isa::{csr, Asm};
 use vortex_warp::kernels;
@@ -386,17 +386,14 @@ fn multicore_timeout_uses_gpu_level_clock() {
 #[test]
 fn launch_batch_is_deterministic_and_matches_sequential() {
     let base = SimConfig::paper();
-    let jobs: Vec<BatchJob> = kernels::all()
+    let jobs: Vec<LaunchRequest> = kernels::all()
         .into_iter()
         .flat_map(|b| {
             [Solution::Hw, Solution::Sw].map(|sol| {
-                BatchJob::new(
-                    format!("{}[{}]", b.name, sol.name()),
-                    sol,
-                    b.kernel.clone(),
-                    base.clone(),
-                    b.inputs.clone(),
-                )
+                LaunchRequest::new(sol, &b.kernel)
+                    .label(format!("{}[{}]", b.name, sol.name()))
+                    .config(&base)
+                    .inputs(&b.inputs)
             })
         })
         .collect();
@@ -408,7 +405,7 @@ fn launch_batch_is_deterministic_and_matches_sequential() {
         let a = a.as_ref().unwrap_or_else(|e| panic!("{}: {e}", job.label));
         let b = b.as_ref().unwrap_or_else(|e| panic!("{}: {e}", job.label));
         assert_eq!(a.metrics, b.metrics, "{}: batch not deterministic", job.label);
-        let seq = dispatch(job.solution, &job.kernel, &job.cfg, &job.inputs).unwrap();
+        let seq = job.launch().unwrap();
         assert_eq!(a.metrics, seq.metrics, "{}: batch != sequential", job.label);
         for (name, arr) in &seq.env.arrays {
             assert_eq!(a.env.get(name), arr.as_slice(), "{}: array `{name}`", job.label);
@@ -424,18 +421,15 @@ fn batch_telemetry_is_identical_across_thread_counts() {
     // both match a sequential dispatch.
     let mut cfg = SimConfig::paper();
     cfg.telemetry = TelemetryConfig::sampled(32);
-    let jobs: Vec<BatchJob> = kernels::all()
+    let jobs: Vec<LaunchRequest> = kernels::all()
         .into_iter()
         .take(3)
         .flat_map(|b| {
             [Solution::Hw, Solution::Sw].map(|sol| {
-                BatchJob::new(
-                    format!("{}[{}]", b.name, sol.name()),
-                    sol,
-                    b.kernel.clone(),
-                    cfg.clone(),
-                    b.inputs.clone(),
-                )
+                LaunchRequest::new(sol, &b.kernel)
+                    .label(format!("{}[{}]", b.name, sol.name()))
+                    .config(&cfg)
+                    .inputs(&b.inputs)
             })
         })
         .collect();
@@ -446,7 +440,7 @@ fn batch_telemetry_is_identical_across_thread_counts() {
         let b = b.result.as_ref().unwrap_or_else(|e| panic!("{}: {e}", job.label));
         assert!(!a.telemetry.is_empty(), "{}: telemetry enabled", job.label);
         assert_eq!(a.telemetry, b.telemetry, "{}: telemetry differs across threads", job.label);
-        let seq = dispatch(job.solution, &job.kernel, &job.cfg, &job.inputs).unwrap();
+        let seq = job.launch().unwrap();
         assert_eq!(a.telemetry, seq.telemetry, "{}: batch != sequential telemetry", job.label);
     }
 }

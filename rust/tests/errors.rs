@@ -8,9 +8,7 @@
 //! budgets, bounded retry, and per-launch panic containment.
 
 use vortex_warp::coordinator::dispatch::Solution;
-use vortex_warp::coordinator::{
-    launch_batch_isolated, launch_isolated, BatchJob, BatchPolicy, IsolationPolicy, LaunchError,
-};
+use vortex_warp::coordinator::{launch_batch_isolated, BatchPolicy, LaunchError, LaunchRequest};
 use vortex_warp::isa::asm::regs::*;
 use vortex_warp::isa::{csr, Asm, ShflMode, VoteMode};
 use vortex_warp::prt::interp::Env;
@@ -200,9 +198,13 @@ fn watchdog_timeout_is_retried_within_bounds_on_both_engines() {
     // class), and the final report carries the exact budget with
     // attempts == retries + 1.
     for cfg in engines(&SimConfig::paper()) {
-        let job = BatchJob::new("wd", Solution::Hw, copy_kernel(), cfg.clone(), copy_inputs());
-        let policy = IsolationPolicy { max_cycles: 50, retries: 2 };
-        let report = launch_isolated(&job, &policy);
+        let report = LaunchRequest::new(Solution::Hw, &copy_kernel())
+            .label("wd")
+            .config(&cfg)
+            .inputs(&copy_inputs())
+            .budget(50)
+            .retries(2)
+            .launch_isolated();
         assert_eq!(report.attempts, 3, "{:?}", cfg.engine);
         match report.result {
             Err(LaunchError::Sim(CoreError { err: SimError::Timeout { cycles }, .. })) => {
@@ -222,10 +224,16 @@ fn one_poisoned_launch_does_not_suppress_its_siblings() {
     for cfg in engines(&SimConfig::paper()) {
         let mut poisoned = cfg.clone();
         poisoned.fu.issue_width = 0;
+        let req = |label: &str, sol, c: &SimConfig| {
+            LaunchRequest::new(sol, &copy_kernel())
+                .label(label)
+                .config(c)
+                .inputs(&copy_inputs())
+        };
         let jobs = vec![
-            BatchJob::new("good-0", Solution::Hw, copy_kernel(), cfg.clone(), copy_inputs()),
-            BatchJob::new("poisoned", Solution::Hw, copy_kernel(), poisoned, copy_inputs()),
-            BatchJob::new("good-1", Solution::Sw, copy_kernel(), cfg.clone(), copy_inputs()),
+            req("good-0", Solution::Hw, &cfg),
+            req("poisoned", Solution::Hw, &poisoned),
+            req("good-1", Solution::Sw, &cfg),
         ];
         let reports = launch_batch_isolated(&jobs, &BatchPolicy::default());
         assert_eq!(reports.len(), 3);
@@ -261,14 +269,11 @@ fn deterministic_errors_are_never_retried() {
     }
     // ...and through the coordinator a deterministic failure (here a
     // BadInput: missing `src`) consumes exactly one attempt.
-    let job = BatchJob::new(
-        "missing-input",
-        Solution::Hw,
-        copy_kernel(),
-        SimConfig::paper(),
-        Env::default(),
-    );
-    let report = launch_isolated(&job, &IsolationPolicy { max_cycles: 1_000_000, retries: 5 });
+    let report = LaunchRequest::new(Solution::Hw, &copy_kernel())
+        .label("missing-input")
+        .budget(1_000_000)
+        .retries(5)
+        .launch_isolated();
     assert_eq!(report.attempts, 1, "deterministic errors must not burn retries");
     assert!(matches!(report.result, Err(LaunchError::BadInput(_))), "{:?}", report.result);
 }

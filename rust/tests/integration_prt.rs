@@ -5,7 +5,8 @@
 //!   3. the SW path (PR transformation → scalar codegen → baseline
 //!      core).
 
-use vortex_warp::coordinator::{run_hw, run_sw};
+use vortex_warp::coordinator::dispatch::Solution;
+use vortex_warp::coordinator::LaunchRequest;
 use vortex_warp::prt::interp::{self, Env};
 use vortex_warp::prt::kir::Expr as E;
 use vortex_warp::prt::kir::*;
@@ -13,8 +14,12 @@ use vortex_warp::sim::SimConfig;
 
 fn check_all_agree(k: &Kernel, inputs: &Env) {
     let oracle = interp::run(k, inputs).expect("interpreter");
-    let hw = run_hw(k, &SimConfig::paper(), inputs).expect("HW path");
-    let sw = run_sw(k, &SimConfig::baseline(), inputs).expect("SW path");
+    let hw = LaunchRequest::new(Solution::Hw, k).inputs(inputs).launch().expect("HW path");
+    let sw = LaunchRequest::new(Solution::Sw, k)
+        .config(&SimConfig::baseline())
+        .inputs(inputs)
+        .launch()
+        .expect("SW path");
     for p in &k.params {
         if p.dir == ParamDir::In {
             continue;

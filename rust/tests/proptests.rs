@@ -6,7 +6,8 @@
 //!  * simulator invariants (retired instruction count is
 //!    scheduler-policy independent).
 
-use vortex_warp::coordinator::{run_hw, run_sw};
+use vortex_warp::coordinator::dispatch::Solution;
+use vortex_warp::coordinator::LaunchRequest;
 use vortex_warp::isa::{self, asm::regs, decode, encode, Instr};
 use vortex_warp::prt::interp::{self, Env};
 use vortex_warp::prt::kir::Expr as E;
@@ -238,9 +239,15 @@ fn prop_three_executors_agree_on_random_kernels() {
         random_kernel,
         |(k, inputs)| {
             let oracle = interp::run(k, inputs).map_err(|e| format!("interp: {e}"))?;
-            let hw = run_hw(k, &SimConfig::paper(), inputs).map_err(|e| format!("hw: {e}"))?;
-            let sw =
-                run_sw(k, &SimConfig::baseline(), inputs).map_err(|e| format!("sw: {e}"))?;
+            let hw = LaunchRequest::new(Solution::Hw, k)
+                .inputs(inputs)
+                .launch()
+                .map_err(|e| format!("hw: {e}"))?;
+            let sw = LaunchRequest::new(Solution::Sw, k)
+                .config(&SimConfig::baseline())
+                .inputs(inputs)
+                .launch()
+                .map_err(|e| format!("sw: {e}"))?;
             if oracle.get("out") != hw.env.get("out") {
                 return Err(format!(
                     "HW mismatch\nkernel:\n{k}\noracle: {:?}\nhw:     {:?}",
@@ -277,8 +284,10 @@ fn prop_retired_instrs_independent_of_scheduler_policy() {
             rr.sched = SchedPolicy::RoundRobin;
             let mut gto = SimConfig::paper();
             gto.sched = SchedPolicy::Gto;
-            let a = run_hw(k, &rr, inputs).map_err(|e| format!("rr: {e}"))?;
-            let b = run_hw(k, &gto, inputs).map_err(|e| format!("gto: {e}"))?;
+            let hw =
+                |cfg: &SimConfig| LaunchRequest::new(Solution::Hw, k).config(cfg).inputs(inputs);
+            let a = hw(&rr).launch().map_err(|e| format!("rr: {e}"))?;
+            let b = hw(&gto).launch().map_err(|e| format!("gto: {e}"))?;
             if a.metrics.instrs != b.metrics.instrs {
                 return Err(format!(
                     "retired count differs: rr={} gto={}",
@@ -315,10 +324,17 @@ fn prop_crossbar_ablation_changes_timing_not_results() {
             Env::default().with("in", input)
         },
         |inputs| {
-            let with = run_hw(&k, &SimConfig::paper(), inputs).map_err(|e| e.to_string())?;
+            let with = LaunchRequest::new(Solution::Hw, &k)
+                .inputs(inputs)
+                .launch()
+                .map_err(|e| e.to_string())?;
             let mut cfg = SimConfig::paper();
             cfg.crossbar = false;
-            let without = run_hw(&k, &cfg, inputs).map_err(|e| e.to_string())?;
+            let without = LaunchRequest::new(Solution::Hw, &k)
+                .config(&cfg)
+                .inputs(inputs)
+                .launch()
+                .map_err(|e| e.to_string())?;
             if with.env.get("out") != without.env.get("out") {
                 return Err("crossbar ablation changed results".into());
             }

@@ -1,0 +1,234 @@
+//! Service-layer coverage (PR 10): the persistent work-stealing
+//! [`WorkQueue`], the compiled-kernel cache, and the `serve` JSON-lines
+//! protocol. Four invariants are pinned here:
+//!   1. the queue never loses a job — panics and watchdog timeouts
+//!      retire as error reports in submission order, siblings run;
+//!   2. a sweep through the queue matches `launch_batch_isolated`
+//!      verdict-for-verdict (same labels, same outcomes, same metrics);
+//!   3. cache-on and cache-off launches produce byte-identical
+//!      `Metrics` and outputs across kernels × solutions × engines;
+//!   4. malformed `serve` request lines yield in-band error lines
+//!      without killing the stream.
+
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+use vortex_warp::coordinator::cache::KernelCache;
+use vortex_warp::coordinator::dispatch::Solution;
+use vortex_warp::coordinator::queue::{QueueConfig, WorkQueue};
+use vortex_warp::coordinator::serve::{serve, ServeOptions};
+use vortex_warp::coordinator::{
+    launch_batch_isolated, launch_with, BatchPolicy, LaunchError, LaunchRequest,
+};
+use vortex_warp::kernels;
+use vortex_warp::prt::interp::Env;
+use vortex_warp::prt::kir::{BinOp, Expr as E, Kernel, ParamDir, Stmt};
+use vortex_warp::sim::{CoreError, EngineMode, SimConfig, SimError};
+
+fn copy_kernel() -> Kernel {
+    Kernel::new("copy", 2, 32, 8)
+        .param("src", 64, ParamDir::In)
+        .param("dst", 64, ParamDir::Out)
+        .body(vec![Stmt::Store(
+            "dst",
+            E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx),
+            E::b(
+                BinOp::Mul,
+                E::load("src", E::add(E::mul(E::BlockIdx, E::BlockDim), E::ThreadIdx)),
+                E::c(2),
+            ),
+        )])
+}
+
+fn copy_inputs() -> Env {
+    Env::default().with("src", (0..64).collect())
+}
+
+#[test]
+fn queue_drains_under_panics_and_timeouts_without_losing_jobs() {
+    let mut poisoned = SimConfig::paper();
+    poisoned.fu.issue_width = 0; // panics inside Gpu::new
+    let mut q = WorkQueue::new(QueueConfig::default());
+    let mut expected = Vec::new();
+    for i in 0..6 {
+        q.submit(
+            LaunchRequest::new(Solution::Hw, &copy_kernel())
+                .label(format!("good{i}"))
+                .inputs(&copy_inputs()),
+        );
+        expected.push(format!("good{i}"));
+        match i {
+            1 => {
+                q.submit(
+                    LaunchRequest::new(Solution::Hw, &copy_kernel())
+                        .label("panics")
+                        .config(&poisoned)
+                        .inputs(&copy_inputs()),
+                );
+                expected.push("panics".into());
+            }
+            3 => {
+                q.submit(
+                    LaunchRequest::new(Solution::Hw, &copy_kernel())
+                        .label("times-out")
+                        .inputs(&copy_inputs())
+                        .budget(50),
+                );
+                expected.push("times-out".into());
+            }
+            _ => {}
+        }
+    }
+    let (reports, summary) = q.shutdown();
+    assert_eq!(reports.len(), expected.len(), "no job may be lost");
+    assert_eq!(summary.batch.launches, expected.len());
+    assert_eq!(summary.batch.ok, 6);
+    for (report, label) in reports.iter().zip(&expected) {
+        assert_eq!(&report.label, label, "retire order must match submission order");
+        match report.label.as_str() {
+            "panics" => match &report.result {
+                Err(LaunchError::Panic(msg)) => {
+                    assert!(msg.contains("invalid SimConfig"), "{msg}")
+                }
+                other => panic!("expected Panic, got {other:?}"),
+            },
+            "times-out" => match &report.result {
+                Err(LaunchError::Sim(CoreError {
+                    err: SimError::Timeout { cycles }, ..
+                })) => assert_eq!(*cycles, 50),
+                other => panic!("expected Timeout, got {other:?}"),
+            },
+            _ => {
+                report.result.as_ref().unwrap_or_else(|e| panic!("{}: {e}", report.label));
+            }
+        }
+    }
+}
+
+#[test]
+fn queue_sweep_matches_launch_batch_isolated_verdict_for_verdict() {
+    let base = SimConfig::paper();
+    let mut reqs: Vec<LaunchRequest> = kernels::all()
+        .into_iter()
+        .flat_map(|b| {
+            [Solution::Hw, Solution::Sw].map(|sol| {
+                LaunchRequest::new(sol, &b.kernel)
+                    .label(format!("{}[{}]", b.name, sol.name()))
+                    .config(&base)
+                    .inputs(&b.inputs)
+            })
+        })
+        .collect();
+    // One deterministic failure rides along: missing inputs.
+    reqs.push(LaunchRequest::new(Solution::Hw, &copy_kernel()).label("missing-input"));
+
+    let batch = launch_batch_isolated(&reqs, &BatchPolicy::default());
+
+    // Pin every job on worker 0 so siblings exercise the stealing path
+    // (on a single-threaded host this degrades to plain FIFO).
+    let mut q = WorkQueue::new(QueueConfig::default());
+    for req in &reqs {
+        q.submit_pinned(req.clone(), 0);
+    }
+    let (queued, summary) = q.shutdown();
+
+    assert_eq!(queued.len(), batch.len());
+    assert_eq!(summary.batch.ok, reqs.len() - 1);
+    for (a, b) in batch.iter().zip(&queued) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.attempts, b.attempts, "{}", a.label);
+        match (&a.result, &b.result) {
+            (Ok(x), Ok(y)) => {
+                assert_eq!(x.metrics, y.metrics, "{}: metrics diverge", a.label);
+                assert_eq!(x.env.arrays, y.env.arrays, "{}: outputs diverge", a.label);
+            }
+            (Err(x), Err(y)) => assert_eq!(x.to_string(), y.to_string(), "{}", a.label),
+            (x, y) => panic!("{}: verdicts diverge ({x:?} vs {y:?})", a.label),
+        }
+    }
+}
+
+#[test]
+fn cached_launches_are_byte_identical_across_kernels_solutions_engines() {
+    let cache = KernelCache::new();
+    let mut launches = 0u64;
+    for engine in [EngineMode::FastForward, EngineMode::Reference] {
+        let cfg = SimConfig { engine, ..SimConfig::paper() };
+        for b in kernels::all() {
+            for sol in [Solution::Hw, Solution::Sw] {
+                let req = LaunchRequest::new(sol, &b.kernel).config(&cfg).inputs(&b.inputs);
+                let cold = req.launch().unwrap_or_else(|e| panic!("{}: {e}", req.label));
+                let first = launch_with(&req, Some(&cache)).unwrap();
+                let second = launch_with(&req, Some(&cache)).unwrap();
+                for warm in [&first, &second] {
+                    assert_eq!(
+                        cold.metrics, warm.metrics,
+                        "{}[{}] ({engine:?}): cache changed metrics",
+                        b.name,
+                        sol.name()
+                    );
+                    assert_eq!(
+                        cold.env.arrays,
+                        warm.env.arrays,
+                        "{}[{}] ({engine:?}): cache changed outputs",
+                        b.name,
+                        sol.name()
+                    );
+                }
+                launches += 1;
+            }
+        }
+    }
+    let stats = cache.stats();
+    assert_eq!(stats.hits + stats.misses, 2 * launches);
+    // The cache key ignores `engine` (the compiled image is identical),
+    // so only the first pass's first lookups miss.
+    assert!(stats.hits >= launches, "cache must actually hit: {stats:?}");
+}
+
+#[derive(Clone)]
+struct VecWriter(Arc<Mutex<Vec<u8>>>);
+
+impl Write for VecWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn malformed_serve_lines_yield_error_lines_without_killing_the_stream() {
+    let input = concat!(
+        "{\"kernel\":\"reduce\",\"solution\":\"hw\",\"label\":\"r0\"}\n",
+        "this is not json\n",
+        "{\"kernel\":\"nope\"}\n",
+        "\n",
+        "{\"kernel\":\"reduce\",\"solution\":\"sw\",\"label\":\"r1\",\"repeat\":2}\n",
+    );
+    let bytes = Arc::new(Mutex::new(Vec::new()));
+    let (reports, summary) =
+        serve(input.as_bytes(), VecWriter(Arc::clone(&bytes)), &ServeOptions::default())
+            .expect("serve");
+
+    assert_eq!(reports.len(), 5, "good + 2 bad + repeat(2) = 5 reports");
+    assert_eq!(summary.batch.launches, 5);
+    assert_eq!(summary.batch.ok, 3);
+    let labels: Vec<&str> = reports.iter().map(|r| r.label.as_str()).collect();
+    assert_eq!(labels, ["r0", "request-error", "request-error", "r1#0", "r1#1"]);
+    assert!(reports[0].result.is_ok());
+    assert!(reports[3].result.is_ok() && reports[4].result.is_ok());
+
+    let out = String::from_utf8(bytes.lock().unwrap().clone()).unwrap();
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), 5, "one result line per request:\n{out}");
+    for (i, line) in lines.iter().enumerate() {
+        assert!(line.starts_with(&format!("{{\"index\":{i},")), "{line}");
+    }
+    assert!(lines[0].contains("\"ok\":true"), "{}", lines[0]);
+    assert!(lines[1].contains("\"ok\":false") && lines[1].contains("request:"), "{}", lines[1]);
+    assert!(lines[2].contains("\"ok\":false") && lines[2].contains("nope"), "{}", lines[2]);
+    assert!(lines[4].contains("\"ok\":true"), "{}", lines[4]);
+}

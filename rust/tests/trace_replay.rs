@@ -16,7 +16,7 @@
 //! `TraceError`s / `LaunchError::BadInput` — never a panic.
 
 use vortex_warp::coordinator::dispatch::{dispatch, Solution};
-use vortex_warp::coordinator::{replay_trace, LaunchError};
+use vortex_warp::coordinator::{LaunchError, LaunchRequest};
 use vortex_warp::kernels;
 use vortex_warp::sim::tracefmt::TraceError;
 use vortex_warp::sim::{
@@ -117,9 +117,12 @@ fn replay_metrics_bit_identical_on_both_engines() {
             let trace = rec.recorded.unwrap();
             for engine in [EngineMode::FastForward, EngineMode::Reference] {
                 let cfg = SimConfig { engine, ..base.clone() };
-                let rep = replay_trace(&cfg, trace.clone()).unwrap_or_else(|e| {
-                    panic!("{}[{}] replay ({engine:?}): {e}", b.name, sol.name())
-                });
+                let rep = LaunchRequest::replay(trace.clone())
+                    .config(&cfg)
+                    .launch()
+                    .unwrap_or_else(|e| {
+                        panic!("{}[{}] replay ({engine:?}): {e}", b.name, sol.name())
+                    });
                 assert_eq!(
                     rep.metrics,
                     rec.metrics,
@@ -184,7 +187,7 @@ fn replay_rejects_incompatible_configs_as_bad_input() {
         .unwrap();
 
     let expect_bad = |cfg: &SimConfig, what: &str| {
-        match replay_trace(cfg, trace.clone()) {
+        match LaunchRequest::replay(trace.clone()).config(cfg).launch() {
             Err(LaunchError::BadInput(_)) => {}
             other => panic!("{what}: expected BadInput, got {other:?}"),
         }
@@ -209,5 +212,5 @@ fn replay_rejects_incompatible_configs_as_bad_input() {
     expect_bad(&mismatched, "geometry mismatch");
 
     // And the happy path still works after all those rejections.
-    assert!(replay_trace(&base, trace).is_ok());
+    assert!(LaunchRequest::replay(trace).config(&base).launch().is_ok());
 }
